@@ -1,0 +1,49 @@
+//! Truth-table conversion throughput (toolflow stage 2): one PJRT call
+//! converts a whole circuit layer (all L-LUTs batched over 2^(beta*F)
+//! enumerated inputs through the Pallas kernel). Requires `make artifacts`.
+
+use neuralut::coordinator::trainer::{TrainOpts, Trainer};
+use neuralut::data::Dataset;
+use neuralut::luts::convert;
+use neuralut::manifest::Manifest;
+use neuralut::runtime::Runtime;
+use neuralut::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_conversion: sub-network -> L-LUT enumeration ==");
+    let rt = Runtime::cpu()?;
+    for name in ["moons-neuralut", "jsc-2l", "hdr-mini"] {
+        let dir = neuralut::artifacts_dir().join(name);
+        if !dir.join("manifest.json").exists() {
+            println!("skipping {name}: run `make artifacts`");
+            continue;
+        }
+        let m = Manifest::load(&dir)?;
+        let ds = Dataset::load_named(&m.dataset)?;
+        let trainer = Trainer::new(&rt, &m, &ds)?;
+        let r = trainer.run(0, &TrainOpts {
+            epochs: Some(0),
+            quiet: true,
+            ..Default::default()
+        })?;
+        // Warm the executable cache so we bench execution, not compilation.
+        let _ = convert::convert(&rt, &m, &r.params)?;
+        let total_luts: usize = m.layers.iter().sum();
+        let entries: usize = m
+            .tt
+            .iter()
+            .map(|t| t.num_luts * t.entries)
+            .sum();
+        bench(
+            &format!("convert/{name} ({total_luts} L-LUTs, {entries} entries)"),
+            1,
+            2.0,
+            100,
+            Some((total_luts as f64, "L-LUTs")),
+            || {
+                std::hint::black_box(convert::convert(&rt, &m, &r.params).unwrap());
+            },
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fabric-simulator throughput: L-LUT lookups/s and samples/s across the
+//! paper's circuit scales (the inference-latency substrate behind Fig. 6 /
+//! Table III). Also reports single-sample latency — the netlist simulator
+//! is the serving hot path.
+
+use neuralut::luts::random_network;
+use neuralut::netlist::Simulator;
+use neuralut::util::bench::bench;
+
+fn main() {
+    println!("== bench_netlist: fabric simulator ==");
+    // (name, input, input_bits, widths, fan_in, beta)
+    let cases = [
+        ("jsc-2l-scale", 16usize, 4usize, vec![32usize, 5], 3usize, 4usize),
+        ("hdr-mini-scale", 196, 2, vec![64, 32, 10], 6, 2),
+        ("jsc-5l-scale", 16, 4, vec![128, 128, 128, 64, 5], 3, 4),
+        ("hdr-5l-paper-scale", 784, 2, vec![256, 100, 100, 100, 10], 6, 2),
+    ];
+    for (name, input, bits, widths, fan_in, beta) in cases {
+        let net = random_network(1, input, bits, &widths, fan_in, beta, 4);
+        let sim = Simulator::new(&net);
+        let batch = 4096usize;
+        let x: Vec<f32> = (0..batch * input)
+            .map(|i| (i % 97) as f32 / 97.0)
+            .collect();
+        let lookups = batch as f64 * net.num_luts() as f64;
+        bench(
+            &format!("netlist/batch4096/{name}"),
+            1,
+            1.0,
+            200,
+            Some((lookups, "lookups")),
+            || {
+                std::hint::black_box(sim.simulate_batch(&x));
+            },
+        );
+        let one: Vec<f32> = x[..input].to_vec();
+        bench(
+            &format!("netlist/single/{name}"),
+            10,
+            0.5,
+            50_000,
+            Some((1.0, "samples")),
+            || {
+                std::hint::black_box(sim.simulate_batch(&one));
+            },
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! RTL generation throughput (toolflow stage 3): Verilog text emission per
+//! L-LUT, across circuit scales.
+
+use neuralut::luts::random_network;
+use neuralut::rtl::generate_verilog;
+use neuralut::util::bench::bench;
+
+fn main() {
+    println!("== bench_rtl: Verilog generation ==");
+    for (name, input, bits, widths, fan_in, beta) in [
+        ("jsc-2l-scale", 16usize, 4usize, vec![32usize, 5], 3usize, 4usize),
+        ("hdr-mini-scale", 196, 2, vec![64, 32, 10], 6, 2),
+        ("jsc-5l-scale", 16, 4, vec![128, 128, 128, 64, 5], 3, 4),
+    ] {
+        let net = random_network(5, input, bits, &widths, fan_in, beta, 4);
+        let mut last_len = 0usize;
+        bench(
+            &format!("rtl/verilog/{name}"),
+            1,
+            1.0,
+            100,
+            Some((net.num_luts() as f64, "L-LUTs")),
+            || {
+                last_len = generate_verilog(&net).len();
+                std::hint::black_box(last_len);
+            },
+        );
+        println!("  emitted {last_len} bytes of Verilog");
+    }
+}

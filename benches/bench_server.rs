@@ -1,0 +1,66 @@
+//! Serving stack: router + dynamic batcher over the fabric simulator —
+//! throughput and latency percentiles vs offered load and batching window
+//! (the edge-deployment claim, and the knob study for the batcher).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use neuralut::data::{Dataset, Workload};
+use neuralut::luts::random_network;
+use neuralut::server::{Server, ServerConfig};
+use neuralut::util::stats;
+
+fn drive(net: Arc<neuralut::luts::LutNetwork>, cfg: ServerConfig, rate: f64,
+         n_req: usize) -> (f64, stats::Summary) {
+    let ds = Dataset::synthetic(1, 16, 256, net.input_size, net.n_class);
+    let server = Server::start(net, cfg);
+    let client = server.client();
+    let workload = Workload::poisson(&ds, 2, n_req, rate);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_req);
+    for (t_arrival, feats) in workload.requests {
+        let now = t0.elapsed().as_secs_f64();
+        if t_arrival > now {
+            std::thread::sleep(Duration::from_secs_f64(t_arrival - now));
+        }
+        pending.push(client.infer_async(feats).unwrap());
+    }
+    let lat_us: Vec<f64> = pending
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().latency.as_secs_f64() * 1e6)
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    (n_req as f64 / wall, stats::summarize(&lat_us))
+}
+
+fn main() {
+    println!("== bench_server: router + dynamic batcher ==");
+    let net = Arc::new(random_network(11, 196, 2, &[64, 32, 10], 6, 2, 4));
+    let n_req = 30_000;
+
+    println!("\n-- throughput / latency vs offered load (window 100us, max_batch 512) --");
+    for rate in [20_000.0, 50_000.0, 100_000.0, 200_000.0] {
+        let cfg = ServerConfig {
+            max_batch: 512,
+            batch_window: Duration::from_micros(100),
+        };
+        let (tput, s) = drive(net.clone(), cfg, rate, n_req);
+        println!(
+            "offered {:>7.0}/s -> served {:>7.0}/s  p50 {:>6.0}us p95 {:>6.0}us p99 {:>6.0}us",
+            rate, tput, s.p50, s.p95, s.p99
+        );
+    }
+
+    println!("\n-- batching-window ablation (offered 100k/s) --");
+    for window_us in [0u64, 50, 100, 200, 500] {
+        let cfg = ServerConfig {
+            max_batch: 512,
+            batch_window: Duration::from_micros(window_us),
+        };
+        let (tput, s) = drive(net.clone(), cfg, 100_000.0, n_req);
+        println!(
+            "window {:>4}us -> served {:>7.0}/s  p50 {:>6.0}us p99 {:>6.0}us",
+            window_us, tput, s.p50, s.p99
+        );
+    }
+}

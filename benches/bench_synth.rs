@@ -1,0 +1,49 @@
+//! Synthesis cost-model throughput (toolflow stage 4): support reduction +
+//! ROBDD + 6-LUT covering per L-LUT, across (beta, fan_in) sizes, plus an
+//! ablation of the two complexity metrics (cofactor covering vs BDD).
+
+use neuralut::luts::random_network;
+use neuralut::synth::{self, robdd};
+use neuralut::util::bench::bench;
+use neuralut::util::rng::Rng;
+
+fn main() {
+    println!("== bench_synth: Vivado-substitute cost model ==");
+    for (beta, fan_in) in [(2usize, 6usize), (3, 4), (4, 3), (7, 2)] {
+        let k = beta * fan_in;
+        let net = random_network(3, 32, beta, &[64, 5], fan_in, beta, 4);
+        bench(
+            &format!("synth/full-network/b{beta}F{fan_in} (k={k})"),
+            1,
+            1.0,
+            50,
+            Some((net.num_luts() as f64, "L-LUTs")),
+            || {
+                std::hint::black_box(synth::synthesize(&net));
+            },
+        );
+    }
+
+    // Metric ablation on a single 12-input output bit.
+    let mut rng = Rng::new(7);
+    let bits: Vec<u8> =
+        (0..1usize << 12).map(|_| (rng.next_u64() & 1) as u8).collect();
+    bench("synth/cost_function/k12/random", 2, 0.5, 5000, None, || {
+        std::hint::black_box(synth::cost_function(&bits, 12));
+    });
+    bench("synth/robdd/k12/random", 2, 0.5, 5000, None, || {
+        std::hint::black_box(robdd::node_count(&bits, 12));
+    });
+    let linear: Vec<u8> = (0..1u32 << 12)
+        .map(|a| ((a.count_ones() as usize) > 6) as u8)
+        .collect();
+    bench("synth/cost_function/k12/threshold", 2, 0.5, 5000, None, || {
+        std::hint::black_box(synth::cost_function(&linear, 12));
+    });
+    let (l_rand, _) = synth::cost_function(&bits, 12);
+    let (l_thr, _) = synth::cost_function(&linear, 12);
+    println!(
+        "structure sensitivity: random table {l_rand} P-LUTs vs threshold \
+         table {l_thr} P-LUTs (the paper's 'less simplification' effect)"
+    );
+}

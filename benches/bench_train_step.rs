@@ -1,0 +1,65 @@
+//! AOT train-step latency per config: the XLA-side cost of one optimizer
+//! step executed from the Rust coordinator (params marshalled as literals,
+//! outputs decomposed). Requires `make artifacts`.
+
+use neuralut::coordinator::schedule::sgdr_lr;
+use neuralut::data::Dataset;
+use neuralut::manifest::Manifest;
+use neuralut::runtime::{to_literal, HostTensor, Runtime};
+use neuralut::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_train_step: AOT optimizer step via PJRT ==");
+    let rt = Runtime::cpu()?;
+    for name in ["moons-neuralut", "jsc-2l", "hdr-mini", "jsc-5l"] {
+        let dir = neuralut::artifacts_dir().join(name);
+        if !dir.join("manifest.json").exists() {
+            println!("skipping {name}: run `make artifacts`");
+            continue;
+        }
+        let m = Manifest::load(&dir)?;
+        let ds = Dataset::load_named(&m.dataset)?;
+        let init = rt.load_artifact(&m, "init")?;
+        let step_exe = rt.load_artifact(&m, "train_step")?;
+        let n = m.params.len();
+        let state = init.run_raw(&[to_literal(&HostTensor::scalar_i32(0))?])?;
+        let zeros: Vec<xla::Literal> = m
+            .params
+            .iter()
+            .map(|p| {
+                to_literal(&HostTensor::f32(p.shape.clone(), vec![0.0; p.elem_count()]))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let b = m.batch;
+        let mut x = Vec::with_capacity(b * m.input_size);
+        let mut y = Vec::with_capacity(b);
+        for i in 0..b {
+            x.extend_from_slice(ds.train_row(i));
+            y.push(ds.train_y[i]);
+        }
+        let step_lit = to_literal(&HostTensor::scalar_f32(1.0))?;
+        let lr = sgdr_lr(m.lr_min, m.lr_max, m.sgdr_t0, m.sgdr_mult, 100, 0);
+        let lr_lit = to_literal(&HostTensor::scalar_f32(lr as f32))?;
+        let x_lit = to_literal(&HostTensor::f32(vec![b, m.input_size], x))?;
+        let y_lit = to_literal(&HostTensor::i32(vec![b], y))?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 4);
+        args.extend(state.iter());
+        args.extend(zeros.iter());
+        args.extend(zeros.iter());
+        args.push(&step_lit);
+        args.push(&lr_lit);
+        args.push(&x_lit);
+        args.push(&y_lit);
+        bench(
+            &format!("train_step/{name} (batch {b}, {n} tensors)"),
+            3,
+            2.0,
+            500,
+            Some((b as f64, "samples")),
+            || {
+                std::hint::black_box(step_exe.run_literals_refs(&args).unwrap());
+            },
+        );
+    }
+    Ok(())
+}

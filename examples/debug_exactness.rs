@@ -1,0 +1,74 @@
+//! Debug helper: train briefly, convert, and dump mismatching samples'
+//! model logits vs fabric logit codes (kept as an example because it is a
+//! useful diagnostic for anyone extending the quantizer ABI).
+
+use neuralut::coordinator::trainer::{TrainOpts, Trainer};
+use neuralut::data::Dataset;
+use neuralut::luts::convert;
+use neuralut::manifest::Manifest;
+use neuralut::netlist::Simulator;
+use neuralut::runtime::{from_literal, to_literal, HostTensor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or("moons-neuralut".into());
+    let epochs: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let dir = neuralut::artifacts_dir().join(&name);
+    let m = Manifest::load(&dir)?;
+    let ds = Dataset::load_named(&m.dataset)?;
+    let rt = Runtime::cpu()?;
+    let trainer = Trainer::new(&rt, &m, &ds)?;
+    let r = trainer.run(0, &TrainOpts { epochs: Some(epochs), quiet: true, ..Default::default() })?;
+    let net = convert::convert(&rt, &m, &r.params)?;
+    let sim = Simulator::new(&net);
+
+    // scales for dequant comparison
+    for (i, spec) in m.params.iter().enumerate() {
+        if spec.name.ends_with(".scale") {
+            println!("{} = {:?}", spec.name, r.params.tensors[i].as_f32()?);
+        }
+    }
+
+    let fwd = rt.load_artifact(&m, "fwd")?;
+    let b = m.batch;
+    let param_lits: Vec<xla::Literal> =
+        r.params.tensors.iter().map(to_literal).collect::<anyhow::Result<_>>()?;
+    let n = 256.min(ds.n_test());
+    let mut shown = 0;
+    let mut total_mism = 0;
+    let mut i = 0;
+    while i < n {
+        let take = b.min(n - i);
+        let mut x = ds.test_x[i * m.input_size..(i + take) * m.input_size].to_vec();
+        x.resize(b * m.input_size, 0.0);
+        let x_lit = to_literal(&HostTensor::f32(vec![b, m.input_size], x.clone()))?;
+        let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+        args.push(&x_lit);
+        let out = fwd.run_literals_refs(&args)?;
+        let logits_t = from_literal(&out[0])?;
+        let logits = logits_t.as_f32()?;
+        let simres = sim.simulate_batch(&x[..take * m.input_size]);
+        for j in 0..take {
+            let lm = &logits[j * m.n_class..(j + 1) * m.n_class];
+            let lc = &simres.logit_codes[j * m.n_class..(j + 1) * m.n_class];
+            let pm = {
+                let mut best = 0;
+                for (k, &v) in lm.iter().enumerate() { if v > lm[best] { best = k; } }
+                best
+            };
+            let ps = simres.predictions[j] as usize;
+            if pm != ps {
+                total_mism += 1;
+                if shown < 8 {
+                    println!("sample {}: model logits {:?} pred {} | sim codes {:?} pred {}",
+                             i + j, lm, pm, lc, ps);
+                    shown += 1;
+                }
+            }
+        }
+        i += take;
+    }
+    println!("mismatches in first {n}: {total_mism}");
+    Ok(())
+}
+// (accuracy comparison appended at build time via env var is not needed;
+//  see main above)

@@ -1,0 +1,66 @@
+//! Diagnostic: run one deterministic train step (first `batch` rows,
+//! unshuffled) from init and dump scalar outputs + a few named parameters,
+//! to cross-check against the identical step executed in Python/jax.
+
+use neuralut::data::Dataset;
+use neuralut::manifest::Manifest;
+use neuralut::runtime::{from_literal, to_literal, HostTensor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or("moons-neuralut".into());
+    let dir = neuralut::artifacts_dir().join(&name);
+    let m = Manifest::load(&dir)?;
+    let ds = Dataset::load_named(&m.dataset)?;
+    let rt = Runtime::cpu()?;
+    let init = rt.load_artifact(&m, "init")?;
+    let step_exe = rt.load_artifact(&m, "train_step")?;
+    let n = m.params.len();
+    let b = m.batch;
+
+    let state = init.run_raw(&[to_literal(&HostTensor::scalar_i32(0))?])?;
+    let zeros: Vec<xla::Literal> = m
+        .params
+        .iter()
+        .map(|p| to_literal(&HostTensor::f32(p.shape.clone(), vec![0.0; p.elem_count()])))
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..b {
+        x.extend_from_slice(ds.train_row(i));
+        y.push(ds.train_y[i]);
+    }
+    let step_lit = to_literal(&HostTensor::scalar_f32(1.0))?;
+    let lr_lit = to_literal(&HostTensor::scalar_f32(0.001))?;
+    let x_lit = to_literal(&HostTensor::f32(vec![b, m.input_size], x))?;
+    let y_lit = to_literal(&HostTensor::i32(vec![b], y))?;
+
+    let mut args: Vec<&xla::Literal> = Vec::new();
+    args.extend(state.iter());
+    args.extend(zeros.iter());
+    args.extend(zeros.iter());
+    args.push(&step_lit);
+    args.push(&lr_lit);
+    args.push(&x_lit);
+    args.push(&y_lit);
+    let out = step_exe.run_literals_refs(&args)?;
+    println!("outputs: {}", out.len());
+    let loss = from_literal(&out[3 * n])?;
+    let acc = from_literal(&out[3 * n + 1])?;
+    println!("loss = {:?} acc = {:?}", loss.as_f32()?, acc.as_f32()?);
+    for (i, spec) in m.params.iter().enumerate() {
+        if spec.name.ends_with(".scale") || spec.name == "l0.bn_mean" {
+            let t = from_literal(&out[i])?;
+            let v = t.as_f32()?;
+            println!("new {} = {:?}", spec.name, &v[..v.len().min(4)]);
+        }
+    }
+    // Also dump init values for comparison.
+    for (i, spec) in m.params.iter().enumerate() {
+        if spec.name == "l0.w1" {
+            let t = from_literal(&state[i])?;
+            println!("init {} head = {:?}", spec.name, &t.as_f32()?[..4]);
+        }
+    }
+    Ok(())
+}

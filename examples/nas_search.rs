@@ -1,0 +1,36 @@
+//! Circuit-topology search demo (paper §V future work): successive-halving
+//! random search over the built Pareto-sweep bundles, optimizing
+//! accuracy − λ·log10(area·delay). Run with a small budget by default:
+//!
+//!   cargo run --release --example nas_search            # quick (~minutes)
+//!   NEURALUT_NAS_ROUNDS=3 cargo run ... --example nas_search
+
+use neuralut::coordinator::nas::{search, NasOpts};
+use neuralut::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let space: Vec<String> = [
+        "pareto-sm-neuralut", "pareto-md-neuralut", "pareto-lg-neuralut",
+        "pareto-sm-logicnets", "pareto-md-logicnets", "pareto-lg-logicnets",
+    ].iter().map(|s| s.to_string()).collect();
+    let opts = NasOpts {
+        base_epochs: 2,
+        rounds: std::env::var("NEURALUT_NAS_ROUNDS").ok()
+            .and_then(|v| v.parse().ok()).unwrap_or(2),
+        lambda: 0.02,
+        seeds_per_config: 1,
+    };
+    println!("== NAS over circuit topologies: {} candidates, {} rounds ==",
+             space.len() * opts.seeds_per_config, opts.rounds);
+    let ranked = search(&rt, &space, &opts, 42)?;
+    println!("\n{:<26} {:>6} {:>9} {:>12} {:>8}", "candidate", "seed",
+             "fabric", "area*delay", "score");
+    for c in &ranked {
+        let s = c.summary.as_ref().unwrap();
+        println!("{:<26} {:>6} {:>9.4} {:>12.3e} {:>8.4}",
+                 c.config, c.seed, s.fabric_acc, s.area_delay, c.score);
+    }
+    println!("\nwinner: {} (the paper's NAS direction, §V)", ranked[0].config);
+    Ok(())
+}

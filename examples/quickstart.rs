@@ -1,0 +1,44 @@
+//! Quickstart: the whole NeuraLUT codesign loop in ~40 lines.
+//!
+//! Trains the two-moons toy model (AOT train steps via PJRT), converts the
+//! trained sub-networks into L-LUT truth tables, verifies the fabric
+//! simulator against the float model, emits Verilog, and prints the
+//! synthesis estimate.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use neuralut::coordinator::pipeline::{self, PipelineOpts};
+use neuralut::coordinator::trainer::TrainOpts;
+use neuralut::data::Dataset;
+use neuralut::manifest::Manifest;
+use neuralut::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = neuralut::artifacts_dir().join("moons-neuralut");
+    let manifest = Manifest::load(&dir)?;
+    let dataset = Dataset::load_named(&manifest.dataset)?;
+    let runtime = Runtime::cpu()?;
+    println!("platform: {}", runtime.platform());
+    println!("model   : {} ({:?} L-LUTs, mode {})",
+             manifest.name, manifest.layers, manifest.mode);
+
+    let opts = PipelineOpts {
+        train: TrainOpts { quiet: false, eval_every: 1, ..Default::default() },
+        verify_samples: Some(1000),
+        out_dir: Some(std::env::temp_dir().join("neuralut_quickstart")),
+        emit_rtl: true,
+    };
+    let r = pipeline::run(&runtime, &manifest, &dataset, /*seed=*/ 0, &opts)?;
+    pipeline::verify_consistent(&r, 0.05)?;
+
+    println!("\nfabric accuracy : {:.4} (float monitor {:.4}, {} flips / {})",
+             r.sim_acc, r.model_acc, r.mismatches, r.n_verified);
+    println!("hardware        : {} P-LUTs, {} FF, Fmax {:.0} MHz",
+             r.synth.luts, r.synth.ffs, r.synth.fmax_mhz);
+    println!("latency         : {:.1} ns ({} cycles, 1 cycle / L-LUT layer)",
+             r.synth.latency_ns, r.synth.latency_cycles);
+    println!("area-delay      : {:.3e} LUT*ns", r.synth.area_delay);
+    println!("\nartifacts in {}",
+             std::env::temp_dir().join("neuralut_quickstart").display());
+    Ok(())
+}

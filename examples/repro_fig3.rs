@@ -1,0 +1,84 @@
+//! Reproduce paper **Fig. 3**: decision boundaries of a small circuit on
+//! the two-moons toy task under the three neuron families (linear /
+//! polynomial / sub-network), across seeds. We print per-seed fabric
+//! accuracies (the paper's qualitative claim: NeuraLUT converges to
+//! consistently strong solutions; the polynomial family is high-variance)
+//! and render ASCII decision maps from the *converted L-LUT fabric*.
+
+use neuralut::coordinator::experiments::{epochs_override, n_seeds, run_config, save_results};
+use neuralut::coordinator::pipeline::{self, PipelineOpts};
+use neuralut::coordinator::trainer::TrainOpts;
+use neuralut::data::Dataset;
+use neuralut::manifest::Manifest;
+use neuralut::netlist::Simulator;
+use neuralut::runtime::Runtime;
+use neuralut::util::stats;
+
+fn ascii_boundary(rt: &Runtime, config: &str, seed: u64) -> anyhow::Result<Vec<String>> {
+    let dir = neuralut::artifacts_dir().join(config);
+    let m = Manifest::load(&dir)?;
+    let ds = Dataset::load_named(&m.dataset)?;
+    let opts = PipelineOpts {
+        train: TrainOpts { epochs: epochs_override(), quiet: true, ..Default::default() },
+        verify_samples: Some(256),
+        out_dir: None,
+        emit_rtl: false,
+    };
+    let r = pipeline::run(rt, &m, &ds, seed, &opts)?;
+    let sim = Simulator::new(&r.net);
+    let (w, h) = (40usize, 18usize);
+    let mut grid = Vec::with_capacity(w * h * 2);
+    for row in 0..h {
+        for col in 0..w {
+            grid.push(col as f32 / (w - 1) as f32);
+            grid.push(1.0 - row as f32 / (h - 1) as f32);
+        }
+    }
+    let preds = sim.simulate_batch(&grid).predictions;
+    let mut lines = Vec::new();
+    for row in 0..h {
+        let line: String = (0..w)
+            .map(|col| if preds[row * w + col] == 0 { '.' } else { '#' })
+            .collect();
+        lines.push(line);
+    }
+    Ok(lines)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let seeds: Vec<u64> = (0..n_seeds() as u64).collect();
+    let configs = ["moons-logicnets", "moons-polylut", "moons-neuralut"];
+    println!("== Fig. 3: classifier comparison across seeds (two moons) ==\n");
+
+    let mut all = Vec::new();
+    println!("{:<18} {}", "config", seeds.iter().map(|s| format!("seed{s:>2}  ")).collect::<String>());
+    for config in configs {
+        let mut row = format!("{config:<18} ");
+        for &seed in &seeds {
+            let s = run_config(&rt, config, seed, epochs_override())?;
+            row.push_str(&format!("{:.4}  ", s.fabric_acc));
+            all.push(s);
+        }
+        println!("{row}");
+    }
+
+    // Paper's qualitative claims, quantified:
+    for config in configs {
+        let rows: Vec<_> = all.iter().filter(|r| r.config == config).cloned().collect();
+        let accs: Vec<f64> = rows.iter().map(|r| r.fabric_acc).collect();
+        let s = stats::summarize(&accs);
+        println!("{config:<18} mean {:.4}  std {:.4}  min {:.4}", s.mean, s.std, s.min);
+    }
+
+    println!("\nfabric decision maps (seed 0), '#' = class 1:");
+    for config in configs {
+        println!("\n--- {config} ---");
+        for line in ascii_boundary(&rt, config, 0)? {
+            println!("  {line}");
+        }
+    }
+    let path = save_results("fig3", &all)?;
+    println!("\nresults written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,228 @@
+"""AOT artifact emitter (build path only — Python never runs at inference).
+
+For every registered config this lowers four function families to **HLO
+text** and writes a ``manifest.json`` describing the flat argument ABI:
+
+    artifacts/<config>/init.hlo.txt        (seed:i32) -> params...
+    artifacts/<config>/train_step.hlo.txt  (params..., m..., v..., step, lr,
+                                            x[B,in], y[B]) ->
+                                           (params'..., m'..., v'..., loss, acc)
+    artifacts/<config>/fwd.hlo.txt         (params..., x[B,in]) -> logits[B,C]
+    artifacts/<config>/tt_layer{l}.hlo.txt (prev_scale?, layer-l params...) ->
+                                           codes[M_l, 2^(bits*F)]
+    artifacts/<config>/manifest.json
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--full]
+                                            [--configs a,b,...]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, datasets, model, train, tt
+from .configs import ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big constants as ``{...}``, which the consuming parser silently
+    reads back as zeros — any embedded table (e.g. the one-hot wiring
+    matrices) would be destroyed.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_config(cfg: ModelConfig, out_dir: str, *, use_pallas=True):
+    """Lower all artifacts for ``cfg`` into ``out_dir`` + manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    spec = model.param_spec(cfg)
+    indices = model.build_sparsity(cfg)
+    pstructs = [_struct(s) for _, s in spec]
+    n = len(spec)
+    b = cfg.batch
+
+    # --- init -------------------------------------------------------------
+    def init_fn(seed):
+        return tuple(model.init_params(cfg, seed))
+
+    hlo_init = to_hlo_text(jax.jit(init_fn, keep_unused=True).lower(_struct((), jnp.int32)))
+
+    # --- train step ---------------------------------------------------------
+    def step_fn(*args):
+        params = list(args[:n])
+        ms = list(args[n : 2 * n])
+        vs = list(args[2 * n : 3 * n])
+        step, lr, x, y = args[3 * n :]
+        p2, m2, v2, loss, acc = train.train_step(
+            cfg, params, ms, vs, step, lr, x, y, indices,
+            use_pallas=use_pallas,
+        )
+        return (*p2, *m2, *v2, loss, acc)
+
+    step_args = (
+        pstructs + pstructs + pstructs
+        + [_struct(()), _struct(()),
+           _struct((b, cfg.input_size)), _struct((b,), jnp.int32)]
+    )
+    hlo_step = to_hlo_text(jax.jit(step_fn, keep_unused=True).lower(*step_args))
+
+    # --- forward (eval) -----------------------------------------------------
+    def fwd_fn(*args):
+        params = list(args[:n])
+        x = args[n]
+        logits, _ = model.forward(cfg, params, x, indices,
+                                  train=False, use_pallas=use_pallas)
+        return logits
+
+    # keep_unused=True everywhere: jax.jit silently drops unused arguments
+    # at lowering time, which would desynchronize the flat ABI.
+    hlo_fwd = to_hlo_text(
+        jax.jit(fwd_fn, keep_unused=True).lower(
+            *pstructs, _struct((b, cfg.input_size)))
+    )
+
+    # --- truth tables (one per circuit layer) --------------------------------
+    slices = model.layer_param_slices(cfg)
+    scale_idx = model.scale_param_indices(cfg)
+    tt_manifest = []
+    tt_hlos = {}
+    for l in range(len(cfg.layers)):
+        lo, hi = slices[l]
+        arg_names = [spec[i][0] for i in range(lo, hi)]
+        arg_structs = [pstructs[i] for i in range(lo, hi)]
+        if l > 0:
+            prev_scale_name = spec[scale_idx[l - 1]][0]
+            arg_names = [prev_scale_name] + arg_names
+            arg_structs = [_struct(())] + arg_structs
+
+        def tt_fn(l, *args):
+            if l > 0:
+                prev_scale, layer_params = args[0], list(args[1:])
+            else:
+                prev_scale, layer_params = None, list(args)
+            return tt.tt_layer(cfg, l, layer_params, prev_scale,
+                               use_pallas=use_pallas)
+
+        tt_hlos[l] = to_hlo_text(
+            jax.jit(functools.partial(tt_fn, l),
+                    keep_unused=True).lower(*arg_structs)
+        )
+        tt_manifest.append({
+            "layer": l,
+            "path": f"tt_layer{l}.hlo.txt",
+            "args": arg_names,
+            "num_luts": cfg.layers[l],
+            "entries": cfg.tt_entries(l),
+            "fan_in": cfg.layer_fan_in(l),
+            "in_bits": cfg.layer_in_bits(l),
+            "out_bits": cfg.layer_out_bits(l),
+            "signed_out": l == len(cfg.layers) - 1,
+        })
+
+    # --- write --------------------------------------------------------------
+    for name, text in [("init", hlo_init), ("train_step", hlo_step),
+                       ("fwd", hlo_fwd)]:
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+    for l, text in tt_hlos.items():
+        with open(os.path.join(out_dir, f"tt_layer{l}.hlo.txt"), "w") as f:
+            f.write(text)
+
+    manifest = {
+        "name": cfg.name,
+        "mode": cfg.mode,
+        "dataset": cfg.dataset,
+        "input_size": cfg.input_size,
+        "n_class": cfg.n_class,
+        "layers": list(cfg.layers),
+        "beta": cfg.beta,
+        "beta_in": cfg.resolved_beta_in(),
+        "beta_out": cfg.resolved_beta_out(),
+        "fan_in": cfg.fan_in,
+        "beta_in0": cfg.beta_in0 or cfg.resolved_beta_in(),
+        "fan_in0": cfg.layer_fan_in(0),
+        "sub_depth": cfg.sub_depth,
+        "sub_width": cfg.sub_width,
+        "sub_skip": cfg.sub_skip,
+        "degree": cfg.degree,
+        "batch": b,
+        "epochs": cfg.epochs,
+        "lr_max": cfg.lr_max,
+        "lr_min": cfg.lr_min,
+        "weight_decay": cfg.weight_decay,
+        "sgdr_t0": cfg.sgdr_t0,
+        "sgdr_mult": cfg.sgdr_mult,
+        "params": [
+            {"name": nm, "shape": list(sh)} for nm, sh in spec
+        ],
+        "scale_param_idx": scale_idx,
+        "layer_param_slices": [list(s) for s in slices],
+        "indices": [idx.tolist() for idx in indices],
+        "layer_in_bits": [cfg.layer_in_bits(l) for l in range(len(cfg.layers))],
+        "layer_fan_in": [cfg.layer_fan_in(l) for l in range(len(cfg.layers))],
+        "tt": tt_manifest,
+        "artifacts": {
+            "init": "init.hlo.txt",
+            "train_step": "train_step.hlo.txt",
+            "fwd": "fwd.hlo.txt",
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also build the heavy paper-exact configs (*-full)")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated subset of config names")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the jnp reference instead of Pallas")
+    ap.add_argument("--single-block", action="store_true",
+                    help="lower with the grid-free Pallas schedule")
+    args = ap.parse_args()
+
+    names = (args.configs.split(",") if args.configs
+             else configs.names(full=args.full))
+
+    t0 = time.time()
+    datasets.build_all(os.path.join(args.out, "data"))
+    print(f"[aot] datasets written ({time.time()-t0:.1f}s)", flush=True)
+
+    for name in names:
+        t1 = time.time()
+        cfg = configs.get(name)
+        mode = (False if args.no_pallas
+                else ("single" if args.single_block else True))
+        lower_config(cfg, os.path.join(args.out, name), use_pallas=mode)
+        print(f"[aot] {name}: lowered in {time.time()-t1:.1f}s", flush=True)
+    print(f"[aot] done: {len(names)} configs in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Model / experiment configuration registry.
+
+Every artifact bundle (init / train_step / fwd / tt_layer* HLO + manifest)
+is produced from one ``ModelConfig``. The registry mirrors the paper's Table
+II plus the configurations needed for Figs. 3, 5, 6 and 7; the Rust side
+reads the same values from each bundle's ``manifest.json``.
+
+Scale notes (see DESIGN.md §5): paper-exact circuit topologies are used for
+the jet-substructure models (JSC-2L exactly, JSC-5L exact topology with
+reduced epochs); MNIST experiments default to a documented ``-mini`` scale
+(14x14 procedural digits, smaller circuits) to stay tractable on CPU. The
+paper-exact HDR-5L topology is registered behind ``--full``.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One circuit-level model + its training recipe."""
+
+    name: str
+    dataset: str  # jsc | digits | digits28 | moons
+    input_size: int
+    n_class: int
+    layers: Tuple[int, ...]  # L-LUTs per circuit layer; last == n_class
+    beta: int  # hidden inter-L-LUT bit-width
+    fan_in: int  # F
+    mode: str = "neuralut"  # neuralut | logicnets | polylut
+    # neuralut sub-network topology (ignored in other modes)
+    sub_depth: int = 4  # L
+    sub_width: int = 16  # N
+    sub_skip: int = 2  # S
+    degree: int = 2  # PolyLUT D
+    beta_in: int = 0  # input bit-width (0 -> beta)
+    beta_out: int = 0  # logit bit-width (0 -> max(beta, 4))
+    # Table II "Exceptions" (JSC-5L: beta_0 = 7, F_0 = 2)
+    beta_in0: int = 0  # first-layer input bits override (0 -> beta_in)
+    fan_in0: int = 0  # first-layer fan-in override (0 -> fan_in)
+    batch: int = 128
+    epochs: int = 20
+    # NeuraLUT's deep sub-networks need a gentler peak LR than the linear /
+    # polynomial baselines (quantizer clip zones go dead if early steps
+    # overshoot); defaults below are overridden per config family.
+    lr_max: float = 4e-3
+    lr_min: float = 1e-4
+    weight_decay: float = 1e-4
+    sgdr_t0: int = 5  # SGDR: first restart period (epochs)
+    sgdr_mult: int = 2  # SGDR: period multiplier
+    mask_seed: int = 7  # a-priori random sparsity seed (fixed per config)
+
+    def resolved_beta_in(self) -> int:
+        return self.beta_in or self.beta
+
+    def resolved_beta_out(self) -> int:
+        return self.beta_out or max(self.beta, 4)
+
+    def layer_fan_in(self, layer: int) -> int:
+        """Fan-in of L-LUTs in ``layer`` (first layer may be overridden),
+        clamped to the actual number of available inputs."""
+        f = self.fan_in0 if (layer == 0 and self.fan_in0) else self.fan_in
+        avail = self.input_size if layer == 0 else self.layers[layer - 1]
+        return min(f, avail)
+
+    def layer_in_bits(self, layer: int) -> int:
+        """Bit-width of each of the layer's inputs."""
+        if layer == 0:
+            return self.beta_in0 or self.resolved_beta_in()
+        return self.beta
+
+    def layer_out_bits(self, layer: int) -> int:
+        return self.resolved_beta_out() if layer == len(self.layers) - 1 else self.beta
+
+    def tt_entries(self, layer: int) -> int:
+        """Truth-table entries per L-LUT in ``layer`` = 2^(bits * F)."""
+        return 1 << (self.layer_in_bits(layer) * self.layer_fan_in(layer))
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"duplicate config {cfg.name}")
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ModelConfig:
+    return _REGISTRY[name]
+
+
+def names(full: bool = False) -> List[str]:
+    """Configs built by ``make artifacts`` (``full`` adds the heavy ones)."""
+    out = [n for n in _REGISTRY if not _REGISTRY[n].name.endswith("-full")]
+    if full:
+        out = list(_REGISTRY)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Fig. 3 — two-moons toy study: 3-layer circuit, one config per neuron kind.
+# --------------------------------------------------------------------------
+_moons = dict(
+    dataset="moons", input_size=2, n_class=2, layers=(8, 4, 2), beta=4,
+    fan_in=2, batch=64, epochs=40, lr_max=8e-3, sgdr_t0=10,
+)
+register(ModelConfig(name="moons-logicnets", mode="logicnets", **_moons))
+register(ModelConfig(name="moons-polylut", mode="polylut", degree=4, **_moons))
+register(ModelConfig(
+    name="moons-neuralut", mode="neuralut",
+    sub_depth=2, sub_width=8, sub_skip=0, **_moons,
+))
+
+# --------------------------------------------------------------------------
+# Table II / Table III — jet substructure tagging (synthetic JSC, §5).
+# JSC-2L and JSC-5L are the paper's exact circuit topologies.
+# --------------------------------------------------------------------------
+register(ModelConfig(
+    name="jsc-2l", dataset="jsc", input_size=16, n_class=5,
+    layers=(32, 5), beta=4, fan_in=3,
+    sub_depth=4, sub_width=8, sub_skip=2, batch=256, epochs=40,
+))
+register(ModelConfig(
+    name="jsc-5l", dataset="jsc", input_size=16, n_class=5,
+    layers=(128, 128, 128, 64, 5), beta=4, fan_in=3,
+    sub_depth=4, sub_width=16, sub_skip=2,
+    beta_in0=7, fan_in0=2, batch=256, epochs=25,
+))
+# Baselines at the JSC-2L scale (PolyLUT JSC-M Lite / LogicNets JSC-M are
+# (64, 32, 5)-shaped in their papers; same circuit family here).
+register(ModelConfig(
+    name="jsc-polylut", dataset="jsc", input_size=16, n_class=5,
+    layers=(64, 32, 5), beta=3, fan_in=4, mode="polylut", degree=2,
+    batch=256, epochs=40, lr_max=1e-2,
+))
+register(ModelConfig(
+    name="jsc-logicnets", dataset="jsc", input_size=16, n_class=5,
+    layers=(64, 32, 5), beta=3, fan_in=4, mode="logicnets",
+    batch=256, epochs=40, lr_max=1e-2,
+))
+
+# --------------------------------------------------------------------------
+# MNIST-mini (14x14 procedural digits) — HDR-style models for Table III.
+# --------------------------------------------------------------------------
+_digits = dict(dataset="digits", input_size=196, n_class=10, beta=2, fan_in=6,
+               batch=128, epochs=15)
+register(ModelConfig(
+    name="hdr-mini", layers=(64, 32, 10),
+    sub_depth=4, sub_width=16, sub_skip=2, **_digits,
+))
+register(ModelConfig(
+    name="hdr-mini-polylut", layers=(64, 32, 10), mode="polylut", degree=2,
+    **_digits,
+))
+register(ModelConfig(
+    name="hdr-mini-logicnets", layers=(64, 32, 10), mode="logicnets",
+    **_digits,
+))
+# Paper-exact HDR-5L topology (28x28 inputs); heavy on CPU -> behind --full.
+register(ModelConfig(
+    name="hdr-5l-full", dataset="digits28", input_size=784, n_class=10,
+    layers=(256, 100, 100, 100, 10), beta=2, fan_in=6,
+    sub_depth=4, sub_width=16, sub_skip=2, batch=128, epochs=10,
+))
+
+# --------------------------------------------------------------------------
+# Fig. 5 — ablation on a fixed circuit: sub-network depth L in {1..4},
+# with (S=2 for even L, S=1 otherwise... paper uses skip period 2) and
+# without (S=0) skip connections, vs the LogicNets baseline (N=1, L=1).
+# --------------------------------------------------------------------------
+_fig5 = dict(dataset="digits", input_size=196, n_class=10,
+             layers=(64, 32, 10), beta=2, fan_in=6, batch=128, epochs=12)
+register(ModelConfig(name="fig5-baseline", mode="logicnets", **_fig5))
+for L in (1, 2, 3, 4):
+    s_skip = 2 if L % 2 == 0 else 1
+    register(ModelConfig(
+        name=f"fig5-l{L}-skip", sub_depth=L, sub_width=16, sub_skip=s_skip,
+        **_fig5,
+    ))
+    register(ModelConfig(
+        name=f"fig5-l{L}-noskip", sub_depth=L, sub_width=16, sub_skip=0,
+        **_fig5,
+    ))
+
+# --------------------------------------------------------------------------
+# Figs. 6 & 7 — error-vs-latency / error-vs-area Pareto: a sweep of circuit
+# sizes, each trained as LogicNets (N=1, L=1, S=0) and as NeuraLUT
+# (N=16, L=4, S=2), mirroring the paper's setting.
+# --------------------------------------------------------------------------
+_PARETO_CIRCUITS = {
+    "xl": (96, 48, 10),
+    "lg": (64, 32, 10),
+    "md": (48, 24, 10),
+    "sm": (32, 16, 10),
+}
+for tag, circuit in _PARETO_CIRCUITS.items():
+    common = dict(dataset="digits", input_size=196, n_class=10,
+                  layers=circuit, beta=2, fan_in=6, batch=128, epochs=12)
+    register(ModelConfig(
+        name=f"pareto-{tag}-neuralut", sub_depth=4, sub_width=16, sub_skip=2,
+        **common,
+    ))
+    register(ModelConfig(name=f"pareto-{tag}-logicnets", mode="logicnets",
+                         **common))

@@ -1,0 +1,127 @@
+"""L1 kernel performance model: VMEM footprint + MXU-utilization estimates
+for the tiled Pallas schedule (DESIGN.md §8).
+
+``interpret=True`` wallclock is CPU-numpy time and NOT a TPU proxy, so the
+optimization target for Layer 1 is structural: per-grid-step VMEM working
+set (must sit far below the ~16 MiB/core budget) and the MXU occupancy of
+the sub-network matmuls once padded to the 128x128 systolic array
+(8x128 lanes per pass, bf16).
+
+Usage:  cd python && python -m compile.kernel_stats [config ...]
+"""
+
+import sys
+from dataclasses import dataclass
+
+from . import configs, model
+from .kernels.subnet import _B_TILE_MAX, _pick_b_tile
+from .kernels.topo import PolyTopo, SubnetTopo
+
+MXU_DIM = 128  # systolic array edge (TPU v4-style)
+VPU_LANES = 8 * 128  # vector unit shape
+VMEM_BYTES = 16 * 1024 * 1024
+BF16 = 2  # bytes
+
+
+@dataclass
+class KernelStats:
+    """Per-grid-step structural stats of the tiled subnet kernel."""
+
+    config: str
+    layer: int
+    b_tile: int
+    weight_bytes: int  # all affine+residual blocks of one LUT (VMEM-resident)
+    act_bytes: int  # activation tile in/out + widest intermediate
+    vmem_bytes: int
+    flops_per_step: int  # 2 * MACs for one (LUT, batch-tile) grid step
+    mxu_utilization: float  # useful MACs / padded-systolic MACs
+    # Per-LUT matmuls are tiny (F, N << 128): the MXU is the wrong engine.
+    # Packing LUTs along the 128-lane axis runs them on the VPU instead;
+    # this is the lane occupancy of an (M_pack x N)-wide FMA sweep.
+    vpu_utilization: float
+
+    def report(self) -> str:
+        return (
+            f"{self.config:<22} layer {self.layer}: B_tile {self.b_tile:>4} "
+            f"VMEM {self.vmem_bytes / 1024:7.1f} KiB "
+            f"({100 * self.vmem_bytes / VMEM_BYTES:5.2f}% of budget)  "
+            f"MXU util {100 * self.mxu_utilization:5.1f}% | VPU (lane-packed) "
+            f"{100 * self.vpu_utilization:5.1f}%"
+        )
+
+
+def _matmul_stats(b, k, n):
+    """(useful MACs, padded MACs) of a [b,k]x[k,n] product on the MXU."""
+    useful = b * k * n
+    pad = lambda x: -(-x // MXU_DIM) * MXU_DIM
+    padded = pad(b) * pad(k) * pad(n)
+    return useful, padded
+
+
+def _vpu_utilization(cfg, layer, widths) -> float:
+    """Lane occupancy when packing LUTs along the 128-lane axis: per FMA
+    sweep, min(M, lanes//N) LUTs of width N are live."""
+    m = cfg.layers[layer]
+    n = max(w for w in widths[1:-1]) if len(widths) > 2 else widths[-1]
+    n = max(n, 1)
+    packed = min(m, max(VPU_LANES // n, 1))
+    return min(1.0, packed * n / VPU_LANES)
+
+
+def stats_for(cfg, layer: int, batch: int) -> KernelStats:
+    topo = model.layer_topo(cfg, layer)
+    bt = _pick_b_tile(batch)
+    if isinstance(topo, PolyTopo):
+        dims = [(topo.num_features(), 1)]
+        widths = [topo.num_features(), 1]
+    else:
+        dims = topo.affine_dims() + topo.residual_dims()
+        widths = topo.layer_widths()
+    weight_bytes = sum((di * do + do) * BF16 for di, do in dims)
+    act_bytes = bt * (max(widths) + widths[0] + widths[-1]) * BF16
+    useful = padded = 0
+    for di, do in dims:
+        u, p = _matmul_stats(bt, di, do)
+        useful += u
+        padded += p
+    return KernelStats(
+        config=cfg.name,
+        layer=layer,
+        b_tile=bt,
+        weight_bytes=weight_bytes,
+        act_bytes=act_bytes,
+        vmem_bytes=weight_bytes + act_bytes,
+        flops_per_step=2 * useful,
+        mxu_utilization=useful / padded if padded else 0.0,
+        vpu_utilization=_vpu_utilization(cfg, layer, widths),
+    )
+
+
+def all_stats(cfg):
+    """Stats for every circuit layer at both training batch and the
+    truth-table enumeration batch (the two kernel workloads)."""
+    out = []
+    for l in range(len(cfg.layers)):
+        out.append(stats_for(cfg, l, cfg.batch))
+        out.append(stats_for(cfg, l, cfg.tt_entries(l)))
+    return out
+
+
+def main():
+    names = sys.argv[1:] or ["hdr-mini", "jsc-2l", "jsc-5l"]
+    for name in names:
+        cfg = configs.get(name)
+        print(f"== {name} (batch {cfg.batch}, tt up to "
+              f"{max(cfg.tt_entries(l) for l in range(len(cfg.layers)))} "
+              f"entries) ==")
+        for s in all_stats(cfg):
+            print("  " + s.report())
+        worst = max(all_stats(cfg), key=lambda s: s.vmem_bytes)
+        assert worst.vmem_bytes < VMEM_BYTES, "schedule exceeds VMEM budget"
+        print(f"  worst-case VMEM {worst.vmem_bytes / 1024:.1f} KiB — "
+              f"{VMEM_BYTES // worst.vmem_bytes}x headroom; the schedule is "
+              f"activation-streaming-bound, matching DESIGN.md §8.\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the L-LUT neuron functions.
+
+These are the correctness baselines for the Pallas kernel
+(``kernels/subnet.py``): pytest asserts ``subnet_pallas == subnet_ref`` over
+hypothesis-generated shape/topology sweeps, and the training path's backward
+pass is derived from these functions via ``jax.vjp``.
+
+Parameter layout for a circuit layer of M L-LUTs with topology
+``SubnetTopo(F, L, N, S)`` — a flat list, stacked over the LUT axis:
+
+    [w_1 (M,d0,d1), b_1 (M,d1), ..., w_L, b_L,
+     rw_1 (M,c0,c1), rb_1 (M,c1), ..., rw_C, rb_C]        (C = L/S chunks)
+
+PolyLUT layout: ``[w (M,P,1), b (M,1)]`` with P monomial features.
+"""
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+from .topo import PolyTopo, SubnetTopo
+
+
+def split_params(params: Sequence, topo: SubnetTopo):
+    """Split the flat stacked-param list into (affines, residuals)."""
+    n_aff = topo.depth
+    affines = [(params[2 * i], params[2 * i + 1]) for i in range(n_aff)]
+    rest = params[2 * n_aff :]
+    residuals = [
+        (rest[2 * i], rest[2 * i + 1]) for i in range(topo.num_chunks())
+    ]
+    return affines, residuals
+
+
+def subnet_ref(params: Sequence, x, topo: SubnetTopo):
+    """Evaluate M stacked sub-networks: x [M, B, F] -> y [M, B].
+
+    Implements paper eqs. (1)-(4): chunks of S affine layers with ReLU
+    in-between, a parallel affine residual per chunk, ReLU *between* chunks
+    but not after the last one. With S = 0 it is a plain MLP (ReLU between
+    affines, none after the last).
+    """
+    affines, residuals = split_params(params, topo)
+
+    def affine(h, w, b):
+        # h [M, B, d_in] @ w [M, d_in, d_out] + b [M, d_out]
+        return jnp.einsum("mbi,mio->mbo", h, w) + b[:, None, :]
+
+    h = x
+    if topo.skip == 0:
+        for i, (w, b) in enumerate(affines):
+            h = affine(h, w, b)
+            if i + 1 < topo.depth:
+                h = jnp.maximum(h, 0.0)
+    else:
+        s = topo.skip
+        for c, (rw, rb) in enumerate(residuals):
+            chunk_in = h
+            for j in range(s):
+                w, b = affines[c * s + j]
+                h = affine(h, w, b)
+                if j + 1 < s:
+                    h = jnp.maximum(h, 0.0)
+            h = h + affine(chunk_in, rw, rb)
+            if c + 1 < topo.num_chunks():
+                h = jnp.maximum(h, 0.0)
+    return h[..., 0]
+
+
+def poly_features(x, topo: PolyTopo):
+    """Monomial expansion: x [M, B, F] -> phi [M, B, P]."""
+    feats = []
+    for e in topo.exponents():
+        f = jnp.ones(x.shape[:-1], dtype=x.dtype)
+        for i, p in enumerate(e):
+            if p:
+                f = f * x[..., i] ** p
+        feats.append(f)
+    return jnp.stack(feats, axis=-1)
+
+
+def poly_ref(params: Sequence, x, topo: PolyTopo):
+    """PolyLUT neuron: x [M, B, F] -> y [M, B]."""
+    w, b = params
+    phi = poly_features(x, topo)
+    return (jnp.einsum("mbp,mpo->mbo", phi, w) + b[:, None, :])[..., 0]
+
+
+def init_subnet_params(key, m: int, topo: SubnetTopo) -> List:
+    """He-normal init of the stacked parameter list for M L-LUTs."""
+    import jax
+
+    params = []
+    dims = topo.affine_dims() + topo.residual_dims()
+    keys = jax.random.split(key, len(dims))
+    for k, (di, do) in zip(keys, dims):
+        std = (2.0 / di) ** 0.5
+        params.append(jax.random.normal(k, (m, di, do), jnp.float32) * std)
+        params.append(jnp.zeros((m, do), jnp.float32))
+    return params
+
+
+def init_poly_params(key, m: int, topo: PolyTopo) -> List:
+    import jax
+
+    p = topo.num_features()
+    std = (2.0 / p) ** 0.5
+    w = jax.random.normal(key, (m, p, 1), jnp.float32) * std
+    return [w, jnp.zeros((m, 1), jnp.float32)]

@@ -1,0 +1,198 @@
+"""Layer-1 Pallas kernel: batched residual-MLP sub-network evaluation.
+
+This is the compute hot-spot of NeuraLUT — every circuit layer evaluates M
+independent sub-networks (one per L-LUT) on a batch B, both during training
+and during truth-table conversion (where B = 2^(beta*F)).
+
+Kernel structure (see DESIGN.md §8 for the TPU mapping):
+  * grid = (M / M_TILE, B / B_TILE): one grid step owns a tile of LUTs and a
+    tile of the batch;
+  * per-LUT weights are fetched as whole blocks (VMEM-resident across the
+    full depth-L chain — they are tiny), activations are streamed in batch
+    tiles: the BlockSpec index maps express exactly the HBM<->VMEM schedule
+    a GPU implementation would express with threadblocks;
+  * the whole depth-L chain, including the residual accumulators, runs
+    inside a single kernel invocation — no intermediate round-trips.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+the Rust runtime can run (see /opt/xla-example/README.md).
+
+The public entry point ``subnet_apply`` wraps the Pallas forward in a
+``jax.custom_vjp`` whose backward is derived from the pure-jnp oracle
+(``ref.subnet_ref``) — the Pallas kernel stays on the training hot path
+while gradients remain exact.
+"""
+
+import functools
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import split_params, subnet_ref
+from .topo import SubnetTopo
+
+# Batch tile: kept modest so (B_TILE x max(F, N)) activations plus all
+# weights of one LUT fit comfortably in VMEM-scale scratch (~16 KB here).
+_B_TILE_MAX = 256
+
+
+def _pick_b_tile(batch: int) -> int:
+    """Largest divisor of ``batch`` not exceeding _B_TILE_MAX."""
+    bt = min(batch, _B_TILE_MAX)
+    while batch % bt != 0:
+        bt -= 1
+    return bt
+
+
+def _subnet_kernel(topo: SubnetTopo, x_ref, *refs):
+    """Pallas kernel body: one LUT x one batch tile per grid step."""
+    o_ref = refs[-1]
+    param_refs = refs[:-1]
+    # x block: [1, B_TILE, F] -> [B_TILE, F]
+    h = x_ref[0]
+    n_aff = topo.depth
+
+    def affine(v, i):
+        w = param_refs[2 * i][0]  # [d_in, d_out]
+        b = param_refs[2 * i + 1][0]  # [d_out]
+        return v @ w + b[None, :]
+
+    def residual(v, c):
+        rw = param_refs[2 * n_aff + 2 * c][0]
+        rb = param_refs[2 * n_aff + 2 * c + 1][0]
+        return v @ rw + rb[None, :]
+
+    if topo.skip == 0:
+        for i in range(topo.depth):
+            h = affine(h, i)
+            if i + 1 < topo.depth:
+                h = jnp.maximum(h, 0.0)
+    else:
+        s = topo.skip
+        for c in range(topo.num_chunks()):
+            chunk_in = h
+            for j in range(s):
+                h = affine(h, c * s + j)
+                if j + 1 < s:
+                    h = jnp.maximum(h, 0.0)
+            h = h + residual(chunk_in, c)
+            if c + 1 < topo.num_chunks():
+                h = jnp.maximum(h, 0.0)
+    o_ref[0] = h  # [B_TILE, 1]
+
+
+def subnet_pallas(params: Sequence, x, topo: SubnetTopo):
+    """Pallas evaluation of M stacked sub-networks: x [M, B, F] -> [M, B].
+
+    Tiled schedule: grid over (LUT, batch-tile); this is the kernel as it
+    would run on a real TPU (weights VMEM-resident per LUT, activations
+    streamed in batch tiles)."""
+    m, batch, f = x.shape
+    assert f == topo.fan_in, (f, topo.fan_in)
+    bt = _pick_b_tile(batch)
+    grid = (m, batch // bt)
+
+    in_specs = [
+        pl.BlockSpec((1, bt, f), lambda i, j: (i, j, 0)),
+    ]
+    for p in params:
+        if p.ndim == 3:
+            in_specs.append(
+                pl.BlockSpec((1, p.shape[1], p.shape[2]), lambda i, j: (i, 0, 0))
+            )
+        else:
+            in_specs.append(pl.BlockSpec((1, p.shape[1]), lambda i, j: (i, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_subnet_kernel, topo),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bt, 1), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, batch, 1), x.dtype),
+        interpret=True,
+    )(x, *params)
+    return out[..., 0]
+
+
+def _subnet_kernel_whole(topo: SubnetTopo, x_ref, *refs):
+    """Grid-free kernel body: all LUTs and the whole batch in one block."""
+    o_ref = refs[-1]
+    param_refs = refs[:-1]
+    h = x_ref[...]  # [M, B, F]
+    n_aff = topo.depth
+
+    def affine(v, i):
+        w = param_refs[2 * i][...]  # [M, d_in, d_out]
+        b = param_refs[2 * i + 1][...]  # [M, d_out]
+        return jnp.einsum("mbi,mio->mbo", v, w) + b[:, None, :]
+
+    def residual(v, c):
+        rw = param_refs[2 * n_aff + 2 * c][...]
+        rb = param_refs[2 * n_aff + 2 * c + 1][...]
+        return jnp.einsum("mbi,mio->mbo", v, rw) + rb[:, None, :]
+
+    if topo.skip == 0:
+        for i in range(topo.depth):
+            h = affine(h, i)
+            if i + 1 < topo.depth:
+                h = jnp.maximum(h, 0.0)
+    else:
+        s = topo.skip
+        for c in range(topo.num_chunks()):
+            chunk_in = h
+            for j in range(s):
+                h = affine(h, c * s + j)
+                if j + 1 < s:
+                    h = jnp.maximum(h, 0.0)
+            h = h + residual(chunk_in, c)
+            if c + 1 < topo.num_chunks():
+                h = jnp.maximum(h, 0.0)
+    o_ref[...] = h
+
+
+def subnet_pallas_single(params: Sequence, x, topo: SubnetTopo):
+    """Grid-free Pallas evaluation (one block holds everything).
+
+    An alternative AOT schedule kept for ablation and as a fallback: the
+    whole (M, B, F) problem is a single kernel invocation, trading the
+    tiled schedule's VMEM locality for the simplest possible lowering.
+    (Historical note: this also served as the workaround while bisecting
+    the HLO-text constant-elision bug — see ``aot.to_hlo_text``.)
+    """
+    out = pl.pallas_call(
+        functools.partial(_subnet_kernel_whole, topo),
+        out_shape=jax.ShapeDtypeStruct((*x.shape[:2], 1), x.dtype),
+        interpret=True,
+    )(x, *params)
+    return out[..., 0]
+
+
+def subnet_apply(params: List, x, topo: SubnetTopo, *,
+                 single_block: bool = False):
+    """Training/inference entry point: Pallas forward, oracle-derived vjp.
+
+    ``params`` is the flat stacked list (see ``ref.py``); returns [M, B].
+    ``single_block=True`` selects the grid-free schedule (AOT lowering).
+    """
+    n = len(params)
+    fwd_impl = subnet_pallas_single if single_block else subnet_pallas
+
+    @jax.custom_vjp
+    def _apply(*args):
+        ps, xx = list(args[:n]), args[n]
+        return fwd_impl(ps, xx, topo)
+
+    def _fwd(*args):
+        return _apply(*args), args
+
+    def _bwd(res, g):
+        ps, xx = list(res[:n]), res[n]
+        _, vjp = jax.vjp(lambda p, v: subnet_ref(p, v, topo), ps, xx)
+        dp, dx = vjp(g)
+        return (*dp, dx)
+
+    _apply.defvjp(_fwd, _bwd)
+    return _apply(*params, x)

@@ -1,0 +1,114 @@
+"""Sub-network topology descriptors shared by the Pallas kernel, the jnp
+reference oracle, the model builder, and (via the manifest) the Rust side.
+
+A NeuraLUT L-LUT hides a residual MLP ``N`` (paper §III-C) characterised by
+  * ``fan_in``  (F): number of (quantized) inputs, n_0 = F,
+  * ``depth``   (L): number of affine layers A_1..A_L,
+  * ``width``   (N): width of every hidden layer (n_1..n_{L-1} = N, n_L = 1),
+  * ``skip``    (S): residual period; S = 0 means no skip connections,
+                     otherwise L must be a multiple of S and chunk i carries
+                     a parallel affine residual R_i (paper eq. (2)).
+
+PolyLUT baselines use ``PolyTopo``: a single affine over the monomial
+expansion of the F inputs up to degree D (constant term folded into bias).
+"""
+
+import itertools
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class SubnetTopo:
+    """Residual-MLP topology hidden inside one L-LUT."""
+
+    fan_in: int
+    depth: int  # L
+    width: int  # N
+    skip: int  # S; 0 = no residual connections
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError("depth (L) must be >= 1")
+        if self.skip < 0:
+            raise ValueError("skip (S) must be >= 0")
+        if self.skip > 0 and self.depth % self.skip != 0:
+            raise ValueError(f"L={self.depth} must be a multiple of S={self.skip}")
+
+    def layer_widths(self) -> List[int]:
+        """[n_0, n_1, ..., n_L] with n_0 = F, hidden = N, n_L = 1."""
+        return [self.fan_in] + [self.width] * (self.depth - 1) + [1]
+
+    def affine_dims(self) -> List[Tuple[int, int]]:
+        """(d_in, d_out) of A_1..A_L."""
+        w = self.layer_widths()
+        return list(zip(w[:-1], w[1:]))
+
+    def residual_dims(self) -> List[Tuple[int, int]]:
+        """(d_in, d_out) of R_1..R_{L/S}; empty when S = 0."""
+        if self.skip == 0:
+            return []
+        w = self.layer_widths()
+        c = self.depth // self.skip
+        return [(w[self.skip * (i - 1)], w[self.skip * i]) for i in range(1, c + 1)]
+
+    def num_chunks(self) -> int:
+        return 0 if self.skip == 0 else self.depth // self.skip
+
+    def param_count(self) -> int:
+        """Exact trainable-parameter count T_N = T_A + T_R (paper eq. (7))."""
+        t = sum(di * do + do for di, do in self.affine_dims())
+        t += sum(di * do + do for di, do in self.residual_dims())
+        return t
+
+    def param_count_formula(self) -> int:
+        """Closed-form T_A + T_R from paper eqs. (5)+(6); must equal
+        ``param_count()`` — checked by tests on both sides of the stack."""
+        F, L, N = self.fan_in, self.depth, self.width
+
+        def t_a(depth: int) -> int:
+            if depth == 1:
+                return F * 1 + 1
+            if depth == 2:
+                return (F + 2) * N + 1
+            return (depth - 2) * N * N + (F + depth) * N + 1
+
+        total = t_a(L)
+        if self.skip > 0:
+            c = L // self.skip
+            if c == 1:
+                total += F + 1
+            elif c == 2:
+                total += (F + 2) * N + 1
+            else:
+                total += (c - 2) * N * N + (F + c) * N + 1
+        return total
+
+
+@dataclass(frozen=True)
+class PolyTopo:
+    """PolyLUT-style multivariate-polynomial neuron (baseline, [7])."""
+
+    fan_in: int
+    degree: int  # D
+
+    def exponents(self) -> List[Tuple[int, ...]]:
+        """All monomial exponent tuples with 1 <= total degree <= D,
+        in deterministic lexicographic order (constant term excluded —
+        it folds into the bias)."""
+        exps = []
+        for total in range(1, self.degree + 1):
+            for c in itertools.combinations_with_replacement(
+                range(self.fan_in), total
+            ):
+                e = [0] * self.fan_in
+                for i in c:
+                    e[i] += 1
+                exps.append(tuple(e))
+        return exps
+
+    def num_features(self) -> int:
+        return len(self.exponents())
+
+    def param_count(self) -> int:
+        return self.num_features() + 1  # weights + bias

@@ -1,0 +1,260 @@
+"""Layer-2: the circuit-level NeuraLUT model in JAX.
+
+A model is a sparse directed graph of L-LUTs. Layer ``l`` has ``M_l`` L-LUTs;
+each L-LUT reads ``F`` distinct outputs of layer ``l-1`` (a-priori random
+sparsity, LogicNets-style) as ``beta``-bit quantized values, evaluates its
+hidden neuron function (residual MLP / linear / polynomial — see
+``kernels/``), and emits one ``beta``-bit quantized output. Quantization uses
+learned per-layer scales (``quant.py``); everything between the quantized
+boundaries is full-precision, exactly as in the paper.
+
+The same forward is used for QAT training, for evaluation, and (per-layer)
+for truth-table conversion, which is what makes the L-LUT conversion exact.
+
+As in the paper (§III-E1), the output of every sub-network passes through
+BatchNorm and then a learned-scale quantizer. BN uses batch statistics while
+training and EMA running statistics at eval/conversion time; the running
+stats ride in the flat parameter list (they are state, not weights — the
+train step updates them by EMA and the optimizer skips them).
+
+Parameter order (the flat ABI shared with Rust via manifest.json):
+    for each circuit layer l:
+        l{l}.w1, l{l}.b1, ..., l{l}.wL, l{l}.bL,      (affines)
+        l{l}.rw1, l{l}.rb1, ...,                       (residuals, S > 0)
+        l{l}.bn_gamma, l{l}.bn_beta,                   (BN affine, [M])
+        l{l}.bn_mean, l{l}.bn_var,                     (BN running stats, [M])
+        l{l}.scale                                     (raw quant scale, [])
+PolyLUT layers contribute ``l{l}.w, l{l}.b, <bn...>, l{l}.scale``.
+"""
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .configs import ModelConfig
+from .kernels.ref import (
+    init_poly_params,
+    init_subnet_params,
+    poly_ref,
+    subnet_ref,
+)
+from .kernels.subnet import subnet_apply
+from .kernels.topo import PolyTopo, SubnetTopo
+
+
+def layer_topo(cfg: ModelConfig, layer: int):
+    """Neuron topology of circuit layer ``layer`` for the config's mode."""
+    f = cfg.layer_fan_in(layer)
+    if cfg.mode == "neuralut":
+        return SubnetTopo(f, cfg.sub_depth, cfg.sub_width, cfg.sub_skip)
+    if cfg.mode == "logicnets":
+        return SubnetTopo(f, 1, 1, 0)
+    if cfg.mode == "polylut":
+        return PolyTopo(f, cfg.degree)
+    raise ValueError(f"unknown mode {cfg.mode}")
+
+
+def build_sparsity(cfg: ModelConfig) -> List[np.ndarray]:
+    """A-priori random sparsity: per layer, an [M, F] index matrix selecting
+    F *distinct* inputs for each L-LUT from the previous layer's outputs.
+
+    Seeded by ``cfg.mask_seed`` only, so the wiring is a property of the
+    config (stable across training seeds and across the manifest)."""
+    rng = np.random.default_rng(cfg.mask_seed)
+    indices = []
+    prev = cfg.input_size
+    for l, m in enumerate(cfg.layers):
+        f = cfg.layer_fan_in(l)
+        idx = np.stack(
+            [rng.choice(prev, size=f, replace=False) for _ in range(m)]
+        ).astype(np.int32)
+        indices.append(idx)
+        prev = m
+    return indices
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) of every flat parameter — the shared ABI."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    for l, m in enumerate(cfg.layers):
+        topo = layer_topo(cfg, l)
+        if isinstance(topo, PolyTopo):
+            spec.append((f"l{l}.w", (m, topo.num_features(), 1)))
+            spec.append((f"l{l}.b", (m, 1)))
+        else:
+            for i, (di, do) in enumerate(topo.affine_dims(), start=1):
+                spec.append((f"l{l}.w{i}", (m, di, do)))
+                spec.append((f"l{l}.b{i}", (m, do)))
+            for i, (di, do) in enumerate(topo.residual_dims(), start=1):
+                spec.append((f"l{l}.rw{i}", (m, di, do)))
+                spec.append((f"l{l}.rb{i}", (m, do)))
+        spec.append((f"l{l}.bn_gamma", (m,)))
+        spec.append((f"l{l}.bn_beta", (m,)))
+        spec.append((f"l{l}.bn_mean", (m,)))
+        spec.append((f"l{l}.bn_var", (m,)))
+        spec.append((f"l{l}.scale", ()))
+    return spec
+
+
+def scale_param_indices(cfg: ModelConfig) -> List[int]:
+    """Flat indices of the per-layer raw-scale parameters."""
+    return [i for i, (n, _) in enumerate(param_spec(cfg)) if n.endswith(".scale")]
+
+
+def bn_stat_indices(cfg: ModelConfig) -> List[int]:
+    """Flat indices of BN running statistics (state, not weights: the
+    optimizer skips them; the train step updates them by EMA)."""
+    return [
+        i for i, (n, _) in enumerate(param_spec(cfg))
+        if n.endswith(".bn_mean") or n.endswith(".bn_var")
+    ]
+
+
+def no_decay_indices(cfg: ModelConfig) -> List[int]:
+    """Parameters excluded from decoupled weight decay (scales + BN)."""
+    return [
+        i for i, (n, _) in enumerate(param_spec(cfg))
+        if ".bn_" in n or n.endswith(".scale")
+    ]
+
+
+# Number of trailing non-neuron params per layer: bn (4) + scale (1).
+_LAYER_TAIL = 5
+
+
+def layer_param_slices(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """(start, end) flat-index range of each circuit layer's parameters
+    (BN + scale included at the end of the range)."""
+    slices = []
+    start = 0
+    for l, _ in enumerate(cfg.layers):
+        topo = layer_topo(cfg, l)
+        if isinstance(topo, PolyTopo):
+            n = 2
+        else:
+            n = 2 * (len(topo.affine_dims()) + len(topo.residual_dims()))
+        slices.append((start, start + n + _LAYER_TAIL))
+        start += n + _LAYER_TAIL
+    return slices
+
+
+def init_params(cfg: ModelConfig, seed) -> List:
+    """Initialise the flat parameter list from an (optionally traced) i32
+    seed — lowered to ``init.hlo.txt`` so Rust owns per-run seeding."""
+    key = jax.random.PRNGKey(seed)
+    params: List = []
+    for l, m in enumerate(cfg.layers):
+        key, sub = jax.random.split(key)
+        topo = layer_topo(cfg, l)
+        if isinstance(topo, PolyTopo):
+            params.extend(init_poly_params(sub, m, topo))
+        else:
+            params.extend(init_subnet_params(sub, m, topo))
+        params.append(jnp.ones((m,), jnp.float32))  # bn_gamma
+        params.append(0.3 * jnp.ones((m,), jnp.float32))  # bn_beta (shifts
+        # post-BN mass into the unsigned quantizer's [0, s] pass band)
+        params.append(jnp.zeros((m,), jnp.float32))  # bn_mean
+        params.append(jnp.ones((m,), jnp.float32))  # bn_var
+        params.append(jnp.zeros((), jnp.float32))  # raw scale -> scale = 1
+    return params
+
+
+BN_EPS = 1e-5
+
+
+def batch_norm(y, gamma, beta, mean, var, *, train: bool):
+    """Per-neuron BatchNorm over the batch axis of y [B, M].
+
+    ``train=True`` normalizes with batch statistics and returns the batch
+    stats for the EMA update; ``train=False`` uses the running stats (the
+    exact arithmetic the truth-table conversion replays)."""
+    if train:
+        mu = jnp.mean(y, axis=0)
+        sig2 = jnp.var(y, axis=0)
+    else:
+        mu, sig2 = mean, var
+    yn = (y - mu[None, :]) / jnp.sqrt(sig2[None, :] + BN_EPS)
+    out = gamma[None, :] * yn + beta[None, :]
+    if train:
+        return out, (mu, sig2)
+    return out, None
+
+
+def _neuron_apply(cfg: ModelConfig, topo, layer_params: Sequence, x, *,
+                  use_pallas):
+    """Evaluate one circuit layer's stacked neurons: x [M, B, F] -> [M, B].
+
+    ``use_pallas``: False (jnp oracle), True (tiled Pallas kernel), or
+    ``"single"`` (grid-free Pallas — the AOT-safe schedule, see
+    ``kernels/subnet.py``)."""
+    if isinstance(topo, PolyTopo):
+        return poly_ref(layer_params, x, topo)
+    if use_pallas:
+        return subnet_apply(list(layer_params), x, topo,
+                            single_block=use_pallas == "single")
+    return subnet_ref(layer_params, x, topo)
+
+
+def layer_apply(cfg: ModelConfig, layer: int, layer_params: Sequence, g, *,
+                train: bool, use_pallas: bool):
+    """One circuit layer on gathered inputs g [M, B, F] -> quantized [B, M].
+
+    ``layer_params`` is the manifest slice for the layer:
+    neuron params..., bn_gamma, bn_beta, bn_mean, bn_var, raw_scale.
+    Returns (quantized activations [B, M], batch BN stats or None).
+    This single code path serves training, evaluation *and* (via ``tt.py``)
+    truth-table conversion — the root of the bit-exactness invariant.
+    """
+    topo = layer_topo(cfg, layer)
+    *lp, gamma, beta, mean, var, raw_scale = layer_params
+    y = _neuron_apply(cfg, topo, lp, g, use_pallas=use_pallas)
+    y = jnp.transpose(y)  # [B, M]
+    y, stats = batch_norm(y, gamma, beta, mean, var, train=train)
+    if layer == len(cfg.layers) - 1:
+        out = quant.quant_signed(y, raw_scale, cfg.layer_out_bits(layer))
+    else:
+        out = quant.quant_unsigned(y, raw_scale, cfg.beta)
+    return out, stats
+
+
+def sparse_gather(a, idx_np: np.ndarray):
+    """Gather a [B, P] -> [M, B, F] through a one-hot matmul.
+
+    The sparsity indices are compile-time constants, so the gather is
+    expressed as ``a @ onehot`` built from iota + compare + dot. Two reasons
+    over ``a[:, idx]``: (1) XLA `gather` round-trips unreliably through HLO
+    text into the pinned xla_extension 0.5.1 runtime (observed: wiring
+    silently degraded to natural order), while iota/compare/dot are stable
+    across versions; (2) on real TPUs this *is* the idiomatic lowering — a
+    sparse gather feeding the MXU becomes a one-hot matmul.
+    """
+    m, f = idx_np.shape
+    p = a.shape[1]
+    idx = jnp.asarray(idx_np.reshape(-1), dtype=jnp.int32)  # [M*F]
+    onehot = (jnp.arange(p, dtype=jnp.int32)[:, None] == idx[None, :]).astype(
+        a.dtype
+    )  # [P, M*F]
+    g = a @ onehot  # [B, M*F] — exact: one unit entry per column
+    return jnp.transpose(g.reshape(a.shape[0], m, f), (1, 0, 2))
+
+
+def forward(cfg: ModelConfig, params: Sequence, x, indices: List[np.ndarray],
+            *, train: bool = False, use_pallas: bool = True):
+    """Quantized forward pass: x [B, input_size] in [0,1] -> logits [B, C].
+
+    Returns (logits, bn_batch_stats) where the stats list (one (mu, var)
+    per layer) is non-None only when ``train=True``.
+    """
+    slices = layer_param_slices(cfg)
+    a = quant.quant_input(x, cfg.layer_in_bits(0))
+    all_stats = []
+    for l in range(len(cfg.layers)):
+        lo, hi = slices[l]
+        g = sparse_gather(a, np.asarray(indices[l]))  # [M, B, F]
+        a, stats = layer_apply(cfg, l, params[lo:hi], g,
+                               train=train, use_pallas=use_pallas)
+        all_stats.append(stats)
+    return a, (all_stats if train else None)

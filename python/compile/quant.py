@@ -1,0 +1,115 @@
+"""Learned-scale fake quantization (Brevitas-equivalent) with STE.
+
+Every L-LUT boundary in the circuit-level model carries a ``beta``-bit code.
+The quantizers here define the *exact* code <-> float mapping that the Rust
+netlist simulator and RTL replicate bit-for-bit, so the rounding convention
+matters: we use ``floor(x + 0.5)`` (round-half-up) everywhere because
+``jnp.round`` rounds half-to-even while Rust's ``f32::round`` rounds
+half-away-from-zero — ``floor(x + 0.5)`` is cheap and identical in both.
+
+Conventions shared with ``rust/src/netlist``:
+  * hidden activations: unsigned codes in [0, 2^beta - 1], dequant
+    ``code / (2^beta - 1) * scale`` with a learned positive ``scale``;
+  * circuit inputs: same but with fixed ``scale = 1`` (features are
+    pre-normalized to [0, 1]);
+  * logits (last layer): signed codes in [-Q, Q], Q = 2^(beta-1) - 1,
+    dequant ``code * scale / Q`` with a learned shared ``scale`` (argmax on
+    codes therefore equals argmax on dequantized logits).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def round_half_up(x):
+    """Deterministic round: floor(x + 0.5). Mirrored by the Rust side."""
+    return jnp.floor(x + 0.5)
+
+
+def ste(fn, x):
+    """Straight-through estimator: forward ``fn(x)``, identity gradient."""
+    return x + jax.lax.stop_gradient(fn(x) - x)
+
+
+# Gradient slope outside the clip range. BatchNorm (model.py) keeps
+# pre-activations mostly inside the quantizer range; the small leak restores
+# recovery gradients for the tail that still lands outside, while leaving
+# the forward (and hence the truth tables) bit-identical to a hard clip.
+LEAK = 0.05
+
+
+def leaky_clip(x, lo, hi):
+    """Forward: hard clip. Backward: 1 inside [lo, hi], ``LEAK`` outside."""
+    soft = LEAK * x + (1.0 - LEAK) * jnp.clip(x, lo, hi)
+    return soft + jax.lax.stop_gradient(jnp.clip(x, lo, hi) - soft)
+
+
+def scale_of(raw):
+    """Map an unconstrained learned parameter to a positive scale.
+
+    ``exp`` keeps the scale positive; ``raw = 0`` gives scale 1 which is the
+    natural init for activations normalized to [0, 1].
+    """
+    return jnp.exp(raw)
+
+
+def quant_unsigned(x, raw_scale, beta: int):
+    """Fake-quantize to unsigned beta-bit codes on [0, scale].
+
+    Acts as the layer's activation (the clip is the non-linearity, as in
+    LogicNets/Brevitas quantized ReLU). Returns dequantized float values.
+    """
+    levels = float(2**beta - 1)
+    s = scale_of(raw_scale)
+    u = leaky_clip(x / s, 0.0, 1.0)
+    q = ste(lambda t: round_half_up(t * levels) / levels, u)
+    return q * s
+
+
+def quant_unsigned_code(x, raw_scale, beta: int):
+    """Integer codes for ``quant_unsigned`` (conversion path, no STE)."""
+    levels = float(2**beta - 1)
+    s = scale_of(raw_scale)
+    u = jnp.clip(x / s, 0.0, 1.0)
+    return round_half_up(u * levels).astype(jnp.int32)
+
+
+def dequant_unsigned_code(code, raw_scale, beta: int):
+    """Inverse of ``quant_unsigned_code`` (exact on the code lattice)."""
+    levels = float(2**beta - 1)
+    return code.astype(jnp.float32) / levels * scale_of(raw_scale)
+
+
+def quant_input(x, beta: int):
+    """Quantize circuit inputs in [0, 1] with a fixed unit scale."""
+    levels = float(2**beta - 1)
+    u = jnp.clip(x, 0.0, 1.0)
+    return ste(lambda t: round_half_up(t * levels) / levels, u)
+
+
+def quant_input_code(x, beta: int):
+    """Integer codes for the circuit inputs (what the fabric receives)."""
+    levels = float(2**beta - 1)
+    return round_half_up(jnp.clip(x, 0.0, 1.0) * levels).astype(jnp.int32)
+
+
+def dequant_input_code(code, beta: int):
+    levels = float(2**beta - 1)
+    return code.astype(jnp.float32) / levels
+
+
+def quant_signed(x, raw_scale, beta: int):
+    """Fake-quantize logits to signed beta-bit codes on [-scale, scale]."""
+    q_max = float(2 ** (beta - 1) - 1)
+    s = scale_of(raw_scale)
+    u = leaky_clip(x / s, -1.0, 1.0)
+    q = ste(lambda t: round_half_up(t * q_max) / q_max, u)
+    return q * s
+
+
+def quant_signed_code(x, raw_scale, beta: int):
+    """Signed integer codes (two's complement on the wire) for logits."""
+    q_max = float(2 ** (beta - 1) - 1)
+    s = scale_of(raw_scale)
+    u = jnp.clip(x / s, -1.0, 1.0)
+    return round_half_up(u * q_max).astype(jnp.int32)

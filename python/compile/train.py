@@ -1,0 +1,108 @@
+"""Layer-2 training step: cross-entropy + AdamW (decoupled weight decay).
+
+The paper trains with Decoupled Weight Decay Regularization [23] and SGDR
+warm restarts [24]. The *schedule* lives in Rust (the coordinator owns the
+per-step learning rate and passes it in as a scalar); the *step math* lives
+here and is lowered once to ``train_step.hlo.txt``.
+
+BatchNorm running statistics ride in the flat parameter list: the optimizer
+skips them and the step updates them by EMA from the batch statistics
+instead (``model.bn_stat_indices``).
+
+Flat ABI (order mirrored in manifest.json):
+    inputs : params..., m..., v..., step(f32), lr(f32), x[B,in], y[B](i32)
+    outputs: params'..., m'..., v'..., loss(f32), acc(f32)
+"""
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import bn_stat_indices, forward, no_decay_indices
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+BN_MOMENTUM = 0.1  # EMA weight of the current batch's statistics
+
+
+def loss_fn(cfg: ModelConfig, params: Sequence, x, y, indices, *,
+            train: bool, use_pallas: bool = True):
+    """Mean softmax cross-entropy on the (dequantized) logits.
+
+    Returns (loss, (acc, bn_stats))."""
+    logits, stats = forward(cfg, params, x, indices, train=train,
+                            use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    # One-hot cross-entropy instead of take_along_axis: label gathers have
+    # the same HLO-text round-trip hazard as the wiring gather (see
+    # model.sparse_gather) — iota/compare/dot are version-stable.
+    onehot = (jnp.arange(logits.shape[-1], dtype=jnp.int32)[None, :]
+              == y[:, None]).astype(logp.dtype)
+    nll = -jnp.sum(logp * onehot, axis=-1)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), (acc, stats)
+
+
+def train_step(cfg: ModelConfig, params: List, m: List, v: List, step, lr,
+               x, y, indices, *, use_pallas: bool = True):
+    """One AdamW step; returns (params', m', v', loss, acc)."""
+    (loss, (acc, stats)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, x, y, indices, train=True,
+                          use_pallas=use_pallas),
+        has_aux=True,
+    )(params)
+
+    no_decay = set(no_decay_indices(cfg))
+    bn_stats = bn_stat_indices(cfg)
+    # bn_stats come in (mean, var) pairs, one pair per circuit layer, and
+    # stats[l] = (mu_l, var_l) from the batch.
+    ema_target = {}
+    for l, pair in enumerate(stats):
+        mu, var = pair
+        ema_target[bn_stats[2 * l]] = mu
+        ema_target[bn_stats[2 * l + 1]] = var
+
+    b1, b2 = ADAM_B1, ADAM_B2
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    new_p, new_m, new_v = [], [], []
+    for i, (p, g, mi, vi) in enumerate(zip(params, grads, m, v)):
+        if i in ema_target:
+            # BN running stats: EMA update, optimizer state untouched.
+            tgt = jax.lax.stop_gradient(ema_target[i])
+            new_p.append((1.0 - BN_MOMENTUM) * p + BN_MOMENTUM * tgt)
+            new_m.append(mi)
+            new_v.append(vi)
+            continue
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        if i not in no_decay:
+            update = update + cfg.weight_decay * p
+        new_p.append(p - lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss, acc
+
+
+def sgdr_lr(cfg: ModelConfig, step: int, steps_per_epoch: int) -> float:
+    """Reference SGDR (cosine with warm restarts) schedule.
+
+    The Rust coordinator implements the identical function
+    (``coordinator::schedule``) — this copy exists for tests and for
+    documentation of the contract."""
+    import math
+
+    t0 = cfg.sgdr_t0 * steps_per_epoch
+    mult = cfg.sgdr_mult
+    t, period = step, t0
+    while t >= period:
+        t -= period
+        period *= mult
+    frac = t / max(period, 1)
+    return cfg.lr_min + 0.5 * (cfg.lr_max - cfg.lr_min) * (
+        1.0 + math.cos(math.pi * frac)
+    )

@@ -1,0 +1,68 @@
+"""Sub-network -> L-LUT truth-table conversion (toolflow stage 2).
+
+For circuit layer ``l`` with M L-LUTs, fan-in F and per-input bit-width b,
+enumerate all 2^(b*F) input codes, evaluate the layer's neuron function on
+the *dequantized* codes, re-quantize, and emit the integer output codes —
+one truth table per L-LUT, [M, 2^(b*F)].
+
+Address convention (shared with ``rust/src/netlist`` and the generated RTL):
+input j of a LUT occupies bits [b*j, b*(j+1)) of the table address, i.e.
+``addr = sum_j code_j << (b*j)``.
+
+Arguments of the lowered ``tt_layer{l}.hlo.txt``: the previous layer's raw
+scale (absent for l = 0, where inputs are fixed-scale) followed by layer
+l's own parameters (affines/residuals/poly weights + its raw scale), in the
+flat ABI order — listed per-artifact in manifest.json.
+"""
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+from . import quant
+from .configs import ModelConfig
+from .model import layer_apply
+
+
+def enumerate_inputs(cfg: ModelConfig, layer: int):
+    """Decode all 2^(b*F) addresses into per-input integer digits [T, F]."""
+    f = cfg.layer_fan_in(layer)
+    b = cfg.layer_in_bits(layer)
+    t = 1 << (b * f)
+    codes = jnp.arange(t, dtype=jnp.int32)
+    mask = (1 << b) - 1
+    digits = jnp.stack(
+        [(codes >> (b * j)) & mask for j in range(f)], axis=-1
+    )
+    return digits  # [T, F] int32
+
+
+def tt_layer(cfg: ModelConfig, layer: int, layer_params: Sequence,
+             prev_raw_scale=None, *, use_pallas: bool = True):
+    """Truth tables for circuit layer ``layer``: -> codes [M, 2^(b*F)] i32.
+
+    ``layer_params`` excludes the scale; the layer's own raw scale must be
+    the last element of ``layer_params`` — mirroring the manifest order —
+    so callers pass exactly manifest ``tt[l].args``.
+    """
+    m = cfg.layers[layer]
+    digits = enumerate_inputs(cfg, layer)  # [T, F]
+    b_in = cfg.layer_in_bits(layer)
+    if layer == 0:
+        x = quant.dequant_input_code(digits, b_in)
+    else:
+        assert prev_raw_scale is not None
+        x = quant.dequant_unsigned_code(digits, prev_raw_scale, cfg.beta)
+
+    xb = jnp.broadcast_to(x[None], (m, x.shape[0], x.shape[1]))
+    # Same code path as eval-mode forward() -> bit-exact conversion; we
+    # re-quantize the dequantized float output back to integer codes.
+    out, _ = layer_apply(cfg, layer, layer_params, xb, train=False,
+                         use_pallas=use_pallas)  # [T, M] dequantized floats
+    raw_scale = layer_params[-1]
+    if layer == len(cfg.layers) - 1:
+        codes = quant.quant_signed_code(out, raw_scale,
+                                        cfg.layer_out_bits(layer))
+    else:
+        codes = quant.quant_unsigned_code(out, raw_scale, cfg.beta)
+    return jnp.transpose(codes)  # [M, T]

@@ -1,0 +1,110 @@
+"""The bit-exactness invariant (DESIGN.md §3), Python side:
+
+the quantized forward pass and the layer-by-layer truth-table replay must
+produce identical predictions — with *trained-like* (randomly perturbed)
+parameters, across modes, with and without the Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, quant, tt
+
+
+def perturb(cfg, params, seed):
+    """Make scales/BN non-trivial, as after real training."""
+    rng = np.random.default_rng(seed)
+    out = list(params)
+    for i, (nm, sh) in enumerate(model.param_spec(cfg)):
+        if nm.endswith(".scale"):
+            out[i] = jnp.asarray(np.float32(rng.normal(0, 0.4)))
+        elif nm.endswith(".bn_mean"):
+            out[i] = jnp.asarray(rng.normal(0, 0.5, sh).astype(np.float32))
+        elif nm.endswith(".bn_var"):
+            out[i] = jnp.asarray(rng.uniform(0.3, 2.0, sh).astype(np.float32))
+        elif nm.endswith(".bn_beta"):
+            out[i] = jnp.asarray(rng.normal(0.3, 0.3, sh).astype(np.float32))
+    return out
+
+
+def table_replay(cfg, params, idx, x, *, use_pallas):
+    """Evaluate via per-layer truth tables, like the Rust netlist sim."""
+    slices = model.layer_param_slices(cfg)
+    codes = np.array(quant.quant_input_code(x, cfg.layer_in_bits(0)))
+    for l in range(len(cfg.layers)):
+        lo, hi = slices[l]
+        prev_scale = params[slices[l - 1][1] - 1] if l > 0 else None
+        table = np.array(tt.tt_layer(cfg, l, params[lo:hi], prev_scale,
+                                     use_pallas=use_pallas))
+        b = cfg.layer_in_bits(l)
+        out = np.zeros((codes.shape[0], cfg.layers[l]), np.int32)
+        for m in range(cfg.layers[l]):
+            addr = np.zeros(codes.shape[0], np.int64)
+            for j, src in enumerate(idx[l][m]):
+                addr |= codes[:, src].astype(np.int64) << (b * j)
+            out[:, m] = table[m][addr]
+        codes = out
+    return codes
+
+
+@pytest.mark.parametrize("name", ["moons-neuralut", "moons-logicnets",
+                                  "moons-polylut"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_forward_equals_table_replay(name, use_pallas):
+    cfg = configs.get(name)
+    idx = model.build_sparsity(cfg)
+    params = perturb(cfg, model.init_params(cfg, 0), seed=1)
+    x = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(2), (256, cfg.input_size))
+    )
+    logits, _ = model.forward(cfg, params, x, idx, train=False,
+                              use_pallas=use_pallas)
+    pred_model = np.argmax(np.array(logits), axis=1)
+    codes = table_replay(cfg, params, idx, x, use_pallas=use_pallas)
+    pred_replay = np.argmax(codes, axis=1)
+    assert (pred_model != pred_replay).sum() == 0
+
+
+def test_logit_codes_dequantize_to_logits():
+    cfg = configs.get("moons-neuralut")
+    idx = model.build_sparsity(cfg)
+    params = perturb(cfg, model.init_params(cfg, 3), seed=4)
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(5), (128, 2)))
+    logits, _ = model.forward(cfg, params, x, idx, train=False,
+                              use_pallas=False)
+    codes = table_replay(cfg, params, idx, x, use_pallas=False)
+    s = float(jnp.exp(params[model.scale_param_indices(cfg)[-1]]))
+    q = 2 ** (cfg.layer_out_bits(len(cfg.layers) - 1) - 1) - 1
+    np.testing.assert_allclose(np.array(logits), codes * s / q,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_tt_enumeration_covers_all_addresses():
+    cfg = configs.get("moons-neuralut")
+    digits = np.array(tt.enumerate_inputs(cfg, 0))
+    b = cfg.layer_in_bits(0)
+    f = cfg.layer_fan_in(0)
+    assert digits.shape == (1 << (b * f), f)
+    # address j reconstructs from digits
+    recon = sum(digits[:, j].astype(np.int64) << (b * j) for j in range(f))
+    np.testing.assert_array_equal(recon, np.arange(1 << (b * f)))
+
+
+def test_tt_codes_in_range():
+    cfg = configs.get("moons-neuralut")
+    idx = model.build_sparsity(cfg)
+    params = perturb(cfg, model.init_params(cfg, 0), seed=9)
+    slices = model.layer_param_slices(cfg)
+    for l in range(len(cfg.layers)):
+        lo, hi = slices[l]
+        prev = params[slices[l - 1][1] - 1] if l > 0 else None
+        codes = np.array(tt.tt_layer(cfg, l, params[lo:hi], prev,
+                                     use_pallas=False))
+        ob = cfg.layer_out_bits(l)
+        if l == len(cfg.layers) - 1:
+            q = 2 ** (ob - 1) - 1
+            assert codes.min() >= -q and codes.max() <= q
+        else:
+            assert codes.min() >= 0 and codes.max() <= 2**ob - 1

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas sub-network kernel vs the pure-jnp oracle.
+
+This is the core kernel-correctness signal: hypothesis sweeps topology
+(F, L, N, S), LUT count, batch size and dtype; `assert_allclose` against
+`ref.subnet_ref`, plus gradient equality through the custom_vjp.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    init_poly_params,
+    init_subnet_params,
+    poly_ref,
+    subnet_ref,
+)
+from compile.kernels.subnet import (
+    subnet_apply,
+    subnet_pallas,
+    subnet_pallas_single,
+)
+from compile.kernels.topo import PolyTopo, SubnetTopo
+
+
+@st.composite
+def topologies(draw):
+    l = draw(st.integers(1, 5))
+    divisors = [0] + [d for d in range(1, l + 1) if l % d == 0]
+    s = draw(st.sampled_from(divisors))
+    return SubnetTopo(
+        fan_in=draw(st.integers(1, 8)),
+        depth=l,
+        width=draw(st.integers(1, 12)),
+        skip=s,
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    topo=topologies(),
+    m=st.integers(1, 6),
+    batch=st.sampled_from([1, 3, 16, 64, 130]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref(topo, m, batch, seed):
+    key = jax.random.PRNGKey(seed)
+    params = init_subnet_params(key, m, topo)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, batch, topo.fan_in))
+    got = subnet_pallas(params, x, topo)
+    want = subnet_ref(params, x, topo)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(topo=topologies(), m=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_single_block_matches_ref(topo, m, seed):
+    key = jax.random.PRNGKey(seed)
+    params = init_subnet_params(key, m, topo)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, 32, topo.fan_in))
+    got = subnet_pallas_single(params, x, topo)
+    want = subnet_ref(params, x, topo)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(topo=topologies(), seed=st.integers(0, 2**31 - 1))
+def test_custom_vjp_gradients_match_ref(topo, seed):
+    key = jax.random.PRNGKey(seed)
+    m, batch = 3, 24
+    params = init_subnet_params(key, m, topo)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, batch, topo.fan_in))
+
+    def f_pallas(ps):
+        return jnp.sum(subnet_apply(ps, x, topo) ** 2)
+
+    def f_ref(ps):
+        return jnp.sum(subnet_ref(ps, x, topo) ** 2)
+
+    g1 = jax.grad(f_pallas)(params)
+    g2 = jax.grad(f_ref)(params)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_bfloat16_input_supported():
+    topo = SubnetTopo(4, 2, 8, 0)
+    key = jax.random.PRNGKey(0)
+    params = [p.astype(jnp.bfloat16) for p in init_subnet_params(key, 2, topo)]
+    x = jax.random.normal(key, (2, 16, 4), jnp.bfloat16)
+    got = subnet_pallas(params, x, topo)
+    want = subnet_ref(params, x, topo)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_logicnets_degenerate_topology():
+    """L=1, N=1, S=0 is exactly a linear neuron (paper §III-C)."""
+    topo = SubnetTopo(5, 1, 1, 0)
+    key = jax.random.PRNGKey(7)
+    params = init_subnet_params(key, 4, topo)
+    x = jax.random.normal(key, (4, 10, 5))
+    got = subnet_pallas(params, x, topo)
+    w, b = params
+    want = jnp.einsum("mbf,mfo->mbo", x, w)[..., 0] + b[:, None, 0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_poly_ref_matches_manual_expansion():
+    topo = PolyTopo(2, 2)
+    key = jax.random.PRNGKey(3)
+    params = init_poly_params(key, 1, topo)
+    x = jnp.array([[[0.5, -1.0]]])
+    w, b = params
+    # exponents order: (1,0), (0,1), (2,0), (1,1), (0,2)
+    feats = jnp.array([0.5, -1.0, 0.25, -0.5, 1.0])
+    want = jnp.dot(feats, w[0, :, 0]) + b[0, 0]
+    got = poly_ref(params, x, topo)[0, 0]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_residual_actually_contributes():
+    """With S>0 the residual path must change the output."""
+    topo_skip = SubnetTopo(3, 2, 4, 2)
+    topo_noskip = SubnetTopo(3, 2, 4, 0)
+    key = jax.random.PRNGKey(1)
+    p_skip = init_subnet_params(key, 1, topo_skip)
+    x = jax.random.normal(key, (1, 8, 3))
+    y_skip = subnet_ref(p_skip, x, topo_skip)
+    # Drop the residual tensors -> same affine chain without skip.
+    y_no = subnet_ref(p_skip[:4], x, topo_noskip)
+    assert not np.allclose(y_skip, y_no)
+
+
+def test_rejects_bad_skip():
+    with pytest.raises(ValueError):
+        SubnetTopo(3, 5, 4, 2)  # L=5 not a multiple of S=2

@@ -1,0 +1,38 @@
+"""Tests of the L1 kernel performance model (kernel_stats)."""
+
+import pytest
+
+from compile import configs, kernel_stats
+
+
+@pytest.mark.parametrize("name", ["hdr-mini", "jsc-2l", "jsc-5l",
+                                  "moons-polylut"])
+def test_vmem_within_budget(name):
+    cfg = configs.get(name)
+    for s in kernel_stats.all_stats(cfg):
+        assert s.vmem_bytes < kernel_stats.VMEM_BYTES
+        assert 0.0 < s.mxu_utilization <= 1.0
+        assert s.b_tile >= 1
+
+
+def test_weight_bytes_match_param_count():
+    cfg = configs.get("hdr-mini")
+    from compile.model import layer_topo
+    s = kernel_stats.stats_for(cfg, 0, cfg.batch)
+    topo = layer_topo(cfg, 0)
+    assert s.weight_bytes == topo.param_count() * kernel_stats.BF16
+
+
+def test_mxu_utilization_improves_with_batch_tile():
+    cfg = configs.get("hdr-mini")
+    small = kernel_stats.stats_for(cfg, 0, 8)
+    large = kernel_stats.stats_for(cfg, 0, 256)
+    assert large.mxu_utilization >= small.mxu_utilization
+
+
+def test_padded_macs_at_least_useful():
+    u, p = kernel_stats._matmul_stats(64, 6, 16)
+    assert p >= u
+    # perfectly-aligned shapes reach 100%
+    u2, p2 = kernel_stats._matmul_stats(128, 128, 128)
+    assert u2 == p2

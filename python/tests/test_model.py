@@ -1,0 +1,195 @@
+"""L2 model tests: quantizers, BN, sparsity, forward shapes, training step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model, quant, train
+from compile.configs import ModelConfig
+
+
+def tiny_cfg(**over):
+    base = dict(
+        name="t", dataset="moons", input_size=4, n_class=2,
+        layers=(4, 2), beta=2, fan_in=2, mode="neuralut",
+        sub_depth=2, sub_width=4, sub_skip=0, batch=8, epochs=1,
+    )
+    base.update(over)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------- quantizers
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.floats(-3, 3), st.floats(-1, 1))
+def test_quant_unsigned_lands_on_lattice(beta, x, raw):
+    y = float(quant.quant_unsigned(jnp.float32(x), jnp.float32(raw), beta))
+    s = float(np.exp(np.float32(raw)))
+    levels = 2**beta - 1
+    code = round(y / s * levels)
+    assert abs(y - code / levels * s) < 1e-5
+    assert 0 <= code <= levels
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.floats(-3, 3), st.floats(-1, 1))
+def test_signed_code_dequant_argmax_consistent(beta, x, raw):
+    code = int(quant.quant_signed_code(jnp.float32(x), jnp.float32(raw), beta))
+    q = 2 ** (beta - 1) - 1
+    assert -q <= code <= q
+    # quant_signed value equals code * s / q
+    y = float(quant.quant_signed(jnp.float32(x), jnp.float32(raw), beta))
+    s = float(np.exp(np.float32(raw)))
+    assert abs(y - code * s / q) < 1e-5
+
+
+def test_round_half_up_is_not_bankers():
+    # 0.5 -> 1 (bankers rounding would give 0)
+    assert float(quant.round_half_up(jnp.float32(0.5))) == 1.0
+    assert float(quant.round_half_up(jnp.float32(1.5))) == 2.0
+    assert float(quant.round_half_up(jnp.float32(-0.5))) == 0.0
+
+
+def test_leaky_clip_forward_is_hard_clip():
+    xs = jnp.array([-5.0, -0.1, 0.0, 0.4, 1.0, 7.3])
+    np.testing.assert_array_equal(
+        quant.leaky_clip(xs, 0.0, 1.0), jnp.clip(xs, 0.0, 1.0)
+    )
+
+
+def test_leaky_clip_gradient_leaks():
+    g = jax.grad(lambda x: quant.leaky_clip(x, 0.0, 1.0))(5.0)
+    assert abs(g - quant.LEAK) < 1e-6
+    g_in = jax.grad(lambda x: quant.leaky_clip(x, 0.0, 1.0))(0.5)
+    assert abs(g_in - 1.0) < 1e-6
+
+
+# ---------------------------------------------------------------- sparsity
+
+def test_sparsity_is_deterministic_and_distinct():
+    cfg = tiny_cfg()
+    a = model.build_sparsity(cfg)
+    b = model.build_sparsity(cfg)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    for l, idx in enumerate(a):
+        prev = cfg.input_size if l == 0 else cfg.layers[l - 1]
+        assert idx.shape == (cfg.layers[l], cfg.layer_fan_in(l))
+        for row in idx:
+            assert len(set(row.tolist())) == len(row)
+            assert row.max() < prev
+
+
+def test_fan_in_clamped_to_available_inputs():
+    cfg = tiny_cfg(input_size=2, fan_in=6)
+    assert cfg.layer_fan_in(0) == 2
+    idx = model.build_sparsity(cfg)
+    assert idx[0].shape[1] == 2
+
+
+# ---------------------------------------------------------------- forward
+
+@pytest.mark.parametrize("mode,extra", [
+    ("neuralut", {}),
+    ("logicnets", {}),
+    ("polylut", {"degree": 2}),
+])
+def test_forward_shapes_and_quantized_range(mode, extra):
+    cfg = tiny_cfg(mode=mode, **extra)
+    idx = model.build_sparsity(cfg)
+    params = model.init_params(cfg, 0)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (8, 4))
+    logits, stats = model.forward(cfg, params, x, idx, train=False,
+                                  use_pallas=False)
+    assert logits.shape == (8, 2)
+    assert stats is None
+    # logits are on the signed quant lattice: |logit| <= scale
+    s = float(jnp.exp(params[model.scale_param_indices(cfg)[-1]]))
+    assert float(jnp.max(jnp.abs(logits))) <= s + 1e-5
+
+
+def test_forward_train_returns_batch_stats():
+    cfg = tiny_cfg()
+    idx = model.build_sparsity(cfg)
+    params = model.init_params(cfg, 0)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (8, 4))
+    _, stats = model.forward(cfg, params, x, idx, train=True,
+                             use_pallas=False)
+    assert len(stats) == 2
+    mu, var = stats[0]
+    assert mu.shape == (4,) and var.shape == (4,)
+
+
+def test_param_spec_matches_init_shapes():
+    for name in ["moons-neuralut", "jsc-2l", "hdr-mini-polylut",
+                 "fig5-l3-skip"]:
+        cfg = configs.get(name)
+        spec = model.param_spec(cfg)
+        params = model.init_params(cfg, 0)
+        assert len(spec) == len(params)
+        for (nm, sh), p in zip(spec, params):
+            assert tuple(p.shape) == tuple(sh), nm
+
+
+def test_layer_slices_partition_the_spec():
+    cfg = configs.get("jsc-5l")
+    slices = model.layer_param_slices(cfg)
+    spec = model.param_spec(cfg)
+    assert slices[0][0] == 0
+    assert slices[-1][1] == len(spec)
+    for (a, b), (c, d) in zip(slices, slices[1:]):
+        assert b == c
+
+
+# ---------------------------------------------------------------- training
+
+def test_train_step_reduces_loss_on_separable_data():
+    cfg = tiny_cfg(layers=(6, 2), beta=3, lr_max=1e-2)
+    idx = model.build_sparsity(cfg)
+    params = model.init_params(cfg, 1)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (64, 4))
+    y = (x[:, 0] > 0.5).astype(jnp.int32)  # trivially separable
+    step = jax.jit(lambda p, m, v, s: train.train_step(
+        cfg, p, m, v, s, 5e-3, x[:8 * ((int(s) - 1) % 8):][:8],
+        y[:8 * ((int(s) - 1) % 8):][:8], idx, use_pallas=False))
+    first_loss = None
+    for s in range(1, 40):
+        b = (s - 1) % 8
+        params, m, v, loss, acc = train.train_step(
+            cfg, params, m, v, float(s), 5e-3, x[b * 8:(b + 1) * 8],
+            y[b * 8:(b + 1) * 8], idx, use_pallas=False)
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < first_loss
+
+
+def test_bn_stats_updated_by_ema_not_adam():
+    cfg = tiny_cfg()
+    idx = model.build_sparsity(cfg)
+    params = model.init_params(cfg, 0)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    x = jax.random.uniform(jax.random.PRNGKey(0), (8, 4))
+    y = jnp.zeros((8,), jnp.int32)
+    p2, m2, v2, _, _ = train.train_step(
+        cfg, params, m, v, 1.0, 1e-3, x, y, idx, use_pallas=False)
+    for i in model.bn_stat_indices(cfg):
+        # optimizer state for stats must remain zero
+        assert float(jnp.max(jnp.abs(m2[i]))) == 0.0
+        assert float(jnp.max(jnp.abs(v2[i]))) == 0.0
+
+
+def test_sgdr_schedule_matches_rust_contract():
+    cfg = tiny_cfg(lr_max=1e-2, lr_min=1e-4, sgdr_t0=5, sgdr_mult=2)
+    # restart at t0 * spe steps
+    spe = 10
+    assert abs(train.sgdr_lr(cfg, 0, spe) - 1e-2) < 1e-12
+    assert abs(train.sgdr_lr(cfg, 50, spe) - 1e-2) < 1e-12  # warm restart
+    mid = train.sgdr_lr(cfg, 25, spe)
+    assert abs(mid - (1e-4 + 0.5 * (1e-2 - 1e-4))) < 1e-9

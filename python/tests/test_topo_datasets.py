@@ -1,0 +1,103 @@
+"""Topology formulas (paper Table I / eqs. 5-7) and dataset generators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets
+from compile.kernels.topo import PolyTopo, SubnetTopo
+
+
+@st.composite
+def topologies(draw):
+    l = draw(st.integers(1, 8))
+    divisors = [0] + [d for d in range(1, l + 1) if l % d == 0]
+    return SubnetTopo(
+        fan_in=draw(st.integers(1, 16)),
+        depth=l,
+        width=draw(st.integers(1, 32)),
+        skip=draw(st.sampled_from(divisors)),
+    )
+
+
+@settings(max_examples=200, deadline=None)
+@given(topologies())
+def test_param_count_formula_matches_enumeration(topo):
+    """Paper eq. (7) closed form == structural enumeration."""
+    assert topo.param_count() == topo.param_count_formula()
+
+
+def test_logicnets_is_special_case():
+    """N = L = 1, S = 0 reduces to LogicNets (paper §III-C)."""
+    for f in range(1, 10):
+        t = SubnetTopo(f, 1, 1, 0)
+        assert t.param_count() == f + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 4))
+def test_poly_feature_count_is_binomial(f, d):
+    import math
+    topo = PolyTopo(f, d)
+    assert topo.num_features() == math.comb(f + d, d) - 1
+    # exponents are unique and within degree bound
+    exps = topo.exponents()
+    assert len(set(exps)) == len(exps)
+    assert all(1 <= sum(e) <= d for e in exps)
+
+
+def test_scaling_linear_in_f():
+    """Table I: NeuraLUT is linear in F for fixed (N, L)."""
+    t = lambda f: SubnetTopo(f, 4, 16, 2).param_count()
+    diffs = [t(f + 1) - t(f) for f in range(2, 10)]
+    assert len(set(diffs)) == 1
+
+
+# ------------------------------------------------------------------ datasets
+
+@pytest.mark.parametrize("name", list(datasets.GENERATORS))
+def test_generators_produce_valid_blobs(name, tmp_path):
+    xtr, ytr, xte, yte = datasets.GENERATORS[name](seed=123)
+    n_class = datasets.N_CLASS[name]
+    assert xtr.min() >= 0.0 and xtr.max() <= 1.0
+    assert ytr.min() >= 0 and ytr.max() < n_class
+    assert xtr.shape[1] == xte.shape[1]
+    # round-trip the binary format
+    p = tmp_path / f"{name}.bin"
+    datasets.write_blob(str(p), xtr[:100], ytr[:100], xte[:50], yte[:50],
+                        n_class)
+    raw = p.read_bytes()
+    import struct
+    magic, ver, ntr, nte, nf, nc = struct.unpack_from("<6I", raw, 0)
+    assert magic == datasets.MAGIC and ver == datasets.VERSION
+    assert (ntr, nte, nf, nc) == (100, 50, xtr.shape[1], n_class)
+    back = np.frombuffer(raw, np.float32, ntr * nf, 24).reshape(ntr, nf)
+    np.testing.assert_array_equal(back, xtr[:100])
+
+
+def test_generators_are_deterministic():
+    a = datasets.make_jsc(7, n_train=100, n_test=50)
+    b = datasets.make_jsc(7, n_train=100, n_test=50)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_digits_classes_look_different():
+    xtr, ytr, _, _ = datasets.make_digits(1, side=14, n_train=600, n_test=10)
+    means = np.stack([xtr[ytr == c].mean(axis=0) for c in range(10)])
+    # class-mean images must be pairwise distinguishable
+    d = np.linalg.norm(means[:, None] - means[None, :], axis=-1)
+    assert d[np.triu_indices(10, 1)].min() > 0.3
+
+
+def test_jsc_is_learnable_but_not_trivial():
+    """A linear probe should land well above chance but below ~70 %
+    (the paper's task sits in the 72-76 % band for stronger models)."""
+    xtr, ytr, xte, yte = datasets.make_jsc(2024, n_train=4000, n_test=1000)
+    # one-shot least-squares probe
+    xb = np.hstack([xtr, np.ones((len(xtr), 1), np.float32)])
+    targets = np.eye(5, dtype=np.float32)[ytr]
+    w, *_ = np.linalg.lstsq(xb, targets, rcond=None)
+    xtb = np.hstack([xte, np.ones((len(xte), 1), np.float32)])
+    acc = (np.argmax(xtb @ w, axis=1) == yte).mean()
+    assert 0.35 < acc < 0.85, acc

@@ -1,0 +1,297 @@
+//! Experiment-suite configuration: a TOML-subset parser (offline image —
+//! no `toml` crate) and the suite schema consumed by `neuralut suite`.
+//!
+//! A suite file declares a batch of pipeline runs:
+//!
+//! ```toml
+//! # suite.toml
+//! name = "nightly"
+//! seeds = 3
+//! out_dir = "runs/nightly"
+//!
+//! [[run]]
+//! config = "jsc-2l"
+//! epochs = 40
+//!
+//! [[run]]
+//! config = "hdr-mini"
+//! rtl = true
+//! ```
+//!
+//! Supported TOML subset: top-level `key = value` pairs, `[[table]]`
+//! arrays, strings / integers / floats / booleans, `#` comments. That is
+//! all the schema needs; unknown keys are rejected so typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One scalar TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Parsed TOML-subset document: top-level pairs + arrays of tables.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    pub root: BTreeMap<String, TomlValue>,
+    pub tables: BTreeMap<String, Vec<BTreeMap<String, TomlValue>>>,
+}
+
+impl TomlDoc {
+    /// Parse the subset described in the module docs.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        // None = root; Some(name) = the latest [[name]] table.
+        let mut current: Option<String> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[") {
+                let name = name
+                    .strip_suffix("]]")
+                    .with_context(|| format!("line {}: bad table header", lineno + 1))?
+                    .trim()
+                    .to_string();
+                doc.tables.entry(name.clone()).or_default().push(BTreeMap::new());
+                current = Some(name);
+                continue;
+            }
+            if line.starts_with('[') {
+                bail!("line {}: plain [tables] are not supported (use [[{}]])",
+                      lineno + 1, line.trim_matches(['[', ']']));
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+            match &current {
+                None => {
+                    doc.root.insert(key, value);
+                }
+                Some(name) => {
+                    doc.tables
+                        .get_mut(name)
+                        .unwrap()
+                        .last_mut()
+                        .unwrap()
+                        .insert(key, value);
+                }
+            }
+        }
+        Ok(doc)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s.strip_suffix('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{v}'")
+}
+
+/// One run declaration in a suite.
+#[derive(Debug, Clone)]
+pub struct SuiteRun {
+    pub config: String,
+    pub epochs: Option<usize>,
+    pub seeds: Option<usize>,
+    pub rtl: bool,
+}
+
+/// A parsed experiment suite.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: String,
+    pub seeds: usize,
+    pub out_dir: Option<String>,
+    pub runs: Vec<SuiteRun>,
+}
+
+impl Suite {
+    /// Load and validate a suite file.
+    pub fn load(path: &Path) -> Result<Suite> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Suite> {
+        let doc = TomlDoc::parse(text)?;
+        for key in doc.root.keys() {
+            if !matches!(key.as_str(), "name" | "seeds" | "out_dir") {
+                bail!("unknown top-level key '{key}'");
+            }
+        }
+        for name in doc.tables.keys() {
+            if name != "run" {
+                bail!("unknown table '[[{name}]]'");
+            }
+        }
+        let runs = doc
+            .tables
+            .get("run")
+            .map(|rows| {
+                rows.iter()
+                    .map(|row| {
+                        for key in row.keys() {
+                            if !matches!(key.as_str(),
+                                         "config" | "epochs" | "seeds" | "rtl") {
+                                bail!("unknown run key '{key}'");
+                            }
+                        }
+                        Ok(SuiteRun {
+                            config: row
+                                .get("config")
+                                .context("run missing 'config'")?
+                                .as_str()?
+                                .to_string(),
+                            epochs: row.get("epochs").map(|v| v.as_usize()).transpose()?,
+                            seeds: row.get("seeds").map(|v| v.as_usize()).transpose()?,
+                            rtl: row.get("rtl").map(|v| v.as_bool()).transpose()?.unwrap_or(false),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .transpose()?
+            .unwrap_or_default();
+        if runs.is_empty() {
+            bail!("suite declares no [[run]] entries");
+        }
+        Ok(Suite {
+            name: doc
+                .root
+                .get("name")
+                .map(|v| Ok::<_, anyhow::Error>(v.as_str()?.to_string()))
+                .transpose()?
+                .unwrap_or_else(|| "suite".into()),
+            seeds: doc.root.get("seeds").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
+            out_dir: doc
+                .root
+                .get("out_dir")
+                .map(|v| Ok::<_, anyhow::Error>(v.as_str()?.to_string()))
+                .transpose()?,
+            runs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # nightly sweep
+        name = "nightly"
+        seeds = 3
+        out_dir = "runs/nightly"
+
+        [[run]]
+        config = "jsc-2l"
+        epochs = 40
+
+        [[run]]
+        config = "hdr-mini"  # trailing comment
+        rtl = true
+    "#;
+
+    #[test]
+    fn parses_full_suite() {
+        let s = Suite::parse(SAMPLE).unwrap();
+        assert_eq!(s.name, "nightly");
+        assert_eq!(s.seeds, 3);
+        assert_eq!(s.out_dir.as_deref(), Some("runs/nightly"));
+        assert_eq!(s.runs.len(), 2);
+        assert_eq!(s.runs[0].config, "jsc-2l");
+        assert_eq!(s.runs[0].epochs, Some(40));
+        assert!(!s.runs[0].rtl);
+        assert!(s.runs[1].rtl);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(Suite::parse("bogus = 1\n[[run]]\nconfig = \"a\"").is_err());
+        assert!(Suite::parse("[[run]]\nconfig = \"a\"\ntypo = 2").is_err());
+        assert!(Suite::parse("[[walk]]\nconfig = \"a\"").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_suite() {
+        assert!(Suite::parse("name = \"x\"").is_err());
+    }
+
+    #[test]
+    fn value_types_roundtrip() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 1.5\nc = true\nd = \"x # not a comment\"",
+        )
+        .unwrap();
+        assert_eq!(doc.root["a"], TomlValue::Int(1));
+        assert_eq!(doc.root["b"], TomlValue::Float(1.5));
+        assert_eq!(doc.root["c"], TomlValue::Bool(true));
+        assert_eq!(doc.root["d"], TomlValue::Str("x # not a comment".into()));
+    }
+
+    #[test]
+    fn plain_tables_rejected_with_hint() {
+        let e = TomlDoc::parse("[run]\nconfig = \"a\"").unwrap_err();
+        assert!(e.to_string().contains("[[run]]"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Shared harness for the paper-reproduction experiment binaries
+//! (`examples/repro_*.rs`): run the full codesign pipeline for a named
+//! artifact bundle and collect the metrics every table/figure needs.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::pipeline::{self, PipelineOpts, PipelineResult};
+use super::trainer::TrainOpts;
+use crate::data::Dataset;
+use crate::manifest::Manifest;
+use crate::runtime::Runtime;
+use crate::util::json::{obj, Json};
+
+/// One experiment run's summary row.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub config: String,
+    pub mode: String,
+    pub seed: u64,
+    pub fabric_acc: f64,
+    pub model_acc: f64,
+    pub luts: usize,
+    pub ffs: usize,
+    pub fmax_mhz: f64,
+    pub latency_ns: f64,
+    pub latency_cycles: usize,
+    pub area_delay: f64,
+    pub l_luts: usize,
+    pub bdd_nodes: usize,
+    pub train_seconds: f64,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", Json::Str(self.config.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("fabric_acc", Json::Num(self.fabric_acc)),
+            ("model_acc", Json::Num(self.model_acc)),
+            ("luts", Json::Num(self.luts as f64)),
+            ("ffs", Json::Num(self.ffs as f64)),
+            ("fmax_mhz", Json::Num(self.fmax_mhz)),
+            ("latency_ns", Json::Num(self.latency_ns)),
+            ("latency_cycles", Json::Num(self.latency_cycles as f64)),
+            ("area_delay", Json::Num(self.area_delay)),
+            ("l_luts", Json::Num(self.l_luts as f64)),
+            ("bdd_nodes", Json::Num(self.bdd_nodes as f64)),
+            ("train_seconds", Json::Num(self.train_seconds)),
+        ])
+    }
+}
+
+/// Execute the pipeline for `config` and summarize. Evicts previously
+/// cached executables first: sweeps visit many configs and compiled XLA
+/// programs are memory-heavy.
+pub fn run_config(rt: &Runtime, config: &str, seed: u64,
+                  epochs: Option<usize>) -> Result<RunSummary> {
+    let dir = crate::artifacts_dir().join(config);
+    rt.evict_other_bundles(&dir);
+    let m = Manifest::load(&dir)
+        .with_context(|| format!("bundle '{config}' (run `make artifacts`)"))?;
+    let ds = Dataset::load_named(&m.dataset)?;
+    let t0 = std::time::Instant::now();
+    let opts = PipelineOpts {
+        train: TrainOpts { epochs, quiet: true, ..Default::default() },
+        verify_samples: Some(2048),
+        out_dir: None,
+        emit_rtl: false,
+    };
+    let r: PipelineResult = pipeline::run(rt, &m, &ds, seed, &opts)?;
+    pipeline::verify_consistent(&r, 0.05)?;
+    Ok(RunSummary {
+        config: config.to_string(),
+        mode: m.mode.clone(),
+        seed,
+        fabric_acc: r.sim_acc,
+        model_acc: r.model_acc,
+        luts: r.synth.luts,
+        ffs: r.synth.ffs,
+        fmax_mhz: r.synth.fmax_mhz,
+        latency_ns: r.synth.latency_ns,
+        latency_cycles: r.synth.latency_cycles,
+        area_delay: r.synth.area_delay,
+        l_luts: r.net.num_luts(),
+        bdd_nodes: r.synth.bdd_nodes,
+        train_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Number of seeds for sweep experiments (`NEURALUT_SEEDS`, default 3).
+pub fn n_seeds() -> usize {
+    std::env::var("NEURALUT_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}
+
+/// Optional epoch override for quick runs (`NEURALUT_EPOCHS`).
+pub fn epochs_override() -> Option<usize> {
+    std::env::var("NEURALUT_EPOCHS").ok().and_then(|v| v.parse().ok())
+}
+
+/// Append result rows to `artifacts/results/<experiment>.json`.
+pub fn save_results(experiment: &str, rows: &[RunSummary]) -> Result<PathBuf> {
+    let dir = crate::artifacts_dir().join("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{experiment}.json"));
+    let arr = Json::Arr(rows.iter().map(|r| r.to_json()).collect());
+    std::fs::write(&path, arr.to_string())?;
+    Ok(path)
+}
+
+/// Mean ± std of a metric across seeds.
+pub fn mean_std(rows: &[RunSummary], f: impl Fn(&RunSummary) -> f64) -> (f64, f64) {
+    let s = crate::util::stats::summarize(
+        &rows.iter().map(f).collect::<Vec<_>>(),
+    );
+    (s.mean, if s.std.is_nan() { 0.0 } else { s.std })
+}

@@ -1,0 +1,9 @@
+//! Layer-3 coordination: the training driver that executes AOT train
+//! steps, the SGDR schedule, and the end-to-end codesign pipeline
+//! (train → convert → verify → RTL → synth).
+
+pub mod experiments;
+pub mod nas;
+pub mod pipeline;
+pub mod schedule;
+pub mod trainer;

@@ -1,0 +1,126 @@
+//! Circuit-topology search — the paper's §V future-work direction
+//! ("explore automated search techniques like NAS to optimize NeuraLUT's
+//! circuit-level topology"), implemented as successive-halving random
+//! search over the *already-lowered* artifact bundles.
+//!
+//! Because shapes are baked into the AOT programs, the search space here is
+//! the set of built bundles (plus seeds) rather than free-form widths —
+//! candidates are (config, seed) pairs, scored by an accuracy / area-delay
+//! trade-off. Successive halving trains every candidate for a small epoch
+//! budget, keeps the top half, doubles the budget, and repeats — so poor
+//! topologies cost little. For a free-form space, regenerate bundles with
+//! `python -m compile.aot --configs ...` from a generated config list.
+
+use anyhow::Result;
+
+use super::experiments::{run_config, RunSummary};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// A scored candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub config: String,
+    pub seed: u64,
+    pub summary: Option<RunSummary>,
+    pub score: f64,
+}
+
+/// Search options.
+#[derive(Debug, Clone)]
+pub struct NasOpts {
+    /// Starting epoch budget per candidate.
+    pub base_epochs: usize,
+    /// Number of halving rounds (budget doubles each round).
+    pub rounds: usize,
+    /// Trade-off weight: score = accuracy − lambda · log10(area_delay).
+    pub lambda: f64,
+    /// Seeds sampled per config.
+    pub seeds_per_config: usize,
+}
+
+impl Default for NasOpts {
+    fn default() -> Self {
+        NasOpts { base_epochs: 2, rounds: 3, lambda: 0.02, seeds_per_config: 2 }
+    }
+}
+
+/// Score an evaluated run (higher is better).
+pub fn score(summary: &RunSummary, lambda: f64) -> f64 {
+    summary.fabric_acc - lambda * summary.area_delay.max(1.0).log10()
+}
+
+/// Successive-halving search over `configs`; returns candidates sorted by
+/// final score (best first). Only survivors of the last round carry a
+/// full-budget summary.
+pub fn search(rt: &Runtime, configs: &[String], opts: &NasOpts, seed: u64)
+              -> Result<Vec<Candidate>> {
+    let mut rng = Rng::new(seed);
+    let mut pool: Vec<Candidate> = configs
+        .iter()
+        .flat_map(|c| {
+            (0..opts.seeds_per_config).map(|_| Candidate {
+                config: c.clone(),
+                seed: rng.next_u64() % 1000,
+                summary: None,
+                score: f64::NEG_INFINITY,
+            }).collect::<Vec<_>>()
+        })
+        .collect();
+
+    let mut epochs = opts.base_epochs;
+    for round in 0..opts.rounds {
+        for cand in pool.iter_mut() {
+            let s = run_config(rt, &cand.config, cand.seed, Some(epochs))?;
+            cand.score = score(&s, opts.lambda);
+            cand.summary = Some(s);
+        }
+        pool.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        let keep = (pool.len() / 2).max(1);
+        if round + 1 < opts.rounds {
+            pool.truncate(keep);
+            epochs *= 2;
+        }
+    }
+    Ok(pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(acc: f64, adp: f64) -> RunSummary {
+        RunSummary {
+            config: "x".into(),
+            mode: "neuralut".into(),
+            seed: 0,
+            fabric_acc: acc,
+            model_acc: acc,
+            luts: 100,
+            ffs: 10,
+            fmax_mhz: 500.0,
+            latency_ns: 4.0,
+            latency_cycles: 2,
+            area_delay: adp,
+            l_luts: 10,
+            bdd_nodes: 100,
+            train_seconds: 1.0,
+        }
+    }
+
+    #[test]
+    fn score_prefers_accuracy_then_area() {
+        let better_acc = score(&summary(0.95, 1e4), 0.02);
+        let worse_acc = score(&summary(0.90, 1e4), 0.02);
+        assert!(better_acc > worse_acc);
+        let small = score(&summary(0.90, 1e3), 0.02);
+        let large = score(&summary(0.90, 1e6), 0.02);
+        assert!(small > large);
+    }
+
+    #[test]
+    fn default_opts_sane() {
+        let o = NasOpts::default();
+        assert!(o.rounds >= 1 && o.base_epochs >= 1);
+    }
+}

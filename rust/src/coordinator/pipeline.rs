@@ -1,0 +1,144 @@
+//! The end-to-end codesign pipeline (paper Fig. 4): QAT training →
+//! sub-network → L-LUT conversion → bit-exactness verification → RTL
+//! generation → synthesis estimation. One call drives the whole toolflow
+//! and returns everything the experiment harnesses need.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::trainer::{TrainOpts, Trainer, TrainResult};
+use crate::data::Dataset;
+use crate::luts::{convert, LutNetwork};
+use crate::manifest::Manifest;
+use crate::netlist::Simulator;
+use crate::runtime::Runtime;
+use crate::synth::{synthesize, SynthReport};
+use crate::util::json::{obj, Json};
+
+/// Everything one pipeline run produces.
+///
+/// Accuracy semantics (DESIGN.md §3): the converted L-LUT fabric is the
+/// *authoritative* model — `sim_acc` is the number every experiment
+/// reports, exactly as the paper reports post-conversion hardware results.
+/// `model_acc` is the float (fwd HLO) monitoring number; it can diverge
+/// from the fabric on samples whose activations land within an ULP of a
+/// quantizer decision boundary (the two AOT programs are compiled
+/// separately and transcendental ops differ at ULP level), and those flips
+/// cascade through deep circuits. `divergence = mismatches / n_verified`
+/// quantifies this; within one toolchain the conversion itself is exact
+/// (pytest `test_exactness.py` proves fwd ≡ table-replay bit-for-bit).
+pub struct PipelineResult {
+    pub train: TrainResult,
+    pub net: LutNetwork,
+    pub synth: SynthReport,
+    /// Float-model (XLA fwd) test accuracy — training-time monitoring.
+    pub model_acc: f64,
+    /// Fabric (netlist simulator) test accuracy — the authoritative number.
+    pub sim_acc: f64,
+    /// Prediction flips between the float monitor and the fabric.
+    pub mismatches: usize,
+    pub n_verified: usize,
+}
+
+/// Options for a pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineOpts {
+    pub train: TrainOpts,
+    /// Cap on test samples used for the exactness verification.
+    pub verify_samples: Option<usize>,
+    /// Where to persist params / network / RTL (None = don't persist).
+    pub out_dir: Option<PathBuf>,
+    /// Emit the RTL bundle as part of the run.
+    pub emit_rtl: bool,
+}
+
+/// Run the full codesign loop for one (bundle, dataset, seed).
+pub fn run(rt: &Runtime, m: &Manifest, ds: &Dataset, seed: u64,
+           opts: &PipelineOpts) -> Result<PipelineResult> {
+    let trainer = Trainer::new(rt, m, ds)?;
+    let train = trainer.run(seed, &opts.train).context("training")?;
+
+    let net = convert::convert(rt, m, &train.params).context("conversion")?;
+
+    // Bit-exactness verification: quantized XLA model vs netlist sim.
+    let n_verify = ds
+        .n_test()
+        .min(opts.verify_samples.unwrap_or(usize::MAX));
+    let x = &ds.test_x[..n_verify * ds.n_feat];
+    let model_preds = trainer.predict(&train.params, x)?;
+    let sim = Simulator::new(&net);
+    let sim_res = sim.simulate_batch(x);
+    let mismatches = model_preds
+        .iter()
+        .zip(&sim_res.predictions)
+        .filter(|(a, b)| a != b)
+        .count();
+    let labels = &ds.test_y[..n_verify];
+    let model_acc = crate::nn::metrics::accuracy(&model_preds, labels);
+    let sim_acc = crate::nn::metrics::accuracy(&sim_res.predictions, labels);
+
+    let synth = synthesize(&net);
+
+    if let Some(dir) = &opts.out_dir {
+        std::fs::create_dir_all(dir)?;
+        train.params.save(&dir.join("params.nprm"))?;
+        net.save(&dir.join("network.nlut"))?;
+        if opts.emit_rtl {
+            crate::rtl::write_rtl_bundle(&net, &dir.join("rtl"), x, 64.min(n_verify))?;
+        }
+        let report = result_json(m, &train, &synth, model_acc, sim_acc, mismatches, n_verify);
+        std::fs::write(dir.join("result.json"), report.to_string())?;
+    }
+
+    Ok(PipelineResult {
+        train,
+        net,
+        synth,
+        model_acc,
+        sim_acc,
+        mismatches,
+        n_verified: n_verify,
+    })
+}
+
+/// Sanity-check float-monitor vs fabric agreement: the two may flip
+/// quantizer-boundary samples (see [`PipelineResult`] docs), but their
+/// *accuracies* must agree closely — a large gap indicates a real
+/// conversion bug rather than boundary noise.
+pub fn verify_consistent(r: &PipelineResult, max_acc_gap: f64) -> Result<()> {
+    let gap = (r.model_acc - r.sim_acc).abs();
+    if gap > max_acc_gap {
+        bail!(
+            "float-model accuracy {:.4} and fabric accuracy {:.4} differ by \
+             {:.4} (> {:.4}): conversion is suspect",
+            r.model_acc,
+            r.sim_acc,
+            gap,
+            max_acc_gap
+        );
+    }
+    Ok(())
+}
+
+fn result_json(m: &Manifest, train: &TrainResult, synth: &SynthReport,
+               model_acc: f64, sim_acc: f64, mismatches: usize,
+               n_verified: usize) -> Json {
+    obj(vec![
+        ("name", Json::Str(m.name.clone())),
+        ("mode", Json::Str(m.mode.clone())),
+        ("test_acc", Json::Num(train.test_acc)),
+        ("model_acc", Json::Num(model_acc)),
+        ("sim_acc", Json::Num(sim_acc)),
+        ("mismatches", Json::Num(mismatches as f64)),
+        ("n_verified", Json::Num(n_verified as f64)),
+        ("steps", Json::Num(train.steps as f64)),
+        ("luts", Json::Num(synth.luts as f64)),
+        ("ffs", Json::Num(synth.ffs as f64)),
+        ("fmax_mhz", Json::Num(synth.fmax_mhz)),
+        ("latency_ns", Json::Num(synth.latency_ns)),
+        ("latency_cycles", Json::Num(synth.latency_cycles as f64)),
+        ("area_delay", Json::Num(synth.area_delay)),
+        ("bdd_nodes", Json::Num(synth.bdd_nodes as f64)),
+    ])
+}

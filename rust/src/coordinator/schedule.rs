@@ -1,0 +1,62 @@
+//! SGDR — Stochastic Gradient Descent with Warm Restarts [24].
+//!
+//! The coordinator owns the learning-rate schedule and feeds the per-step
+//! LR into the AOT train step as a scalar. This must match
+//! `python/compile/train.py::sgdr_lr` exactly (the Python copy exists for
+//! tests/documentation; this one is the one that runs).
+
+/// Cosine schedule with warm restarts: period starts at
+/// `t0_epochs * steps_per_epoch` steps and multiplies by `mult` after each
+/// restart. `step` counts from 0.
+pub fn sgdr_lr(
+    lr_min: f64,
+    lr_max: f64,
+    t0_epochs: usize,
+    mult: usize,
+    steps_per_epoch: usize,
+    step: usize,
+) -> f64 {
+    let mut t = step;
+    let mut period = (t0_epochs * steps_per_epoch).max(1);
+    while t >= period {
+        t -= period;
+        period *= mult.max(1);
+    }
+    let frac = t as f64 / period as f64;
+    lr_min + 0.5 * (lr_max - lr_min) * (1.0 + (std::f64::consts::PI * frac).cos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_max_and_decays() {
+        let lr0 = sgdr_lr(1e-4, 1e-2, 5, 2, 100, 0);
+        assert!((lr0 - 1e-2).abs() < 1e-12);
+        let mid = sgdr_lr(1e-4, 1e-2, 5, 2, 100, 250);
+        assert!((mid - (1e-4 + 0.5 * (1e-2 - 1e-4))).abs() < 1e-9);
+        let end = sgdr_lr(1e-4, 1e-2, 5, 2, 100, 499);
+        assert!(end < 2e-4);
+    }
+
+    #[test]
+    fn warm_restart_resets_to_max() {
+        // First period: 500 steps; at step 500 the LR jumps back to max.
+        let just_before = sgdr_lr(1e-4, 1e-2, 5, 2, 100, 499);
+        let at_restart = sgdr_lr(1e-4, 1e-2, 5, 2, 100, 500);
+        assert!(at_restart > just_before * 10.0);
+        assert!((at_restart - 1e-2).abs() < 1e-12);
+        // Second period is twice as long: next restart at 500 + 1000.
+        let second = sgdr_lr(1e-4, 1e-2, 5, 2, 100, 1500);
+        assert!((second - 1e-2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_outside_bounds() {
+        for step in 0..5000 {
+            let lr = sgdr_lr(1e-4, 1e-2, 3, 2, 37, step);
+            assert!(lr >= 1e-4 - 1e-12 && lr <= 1e-2 + 1e-12);
+        }
+    }
+}

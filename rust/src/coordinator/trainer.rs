@@ -1,0 +1,279 @@
+//! The training driver: Rust owns the event loop, seeding, batch order,
+//! the SGDR schedule, metric logging and best-model tracking; XLA (via the
+//! AOT `train_step.hlo.txt`) owns the math. Python is not involved.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::schedule::sgdr_lr;
+use crate::data::Dataset;
+use crate::manifest::Manifest;
+use crate::nn::metrics::argmax_rows;
+use crate::nn::params::ParamStore;
+use crate::runtime::{from_literal, to_literal, HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+/// Per-epoch training statistics.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub loss: f64,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    pub lr_last: f64,
+    pub seconds: f64,
+}
+
+/// Output of a training run.
+pub struct TrainResult {
+    pub params: ParamStore,
+    pub history: Vec<EpochStats>,
+    pub test_acc: f64,
+    pub steps: usize,
+}
+
+/// Training options (overrides on top of the manifest's recipe).
+#[derive(Debug, Clone, Default)]
+pub struct TrainOpts {
+    pub epochs: Option<usize>,
+    pub max_train: Option<usize>,
+    pub max_test: Option<usize>,
+    pub quiet: bool,
+    /// Evaluate the test set every `eval_every` epochs (0 = only after the
+    /// final epoch — sweeps use this: per-epoch eval costs ~15 fwd
+    /// executions per epoch and is monitoring, not result).
+    pub eval_every: usize,
+}
+
+/// The coordinator's training loop for one (manifest, dataset, seed).
+pub struct Trainer<'a> {
+    rt: &'a Runtime,
+    m: &'a Manifest,
+    ds: &'a Dataset,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, m: &'a Manifest, ds: &'a Dataset) -> Result<Self> {
+        if ds.n_feat != m.input_size {
+            bail!(
+                "dataset has {} features, model expects {}",
+                ds.n_feat,
+                m.input_size
+            );
+        }
+        Ok(Trainer { rt, m, ds })
+    }
+
+    /// Run training; returns trained parameters + history.
+    pub fn run(&self, seed: u64, opts: &TrainOpts) -> Result<TrainResult> {
+        let m = self.m;
+        let init = self.rt.load_artifact(m, "init")?;
+        let step_exe = self.rt.load_artifact(m, "train_step")?;
+        let n = m.params.len();
+        let b = m.batch;
+        let n_train = self
+            .ds
+            .n_train()
+            .min(opts.max_train.unwrap_or(usize::MAX));
+        let steps_per_epoch = n_train / b;
+        if steps_per_epoch == 0 {
+            bail!("batch {} larger than training set {}", b, n_train);
+        }
+        let epochs = opts.epochs.unwrap_or(m.epochs);
+
+        // --- init params from the seed (jax.random inside the HLO) --------
+        let mut state = init
+            .run_raw(&[to_literal(&HostTensor::scalar_i32(seed as i32))?])
+            .context("running init")?;
+        if state.len() != n {
+            bail!("init returned {} tensors, expected {n}", state.len());
+        }
+        // Optimizer state m, v start at zero: build zero literals matching
+        // the param shapes.
+        let zeros: Vec<xla::Literal> = m
+            .params
+            .iter()
+            .map(|p| {
+                to_literal(&HostTensor::f32(
+                    p.shape.clone(),
+                    vec![0.0; p.elem_count()],
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut opt_m: Vec<xla::Literal> = zeros.clone();
+        let mut opt_v: Vec<xla::Literal> = zeros;
+
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let mut history = Vec::new();
+        let mut step = 0usize;
+        let mut order: Vec<usize> = (0..n_train).collect();
+
+        for epoch in 0..epochs {
+            let t0 = Instant::now();
+            rng.shuffle(&mut order);
+            let mut loss_sum = 0.0;
+            let mut acc_sum = 0.0;
+            let mut lr_last = 0.0;
+            for batch_i in 0..steps_per_epoch {
+                let rows = &order[batch_i * b..(batch_i + 1) * b];
+                let (x, y) = self.gather_batch(rows);
+                let lr = sgdr_lr(
+                    m.lr_min,
+                    m.lr_max,
+                    m.sgdr_t0,
+                    m.sgdr_mult,
+                    steps_per_epoch,
+                    step,
+                );
+                lr_last = lr;
+                // Flat ABI: params..., m..., v..., step, lr, x, y.
+                let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 4);
+                args.extend(state.iter());
+                args.extend(opt_m.iter());
+                args.extend(opt_v.iter());
+                let step_lit =
+                    to_literal(&HostTensor::scalar_f32((step + 1) as f32))?;
+                let lr_lit = to_literal(&HostTensor::scalar_f32(lr as f32))?;
+                let x_lit =
+                    to_literal(&HostTensor::f32(vec![b, m.input_size], x))?;
+                let y_lit = to_literal(&HostTensor::i32(vec![b], y))?;
+                args.push(&step_lit);
+                args.push(&lr_lit);
+                args.push(&x_lit);
+                args.push(&y_lit);
+
+                let mut out = step_exe
+                    .run_literals_refs(&args)
+                    .with_context(|| format!("train step {step}"))?;
+                if out.len() != 3 * n + 2 {
+                    bail!("train step returned {} outputs", out.len());
+                }
+                let acc = from_literal(&out.pop().unwrap())?.as_f32()?[0];
+                let loss = from_literal(&out.pop().unwrap())?.as_f32()?[0];
+                opt_v = out.split_off(2 * n);
+                opt_m = out.split_off(n);
+                state = out;
+                loss_sum += loss as f64;
+                acc_sum += acc as f64;
+                step += 1;
+            }
+
+            let do_eval = opts.eval_every > 0 && (epoch + 1) % opts.eval_every == 0;
+            let test_acc = if do_eval {
+                let params = self.literals_to_store(&state)?;
+                self.evaluate(&params, opts.max_test)?
+            } else {
+                f64::NAN
+            };
+            let stats = EpochStats {
+                epoch,
+                loss: loss_sum / steps_per_epoch as f64,
+                train_acc: acc_sum / steps_per_epoch as f64,
+                test_acc,
+                lr_last,
+                seconds: t0.elapsed().as_secs_f64(),
+            };
+            if !opts.quiet {
+                println!(
+                    "[train {}] epoch {:>3}: loss {:.4} train_acc {:.4} test_acc {:.4} lr {:.2e} ({:.1}s)",
+                    m.name, epoch, stats.loss, stats.train_acc, stats.test_acc,
+                    stats.lr_last, stats.seconds
+                );
+            }
+            history.push(stats);
+        }
+
+        let params = self.literals_to_store(&state)?;
+        let test_acc = self.evaluate(&params, opts.max_test)?;
+        Ok(TrainResult { params, history, test_acc, steps: step })
+    }
+
+    fn gather_batch(&self, rows: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let nf = self.ds.n_feat;
+        let mut x = Vec::with_capacity(rows.len() * nf);
+        let mut y = Vec::with_capacity(rows.len());
+        for &r in rows {
+            x.extend_from_slice(self.ds.train_row(r));
+            y.push(self.ds.train_y[r]);
+        }
+        (x, y)
+    }
+
+    fn literals_to_store(&self, lits: &[xla::Literal]) -> Result<ParamStore> {
+        let tensors = lits
+            .iter()
+            .map(from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        ParamStore::new(self.m, tensors)
+    }
+
+    /// Quantized-model test accuracy via the AOT `fwd` program.
+    pub fn evaluate(&self, params: &ParamStore, max_test: Option<usize>) -> Result<f64> {
+        let m = self.m;
+        let fwd = self.rt.load_artifact(m, "fwd")?;
+        let b = m.batch;
+        let n_test = self.ds.n_test().min(max_test.unwrap_or(usize::MAX));
+        let param_lits: Vec<xla::Literal> = params
+            .tensors
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        let mut i = 0;
+        while i < n_test {
+            let take = b.min(n_test - i);
+            // Pad the final batch to the compiled batch size.
+            let mut x = Vec::with_capacity(b * m.input_size);
+            for j in 0..take {
+                x.extend_from_slice(self.ds.test_row(i + j));
+            }
+            x.resize(b * m.input_size, 0.0);
+            let x_lit = to_literal(&HostTensor::f32(vec![b, m.input_size], x))?;
+            let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+            args.push(&x_lit);
+            let out = fwd.run_literals_refs(&args)?;
+            let logits = from_literal(&out[0])?;
+            let preds = argmax_rows(logits.as_f32()?, m.n_class);
+            for j in 0..take {
+                if preds[j] as i32 == self.ds.test_y[i + j] {
+                    hits += 1;
+                }
+            }
+            total += take;
+            i += take;
+        }
+        Ok(hits as f64 / total.max(1) as f64)
+    }
+
+    /// Full-test-set logits via the AOT `fwd` program (for the exactness
+    /// integration test against the netlist simulator).
+    pub fn predict(&self, params: &ParamStore, x_rows: &[f32]) -> Result<Vec<u32>> {
+        let m = self.m;
+        let fwd = self.rt.load_artifact(m, "fwd")?;
+        let b = m.batch;
+        let n = x_rows.len() / m.input_size;
+        let param_lits: Vec<xla::Literal> = params
+            .tensors
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let mut preds = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            let take = b.min(n - i);
+            let mut x = x_rows[i * m.input_size..(i + take) * m.input_size].to_vec();
+            x.resize(b * m.input_size, 0.0);
+            let x_lit = to_literal(&HostTensor::f32(vec![b, m.input_size], x))?;
+            let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+            args.push(&x_lit);
+            let out = fwd.run_literals_refs(&args)?;
+            let logits = from_literal(&out[0])?;
+            let p = argmax_rows(logits.as_f32()?, m.n_class);
+            preds.extend_from_slice(&p[..take]);
+            i += take;
+        }
+        Ok(preds)
+    }
+}

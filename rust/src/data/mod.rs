@@ -1,0 +1,203 @@
+//! Dataset blobs (NLDS v1, written by `python/compile/datasets.py`) and
+//! synthetic workload generation for the serving benches.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+pub const MAGIC: u32 = 0x4E4C4453; // "NLDS"
+pub const VERSION: u32 = 1;
+
+/// An in-memory dataset: features are f32 in [0, 1], labels are class ids.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n_feat: usize,
+    pub n_class: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Row `i` of the training features.
+    pub fn train_row(&self, i: usize) -> &[f32] {
+        &self.train_x[i * self.n_feat..(i + 1) * self.n_feat]
+    }
+
+    /// Row `i` of the test features.
+    pub fn test_row(&self, i: usize) -> &[f32] {
+        &self.test_x[i * self.n_feat..(i + 1) * self.n_feat]
+    }
+
+    /// Load an NLDS v1 blob.
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut header = [0u8; 24];
+        f.read_exact(&mut header)?;
+        let word = |i: usize| {
+            u32::from_le_bytes(header[4 * i..4 * i + 4].try_into().unwrap())
+        };
+        if word(0) != MAGIC {
+            bail!("{}: bad magic {:#x}", path.display(), word(0));
+        }
+        if word(1) != VERSION {
+            bail!("{}: unsupported version {}", path.display(), word(1));
+        }
+        let (n_train, n_test, n_feat, n_class) = (
+            word(2) as usize,
+            word(3) as usize,
+            word(4) as usize,
+            word(5) as usize,
+        );
+        let train_x = read_f32s(&mut f, n_train * n_feat)?;
+        let train_y = read_i32s(&mut f, n_train)?;
+        let test_x = read_f32s(&mut f, n_test * n_feat)?;
+        let test_y = read_i32s(&mut f, n_test)?;
+        let ds = Dataset { n_feat, n_class, train_x, train_y, test_x, test_y };
+        ds.validate()?;
+        Ok(ds)
+    }
+
+    /// Load by short name from the artifacts tree.
+    pub fn load_named(name: &str) -> Result<Dataset> {
+        Self::load(&crate::artifacts_dir().join("data").join(format!("{name}.bin")))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.train_x.len() != self.n_train() * self.n_feat {
+            bail!("train_x size mismatch");
+        }
+        if self.test_x.len() != self.n_test() * self.n_feat {
+            bail!("test_x size mismatch");
+        }
+        let ok_label = |y: &[i32]| y.iter().all(|&v| (v as usize) < self.n_class);
+        if !ok_label(&self.train_y) || !ok_label(&self.test_y) {
+            bail!("label out of range");
+        }
+        Ok(())
+    }
+
+    /// A synthetic dataset for tests (uniform features, random labels).
+    pub fn synthetic(seed: u64, n_train: usize, n_test: usize, n_feat: usize,
+                     n_class: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut gen = |n: usize| {
+            let x: Vec<f32> = (0..n * n_feat).map(|_| rng.f32()).collect();
+            let y: Vec<i32> =
+                (0..n).map(|_| rng.below(n_class) as i32).collect();
+            (x, y)
+        };
+        let (train_x, train_y) = gen(n_train);
+        let (test_x, test_y) = gen(n_test);
+        Dataset { n_feat, n_class, train_x, train_y, test_x, test_y }
+    }
+}
+
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_i32s(f: &mut impl Read, n: usize) -> Result<Vec<i32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Poisson-arrival inference workload for the server benches.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// (arrival time in seconds, feature vector) per request.
+    pub requests: Vec<(f64, Vec<f32>)>,
+}
+
+impl Workload {
+    /// Draw `n` requests at `rate` req/s, features sampled from `ds` test
+    /// rows (cycled) with jitter — a stand-in for the paper's edge traffic.
+    pub fn poisson(ds: &Dataset, seed: u64, n: usize, rate: f64) -> Workload {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(n);
+        for i in 0..n {
+            t += rng.exp(rate);
+            let row = ds.test_row(i % ds.n_test());
+            let jittered = row
+                .iter()
+                .map(|&v| (v + 0.01 * rng.normal() as f32).clamp(0.0, 1.0))
+                .collect();
+            requests.push((t, jittered));
+        }
+        Workload { requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_roundtrip_fields() {
+        let ds = Dataset::synthetic(1, 100, 20, 8, 3);
+        assert_eq!(ds.n_train(), 100);
+        assert_eq!(ds.n_test(), 20);
+        assert_eq!(ds.train_row(5).len(), 8);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn workload_arrivals_monotone() {
+        let ds = Dataset::synthetic(2, 10, 10, 4, 2);
+        let w = Workload::poisson(&ds, 3, 100, 1000.0);
+        assert_eq!(w.requests.len(), 100);
+        for pair in w.requests.windows(2) {
+            assert!(pair[1].0 >= pair[0].0);
+        }
+    }
+
+    #[test]
+    fn loads_written_blob() {
+        // Write a tiny blob by hand and read it back.
+        let dir = std::env::temp_dir().join("neuralut_test_data");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.bin");
+        let mut bytes = Vec::new();
+        for w in [MAGIC, VERSION, 2, 1, 3, 2] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        for v in [0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [0i32, 1] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [0.7f32, 0.8, 0.9] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&1i32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let ds = Dataset::load(&path).unwrap();
+        assert_eq!(ds.n_feat, 3);
+        assert_eq!(ds.train_y, vec![0, 1]);
+        assert!((ds.test_x[2] - 0.9).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,52 @@
+//! # NeuraLUT — FPL 2024 reproduction
+//!
+//! *NeuraLUT: Hiding Neural Network Density in Boolean Synthesizable
+//! Functions* (Andronic & Constantinides). This crate is Layer 3 of a
+//! three-layer Rust + JAX + Pallas stack: it owns the whole codesign
+//! toolflow after `make artifacts` — training (executing AOT-compiled XLA
+//! train steps via PJRT), sub-network → L-LUT conversion, RTL generation,
+//! synthesis estimation, cycle-accurate fabric simulation, and serving.
+//! Python never runs at request time.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — from-scratch substrates: JSON, RNG, stats, thread pool,
+//!   property-test + bench harnesses (offline build: no external crates
+//!   beyond `xla`/`anyhow`).
+//! * [`data`] — dataset blobs produced by the build path.
+//! * [`manifest`] — the flat parameter ABI shared with `python/compile`.
+//! * [`runtime`] — PJRT client wrapper: load HLO text, compile, execute.
+//! * [`nn`] — parameter store, Table-I formulas, metrics.
+//! * [`config`] — TOML-subset experiment-suite files (`neuralut suite`).
+//! * [`coordinator`] — training driver (SGDR schedule), conversion
+//!   manager, end-to-end codesign pipeline.
+//! * [`luts`] — truth tables and the converted L-LUT network model.
+//! * [`netlist`] — cycle-accurate LUT-network simulator (the FPGA fabric
+//!   substitute).
+//! * [`rtl`] — Verilog + testbench generation.
+//! * [`synth`] — Vivado-substitute synthesis/P&R cost model (support
+//!   reduction, ROBDD, 6-LUT covering, timing).
+//! * [`server`] — threaded inference server: router + dynamic batcher.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod luts;
+pub mod manifest;
+pub mod netlist;
+pub mod nn;
+pub mod rtl;
+pub mod runtime;
+pub mod server;
+pub mod synth;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifact tree produced by `make artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("NEURALUT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

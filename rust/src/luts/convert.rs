@@ -1,0 +1,68 @@
+//! Sub-network → L-LUT conversion manager (toolflow stage 2).
+//!
+//! For each circuit layer, marshals the trained parameters named in the
+//! manifest's `tt[l].args` and executes the AOT-compiled enumeration
+//! program `tt_layer{l}.hlo.txt` (one PJRT call per layer — all of the
+//! layer's L-LUTs convert in a single batched kernel invocation, which is
+//! the Pallas hot path at B = 2^(beta*F)). The resulting integer codes
+//! become the truth tables of a [`LutNetwork`].
+
+use anyhow::{bail, Context, Result};
+
+use super::{LutLayer, LutNetwork};
+use crate::manifest::Manifest;
+use crate::nn::params::ParamStore;
+use crate::runtime::Runtime;
+
+/// Convert a trained model into its L-LUT network.
+pub fn convert(rt: &Runtime, m: &Manifest, params: &ParamStore) -> Result<LutNetwork> {
+    let index = params.index();
+    let mut layers = Vec::with_capacity(m.tt.len());
+    for tt in &m.tt {
+        let exe = rt
+            .load_artifact(m, &format!("tt_layer{}", tt.layer))
+            .with_context(|| format!("loading tt program for layer {}", tt.layer))?;
+        let args: Vec<_> = tt
+            .args
+            .iter()
+            .map(|name| {
+                index
+                    .get(name.as_str())
+                    .map(|&i| params.tensors[i].clone())
+                    .with_context(|| format!("tt arg {name} missing"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let out = exe.run(&args)?;
+        if out.len() != 1 {
+            bail!("tt program returned {} outputs, expected 1", out.len());
+        }
+        let codes = out[0].as_i32()?;
+        if codes.len() != tt.num_luts * tt.entries {
+            bail!(
+                "layer {}: tt output size {} != {}x{}",
+                tt.layer,
+                codes.len(),
+                tt.num_luts,
+                tt.entries
+            );
+        }
+        let tables: Vec<i16> = codes.iter().map(|&c| c as i16).collect();
+        layers.push(LutLayer {
+            indices: m.indices[tt.layer].clone(),
+            tables,
+            fan_in: tt.fan_in,
+            in_bits: tt.in_bits,
+            out_bits: tt.out_bits,
+            signed_out: tt.signed_out,
+        });
+    }
+    let net = LutNetwork {
+        name: m.name.clone(),
+        input_size: m.input_size,
+        input_bits: m.layer_in_bits[0],
+        n_class: m.n_class,
+        layers,
+    };
+    net.validate().context("converted network failed validation")?;
+    Ok(net)
+}

@@ -1,0 +1,301 @@
+//! Converted L-LUT network model: truth tables + wiring, with a compact
+//! binary serialization ("NLUT" v1) so converted models can be shipped
+//! without the training artifacts.
+//!
+//! An L-LUT in circuit layer `l` has `fan_in` inputs of `in_bits` bits each
+//! and one `out_bits`-bit output. Table addresses follow the shared
+//! convention (python `tt.py`, `rtl/`): input `j` occupies address bits
+//! `[in_bits*j, in_bits*(j+1))`. Output codes are stored as `i16`
+//! (unsigned codes for hidden layers, two's-complement signed codes for the
+//! logit layer).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub mod convert;
+
+/// One circuit layer of the converted network.
+#[derive(Debug, Clone)]
+pub struct LutLayer {
+    /// `[num_luts][fan_in]` indices into the previous layer's outputs.
+    pub indices: Vec<Vec<u32>>,
+    /// Flattened tables: `num_luts * entries` output codes.
+    pub tables: Vec<i16>,
+    pub fan_in: usize,
+    pub in_bits: usize,
+    pub out_bits: usize,
+    pub signed_out: bool,
+}
+
+impl LutLayer {
+    pub fn num_luts(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn entries(&self) -> usize {
+        1usize << (self.in_bits * self.fan_in)
+    }
+
+    /// The table slice of LUT `i`.
+    pub fn table(&self, i: usize) -> &[i16] {
+        let e = self.entries();
+        &self.tables[i * e..(i + 1) * e]
+    }
+
+    fn validate(&self, prev_width: usize) -> Result<()> {
+        if self.tables.len() != self.num_luts() * self.entries() {
+            bail!("table size mismatch");
+        }
+        let max_code = 1i16 << self.out_bits;
+        for &v in &self.tables {
+            let ok = if self.signed_out {
+                let q = (1i16 << (self.out_bits - 1)) - 1;
+                (-q..=q).contains(&v)
+            } else {
+                (0..max_code).contains(&v)
+            };
+            if !ok {
+                bail!("output code {v} out of range for {} bits", self.out_bits);
+            }
+        }
+        for row in &self.indices {
+            if row.len() != self.fan_in {
+                bail!("index row width != fan_in");
+            }
+            if row.iter().any(|&i| i as usize >= prev_width) {
+                bail!("index out of range");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A complete converted model: the circuit-level network of L-LUTs.
+#[derive(Debug, Clone)]
+pub struct LutNetwork {
+    pub name: String,
+    pub input_size: usize,
+    /// Bit-width of the quantized circuit inputs.
+    pub input_bits: usize,
+    pub n_class: usize,
+    pub layers: Vec<LutLayer>,
+}
+
+impl LutNetwork {
+    /// Structural validation across layers.
+    pub fn validate(&self) -> Result<()> {
+        let mut prev = self.input_size;
+        for (l, layer) in self.layers.iter().enumerate() {
+            layer
+                .validate(prev)
+                .with_context(|| format!("layer {l}"))?;
+            prev = layer.num_luts();
+        }
+        match self.layers.last() {
+            Some(last) if last.num_luts() == self.n_class => Ok(()),
+            Some(_) => bail!("last layer width != n_class"),
+            None => bail!("no layers"),
+        }
+    }
+
+    /// Total number of L-LUTs.
+    pub fn num_luts(&self) -> usize {
+        self.layers.iter().map(|l| l.num_luts()).sum()
+    }
+
+    /// Total truth-table storage in bits (the "ROM size" of the design).
+    pub fn table_bits(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.num_luts() * l.entries() * l.out_bits)
+            .sum()
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    const MAGIC: u32 = 0x4E4C5554; // "NLUT"
+    const VERSION: u32 = 1;
+
+    /// Serialize to the NLUT v1 binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let w32 = |f: &mut dyn Write, v: u32| f.write_all(&v.to_le_bytes());
+        w32(&mut f, Self::MAGIC)?;
+        w32(&mut f, Self::VERSION)?;
+        let name = self.name.as_bytes();
+        w32(&mut f, name.len() as u32)?;
+        f.write_all(name)?;
+        w32(&mut f, self.input_size as u32)?;
+        w32(&mut f, self.input_bits as u32)?;
+        w32(&mut f, self.n_class as u32)?;
+        w32(&mut f, self.layers.len() as u32)?;
+        for l in &self.layers {
+            w32(&mut f, l.num_luts() as u32)?;
+            w32(&mut f, l.fan_in as u32)?;
+            w32(&mut f, l.in_bits as u32)?;
+            w32(&mut f, l.out_bits as u32)?;
+            w32(&mut f, l.signed_out as u32)?;
+            for row in &l.indices {
+                for &i in row {
+                    w32(&mut f, i)?;
+                }
+            }
+            for &v in &l.tables {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load an NLUT v1 file.
+    pub fn load(path: &Path) -> Result<LutNetwork> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        let r32 = |f: &mut dyn Read| -> Result<u32> {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            Ok(u32::from_le_bytes(b))
+        };
+        if r32(&mut f)? != Self::MAGIC {
+            bail!("bad magic");
+        }
+        if r32(&mut f)? != Self::VERSION {
+            bail!("bad version");
+        }
+        let name_len = r32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let input_size = r32(&mut f)? as usize;
+        let input_bits = r32(&mut f)? as usize;
+        let n_class = r32(&mut f)? as usize;
+        let n_layers = r32(&mut f)? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let num_luts = r32(&mut f)? as usize;
+            let fan_in = r32(&mut f)? as usize;
+            let in_bits = r32(&mut f)? as usize;
+            let out_bits = r32(&mut f)? as usize;
+            let signed_out = r32(&mut f)? != 0;
+            let mut indices = Vec::with_capacity(num_luts);
+            for _ in 0..num_luts {
+                let mut row = Vec::with_capacity(fan_in);
+                for _ in 0..fan_in {
+                    row.push(r32(&mut f)?);
+                }
+                indices.push(row);
+            }
+            let entries = 1usize << (in_bits * fan_in);
+            let mut tables = vec![0i16; num_luts * entries];
+            for v in tables.iter_mut() {
+                let mut b = [0u8; 2];
+                f.read_exact(&mut b)?;
+                *v = i16::from_le_bytes(b);
+            }
+            layers.push(LutLayer {
+                indices,
+                tables,
+                fan_in,
+                in_bits,
+                out_bits,
+                signed_out,
+            });
+        }
+        let net = LutNetwork {
+            name: String::from_utf8(name)?,
+            input_size,
+            input_bits,
+            n_class,
+            layers,
+        };
+        net.validate()?;
+        Ok(net)
+    }
+}
+
+/// Build a small random-but-valid network for tests and benches.
+pub fn random_network(seed: u64, input_size: usize, input_bits: usize,
+                      widths: &[usize], fan_in: usize, beta: usize,
+                      out_bits: usize) -> LutNetwork {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut prev = input_size;
+    for (li, &m) in widths.iter().enumerate() {
+        let last = li == widths.len() - 1;
+        let f = fan_in.min(prev);
+        let in_bits = if li == 0 { input_bits } else { beta };
+        let ob = if last { out_bits } else { beta };
+        let entries = 1usize << (in_bits * f);
+        let indices: Vec<Vec<u32>> = (0..m)
+            .map(|_| {
+                rng.choose_distinct(prev, f).into_iter().map(|v| v as u32).collect()
+            })
+            .collect();
+        let tables: Vec<i16> = (0..m * entries)
+            .map(|_| {
+                if last {
+                    let q = (1i64 << (ob - 1)) - 1;
+                    (rng.below((2 * q + 1) as usize) as i64 - q) as i16
+                } else {
+                    rng.below(1 << ob) as i16
+                }
+            })
+            .collect();
+        layers.push(LutLayer {
+            indices,
+            tables,
+            fan_in: f,
+            in_bits,
+            out_bits: ob,
+            signed_out: last,
+        });
+        prev = m;
+    }
+    LutNetwork {
+        name: format!("random-{seed}"),
+        input_size,
+        input_bits,
+        n_class: *widths.last().unwrap(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_network_validates() {
+        let net = random_network(1, 16, 2, &[8, 4, 3], 3, 2, 4);
+        net.validate().unwrap();
+        assert_eq!(net.num_luts(), 15);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let net = random_network(2, 10, 3, &[6, 2], 2, 3, 4);
+        let path = std::env::temp_dir().join("neuralut_test_net.nlut");
+        net.save(&path).unwrap();
+        let back = LutNetwork::load(&path).unwrap();
+        assert_eq!(back.name, net.name);
+        assert_eq!(back.layers.len(), net.layers.len());
+        for (a, b) in back.layers.iter().zip(&net.layers) {
+            assert_eq!(a.tables, b.tables);
+            assert_eq!(a.indices, b.indices);
+        }
+    }
+
+    #[test]
+    fn table_bits_counts_rom() {
+        let net = random_network(3, 8, 2, &[4, 2], 2, 2, 4);
+        // layer0: 4 luts * 2^(2*2) entries * 2 bits; layer1: 2 * 2^4 * 4.
+        assert_eq!(net.table_bits(), 4 * 16 * 2 + 2 * 16 * 4);
+    }
+}

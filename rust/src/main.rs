@@ -1,0 +1,360 @@
+//! `neuralut` — the Layer-3 coordinator CLI.
+//!
+//! Drives the full NeuraLUT codesign toolflow against the AOT artifact
+//! bundles produced by `make artifacts`:
+//!
+//! ```text
+//! neuralut list
+//! neuralut train    <config> [--seed N] [--epochs N] [--out DIR]
+//! neuralut pipeline <config> [--seed N] [--epochs N] [--out DIR] [--rtl]
+//! neuralut convert  <config> --params FILE --out FILE
+//! neuralut synth    <config> --net FILE
+//! neuralut simulate <config> --net FILE
+//! neuralut rtl      <config> --net FILE --out DIR
+//! neuralut serve    <config> --net FILE [--rate R] [--requests N]
+//! ```
+//!
+//! (Hand-rolled argument parsing: clap is not vendored in this offline
+//! image, and the surface is small.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use neuralut::coordinator::pipeline::{self, PipelineOpts};
+use neuralut::coordinator::trainer::{TrainOpts, Trainer};
+use neuralut::data::{Dataset, Workload};
+use neuralut::luts::{convert, LutNetwork};
+use neuralut::manifest::Manifest;
+use neuralut::netlist::Simulator;
+use neuralut::nn::params::ParamStore;
+use neuralut::runtime::Runtime;
+use neuralut::server::{Server, ServerConfig};
+use neuralut::synth::synthesize;
+use neuralut::util::stats;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed `--key value` / `--flag` options after the positional args.
+struct Opts(HashMap<String, String>);
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<(Vec<String>, Opts)> {
+        let mut pos = Vec::new();
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let takes_value = !matches!(key, "rtl" | "quiet" | "full");
+                if takes_value {
+                    let v = args
+                        .get(i + 1)
+                        .with_context(|| format!("--{key} needs a value"))?;
+                    map.insert(key.to_string(), v.clone());
+                    i += 2;
+                } else {
+                    map.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                pos.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok((pos, Opts(map)))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key}")))
+            .transpose()
+    }
+
+    fn f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key}")))
+            .transpose()
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn load_bundle(name: &str) -> Result<(Manifest, Dataset)> {
+    let dir = neuralut::artifacts_dir().join(name);
+    let m = Manifest::load(&dir)?;
+    let ds = Dataset::load_named(&m.dataset)?;
+    Ok((m, ds))
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let (pos, opts) = Opts::parse(&args[1..])?;
+
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "info" => cmd_info(&pos),
+        "train" | "pipeline" => cmd_pipeline(cmd == "train", &pos, &opts),
+        "convert" => cmd_convert(&pos, &opts),
+        "synth" => cmd_synth(&pos, &opts),
+        "simulate" => cmd_simulate(&pos, &opts),
+        "rtl" => cmd_rtl(&pos, &opts),
+        "vcd" => cmd_vcd(&pos, &opts),
+        "serve" => cmd_serve(&pos, &opts),
+        "suite" => cmd_suite(&pos),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `neuralut help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "neuralut — NeuraLUT (FPL 2024) codesign toolflow\n\n\
+         commands:\n  \
+         list                                   list artifact bundles\n  \
+         info <config>                          bundle summary\n  \
+         train <config> [--seed N] [--epochs N] [--out DIR]\n  \
+         pipeline <config> [--seed N] [--epochs N] [--out DIR] [--rtl]\n  \
+         convert <config> --params F --out F    trained params -> L-LUTs\n  \
+         synth <config> --net F                 synthesis cost report\n  \
+         simulate <config> --net F              fabric accuracy on test set\n  \
+         rtl <config> --net F --out DIR         emit Verilog bundle\n  \
+         vcd <config> --net F --out FILE        dump pipeline waveform (GTKWave)\n  \
+         serve <config> --net F [--rate R] [--requests N] [--batch-window US]\n  \
+         suite <file.toml>                      run a batch of pipelines"
+    );
+}
+
+fn cmd_list() -> Result<()> {
+    let root = neuralut::artifacts_dir();
+    let mut found = 0;
+    if root.exists() {
+        let mut names: Vec<_> = std::fs::read_dir(&root)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("manifest.json").exists())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        for name in names {
+            let m = Manifest::load(&root.join(&name))?;
+            println!(
+                "{:<24} mode={:<10} dataset={:<9} circuit={:?} beta={} F={} (L={},N={},S={})",
+                m.name, m.mode, m.dataset, m.layers, m.beta, m.fan_in,
+                m.sub_depth, m.sub_width, m.sub_skip
+            );
+            found += 1;
+        }
+    }
+    if found == 0 {
+        println!("no artifact bundles found under {} — run `make artifacts`",
+                 root.display());
+    }
+    Ok(())
+}
+
+fn cmd_info(pos: &[String]) -> Result<()> {
+    let name = pos.first().context("usage: info <config>")?;
+    let (m, ds) = load_bundle(name)?;
+    println!("bundle      : {}", m.name);
+    println!("mode        : {}", m.mode);
+    println!("dataset     : {} ({} train / {} test, {} feats, {} classes)",
+             m.dataset, ds.n_train(), ds.n_test(), ds.n_feat, ds.n_class);
+    println!("circuit     : {:?} (fan-in {}, beta {})", m.layers, m.fan_in, m.beta);
+    println!("sub-network : L={} N={} S={} (mode-dependent)", m.sub_depth,
+             m.sub_width, m.sub_skip);
+    println!("parameters  : {} tensors, {} scalars", m.params.len(), m.total_params());
+    println!("recipe      : {} epochs, batch {}, lr {:.1e}..{:.1e}, wd {:.1e}",
+             m.epochs, m.batch, m.lr_min, m.lr_max, m.weight_decay);
+    Ok(())
+}
+
+fn cmd_pipeline(train_only: bool, pos: &[String], opts: &Opts) -> Result<()> {
+    let name = pos.first().context("usage: pipeline <config>")?;
+    let (m, ds) = load_bundle(name)?;
+    let rt = Runtime::cpu()?;
+    let seed = opts.usize("seed")?.unwrap_or(0) as u64;
+    let popts = PipelineOpts {
+        train: TrainOpts {
+            epochs: opts.usize("epochs")?,
+            max_train: opts.usize("max-train")?,
+            max_test: opts.usize("max-test")?,
+            quiet: opts.flag("quiet"),
+            eval_every: opts.usize("eval-every")?.unwrap_or(1),
+        },
+        verify_samples: opts.usize("verify")?.or(Some(2048)),
+        out_dir: opts.get("out").map(PathBuf::from),
+        emit_rtl: opts.flag("rtl"),
+    };
+    if train_only {
+        let trainer = Trainer::new(&rt, &m, &ds)?;
+        let r = trainer.run(seed, &popts.train)?;
+        println!("final test accuracy: {:.4} ({} steps)", r.test_acc, r.steps);
+        if let Some(dir) = &popts.out_dir {
+            std::fs::create_dir_all(dir)?;
+            r.params.save(&dir.join("params.nprm"))?;
+            println!("params saved to {}", dir.join("params.nprm").display());
+        }
+        return Ok(());
+    }
+    let r = pipeline::run(&rt, &m, &ds, seed, &popts)?;
+    pipeline::verify_consistent(&r, 0.05)?;
+    println!("\n== pipeline result: {} (seed {seed}) ==", m.name);
+    println!("accuracy    : fabric {:.4} (authoritative) | float monitor {:.4} ({} verified, {} boundary flips)",
+             r.sim_acc, r.model_acc, r.n_verified, r.mismatches);
+    println!("L-LUTs      : {} ({} layers)", r.net.num_luts(), r.net.layers.len());
+    println!("P-LUTs      : {}   FF: {}", r.synth.luts, r.synth.ffs);
+    println!("Fmax        : {:.0} MHz (depth {})", r.synth.fmax_mhz, r.synth.max_depth);
+    println!("latency     : {:.1} ns ({} cycles)", r.synth.latency_ns, r.synth.latency_cycles);
+    println!("area×delay  : {:.3e} LUT·ns", r.synth.area_delay);
+    Ok(())
+}
+
+fn cmd_convert(pos: &[String], opts: &Opts) -> Result<()> {
+    let name = pos.first().context("usage: convert <config> --params F --out F")?;
+    let (m, _ds) = load_bundle(name)?;
+    let rt = Runtime::cpu()?;
+    let params_path = PathBuf::from(opts.get("params").context("--params required")?);
+    let out = PathBuf::from(opts.get("out").context("--out required")?);
+    let params = ParamStore::load(&params_path, &m)?;
+    let net = convert::convert(&rt, &m, &params)?;
+    net.save(&out)?;
+    println!("converted {} L-LUTs -> {}", net.num_luts(), out.display());
+    Ok(())
+}
+
+fn cmd_synth(pos: &[String], opts: &Opts) -> Result<()> {
+    let name = pos.first().context("usage: synth <config> --net F")?;
+    let (_m, _ds) = load_bundle(name)?;
+    let net = LutNetwork::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
+    let r = synthesize(&net);
+    println!("network {}: {} L-LUTs", r.name, net.num_luts());
+    println!("{:<8} {:>8} {:>6} {:>10} {:>6}", "layer", "P-LUTs", "depth", "BDD nodes", "FF");
+    for (i, l) in r.per_layer.iter().enumerate() {
+        println!("{:<8} {:>8} {:>6} {:>10} {:>6}", i, l.luts, l.depth, l.bdd_nodes, l.ffs);
+    }
+    println!("total: {} LUT, {} FF, Fmax {:.0} MHz, latency {:.1} ns, ADP {:.3e}",
+             r.luts, r.ffs, r.fmax_mhz, r.latency_ns, r.area_delay);
+    Ok(())
+}
+
+fn cmd_simulate(pos: &[String], opts: &Opts) -> Result<()> {
+    let name = pos.first().context("usage: simulate <config> --net F")?;
+    let (_m, ds) = load_bundle(name)?;
+    let net = LutNetwork::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
+    let sim = Simulator::new(&net);
+    let t0 = std::time::Instant::now();
+    let acc = sim.accuracy(&ds.test_x, &ds.test_y);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("fabric accuracy: {:.4} on {} samples ({:.0} samples/s, latency {} cycles)",
+             acc, ds.n_test(), ds.n_test() as f64 / dt, sim.latency_cycles());
+    Ok(())
+}
+
+fn cmd_rtl(pos: &[String], opts: &Opts) -> Result<()> {
+    let name = pos.first().context("usage: rtl <config> --net F --out DIR")?;
+    let (_m, ds) = load_bundle(name)?;
+    let net = LutNetwork::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
+    let out = PathBuf::from(opts.get("out").context("--out required")?);
+    neuralut::rtl::write_rtl_bundle(&net, &out, &ds.test_x, 64)?;
+    println!("RTL bundle written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_vcd(pos: &[String], opts: &Opts) -> Result<()> {
+    let name = pos.first().context("usage: vcd <config> --net F --out FILE")?;
+    let (_m, ds) = load_bundle(name)?;
+    let net = LutNetwork::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
+    let out = PathBuf::from(opts.get("out").context("--out required")?);
+    let n = opts.usize("samples")?.unwrap_or(32);
+    neuralut::netlist::vcd::write_vcd(&net, &ds.test_x, n, &out)?;
+    println!("waveform with {n} samples written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_suite(pos: &[String]) -> Result<()> {
+    use neuralut::config::Suite;
+    use neuralut::coordinator::experiments::{run_config, save_results};
+    let path = PathBuf::from(pos.first().context("usage: suite <file.toml>")?);
+    let suite = Suite::load(&path)?;
+    let rt = Runtime::cpu()?;
+    println!("suite '{}': {} runs x up to {} seeds", suite.name,
+             suite.runs.len(), suite.seeds);
+    let mut rows = Vec::new();
+    for run in &suite.runs {
+        let seeds = run.seeds.unwrap_or(suite.seeds);
+        for seed in 0..seeds as u64 {
+            let s = run_config(&rt, &run.config, seed, run.epochs)?;
+            println!("{:<22} seed {seed}: fabric {:.4} ADP {:.3e}",
+                     run.config, s.fabric_acc, s.area_delay);
+            rows.push(s);
+        }
+    }
+    let out = save_results(&suite.name, &rows)?;
+    println!("suite results written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
+    let name = pos.first().context("usage: serve <config> --net F")?;
+    let (_m, ds) = load_bundle(name)?;
+    let net = Arc::new(LutNetwork::load(
+        &PathBuf::from(opts.get("net").context("--net required")?),
+    )?);
+    let n_req = opts.usize("requests")?.unwrap_or(10_000);
+    let rate = opts.f64("rate")?.unwrap_or(50_000.0);
+    let window_us = opts.usize("batch-window")?.unwrap_or(200);
+    let cfg = ServerConfig {
+        max_batch: opts.usize("max-batch")?.unwrap_or(256),
+        batch_window: std::time::Duration::from_micros(window_us as u64),
+    };
+    println!("serving {} at {:.0} req/s for {} requests (window {} us)...",
+             net.name, rate, n_req, window_us);
+    let server = Server::start(net.clone(), cfg);
+    let client = server.client();
+    let workload = Workload::poisson(&ds, 99, n_req, rate);
+
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for (t_arrival, feats) in workload.requests {
+        let now = t0.elapsed().as_secs_f64();
+        if t_arrival > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(t_arrival - now));
+        }
+        pending.push(client.infer_async(feats)?);
+    }
+    let mut lat_us = Vec::with_capacity(pending.len());
+    let mut batch_sizes = Vec::with_capacity(pending.len());
+    for rx in pending {
+        let r = rx.recv()?;
+        lat_us.push(r.latency.as_secs_f64() * 1e6);
+        batch_sizes.push(r.batch_size as f64);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = stats::summarize(&lat_us);
+    let bs = stats::summarize(&batch_sizes);
+    println!("throughput : {:.0} req/s (wall {:.2}s)", n_req as f64 / wall, wall);
+    println!("latency us : p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
+             s.p50, s.p95, s.p99, s.max);
+    println!("batch size : mean {:.1}  p95 {:.0}", bs.mean, bs.p95);
+    Ok(())
+}

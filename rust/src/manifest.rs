@@ -1,0 +1,291 @@
+//! The AOT bundle manifest — the flat ABI contract with `python/compile`.
+//!
+//! `manifest.json` (written by `python -m compile.aot`) describes, for one
+//! model config: the circuit topology, the ordered flat parameter list (the
+//! exact argument order of `init`/`train_step`/`fwd`), the a-priori sparsity
+//! wiring, the quantization spec, and the per-layer truth-table artifacts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + name of one flat parameter.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One truth-table artifact (a circuit layer's conversion program).
+#[derive(Debug, Clone)]
+pub struct TtSpec {
+    pub layer: usize,
+    pub path: String,
+    /// Parameter names, in order, that the tt HLO takes as arguments.
+    pub args: Vec<String>,
+    pub num_luts: usize,
+    pub entries: usize,
+    pub fan_in: usize,
+    pub in_bits: usize,
+    pub out_bits: usize,
+    pub signed_out: bool,
+}
+
+/// Parsed manifest of one AOT bundle.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub mode: String,
+    pub dataset: String,
+    pub input_size: usize,
+    pub n_class: usize,
+    pub layers: Vec<usize>,
+    pub beta: usize,
+    pub beta_in: usize,
+    pub beta_out: usize,
+    pub fan_in: usize,
+    pub sub_depth: usize,
+    pub sub_width: usize,
+    pub sub_skip: usize,
+    pub degree: usize,
+    pub batch: usize,
+    pub epochs: usize,
+    pub lr_max: f64,
+    pub lr_min: f64,
+    pub weight_decay: f64,
+    pub sgdr_t0: usize,
+    pub sgdr_mult: usize,
+    pub params: Vec<ParamSpec>,
+    pub scale_param_idx: Vec<usize>,
+    pub layer_param_slices: Vec<(usize, usize)>,
+    /// Per layer: [num_luts][fan_in] indices into the previous layer.
+    pub indices: Vec<Vec<Vec<u32>>>,
+    pub layer_in_bits: Vec<usize>,
+    pub layer_fan_in: Vec<usize>,
+    pub tt: Vec<TtSpec>,
+    /// Directory this manifest was loaded from (artifact paths are relative).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = json::from_file(&dir.join("manifest.json"))?;
+        Self::from_json(&j, dir)
+            .with_context(|| format!("manifest in {}", dir.display()))
+    }
+
+    fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let indices = j
+            .get("indices")?
+            .as_arr()?
+            .iter()
+            .map(|layer| {
+                layer
+                    .as_arr()?
+                    .iter()
+                    .map(|row| {
+                        Ok(row
+                            .as_arr()?
+                            .iter()
+                            .map(|v| Ok(v.as_usize()? as u32))
+                            .collect::<Result<Vec<u32>>>()?)
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let tt = j
+            .get("tt")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(TtSpec {
+                    layer: t.get("layer")?.as_usize()?,
+                    path: t.get("path")?.as_str()?.to_string(),
+                    args: t
+                        .get("args")?
+                        .as_arr()?
+                        .iter()
+                        .map(|a| Ok(a.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                    num_luts: t.get("num_luts")?.as_usize()?,
+                    entries: t.get("entries")?.as_usize()?,
+                    fan_in: t.get("fan_in")?.as_usize()?,
+                    in_bits: t.get("in_bits")?.as_usize()?,
+                    out_bits: t.get("out_bits")?.as_usize()?,
+                    signed_out: t.get("signed_out")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let slices = j
+            .get("layer_param_slices")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                let v = s.usize_vec()?;
+                if v.len() != 2 {
+                    bail!("bad layer_param_slices entry");
+                }
+                Ok((v[0], v[1]))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let m = Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            mode: j.get("mode")?.as_str()?.to_string(),
+            dataset: j.get("dataset")?.as_str()?.to_string(),
+            input_size: j.get("input_size")?.as_usize()?,
+            n_class: j.get("n_class")?.as_usize()?,
+            layers: j.get("layers")?.usize_vec()?,
+            beta: j.get("beta")?.as_usize()?,
+            beta_in: j.get("beta_in")?.as_usize()?,
+            beta_out: j.get("beta_out")?.as_usize()?,
+            fan_in: j.get("fan_in")?.as_usize()?,
+            sub_depth: j.get("sub_depth")?.as_usize()?,
+            sub_width: j.get("sub_width")?.as_usize()?,
+            sub_skip: j.get("sub_skip")?.as_usize()?,
+            degree: j.get("degree")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            epochs: j.get("epochs")?.as_usize()?,
+            lr_max: j.get("lr_max")?.as_f64()?,
+            lr_min: j.get("lr_min")?.as_f64()?,
+            weight_decay: j.get("weight_decay")?.as_f64()?,
+            sgdr_t0: j.get("sgdr_t0")?.as_usize()?,
+            sgdr_mult: j.get("sgdr_mult")?.as_usize()?,
+            params,
+            scale_param_idx: j.get("scale_param_idx")?.usize_vec()?,
+            layer_param_slices: slices,
+            indices,
+            layer_in_bits: j.get("layer_in_bits")?.usize_vec()?,
+            layer_fan_in: j.get("layer_fan_in")?.usize_vec()?,
+            tt,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural sanity checks (every consumer relies on these).
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("no circuit layers");
+        }
+        if *self.layers.last().unwrap() != self.n_class {
+            bail!("last layer width != n_class");
+        }
+        if self.indices.len() != self.layers.len() {
+            bail!("indices / layers length mismatch");
+        }
+        for (l, (idx, &m)) in self.indices.iter().zip(&self.layers).enumerate() {
+            if idx.len() != m {
+                bail!("layer {l}: {} index rows for {m} luts", idx.len());
+            }
+            let prev = if l == 0 { self.input_size } else { self.layers[l - 1] };
+            for row in idx {
+                if row.len() != self.layer_fan_in[l] {
+                    bail!("layer {l}: fan-in mismatch");
+                }
+                if row.iter().any(|&i| i as usize >= prev) {
+                    bail!("layer {l}: index out of range");
+                }
+            }
+        }
+        if self.tt.len() != self.layers.len() {
+            bail!("tt / layers length mismatch");
+        }
+        for t in &self.tt {
+            if t.entries != 1usize << (t.in_bits * t.fan_in) {
+                bail!("layer {}: entries != 2^(bits*fan_in)", t.layer);
+            }
+        }
+        if self.scale_param_idx.len() != self.layers.len() {
+            bail!("one scale param per layer expected");
+        }
+        Ok(())
+    }
+
+    /// Index of a parameter by name.
+    pub fn param_index(&self) -> HashMap<&str, usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.as_str(), i))
+            .collect()
+    }
+
+    /// Total trainable parameter count (for Table I cross-checks).
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.elem_count()).sum()
+    }
+
+    pub fn hlo_path(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> String {
+        r#"{
+          "name":"t","mode":"neuralut","dataset":"moons","input_size":2,
+          "n_class":2,"layers":[2,2],"beta":2,"beta_in":2,"beta_out":4,
+          "fan_in":2,"sub_depth":1,"sub_width":1,"sub_skip":0,"degree":2,
+          "batch":4,"epochs":1,"lr_max":0.01,"lr_min":0.001,
+          "weight_decay":0.0,"sgdr_t0":1,"sgdr_mult":2,
+          "params":[{"name":"l0.w1","shape":[2,2,1]},{"name":"l0.b1","shape":[2,1]},
+                    {"name":"l0.scale","shape":[]},
+                    {"name":"l1.w1","shape":[2,2,1]},{"name":"l1.b1","shape":[2,1]},
+                    {"name":"l1.scale","shape":[]}],
+          "scale_param_idx":[2,5],
+          "layer_param_slices":[[0,3],[3,6]],
+          "indices":[[[0,1],[1,0]],[[0,1],[1,0]]],
+          "layer_in_bits":[2,2],
+          "layer_fan_in":[2,2],
+          "tt":[{"layer":0,"path":"tt_layer0.hlo.txt","args":["l0.w1","l0.b1","l0.scale"],
+                 "num_luts":2,"entries":16,"fan_in":2,"in_bits":2,"out_bits":2,"signed_out":false},
+                {"layer":1,"path":"tt_layer1.hlo.txt","args":["l0.scale","l1.w1","l1.b1","l1.scale"],
+                 "num_luts":2,"entries":16,"fan_in":2,"in_bits":2,"out_bits":4,"signed_out":true}]
+        }"#.to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let j = Json::parse(&mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp")).unwrap();
+        assert_eq!(m.layers, vec![2, 2]);
+        assert_eq!(m.total_params(), 4 + 2 + 1 + 4 + 2 + 1);
+        assert_eq!(m.param_index()["l1.w1"], 3);
+    }
+
+    #[test]
+    fn rejects_bad_indices() {
+        let bad = mini_manifest_json().replace("[[0,1],[1,0]],[[0,1]", "[[0,9],[1,0]],[[0,1]");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! Cycle-accurate LUT-network fabric simulator — the FPGA substitute.
+//!
+//! Functional model: every L-LUT output is registered, each circuit layer
+//! evaluates in one clock cycle (exactly the paper's hardware: "each L-LUT
+//! layer is evaluated in one clock cycle"), the pipeline accepts one sample
+//! per cycle. The simulator is bit-exact against the quantized JAX model
+//! (integration-tested) and doubles as the inference backend of the server.
+//!
+//! Hot path: `simulate_batch` — flat `u16` activation buffers, address
+//! accumulation by shifts, contiguous table slices, sharded across threads
+//! over the batch (`util::pool`).
+
+use crate::luts::LutNetwork;
+use crate::util::pool;
+
+pub mod vcd;
+
+/// Quantize a [0, 1] feature to its `bits`-bit input code.
+///
+/// Identical to `python/compile/quant.py::quant_input_code`:
+/// `floor(clip(x, 0, 1) * (2^bits - 1) + 0.5)`.
+#[inline]
+pub fn quantize_input(x: f32, bits: usize) -> u16 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    (x.clamp(0.0, 1.0) * levels + 0.5).floor() as u16
+}
+
+/// Result of simulating a batch.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Predicted class per sample (argmax of signed logit codes;
+    /// ties break toward the lowest class index, as in the JAX argmax).
+    pub predictions: Vec<u32>,
+    /// Raw signed logit codes, `[batch * n_class]`.
+    pub logit_codes: Vec<i16>,
+    /// Pipeline latency in cycles (= number of L-LUT layers).
+    pub latency_cycles: usize,
+    /// Total cycles to drain the batch through the pipeline.
+    pub total_cycles: usize,
+}
+
+/// The fabric simulator for one converted network.
+pub struct Simulator<'a> {
+    net: &'a LutNetwork,
+    /// Widest layer (for scratch sizing).
+    max_width: usize,
+    /// Per layer: wiring flattened to `[num_luts * fan_in]` (dense, cache-
+    /// friendly — avoids the `Vec<Vec<u32>>` pointer chase in the hot loop).
+    flat_indices: Vec<Vec<u32>>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(net: &'a LutNetwork) -> Self {
+        let max_width = net
+            .layers
+            .iter()
+            .map(|l| l.num_luts())
+            .chain([net.input_size])
+            .max()
+            .unwrap_or(0);
+        let flat_indices = net
+            .layers
+            .iter()
+            .map(|l| l.indices.iter().flatten().copied().collect())
+            .collect();
+        Simulator { net, max_width, flat_indices }
+    }
+
+    /// Latency in cycles of one sample (registered output per layer).
+    pub fn latency_cycles(&self) -> usize {
+        self.net.layers.len()
+    }
+
+    /// Simulate a batch of raw feature rows (`[batch * input_size]` floats
+    /// in [0, 1]); multi-threaded over the batch when it is large enough
+    /// to amortize thread spawn (~10 us each on this substrate — small
+    /// batches run inline, which keeps single-sample serving latency low).
+    pub fn simulate_batch(&self, x: &[f32]) -> SimResult {
+        let in_sz = self.net.input_size;
+        assert_eq!(x.len() % in_sz, 0, "ragged batch");
+        let batch = x.len() / in_sz;
+        let n_class = self.net.n_class;
+        let mut logit_codes = vec![0i16; batch * n_class];
+
+        const PARALLEL_THRESHOLD: usize = 64;
+        if batch < PARALLEL_THRESHOLD {
+            let mut cur = vec![0u16; self.max_width];
+            let mut nxt = vec![0u16; self.max_width];
+            for sample in 0..batch {
+                let row = &x[sample * in_sz..(sample + 1) * in_sz];
+                self.simulate_one(row, &mut cur, &mut nxt,
+                    &mut logit_codes[sample * n_class..(sample + 1) * n_class]);
+            }
+        } else {
+            // Shard the batch across threads; each worker owns two scratch
+            // activation buffers (current/next layer) reused across rows.
+            let shards = pool::parallel_ranges(
+                batch,
+                pool::num_threads(),
+                |_, range| {
+                    let mut out = vec![0i16; range.len() * n_class];
+                    let mut cur = vec![0u16; self.max_width];
+                    let mut nxt = vec![0u16; self.max_width];
+                    for (row_i, sample) in range.clone().enumerate() {
+                        let row = &x[sample * in_sz..(sample + 1) * in_sz];
+                        self.simulate_one(row, &mut cur, &mut nxt,
+                            &mut out[row_i * n_class..(row_i + 1) * n_class]);
+                    }
+                    (range.start, out)
+                },
+            );
+            for (start, shard) in shards {
+                logit_codes[start * n_class..start * n_class + shard.len()]
+                    .copy_from_slice(&shard);
+            }
+        }
+
+        let predictions = logit_codes
+            .chunks_exact(n_class)
+            .map(|row| {
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best as u32
+            })
+            .collect();
+
+        let latency = self.latency_cycles();
+        SimResult {
+            predictions,
+            logit_codes,
+            latency_cycles: latency,
+            // Pipelined: first result after `latency` cycles, then 1/cycle.
+            total_cycles: latency + batch.saturating_sub(1),
+        }
+    }
+
+    /// Evaluate one sample through all layers into `logits`.
+    fn simulate_one(&self, row: &[f32], cur: &mut Vec<u16>, nxt: &mut Vec<u16>,
+                    logits: &mut [i16]) {
+        let in_bits = self.net.input_bits;
+        for (i, &v) in row.iter().enumerate() {
+            cur[i] = quantize_input(v, in_bits);
+        }
+        let n_layers = self.net.layers.len();
+        for (li, layer) in self.net.layers.iter().enumerate() {
+            let entries = layer.entries();
+            let bits = layer.in_bits;
+            let fan_in = layer.fan_in;
+            let last = li == n_layers - 1;
+            let wires = &self.flat_indices[li];
+            let tables = &layer.tables;
+            for lut in 0..layer.num_luts() {
+                let mut addr = 0usize;
+                for (j, &src) in
+                    wires[lut * fan_in..(lut + 1) * fan_in].iter().enumerate()
+                {
+                    addr |= (cur[src as usize] as usize) << (bits * j);
+                }
+                let code = tables[lut * entries + addr];
+                if last {
+                    logits[lut] = code;
+                } else {
+                    nxt[lut] = code as u16;
+                }
+            }
+            if !last {
+                std::mem::swap(cur, nxt);
+            }
+        }
+    }
+
+    /// Classification accuracy over a labelled set.
+    pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
+        let r = self.simulate_batch(x);
+        let correct = r
+            .predictions
+            .iter()
+            .zip(y)
+            .filter(|(&p, &t)| p as i32 == t)
+            .count();
+        correct as f64 / y.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::random_network;
+
+    #[test]
+    fn input_quantization_matches_python_convention() {
+        // floor(x * levels + 0.5)
+        assert_eq!(quantize_input(0.0, 2), 0);
+        assert_eq!(quantize_input(1.0, 2), 3);
+        assert_eq!(quantize_input(0.5, 2), 2); // 1.5 + 0.5 -> floor(2.0) = 2
+        assert_eq!(quantize_input(0.49, 2), 1);
+        assert_eq!(quantize_input(-1.0, 3), 0);
+        assert_eq!(quantize_input(2.0, 3), 7);
+    }
+
+    #[test]
+    fn simulator_is_deterministic_and_shaped() {
+        let net = random_network(5, 12, 2, &[8, 4], 3, 2, 4);
+        let sim = Simulator::new(&net);
+        let x: Vec<f32> = (0..12 * 10).map(|i| (i % 7) as f32 / 7.0).collect();
+        let a = sim.simulate_batch(&x);
+        let b = sim.simulate_batch(&x);
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.logit_codes, b.logit_codes);
+        assert_eq!(a.predictions.len(), 10);
+        assert_eq!(a.latency_cycles, 2);
+        assert_eq!(a.total_cycles, 2 + 9);
+    }
+
+    #[test]
+    fn hand_built_identity_network() {
+        // One layer, one LUT with fan_in=1, 2 input bits, table[i] = i.
+        use crate::luts::{LutLayer, LutNetwork};
+        let net = LutNetwork {
+            name: "id".into(),
+            input_size: 1,
+            input_bits: 2,
+            n_class: 1,
+            layers: vec![LutLayer {
+                indices: vec![vec![0]],
+                tables: (0..4).map(|i| i as i16).collect(),
+                fan_in: 1,
+                in_bits: 2,
+                out_bits: 4,
+                signed_out: true,
+            }],
+        };
+        net.validate().unwrap();
+        let sim = Simulator::new(&net);
+        let r = sim.simulate_batch(&[0.0, 0.34, 0.67, 1.0]);
+        assert_eq!(r.logit_codes, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn address_bit_order_lsb_first() {
+        // fan_in=2, 1 bit each: input0 -> addr bit0, input1 -> addr bit1.
+        use crate::luts::{LutLayer, LutNetwork};
+        let net = LutNetwork {
+            name: "addr".into(),
+            input_size: 2,
+            input_bits: 1,
+            n_class: 1,
+            layers: vec![LutLayer {
+                indices: vec![vec![0, 1]],
+                tables: vec![10, 11, 12, 13], // addr 0..3
+                fan_in: 2,
+                in_bits: 1,
+                out_bits: 5,
+                signed_out: true,
+            }],
+        };
+        let sim = Simulator::new(&net);
+        // x = (1, 0) -> codes (1, 0) -> addr = 1 -> 11
+        assert_eq!(sim.simulate_batch(&[1.0, 0.0]).logit_codes, vec![11]);
+        // x = (0, 1) -> addr = 2 -> 12
+        assert_eq!(sim.simulate_batch(&[0.0, 1.0]).logit_codes, vec![12]);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low_index() {
+        use crate::luts::{LutLayer, LutNetwork};
+        let net = LutNetwork {
+            name: "tie".into(),
+            input_size: 1,
+            input_bits: 1,
+            n_class: 2,
+            layers: vec![LutLayer {
+                indices: vec![vec![0], vec![0]],
+                tables: vec![3, 3, 3, 3],
+                fan_in: 1,
+                in_bits: 1,
+                out_bits: 4,
+                signed_out: true,
+            }],
+        };
+        let sim = Simulator::new(&net);
+        assert_eq!(sim.simulate_batch(&[0.0]).predictions, vec![0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Parameter-count formulas of paper Table I (and eqs. (5)-(7)).
+//!
+//! These are cross-checked two ways: against the Python topology code
+//! (pytest `test_topo.py`) and against the actual manifest parameter shapes
+//! (proptest-style test below + `examples/repro_table1.rs`).
+
+/// Parameters of one affine map R^d1 -> R^d2 (weights + bias), eq. T(X).
+pub fn t_affine(d1: usize, d2: usize) -> usize {
+    d1 * d2 + d2
+}
+
+/// T_A: parameters of the affine chain A_1..A_L (paper eq. (5)).
+pub fn t_a(f: usize, l: usize, n: usize) -> usize {
+    match l {
+        0 => 0,
+        1 => f + 1,
+        2 => (f + 2) * n + 1,
+        _ => (l - 2) * n * n + (f + l) * n + 1,
+    }
+}
+
+/// T_R: parameters of the residual maps R_1..R_{L/S} (paper eq. (6));
+/// 0 when S = 0 (no skip connections).
+pub fn t_r(f: usize, l: usize, n: usize, s: usize) -> usize {
+    if s == 0 {
+        return 0;
+    }
+    assert_eq!(l % s, 0, "L must be a multiple of S");
+    let c = l / s;
+    match c {
+        1 => f + 1,
+        2 => (f + 2) * n + 1,
+        _ => (c - 2) * n * n + (f + c) * n + 1,
+    }
+}
+
+/// T_N = T_A + T_R: trainable parameters of one NeuraLUT L-LUT (eq. (7)).
+pub fn t_neuralut(f: usize, l: usize, n: usize, s: usize) -> usize {
+    t_a(f, l, n) + t_r(f, l, n, s)
+}
+
+/// LogicNets: linear + activation, O(F) (Table I row 1).
+pub fn t_logicnets(f: usize) -> usize {
+    f + 1
+}
+
+/// Binomial coefficient (exact in u128 for our ranges).
+pub fn binomial(n: usize, k: usize) -> usize {
+    let k = k.min(n - k.min(n));
+    let mut num: u128 = 1;
+    let mut den: u128 = 1;
+    for i in 0..k {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as usize
+}
+
+/// PolyLUT: all monomials of F inputs up to degree D, O(C(F+D, D))
+/// (Table I row 2); the constant monomial folds into the bias, so the
+/// trainable count is C(F+D, D) - 1 weights + 1 bias = C(F+D, D).
+pub fn t_polylut(f: usize, d: usize) -> usize {
+    binomial(f + d, d)
+}
+
+/// Structural parameter count of the hidden sub-network, enumerating the
+/// affine/residual dims directly — must equal [`t_neuralut`] (the closed
+/// form). Mirrors `SubnetTopo.param_count()` in Python.
+pub fn t_neuralut_structural(f: usize, l: usize, n: usize, s: usize) -> usize {
+    let widths: Vec<usize> = std::iter::once(f)
+        .chain(std::iter::repeat(n).take(l.saturating_sub(1)))
+        .chain(std::iter::once(1))
+        .collect();
+    let mut total = 0;
+    for w in widths.windows(2) {
+        total += t_affine(w[0], w[1]);
+    }
+    if s > 0 {
+        let c = l / s;
+        for i in 1..=c {
+            total += t_affine(widths[s * (i - 1)], widths[s * i]);
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn closed_form_matches_structural_enumeration() {
+        // Property: paper eqs. (5)+(6) == direct shape enumeration, over a
+        // random sweep of (F, L, N, S).
+        forall(
+            0xA11CE,
+            500,
+            |r: &mut Rng| {
+                let l = 1 + r.below(6);
+                let divisors: Vec<usize> =
+                    (1..=l).filter(|d| l % d == 0).collect();
+                let s = if r.below(3) == 0 {
+                    0
+                } else {
+                    divisors[r.below(divisors.len())]
+                };
+                (1 + r.below(16), l, 1 + r.below(32), s)
+            },
+            |&(f, l, n, s)| {
+                t_neuralut(f, l, n, s) == t_neuralut_structural(f, l, n, s)
+            },
+        );
+    }
+
+    #[test]
+    fn table1_reference_points() {
+        // LogicNets == NeuraLUT with N = L = 1, S = 0 (paper §III-C).
+        for f in 1..10 {
+            assert_eq!(t_logicnets(f), t_neuralut(f, 1, 1, 0));
+        }
+        // Paper's HDR-5L sub-network: F=6, L=4, N=16, S=2.
+        assert_eq!(t_neuralut(6, 4, 16, 2), 802);
+        // PolyLUT: F=6, D=2 -> C(8,2) = 28.
+        assert_eq!(t_polylut(6, 2), 28);
+    }
+
+    #[test]
+    fn scaling_is_linear_in_f_for_fixed_n_l() {
+        // Table I: NeuraLUT scales linearly in F (fixed N, L).
+        let (l, n, s) = (4, 16, 2);
+        let d1 = t_neuralut(8, l, n, s) - t_neuralut(7, l, n, s);
+        let d2 = t_neuralut(20, l, n, s) - t_neuralut(19, l, n, s);
+        assert_eq!(d1, d2, "increments must be constant in F");
+        // while PolyLUT grows polynomially: increments increase.
+        assert!(t_polylut(8, 3) - t_polylut(7, 3) > t_polylut(5, 3) - t_polylut(4, 3));
+    }
+
+    #[test]
+    fn binomial_basics() {
+        assert_eq!(binomial(8, 2), 28);
+        assert_eq!(binomial(5, 0), 1);
+        assert_eq!(binomial(5, 5), 1);
+        assert_eq!(binomial(10, 3), 120);
+    }
+}

@@ -1,0 +1,63 @@
+//! Classification metrics used across training, simulation and serving.
+
+/// Accuracy from predictions vs labels.
+pub fn accuracy(pred: &[u32], labels: &[i32]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hit = pred
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &y)| p as i32 == y)
+        .count();
+    hit as f64 / pred.len() as f64
+}
+
+/// Argmax over rows of a flat `[n, c]` logits matrix; ties break low
+/// (matching `jnp.argmax` and the netlist simulator).
+pub fn argmax_rows(logits: &[f32], c: usize) -> Vec<u32> {
+    logits
+        .chunks_exact(c)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as u32
+        })
+        .collect()
+}
+
+/// Confusion matrix `[true][pred]` as flat `n_class * n_class` counts.
+pub fn confusion(pred: &[u32], labels: &[i32], n_class: usize) -> Vec<usize> {
+    let mut m = vec![0usize; n_class * n_class];
+    for (&p, &y) in pred.iter().zip(labels) {
+        m[y as usize * n_class + p as usize] += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_hits() {
+        assert_eq!(accuracy(&[0, 1, 2, 1], &[0, 1, 1, 1]), 0.75);
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        let logits = [1.0f32, 1.0, 0.5, 0.2, 0.9, 0.9];
+        assert_eq!(argmax_rows(&logits, 3), vec![0, 1]);
+    }
+
+    #[test]
+    fn confusion_diagonal_when_perfect() {
+        let c = confusion(&[0, 1, 2], &[0, 1, 2], 3);
+        assert_eq!(c, vec![1, 0, 0, 0, 1, 0, 0, 0, 1]);
+    }
+}

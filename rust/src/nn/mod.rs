@@ -1,0 +1,6 @@
+//! Neural-network-side helpers: Table-I parameter-count formulas, the
+//! trained-parameter store, and classification metrics.
+
+pub mod formulas;
+pub mod metrics;
+pub mod params;

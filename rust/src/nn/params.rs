@@ -1,0 +1,224 @@
+//! Named trained-parameter store: the flat parameter list of one model,
+//! with binary persistence so trained models can be converted / re-served
+//! without retraining. Format "NPRM" v1.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::Manifest;
+use crate::runtime::{HostTensor, TensorData};
+
+/// The trained parameters of one model, in manifest (flat ABI) order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamStore {
+    pub fn new(manifest: &Manifest, tensors: Vec<HostTensor>) -> Result<Self> {
+        if tensors.len() != manifest.params.len() {
+            bail!(
+                "expected {} tensors, got {}",
+                manifest.params.len(),
+                tensors.len()
+            );
+        }
+        for (spec, t) in manifest.params.iter().zip(&tensors) {
+            if spec.shape != t.shape {
+                bail!(
+                    "{}: shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+        }
+        Ok(ParamStore {
+            names: manifest.params.iter().map(|p| p.name.clone()).collect(),
+            tensors,
+        })
+    }
+
+    /// Name -> flat index.
+    pub fn index(&self) -> HashMap<&str, usize> {
+        self.names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect()
+    }
+
+    /// Fetch a tensor by name.
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        let i = self
+            .names
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("no parameter named {name}"))?;
+        Ok(&self.tensors[i])
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.elem_count()).sum()
+    }
+
+    const MAGIC: u32 = 0x4E50524D; // "NPRM"
+
+    /// Persist to a binary file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(&Self::MAGIC.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    f.write_all(&0u32.to_le_bytes())?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I32(v) => {
+                    f.write_all(&1u32.to_le_bytes())?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a binary file (validated against the manifest).
+    pub fn load(path: &Path, manifest: &Manifest) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        let r32 = |f: &mut dyn Read| -> Result<u32> {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            Ok(u32::from_le_bytes(b))
+        };
+        if r32(&mut f)? != Self::MAGIC {
+            bail!("bad magic");
+        }
+        let n = r32(&mut f)? as usize;
+        let mut names = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = r32(&mut f)? as usize;
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            names.push(String::from_utf8(nb)?);
+            let rank = r32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r32(&mut f)? as usize);
+            }
+            let count = shape.iter().product::<usize>().max(1);
+            let dtype = r32(&mut f)?;
+            let mut buf = vec![0u8; count * 4];
+            f.read_exact(&mut buf)?;
+            let t = match dtype {
+                0 => HostTensor::f32(
+                    shape,
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                1 => HostTensor::i32(
+                    shape,
+                    buf.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                d => bail!("unknown dtype tag {d}"),
+            };
+            tensors.push(t);
+        }
+        let store = ParamStore { names, tensors };
+        // Validate against manifest order.
+        for (spec, (name, t)) in manifest
+            .params
+            .iter()
+            .zip(store.names.iter().zip(&store.tensors))
+        {
+            if &spec.name != name || spec.shape != t.shape {
+                bail!("param file does not match manifest ({name})");
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> Manifest {
+        // Build via JSON to reuse the validated constructor.
+        let dir = std::env::temp_dir().join("neuralut_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{
+          "name":"t","mode":"logicnets","dataset":"moons","input_size":2,
+          "n_class":2,"layers":[2],"beta":2,"beta_in":2,"beta_out":4,
+          "fan_in":2,"sub_depth":1,"sub_width":1,"sub_skip":0,"degree":2,
+          "batch":4,"epochs":1,"lr_max":0.01,"lr_min":0.001,
+          "weight_decay":0.0,"sgdr_t0":1,"sgdr_mult":2,
+          "params":[{"name":"l0.w1","shape":[2,2,1]},{"name":"l0.scale","shape":[]}],
+          "scale_param_idx":[1],
+          "layer_param_slices":[[0,2]],
+          "indices":[[[0,1],[1,0]]],
+          "layer_in_bits":[2],"layer_fan_in":[2],
+          "tt":[{"layer":0,"path":"tt_layer0.hlo.txt","args":["l0.w1","l0.scale"],
+                 "num_luts":2,"entries":16,"fan_in":2,"in_bits":2,"out_bits":4,"signed_out":true}]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = tiny_manifest();
+        let store = ParamStore::new(
+            &m,
+            vec![
+                HostTensor::f32(vec![2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]),
+                HostTensor::scalar_f32(0.5),
+            ],
+        )
+        .unwrap();
+        let path = std::env::temp_dir().join("neuralut_params_test/p.nprm");
+        store.save(&path).unwrap();
+        let back = ParamStore::load(&path, &m).unwrap();
+        assert_eq!(back.names, store.names);
+        assert_eq!(back.get("l0.w1").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let m = tiny_manifest();
+        assert!(ParamStore::new(
+            &m,
+            vec![
+                HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                HostTensor::scalar_f32(0.5),
+            ],
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`). All executables of a bundle
+//! share one client; compiled executables are cached by path. Outputs
+//! arrive as a single tuple buffer (the XLA root tuple), which we fetch and
+//! decompose into host literals — on the CPU backend this is a memcpy.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::Manifest;
+
+/// A tensor on the host, mirrored to/from XLA literals.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+/// Element storage (only the dtypes the ABI uses).
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::i32(vec![], vec![v])
+    }
+
+    pub fn elem_count(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        if self.shape.is_empty() {
+            // vec1 of len 1 -> reshape to scalar.
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            ty => bail!("unsupported output element type {ty:?}"),
+        };
+        Ok(HostTensor { shape: dims, data })
+    }
+}
+
+/// A compiled executable with a fixed flat signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute on host tensors, returning the decomposed output tuple.
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute on pre-marshalled literals (hot loop: avoids re-marshalling
+    /// tensors that don't change between calls).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute and keep outputs as raw literals (for feeding the next call
+    /// without a HostTensor round-trip).
+    pub fn run_raw(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Like [`Self::run_raw`] but borrowing the argument literals — the hot
+    /// loop keeps long-lived state literals and only rebuilds the small
+    /// per-step inputs.
+    pub fn run_literals_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Marshal a HostTensor into a literal (public for hot-loop callers).
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    t.to_literal()
+}
+
+/// Read a HostTensor back out of a literal.
+pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    HostTensor::from_literal(lit)
+}
+
+/// Shared PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by canonical path).
+    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+        let key = path.to_path_buf();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let arc = Arc::new(Executable { exe, path: key.clone() });
+        self.cache.lock().unwrap().insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Load a bundle artifact by stem name ("init", "train_step", "fwd",
+    /// "tt_layer0", ...).
+    pub fn load_artifact(&self, m: &Manifest, stem: &str) -> Result<Arc<Executable>> {
+        self.load_hlo(&m.hlo_path(stem))
+    }
+
+    /// Drop all cached executables (sweep binaries call this between model
+    /// configs — compiled XLA programs hold large buffers).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Evict cached executables that do NOT live under `keep_dir` — sweeps
+    /// call this when switching configs, so per-seed reruns of the same
+    /// config still hit the cache.
+    pub fn evict_other_bundles(&self, keep_dir: &Path) {
+        self.cache
+            .lock()
+            .unwrap()
+            .retain(|path, _| path.starts_with(keep_dir));
+    }
+}

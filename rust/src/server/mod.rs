@@ -1,0 +1,213 @@
+//! Threaded inference server: request router + dynamic batcher over the
+//! netlist simulator (the deployed "fabric").
+//!
+//! Architecture (vLLM-router-like, scaled to this system): clients submit
+//! feature vectors through a channel; the batcher thread collects requests
+//! up to `max_batch` or `batch_window`, runs one batched fabric simulation,
+//! and replies through per-request channels. Latency percentiles come from
+//! enqueue→reply timestamps.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::luts::LutNetwork;
+use crate::netlist::Simulator;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum requests folded into one fabric batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_window: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 256,
+            batch_window: Duration::from_micros(200),
+        }
+    }
+}
+
+struct Request {
+    features: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Reply>,
+}
+
+/// One served prediction.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub prediction: u32,
+    pub latency: Duration,
+    /// Size of the fabric batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+    input_size: usize,
+}
+
+impl Client {
+    /// Submit one request; blocks until the prediction is ready.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Reply> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if features.len() != self.input_size {
+            bail!(
+                "feature vector has {} values, model expects {}",
+                features.len(),
+                self.input_size
+            );
+        }
+        self.tx
+            .send(Request { features, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+
+    /// Submit asynchronously; returns the receiver.
+    pub fn infer_async(&self, features: Vec<f32>) -> Result<Receiver<Reply>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if features.len() != self.input_size {
+            bail!("bad feature length");
+        }
+        self.tx
+            .send(Request { features, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(reply_rx)
+    }
+}
+
+/// The running server; dropping it stops the batcher thread.
+pub struct Server {
+    tx: Option<Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    input_size: usize,
+}
+
+impl Server {
+    /// Start serving a converted network.
+    pub fn start(net: Arc<LutNetwork>, cfg: ServerConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let input_size = net.input_size;
+        let handle = std::thread::spawn(move || batcher_loop(net, cfg, rx));
+        Server { tx: Some(tx), handle: Some(handle), input_size }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone().unwrap(), input_size: self.input_size }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(net: Arc<LutNetwork>, cfg: ServerConfig, rx: Receiver<Request>) {
+    let sim = Simulator::new(&net);
+    let in_sz = net.input_size;
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone -> shutdown
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_window;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // One fabric run for the whole batch.
+        let mut x = Vec::with_capacity(batch.len() * in_sz);
+        for r in &batch {
+            x.extend_from_slice(&r.features);
+        }
+        let result = sim.simulate_batch(&x);
+        let bs = batch.len();
+        for (req, &pred) in batch.into_iter().zip(&result.predictions) {
+            let _ = req.reply.send(Reply {
+                prediction: pred,
+                latency: req.enqueued.elapsed(),
+                batch_size: bs,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::random_network;
+
+    #[test]
+    fn serves_and_matches_direct_simulation() {
+        let net = Arc::new(random_network(21, 8, 2, &[6, 3], 3, 2, 4));
+        let sim = Simulator::new(&net);
+        let server = Server::start(net.clone(), ServerConfig::default());
+        let client = server.client();
+        for i in 0..20 {
+            let feats: Vec<f32> = (0..8).map(|j| ((i + j) % 5) as f32 / 5.0).collect();
+            let want = sim.simulate_batch(&feats).predictions[0];
+            let got = client.infer(feats).unwrap();
+            assert_eq!(got.prediction, want);
+            assert!(got.batch_size >= 1);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_feature_length() {
+        let net = Arc::new(random_network(22, 8, 2, &[4, 2], 3, 2, 4));
+        let server = Server::start(net, ServerConfig::default());
+        assert!(server.client().infer(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_replies() {
+        let net = Arc::new(random_network(23, 4, 2, &[4, 2], 2, 2, 4));
+        let server = Server::start(net, ServerConfig {
+            max_batch: 16,
+            batch_window: Duration::from_micros(500),
+        });
+        let client = server.client();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    for i in 0..25 {
+                        let feats: Vec<f32> =
+                            (0..4).map(|j| ((t + i + j) % 7) as f32 / 7.0).collect();
+                        let r = c.infer(feats).unwrap();
+                        assert!(r.prediction < 2);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Boolean-function utilities over flat truth tables.
+//!
+//! A function of `k` variables is a `Vec<u8>` of length `2^k` holding 0/1,
+//! indexed by the address whose bit `j` is variable `j` (LSB-first, the
+//! same convention as the L-LUT addresses).
+
+/// Exact support: the variables that actually affect the function.
+pub fn support(bits: &[u8], k: usize) -> Vec<usize> {
+    debug_assert_eq!(bits.len(), 1usize << k);
+    let mut vars = Vec::new();
+    for v in 0..k {
+        let stride = 1usize << v;
+        let mut affects = false;
+        'outer: for base in (0..bits.len()).step_by(stride << 1) {
+            for off in 0..stride {
+                if bits[base + off] != bits[base + off + stride] {
+                    affects = true;
+                    break 'outer;
+                }
+            }
+        }
+        if affects {
+            vars.push(v);
+        }
+    }
+    vars
+}
+
+/// Project a function onto a subset of its variables (which must contain
+/// the true support): returns the table over `vars.len()` address bits,
+/// with `vars[j]` mapped to new address bit `j`.
+pub fn project(bits: &[u8], _k: usize, vars: &[usize]) -> Vec<u8> {
+    let k_new = vars.len();
+    let mut out = vec![0u8; 1usize << k_new];
+    for (new_addr, slot) in out.iter_mut().enumerate() {
+        let mut addr = 0usize;
+        for (j, &v) in vars.iter().enumerate() {
+            if (new_addr >> j) & 1 == 1 {
+                addr |= 1 << v;
+            }
+        }
+        *slot = bits[addr];
+    }
+    out
+}
+
+/// Is the function constant?
+pub fn is_constant(bits: &[u8]) -> bool {
+    bits.windows(2).all(|w| w[0] == w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_of_projection_functions() {
+        // f(a, b, c) = b (address bit 1)
+        let bits: Vec<u8> = (0..8u32).map(|a| ((a >> 1) & 1) as u8).collect();
+        assert_eq!(support(&bits, 3), vec![1]);
+        let p = project(&bits, 3, &[1]);
+        assert_eq!(p, vec![0, 1]);
+    }
+
+    #[test]
+    fn support_of_xor_is_everything() {
+        let bits: Vec<u8> = (0..16u32).map(|a| (a.count_ones() & 1) as u8).collect();
+        assert_eq!(support(&bits, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn constant_has_empty_support() {
+        let bits = vec![1u8; 32];
+        assert!(support(&bits, 5).is_empty());
+        assert!(is_constant(&bits));
+    }
+
+    #[test]
+    fn projection_preserves_function() {
+        // f(a,b,c,d) = a AND c; project onto {0, 2}.
+        let bits: Vec<u8> = (0..16u32)
+            .map(|a| ((a & 1) & ((a >> 2) & 1)) as u8)
+            .collect();
+        assert_eq!(support(&bits, 4), vec![0, 2]);
+        let p = project(&bits, 4, &[0, 2]);
+        assert_eq!(p, vec![0, 0, 0, 1]); // AND truth table
+    }
+}

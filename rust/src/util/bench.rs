@@ -1,0 +1,104 @@
+//! Tiny bench harness for `cargo bench` targets (criterion is not vendored
+//! offline). Measures wall time with warmup, reports mean ± std and
+//! throughput, and prints rows a human (or EXPERIMENTS.md) can diff.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        let per = fmt_ns(self.mean_ns);
+        let sd = fmt_ns(self.std_ns);
+        match self.throughput {
+            Some((tp, unit)) => println!(
+                "bench {:<44} {:>12}/iter ± {:>10}  ({} {}/s, {} iters)",
+                self.name,
+                per,
+                sd,
+                stats::human(tp),
+                unit,
+                self.iters
+            ),
+            None => println!(
+                "bench {:<44} {:>12}/iter ± {:>10}  ({} iters)",
+                self.name, per, sd, self.iters
+            ),
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Run `f` repeatedly: `warmup` throwaway iterations, then timed iterations
+/// until `min_time_s` of measurement or `max_iters`, whichever first.
+/// `items_per_iter` (with a unit) turns the result into throughput.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_time_s: f64,
+    max_iters: usize,
+    items_per_iter: Option<(f64, &'static str)>,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_time_s && samples.len() < max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    if samples.is_empty() {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let s = stats::summarize(&samples);
+    let m = Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: s.mean,
+        std_ns: if s.std.is_nan() { 0.0 } else { s.std },
+        throughput: items_per_iter.map(|(n, u)| (n / (s.mean / 1e9), u)),
+    };
+    m.report();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("noop", 1, 0.01, 1000, Some((1.0, "ops")), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.mean_ns >= 0.0);
+        assert!(m.iters >= 1);
+    }
+}

@@ -1,0 +1,64 @@
+//! Miniature property-testing harness (proptest is not vendored offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` inputs from `gen` and
+//! asserts `prop` on each; on failure it panics with the failing case's
+//! debug representation and the sub-seed that regenerates it, so failures
+//! are reproducible (`Rng::new(sub_seed)` + the same generator).
+
+use super::rng::Rng;
+
+/// Run a property over `cases` generated inputs. Panics on the first
+/// counterexample with enough information to replay it.
+pub fn forall<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    for case in 0..cases {
+        let sub_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(sub_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property falsified on case {case} (sub_seed {sub_seed:#x}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result`, so failures can carry
+/// a message.
+pub fn forall_res<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let sub_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(sub_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property falsified on case {case} (sub_seed {sub_seed:#x}): {msg}\n{input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 100, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_reports() {
+        forall(1, 100, |r| r.below(100), |&x| x < 50);
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch utility substrates.
+//!
+//! The build environment is offline with only `xla` + `anyhow` vendored, so
+//! everything a framework normally pulls from crates.io lives here: a JSON
+//! parser/writer ([`json`]), deterministic PRNGs ([`rng`]), descriptive
+//! statistics ([`stats`]), a scoped thread pool ([`pool`]), a miniature
+//! property-testing harness ([`check`]) and a bench harness ([`bench`]).
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

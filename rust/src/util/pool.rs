@@ -1,0 +1,110 @@
+//! Scoped data-parallel helpers over std threads (tokio is not vendored in
+//! this offline image; the netlist simulator and workload sweeps only need
+//! fork-join parallelism, which `std::thread::scope` provides cleanly).
+
+/// Number of worker threads to use (`NEURALUT_THREADS` overrides).
+pub fn num_threads() -> usize {
+    if let Some(v) = std::env::var_os("NEURALUT_THREADS") {
+        if let Ok(n) = v.to_string_lossy().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Run `f(chunk_index, item_range)` across `n_items` split into roughly
+/// equal contiguous ranges, one per worker, and collect the results in
+/// chunk order. `f` must be `Send`; results are gathered after the join.
+pub fn parallel_ranges<T, F>(n_items: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+{
+    let workers = workers.clamp(1, n_items.max(1));
+    let chunk = n_items.div_ceil(workers);
+    let ranges: Vec<std::ops::Range<usize>> = (0..workers)
+        .map(|w| (w * chunk).min(n_items)..((w + 1) * chunk).min(n_items))
+        .collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let fref = &f;
+                scope.spawn(move || fref(i, r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Map `f` over mutable equal-size row chunks of `data` in parallel —
+/// the netlist simulator's batch-sharding primitive.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], rows: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if rows == 0 || data.is_empty() {
+        return;
+    }
+    let row_len = data.len() / rows;
+    assert_eq!(data.len(), rows * row_len, "data not divisible into rows");
+    let workers = num_threads().min(rows);
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut row0 = 0;
+        for _ in 0..workers {
+            let take = (rows_per.min(rows - row0)) * row_len;
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take);
+            let start_row = row0;
+            let fref = &f;
+            scope.spawn(move || fref(start_row, head));
+            rest = tail;
+            row0 += rows_per.min(rows - row0);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_ranges_covers_everything() {
+        let sums = parallel_ranges(1000, 7, |_, r| r.sum::<usize>());
+        assert_eq!(sums.iter().sum::<usize>(), (0..1000).sum::<usize>());
+    }
+
+    #[test]
+    fn parallel_chunks_mut_touches_all_rows() {
+        let rows = 13;
+        let cols = 5;
+        let mut data = vec![0u32; rows * cols];
+        parallel_chunks_mut(&mut data, rows, |start_row, chunk| {
+            for (i, row) in chunk.chunks_mut(cols).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (start_row + i) as u32;
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(data[r * cols + c], r as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_empty() {
+        parallel_chunks_mut::<u32, _>(&mut [], 0, |_, _| {});
+        let v: Vec<usize> = parallel_ranges(0, 4, |_, r| r.len());
+        assert!(v.iter().sum::<usize>() == 0);
+    }
+}

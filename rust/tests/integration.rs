@@ -1,0 +1,185 @@
+//! Integration tests over the real AOT artifact bundles: the full codesign
+//! loop (train → convert → simulate → synth → RTL) on the smallest config,
+//! plus cross-component invariants. Requires `make artifacts` (tests skip
+//! with a message when the bundle is missing, so `cargo test` stays usable
+//! on a fresh checkout).
+
+use std::sync::Arc;
+
+use neuralut::coordinator::pipeline::{self, PipelineOpts};
+use neuralut::coordinator::trainer::{TrainOpts, Trainer};
+use neuralut::data::Dataset;
+use neuralut::luts::{convert, LutNetwork};
+use neuralut::manifest::Manifest;
+use neuralut::netlist::Simulator;
+use neuralut::nn::formulas;
+use neuralut::runtime::Runtime;
+use neuralut::server::{Server, ServerConfig};
+use neuralut::synth::synthesize;
+
+fn bundle(name: &str) -> Option<(Manifest, Dataset)> {
+    let dir = neuralut::artifacts_dir().join(name);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/{name} missing (run `make artifacts`)");
+        return None;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    let ds = Dataset::load_named(&m.dataset).unwrap();
+    Some((m, ds))
+}
+
+#[test]
+fn full_pipeline_on_moons_is_consistent_and_learns() {
+    let Some((m, ds)) = bundle("moons-neuralut") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let opts = PipelineOpts {
+        train: TrainOpts { epochs: Some(12), quiet: true, ..Default::default() },
+        verify_samples: Some(512),
+        out_dir: None,
+        emit_rtl: false,
+    };
+    let r = pipeline::run(&rt, &m, &ds, 0, &opts).unwrap();
+    pipeline::verify_consistent(&r, 0.05).unwrap();
+    assert!(r.sim_acc > 0.85, "fabric accuracy too low: {}", r.sim_acc);
+    // Bit-exactness: the float monitor and the fabric should agree on
+    // (nearly) every prediction — with the current toolchain it is exact.
+    assert!(
+        r.mismatches * 100 <= r.n_verified,
+        "boundary flips exceed 1%: {}/{}",
+        r.mismatches,
+        r.n_verified
+    );
+    // Synth report sanity.
+    assert_eq!(r.synth.latency_cycles, m.layers.len());
+    assert!(r.synth.luts > 0 && r.synth.fmax_mhz > 0.0);
+}
+
+#[test]
+fn conversion_is_deterministic() {
+    let Some((m, ds)) = bundle("moons-neuralut") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = Trainer::new(&rt, &m, &ds).unwrap();
+    let r = trainer
+        .run(7, &TrainOpts { epochs: Some(1), quiet: true, ..Default::default() })
+        .unwrap();
+    let a = convert::convert(&rt, &m, &r.params).unwrap();
+    let b = convert::convert(&rt, &m, &r.params).unwrap();
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la.tables, lb.tables);
+    }
+}
+
+#[test]
+fn same_seed_reproduces_same_training() {
+    let Some((m, ds)) = bundle("moons-logicnets") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = Trainer::new(&rt, &m, &ds).unwrap();
+    let opts = TrainOpts { epochs: Some(2), quiet: true, ..Default::default() };
+    let a = trainer.run(3, &opts).unwrap();
+    let b = trainer.run(3, &opts).unwrap();
+    assert_eq!(a.test_acc, b.test_acc);
+    for (x, y) in a.params.tensors.iter().zip(&b.params.tensors) {
+        assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap());
+    }
+}
+
+#[test]
+fn manifest_param_counts_match_table1_formulas() {
+    let Some((m, _)) = bundle("moons-neuralut") else { return };
+    // Per-layer neuron parameters (excluding BN + scale tail) must equal
+    // M * T_N from the paper's closed forms.
+    for (l, &(lo, hi)) in m.layer_param_slices.iter().enumerate() {
+        let neuron_elems: usize = m.params[lo..hi - 5]
+            .iter()
+            .map(|p| p.elem_count())
+            .sum();
+        let f = m.layer_fan_in[l];
+        let t = formulas::t_neuralut(f, m.sub_depth, m.sub_width, m.sub_skip);
+        assert_eq!(neuron_elems, m.layers[l] * t, "layer {l}");
+    }
+}
+
+#[test]
+fn netlist_sim_matches_saved_network_after_roundtrip() {
+    let Some((m, ds)) = bundle("moons-neuralut") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = Trainer::new(&rt, &m, &ds).unwrap();
+    let r = trainer
+        .run(1, &TrainOpts { epochs: Some(1), quiet: true, ..Default::default() })
+        .unwrap();
+    let net = convert::convert(&rt, &m, &r.params).unwrap();
+    let path = std::env::temp_dir().join("neuralut_it_net.nlut");
+    net.save(&path).unwrap();
+    let net2 = LutNetwork::load(&path).unwrap();
+    let sim1 = Simulator::new(&net);
+    let sim2 = Simulator::new(&net2);
+    let x = &ds.test_x[..64 * ds.n_feat];
+    assert_eq!(
+        sim1.simulate_batch(x).logit_codes,
+        sim2.simulate_batch(x).logit_codes
+    );
+}
+
+#[test]
+fn server_agrees_with_direct_simulation_on_real_model() {
+    let Some((m, ds)) = bundle("moons-logicnets") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = Trainer::new(&rt, &m, &ds).unwrap();
+    let r = trainer
+        .run(2, &TrainOpts { epochs: Some(1), quiet: true, ..Default::default() })
+        .unwrap();
+    let net = Arc::new(convert::convert(&rt, &m, &r.params).unwrap());
+    let sim = Simulator::new(&net);
+    let server = Server::start(net.clone(), ServerConfig::default());
+    let client = server.client();
+    for i in 0..32 {
+        let row = ds.test_row(i).to_vec();
+        let want = sim.simulate_batch(&row).predictions[0];
+        assert_eq!(client.infer(row).unwrap().prediction, want);
+    }
+}
+
+#[test]
+fn rtl_bundle_expected_vectors_match_simulator() {
+    let Some((m, ds)) = bundle("moons-neuralut") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = Trainer::new(&rt, &m, &ds).unwrap();
+    let r = trainer
+        .run(4, &TrainOpts { epochs: Some(1), quiet: true, ..Default::default() })
+        .unwrap();
+    let net = convert::convert(&rt, &m, &r.params).unwrap();
+    let dir = std::env::temp_dir().join("neuralut_it_rtl");
+    neuralut::rtl::write_rtl_bundle(&net, &dir, &ds.test_x, 16).unwrap();
+    let expected = std::fs::read_to_string(dir.join("expected.hex")).unwrap();
+    let sim = Simulator::new(&net);
+    for (i, line) in expected.lines().enumerate() {
+        let row = ds.test_row(i);
+        let res = sim.simulate_batch(row);
+        let packed = neuralut::rtl::pack_output_hex(&net, &res.logit_codes);
+        assert_eq!(line, packed, "vector {i}");
+    }
+}
+
+#[test]
+fn synth_cost_orders_modes_correctly() {
+    // NeuraLUT tables (dense sub-network functions) must synthesize to at
+    // least as many P-LUTs per L-LUT as LogicNets (linear) tables at the
+    // same circuit geometry — the paper's §IV-A2 observation.
+    let Some((m_n, ds)) = bundle("moons-neuralut") else { return };
+    let Some((m_l, _)) = bundle("moons-logicnets") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut per_lut = Vec::new();
+    for m in [&m_n, &m_l] {
+        let trainer = Trainer::new(&rt, m, &ds).unwrap();
+        let r = trainer
+            .run(0, &TrainOpts { epochs: Some(8), quiet: true, ..Default::default() })
+            .unwrap();
+        let net = convert::convert(&rt, m, &r.params).unwrap();
+        let s = synthesize(&net);
+        per_lut.push(s.luts as f64 / net.num_luts() as f64);
+    }
+    assert!(
+        per_lut[0] >= per_lut[1] * 0.8,
+        "neuralut {per_lut:?} should not be dramatically cheaper per L-LUT"
+    );
+}

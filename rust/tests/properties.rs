@@ -1,0 +1,246 @@
+//! Property-based tests (mini-harness, `util::check`) over the Rust
+//! substrates: netlist simulation, synthesis model, RTL packing, LUT
+//! serialization, sparsity/wiring invariants, server batching.
+
+use neuralut::luts::{random_network, LutNetwork};
+use neuralut::netlist::{quantize_input, Simulator};
+use neuralut::nn::formulas;
+use neuralut::rtl;
+use neuralut::synth::{self, boolfn, robdd};
+use neuralut::util::check::{forall, forall_res};
+use neuralut::util::rng::Rng;
+
+fn arb_network(r: &mut Rng) -> LutNetwork {
+    let input_size = 3 + r.below(12);
+    let input_bits = 1 + r.below(3);
+    let n_layers = 1 + r.below(3);
+    let mut widths: Vec<usize> = (0..n_layers).map(|_| 2 + r.below(8)).collect();
+    widths.push(2 + r.below(4)); // output layer
+    let fan_in = 1 + r.below(4);
+    let beta = 1 + r.below(3);
+    random_network(r.next_u64(), input_size, input_bits, &widths, fan_in, beta, 4)
+}
+
+#[test]
+fn prop_simulator_predictions_within_class_range() {
+    forall(
+        0x51,
+        40,
+        |r| {
+            let net = arb_network(r);
+            let batch = 1 + r.below(32);
+            let x: Vec<f32> =
+                (0..batch * net.input_size).map(|_| r.f32()).collect();
+            (net, x)
+        },
+        |(net, x)| {
+            let sim = Simulator::new(net);
+            let res = sim.simulate_batch(x);
+            res.predictions.iter().all(|&p| (p as usize) < net.n_class)
+                && res.latency_cycles == net.layers.len()
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_is_permutation_invariant_over_batch() {
+    // Simulating [a, b] must equal simulating a and b separately —
+    // the fabric is stateless across samples.
+    forall_res(
+        0x52,
+        30,
+        |r| {
+            let net = arb_network(r);
+            let x1: Vec<f32> = (0..net.input_size).map(|_| r.f32()).collect();
+            let x2: Vec<f32> = (0..net.input_size).map(|_| r.f32()).collect();
+            (net, x1, x2)
+        },
+        |(net, x1, x2)| {
+            let sim = Simulator::new(net);
+            let mut both = x1.clone();
+            both.extend_from_slice(x2);
+            let b = sim.simulate_batch(&both);
+            let a1 = sim.simulate_batch(x1);
+            let a2 = sim.simulate_batch(x2);
+            if b.predictions[0] != a1.predictions[0]
+                || b.predictions[1] != a2.predictions[0]
+            {
+                return Err("batch result differs from singles".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantize_input_monotone_and_bounded() {
+    forall(
+        0x53,
+        300,
+        |r| (r.f32() * 2.0 - 0.5, 1 + r.below(7)),
+        |&(x, bits)| {
+            let q = quantize_input(x, bits);
+            let q2 = quantize_input(x + 0.01, bits);
+            q <= q2 && (q as u32) < (1u32 << bits)
+        },
+    );
+}
+
+#[test]
+fn prop_support_reduction_sound() {
+    // Projecting onto the support and re-expanding preserves the function.
+    forall_res(
+        0x54,
+        60,
+        |r| {
+            let k = 2 + r.below(7);
+            let bits: Vec<u8> = (0..1usize << k)
+                .map(|_| (r.next_u64() & 1) as u8)
+                .collect();
+            (bits, k)
+        },
+        |(bits, k)| {
+            let sup = boolfn::support(bits, *k);
+            let proj = boolfn::project(bits, *k, &sup);
+            // evaluate both on all addresses
+            for addr in 0..bits.len() {
+                let mut paddr = 0usize;
+                for (j, &v) in sup.iter().enumerate() {
+                    if (addr >> v) & 1 == 1 {
+                        paddr |= 1 << j;
+                    }
+                }
+                if proj[paddr] != bits[addr] {
+                    return Err(format!("mismatch at addr {addr}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cost_function_within_bounds() {
+    forall(
+        0x55,
+        60,
+        |r| {
+            let k = 2 + r.below(11);
+            let bits: Vec<u8> = (0..1usize << k)
+                .map(|_| (r.next_u64() & 1) as u8)
+                .collect();
+            (bits, k)
+        },
+        |(bits, k)| {
+            let (luts, depth) = synth::cost_function(bits, *k);
+            let constant = bits.iter().all(|&b| b == bits[0]);
+            if constant {
+                luts == 0 && depth == 0
+            } else {
+                luts >= 1 && luts <= synth::rom_upper_bound(*k) && depth >= 1
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_bdd_node_count_invariant_under_complement() {
+    // ROBDD size of f and NOT f is identical (terminals excluded).
+    forall(
+        0x56,
+        60,
+        |r| {
+            let k = 2 + r.below(9);
+            let bits: Vec<u8> = (0..1usize << k)
+                .map(|_| (r.next_u64() & 1) as u8)
+                .collect();
+            (bits, k)
+        },
+        |(bits, k)| {
+            let comp: Vec<u8> = bits.iter().map(|&b| 1 - b).collect();
+            robdd::node_count(bits, *k) == robdd::node_count(&comp, *k)
+        },
+    );
+}
+
+#[test]
+fn prop_nlut_serialization_roundtrips() {
+    forall_res(
+        0x57,
+        25,
+        |r| arb_network(r),
+        |net| {
+            let path = std::env::temp_dir().join(format!(
+                "neuralut_prop_{}.nlut",
+                net.name.replace('-', "_")
+            ));
+            net.save(&path).map_err(|e| e.to_string())?;
+            let back = LutNetwork::load(&path).map_err(|e| e.to_string())?;
+            if back.num_luts() != net.num_luts() {
+                return Err("lut count changed".into());
+            }
+            for (a, b) in back.layers.iter().zip(&net.layers) {
+                if a.tables != b.tables || a.indices != b.indices {
+                    return Err("payload changed".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rtl_hex_width_consistent() {
+    forall(
+        0x58,
+        30,
+        |r| {
+            let net = arb_network(r);
+            let row: Vec<f32> = (0..net.input_size).map(|_| r.f32()).collect();
+            (net, row)
+        },
+        |(net, row)| {
+            let h = rtl::pack_input_hex(net, row);
+            h.len() == (net.input_size * net.input_bits).div_ceil(4)
+        },
+    );
+}
+
+#[test]
+fn prop_table1_formula_consistency() {
+    forall(
+        0x59,
+        300,
+        |r| {
+            let l = 1 + r.below(6);
+            let divisors: Vec<usize> =
+                (1..=l).filter(|d| l % d == 0).collect();
+            let s = if r.below(3) == 0 {
+                0
+            } else {
+                divisors[r.below(divisors.len())]
+            };
+            (1 + r.below(16), l, 1 + r.below(24), s)
+        },
+        |&(f, l, n, s)| {
+            formulas::t_neuralut(f, l, n, s)
+                == formulas::t_neuralut_structural(f, l, n, s)
+        },
+    );
+}
+
+#[test]
+fn prop_synth_total_is_sum_of_layers() {
+    forall(
+        0x5A,
+        15,
+        |r| arb_network(r),
+        |net| {
+            let rep = synth::synthesize(net);
+            rep.luts == rep.per_layer.iter().map(|l| l.luts).sum::<usize>()
+                && rep.latency_cycles == net.layers.len()
+                && (rep.area_delay - rep.luts as f64 * rep.latency_ns).abs()
+                    < 1e-9
+        },
+    );
+}
