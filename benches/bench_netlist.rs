@@ -1,39 +1,86 @@
-//! Fabric-simulator throughput: L-LUT lookups/s and samples/s across the
-//! paper's circuit scales (the inference-latency substrate behind Fig. 6 /
-//! Table III). Also reports single-sample latency — the netlist simulator
-//! is the serving hot path.
+//! Fabric inference throughput: the scalar simulator (per-sample table
+//! lookups) vs the compiled bitsliced engine (64 samples per word) across
+//! the paper's circuit scales — the inference-latency substrate behind
+//! Fig. 6 / Table III and the serving hot path. Also reports
+//! single-sample latency (scalar path) and writes `BENCH_engine.json`
+//! rows (samples/sec for both backends) so the perf trajectory is tracked
+//! PR over PR.
 
+use neuralut::engine::BitslicedEngine;
 use neuralut::luts::random_network;
 use neuralut::netlist::Simulator;
 use neuralut::util::bench::bench;
+use neuralut::util::json::{obj, Json};
 
 fn main() {
-    println!("== bench_netlist: fabric simulator ==");
+    println!("== bench_netlist: scalar fabric vs compiled bitsliced engine ==");
     // (name, input, input_bits, widths, fan_in, beta)
     let cases = [
         ("jsc-2l-scale", 16usize, 4usize, vec![32usize, 5], 3usize, 4usize),
         ("hdr-mini-scale", 196, 2, vec![64, 32, 10], 6, 2),
         ("jsc-5l-scale", 16, 4, vec![128, 128, 128, 64, 5], 3, 4),
         ("hdr-5l-paper-scale", 784, 2, vec![256, 100, 100, 100, 10], 6, 2),
+        // LogicNets-like low-β point: small per-bit functions, where the
+        // word-level engine's logic sharing pays off hardest.
+        ("logicnets-scale", 32, 1, vec![64, 32, 8], 4, 1),
     ];
+    let n_cases = cases.len();
+    let mut rows: Vec<Json> = Vec::new();
     for (name, input, bits, widths, fan_in, beta) in cases {
         let net = random_network(1, input, bits, &widths, fan_in, beta, 4);
         let sim = Simulator::new(&net);
+        let t0 = std::time::Instant::now();
+        let eng = BitslicedEngine::compile(&net).expect("lowering failed");
+        let compile_s = t0.elapsed().as_secs_f64();
+        println!(
+            "-- {name}: {} L-LUTs, compiled to {} word ops in {:.3}s",
+            net.num_luts(),
+            eng.netlist().num_ops(),
+            compile_s
+        );
         let batch = 4096usize;
         let x: Vec<f32> = (0..batch * input)
             .map(|i| (i % 97) as f32 / 97.0)
             .collect();
-        let lookups = batch as f64 * net.num_luts() as f64;
-        bench(
-            &format!("netlist/batch4096/{name}"),
+        let m_scalar = bench(
+            &format!("netlist/scalar/batch4096/{name}"),
             1,
             1.0,
             200,
-            Some((lookups, "lookups")),
+            Some((batch as f64, "samples")),
             || {
                 std::hint::black_box(sim.simulate_batch(&x));
             },
         );
+        let m_bits = bench(
+            &format!("engine/bitsliced/batch4096/{name}"),
+            1,
+            1.0,
+            200,
+            Some((batch as f64, "samples")),
+            || {
+                std::hint::black_box(eng.run_batch(&x));
+            },
+        );
+        let scalar_sps = m_scalar.throughput.map(|(t, _)| t).unwrap_or(0.0);
+        let bits_sps = m_bits.throughput.map(|(t, _)| t).unwrap_or(0.0);
+        println!(
+            "   speedup {:.2}x (scalar {:.0} -> bitsliced {:.0} samples/s)",
+            bits_sps / scalar_sps.max(1e-9),
+            scalar_sps,
+            bits_sps
+        );
+        rows.push(obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("batch", Json::Num(batch as f64)),
+            ("l_luts", Json::Num(net.num_luts() as f64)),
+            ("word_ops", Json::Num(eng.netlist().num_ops() as f64)),
+            ("compile_s", Json::Num(compile_s)),
+            ("scalar_samples_per_s", Json::Num(scalar_sps)),
+            ("bitsliced_samples_per_s", Json::Num(bits_sps)),
+            ("speedup", Json::Num(bits_sps / scalar_sps.max(1e-9))),
+        ]));
+
         let one: Vec<f32> = x[..input].to_vec();
         bench(
             &format!("netlist/single/{name}"),
@@ -45,5 +92,11 @@ fn main() {
                 std::hint::black_box(sim.simulate_batch(&one));
             },
         );
+    }
+    let out = Json::Arr(rows).to_string();
+    if let Err(e) = std::fs::write("BENCH_engine.json", &out) {
+        eprintln!("could not write BENCH_engine.json: {e}");
+    } else {
+        println!("wrote BENCH_engine.json ({n_cases} cases)");
     }
 }

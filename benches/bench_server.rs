@@ -43,6 +43,7 @@ fn main() {
         let cfg = ServerConfig {
             max_batch: 512,
             batch_window: Duration::from_micros(100),
+            ..Default::default()
         };
         let (tput, s) = drive(net.clone(), cfg, rate, n_req);
         println!(
@@ -56,6 +57,7 @@ fn main() {
         let cfg = ServerConfig {
             max_batch: 512,
             batch_window: Duration::from_micros(window_us),
+            ..Default::default()
         };
         let (tput, s) = drive(net.clone(), cfg, 100_000.0, n_req);
         println!(

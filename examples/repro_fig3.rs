@@ -9,8 +9,8 @@ use neuralut::coordinator::experiments::{epochs_override, n_seeds, run_config, s
 use neuralut::coordinator::pipeline::{self, PipelineOpts};
 use neuralut::coordinator::trainer::TrainOpts;
 use neuralut::data::Dataset;
+use neuralut::engine::{self, InferenceBackend as _};
 use neuralut::manifest::Manifest;
-use neuralut::netlist::Simulator;
 use neuralut::runtime::Runtime;
 use neuralut::util::stats;
 
@@ -25,7 +25,8 @@ fn ascii_boundary(rt: &Runtime, config: &str, seed: u64) -> anyhow::Result<Vec<S
         emit_rtl: false,
     };
     let r = pipeline::run(rt, &m, &ds, seed, &opts)?;
-    let sim = Simulator::new(&r.net);
+    // Backend selected by NEURALUT_ENGINE (scalar | bitsliced).
+    let fabric = engine::backend_from_env(&r.net)?;
     let (w, h) = (40usize, 18usize);
     let mut grid = Vec::with_capacity(w * h * 2);
     for row in 0..h {
@@ -34,7 +35,7 @@ fn ascii_boundary(rt: &Runtime, config: &str, seed: u64) -> anyhow::Result<Vec<S
             grid.push(1.0 - row as f32 / (h - 1) as f32);
         }
     }
-    let preds = sim.simulate_batch(&grid).predictions;
+    let preds = fabric.run_batch(&grid).predictions;
     let mut lines = Vec::new();
     for row in 0..h {
         let line: String = (0..w)

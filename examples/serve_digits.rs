@@ -40,9 +40,12 @@ fn main() -> anyhow::Result<()> {
 
     let n_req = 20_000;
     let rate = 100_000.0; // offered load, req/s
+    // NEURALUT_ENGINE=bitsliced serves through the compiled fabric engine.
+    let backend = neuralut::engine::BackendKind::from_env()?;
     let server = Server::start(net.clone(), ServerConfig {
         max_batch: 512,
         batch_window: Duration::from_micros(100),
+        backend,
     });
     let client = server.client();
     let workload = Workload::poisson(&ds, 42, n_req, rate);

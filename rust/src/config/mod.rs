@@ -21,6 +21,16 @@
 //! Supported TOML subset: top-level `key = value` pairs, `[[table]]`
 //! arrays, strings / integers / floats / booleans, `#` comments. That is
 //! all the schema needs; unknown keys are rejected so typos fail loudly.
+//!
+//! The same subset also backs `server::ServerConfig` files
+//! (`neuralut serve --server-config`):
+//!
+//! ```toml
+//! # server.toml
+//! max_batch = 512
+//! batch_window_us = 100
+//! backend = "bitsliced"   # inference engine: "scalar" | "bitsliced"
+//! ```
 
 use std::collections::BTreeMap;
 use std::path::Path;

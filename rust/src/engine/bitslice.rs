@@ -1,0 +1,231 @@
+//! Bitsliced execution of a compiled [`BitNetlist`]: 64 samples per word.
+//!
+//! A batch is cut into 64-sample blocks. Each block's quantized input
+//! codes are transposed into bit-planes (one `u64` per wire, lane `s` =
+//! sample `s` of the block), the levelized word-op program streams the
+//! planes through every circuit layer, and the logit planes are transposed
+//! back into per-sample signed codes. Every lane is independent, so a
+//! ragged tail block simply ignores its unused lanes.
+//!
+//! Hot loop: one fused mux per op — `dst = lo ^ (sel & (hi ^ lo))` — over
+//! a flat `u64` scratch buffer; no dispatch, no branches, working set =
+//! the program (streamed sequentially) + one plane buffer (L1-resident
+//! for paper-scale circuits). Blocks shard across threads with
+//! [`crate::util::pool`], mirroring the scalar simulator's batching.
+
+use crate::luts::LutNetwork;
+use crate::netlist::{quantize_input, SimResult};
+use crate::util::pool;
+
+use super::lower::{self, BitNetlist, W_INPUTS};
+
+/// Batch size below which blocks run inline (thread spawn ~10 us doesn't
+/// amortize over a handful of 64-sample blocks).
+const PARALLEL_THRESHOLD: usize = 512;
+
+/// The compiled-fabric inference engine.
+pub struct BitslicedEngine {
+    nl: BitNetlist,
+}
+
+/// Per-worker scratch: wire buffer + inter-level plane buffer.
+struct Scratch {
+    buf: Vec<u64>,
+    planes: Vec<u64>,
+}
+
+impl Scratch {
+    fn new(nl: &BitNetlist) -> Self {
+        Scratch {
+            buf: vec![0u64; nl.max_wires],
+            planes: vec![0u64; nl.max_planes.max(1)],
+        }
+    }
+}
+
+impl BitslicedEngine {
+    /// Compile a network (lowering pass); see [`lower::lower`] for the
+    /// conditions under which compilation fails.
+    pub fn compile(net: &LutNetwork) -> crate::Result<Self> {
+        Ok(BitslicedEngine { nl: lower::lower(net)? })
+    }
+
+    /// The compiled representation (inspection, cost reporting).
+    pub fn netlist(&self) -> &BitNetlist {
+        &self.nl
+    }
+
+    /// Pipeline latency in cycles — same fabric model as the scalar
+    /// simulator: one cycle per L-LUT layer.
+    pub fn latency_cycles(&self) -> usize {
+        self.nl.levels.len()
+    }
+
+    /// Run a batch of raw feature rows (`[batch * input_size]` floats in
+    /// [0, 1]); bit-exact against `netlist::Simulator::simulate_batch`.
+    pub fn run_batch(&self, x: &[f32]) -> SimResult {
+        let in_sz = self.nl.input_size;
+        assert_eq!(x.len() % in_sz, 0, "ragged batch");
+        let batch = x.len() / in_sz;
+        let n_class = self.nl.n_class;
+        let mut logit_codes = vec![0i16; batch * n_class];
+        let n_blocks = batch.div_ceil(64);
+
+        if batch < PARALLEL_THRESHOLD {
+            let mut scratch = Scratch::new(&self.nl);
+            for block in 0..n_blocks {
+                let lanes = 64.min(batch - block * 64);
+                let lo = block * 64 * n_class;
+                self.run_block(x, block, lanes, &mut scratch,
+                               &mut logit_codes[lo..lo + lanes * n_class]);
+            }
+        } else {
+            let shards = pool::parallel_ranges(
+                n_blocks,
+                pool::num_threads(),
+                |_, range| {
+                    if range.is_empty() {
+                        return (0, Vec::new());
+                    }
+                    let mut scratch = Scratch::new(&self.nl);
+                    let first = range.start * 64;
+                    let n = batch.min(range.end * 64) - first;
+                    let mut out = vec![0i16; n * n_class];
+                    for block in range {
+                        let lanes = 64.min(batch - block * 64);
+                        let lo = (block * 64 - first) * n_class;
+                        self.run_block(x, block, lanes, &mut scratch,
+                                       &mut out[lo..lo + lanes * n_class]);
+                    }
+                    (first, out)
+                },
+            );
+            for (first, shard) in shards {
+                logit_codes[first * n_class..first * n_class + shard.len()]
+                    .copy_from_slice(&shard);
+            }
+        }
+
+        SimResult::from_logit_codes(logit_codes, n_class, self.latency_cycles())
+    }
+
+    /// Evaluate one 64-sample block into `out` (`lanes * n_class` codes).
+    fn run_block(&self, x: &[f32], block: usize, lanes: usize,
+                 scratch: &mut Scratch, out: &mut [i16]) {
+        let nl = &self.nl;
+        let in_sz = nl.input_size;
+        let in_bits = nl.input_bits;
+        let planes = &mut scratch.planes;
+        let buf = &mut scratch.buf;
+
+        // Transpose: quantized input codes -> bit-planes.
+        let n_in_planes = in_sz * in_bits;
+        planes[..n_in_planes].fill(0);
+        for s in 0..lanes {
+            let row = &x[(block * 64 + s) * in_sz..(block * 64 + s + 1) * in_sz];
+            let lane_bit = 1u64 << s;
+            for (i, &v) in row.iter().enumerate() {
+                let mut code = quantize_input(v, in_bits);
+                let mut b = 0usize;
+                while code != 0 {
+                    if code & 1 == 1 {
+                        planes[i * in_bits + b] |= lane_bit;
+                    }
+                    code >>= 1;
+                    b += 1;
+                }
+            }
+        }
+
+        // Stream the levelized program.
+        buf[0] = 0;
+        buf[1] = !0u64;
+        for level in &nl.levels {
+            let base = W_INPUTS as usize;
+            buf[base..base + level.n_in_planes]
+                .copy_from_slice(&planes[..level.n_in_planes]);
+            for op in &level.ops {
+                let h = buf[op.hi as usize];
+                let l = buf[op.lo as usize];
+                buf[op.dst as usize] = l ^ (buf[op.sel as usize] & (h ^ l));
+            }
+            for (p, &w) in level.outputs.iter().enumerate() {
+                planes[p] = buf[w as usize];
+            }
+        }
+
+        // Transpose back: logit bit-planes -> per-sample signed codes.
+        let lb = nl.logit_bits;
+        let shift = 16 - lb as u32;
+        for c in 0..nl.n_class {
+            let mut raw = [0u16; 64];
+            for b in 0..lb {
+                let word = planes[c * lb + b];
+                for (s, r) in raw.iter_mut().enumerate().take(lanes) {
+                    *r |= (((word >> s) & 1) as u16) << b;
+                }
+            }
+            for (s, &r) in raw.iter().enumerate().take(lanes) {
+                out[s * nl.n_class + c] = if nl.signed_logits {
+                    ((r << shift) as i16) >> shift
+                } else {
+                    r as i16
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::random_network;
+    use crate::netlist::Simulator;
+
+    fn assert_matches_scalar(seed: u64, input: usize, bits: usize,
+                             widths: &[usize], fan_in: usize, beta: usize,
+                             batch: usize) {
+        let net = random_network(seed, input, bits, widths, fan_in, beta, 4);
+        let sim = Simulator::new(&net);
+        let eng = BitslicedEngine::compile(&net).unwrap();
+        let x: Vec<f32> = (0..batch * input)
+            .map(|i| (i % 89) as f32 / 89.0)
+            .collect();
+        let a = sim.simulate_batch(&x);
+        let b = eng.run_batch(&x);
+        assert_eq!(a.logit_codes, b.logit_codes);
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.latency_cycles, b.latency_cycles);
+        assert_eq!(a.total_cycles, b.total_cycles);
+    }
+
+    #[test]
+    fn matches_scalar_on_single_sample() {
+        assert_matches_scalar(3, 12, 2, &[8, 4], 3, 2, 1);
+    }
+
+    #[test]
+    fn matches_scalar_on_exact_block() {
+        assert_matches_scalar(4, 10, 3, &[6, 5, 3], 2, 2, 64);
+    }
+
+    #[test]
+    fn matches_scalar_on_ragged_blocks() {
+        for batch in [63, 65, 130, 257] {
+            assert_matches_scalar(5, 8, 2, &[6, 3], 3, 2, batch);
+        }
+    }
+
+    #[test]
+    fn matches_scalar_on_parallel_batches() {
+        assert_matches_scalar(6, 16, 2, &[12, 6, 4], 3, 2, 1000);
+    }
+
+    #[test]
+    fn empty_batch_is_well_formed() {
+        let net = random_network(7, 6, 2, &[4, 2], 2, 2, 4);
+        let eng = BitslicedEngine::compile(&net).unwrap();
+        let r = eng.run_batch(&[]);
+        assert!(r.predictions.is_empty() && r.logit_codes.is_empty());
+    }
+}

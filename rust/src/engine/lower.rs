@@ -1,0 +1,306 @@
+//! Bit-level lowering: `LutNetwork` → `BitNetlist`.
+//!
+//! Each L-LUT output bit is a Boolean function of the previous layer's
+//! *wires* (individual activation bits). The pass expands every `i16`
+//! truth table into those per-bit functions, support-reduces them
+//! ([`synth::boolfn`]), builds their ROBDDs ([`synth::robdd::build`]) and
+//! maps every decision node onto one fused word-wide mux op
+//! (`dst = lo ^ (sel & (hi ^ lo))`). Structural hashing on
+//! `(sel, hi, lo)` shares logic across output bits and across L-LUTs of
+//! the same layer; literal nodes (`mux(x, 1, 0) = x`) lower to plain wire
+//! aliases and cost nothing at run time.
+//!
+//! The result is a levelized program — one op list per circuit layer, in
+//! bottom-up topological order — that the bitslice evaluator streams over
+//! 64-sample `u64` words. This is the software analogue of the paper's
+//! "each L-LUT layer is evaluated in one clock cycle": a layer is one
+//! compiled block of pure word ops between two register planes.
+
+use anyhow::{bail, Result};
+
+use crate::luts::LutNetwork;
+use crate::synth::{boolfn, robdd};
+
+/// Wire id of the constant-0 plane.
+pub const W_ZERO: u32 = 0;
+/// Wire id of the constant-1 plane.
+pub const W_ONE: u32 = 1;
+/// First wire id of a level's input planes (previous activations).
+pub const W_INPUTS: u32 = 2;
+
+/// One fused word op: `dst = lo ^ (sel & (hi ^ lo))` — a 2:1 mux that
+/// selects `hi` where the `sel` word has 1-bits and `lo` elsewhere.
+/// AND/OR/XOR/NOT are special cases (`a & b = mux(a, b, 0)`,
+/// `a | b = mux(a, 1, b)`, `!a = mux(a, 0, 1)`), so one branch-free
+/// interpreter loop covers the whole repertoire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MuxOp {
+    pub sel: u32,
+    pub hi: u32,
+    pub lo: u32,
+    pub dst: u32,
+}
+
+/// One compiled circuit layer.
+#[derive(Debug, Clone)]
+pub struct Level {
+    /// Word ops in topological order; `dst` ids are dense and sequential
+    /// starting right after the input planes.
+    pub ops: Vec<MuxOp>,
+    /// Scratch wires needed to evaluate this level
+    /// (`2 consts + n_in_planes + ops.len()`).
+    pub n_wires: usize,
+    /// Input planes consumed: previous width × previous bits-per-value.
+    pub n_in_planes: usize,
+    /// Wire id of every output bit-plane, `[num_luts * out_bits]`,
+    /// bit-plane `b` of L-LUT `i` at index `i * out_bits + b`.
+    pub outputs: Vec<u32>,
+    pub num_luts: usize,
+    pub out_bits: usize,
+}
+
+/// A whole network compiled to a levelized word-op netlist — the stable
+/// representation the bitslice evaluator (and future device-specific
+/// backends) consume.
+#[derive(Debug, Clone)]
+pub struct BitNetlist {
+    pub levels: Vec<Level>,
+    pub input_size: usize,
+    pub input_bits: usize,
+    pub n_class: usize,
+    /// Bits per logit code (last layer's `out_bits`).
+    pub logit_bits: usize,
+    /// Whether logit codes are two's-complement signed.
+    pub signed_logits: bool,
+    /// Largest `Level::n_wires` (one scratch buffer serves every level).
+    pub max_wires: usize,
+    /// Largest inter-level plane count (double-buffer sizing).
+    pub max_planes: usize,
+}
+
+impl BitNetlist {
+    /// Total word ops per 64-sample block — the compiled cost metric.
+    pub fn num_ops(&self) -> usize {
+        self.levels.iter().map(|l| l.ops.len()).sum()
+    }
+}
+
+/// Lower a validated network. Fails when a layer's `in_bits` does not
+/// match the previous layer's `out_bits` (the scalar simulator silently
+/// assumes this; the compiled representation checks it).
+pub fn lower(net: &LutNetwork) -> Result<BitNetlist> {
+    net.validate()?;
+    let mut levels = Vec::with_capacity(net.layers.len());
+    let mut prev_width = net.input_size;
+    let mut prev_bits = net.input_bits;
+    for (li, layer) in net.layers.iter().enumerate() {
+        if layer.in_bits != prev_bits {
+            bail!(
+                "layer {li}: in_bits {} != previous out_bits {prev_bits} \
+                 (cannot lower to a bit netlist)",
+                layer.in_bits
+            );
+        }
+        if layer.signed_out && li != net.layers.len() - 1 {
+            // The scalar simulator widens hidden codes through u16, so a
+            // negative hidden code floods the next layer's address bits;
+            // there is no consistent bit-level semantics to lower to.
+            bail!("layer {li}: signed outputs on a non-final layer");
+        }
+        let k = layer.in_bits * layer.fan_in;
+        if k > 26 {
+            bail!("layer {li}: {k} address bits is beyond the lowering cap");
+        }
+        let n_in_planes = prev_width * prev_bits;
+        let mut next_wire = W_INPUTS + n_in_planes as u32;
+        let mut ops: Vec<MuxOp> = Vec::new();
+        // Structural hashing across bits and L-LUTs of this level.
+        let mut memo: std::collections::HashMap<(u32, u32, u32), u32> =
+            std::collections::HashMap::new();
+        let mut outputs = Vec::with_capacity(layer.num_luts() * layer.out_bits);
+        let mut bits_buf = vec![0u8; layer.entries()];
+        for lut in 0..layer.num_luts() {
+            let table = layer.table(lut);
+            // Address bit p reads bit (p % in_bits) of source (p / in_bits).
+            let plane_of = |p: usize| -> u32 {
+                let src = layer.indices[lut][p / layer.in_bits] as usize;
+                W_INPUTS + (src * prev_bits + p % layer.in_bits) as u32
+            };
+            for b in 0..layer.out_bits {
+                for (addr, slot) in bits_buf.iter_mut().enumerate() {
+                    *slot = ((table[addr] as u16) >> b) as u8 & 1;
+                }
+                let sup = boolfn::support(&bits_buf, k);
+                let root = if sup.is_empty() {
+                    if bits_buf[0] == 0 { W_ZERO } else { W_ONE }
+                } else {
+                    let proj = boolfn::project(&bits_buf, k, &sup);
+                    let bdd = robdd::build(&proj, sup.len());
+                    // Map BDD node ids to wires, bottom-up.
+                    let mut wire_of = vec![0u32; bdd.nodes.len() + 2];
+                    wire_of[0] = W_ZERO;
+                    wire_of[1] = W_ONE;
+                    for (i, n) in bdd.nodes.iter().enumerate() {
+                        let sel = plane_of(sup[n.var as usize]);
+                        let hi = wire_of[n.hi as usize];
+                        let lo = wire_of[n.lo as usize];
+                        wire_of[i + 2] = if hi == W_ONE && lo == W_ZERO {
+                            sel // literal: the plane itself, no op
+                        } else {
+                            *memo.entry((sel, hi, lo)).or_insert_with(|| {
+                                let dst = next_wire;
+                                next_wire += 1;
+                                ops.push(MuxOp { sel, hi, lo, dst });
+                                dst
+                            })
+                        };
+                    }
+                    wire_of[bdd.root as usize]
+                };
+                outputs.push(root);
+            }
+        }
+        levels.push(Level {
+            n_wires: next_wire as usize,
+            n_in_planes,
+            ops,
+            outputs,
+            num_luts: layer.num_luts(),
+            out_bits: layer.out_bits,
+        });
+        prev_width = layer.num_luts();
+        prev_bits = layer.out_bits;
+    }
+    let last = net.layers.last().expect("validated network has layers");
+    let max_wires = levels.iter().map(|l| l.n_wires).max().unwrap_or(2);
+    let max_planes = levels
+        .iter()
+        .map(|l| l.n_in_planes.max(l.outputs.len()))
+        .max()
+        .unwrap_or(0);
+    Ok(BitNetlist {
+        levels,
+        input_size: net.input_size,
+        input_bits: net.input_bits,
+        n_class: net.n_class,
+        logit_bits: last.out_bits,
+        signed_logits: last.signed_out,
+        max_wires,
+        max_planes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::{random_network, LutLayer, LutNetwork};
+
+    #[test]
+    fn lowers_random_networks_with_bounded_shapes() {
+        let net = random_network(11, 10, 2, &[8, 4, 3], 3, 2, 4);
+        let nl = lower(&net).unwrap();
+        assert_eq!(nl.levels.len(), 3);
+        assert_eq!(nl.levels[0].n_in_planes, 10 * 2);
+        assert_eq!(nl.levels[0].outputs.len(), 8 * 2);
+        assert_eq!(nl.levels[2].outputs.len(), 3 * 4);
+        assert_eq!(nl.n_class, 3);
+        assert!(nl.signed_logits);
+        assert!(nl.max_wires >= 2 + nl.levels[0].n_in_planes);
+        // Every op reads only consts, planes, or earlier op results.
+        for level in &nl.levels {
+            let base = W_INPUTS as usize + level.n_in_planes;
+            for (i, op) in level.ops.iter().enumerate() {
+                assert_eq!(op.dst as usize, base + i);
+                for src in [op.sel, op.hi, op.lo] {
+                    assert!((src as usize) < base + i);
+                }
+            }
+            for &w in &level.outputs {
+                assert!((w as usize) < level.n_wires);
+            }
+        }
+    }
+
+    #[test]
+    fn literal_passthrough_lowers_to_zero_ops() {
+        // table[a] = a over 2 bits: each output bit is a plain input bit.
+        let net = LutNetwork {
+            name: "id".into(),
+            input_size: 1,
+            input_bits: 2,
+            n_class: 1,
+            layers: vec![LutLayer {
+                indices: vec![vec![0]],
+                tables: (0..4).map(|i| i as i16).collect(),
+                fan_in: 1,
+                in_bits: 2,
+                out_bits: 2,
+                signed_out: false,
+            }],
+        };
+        let nl = lower(&net).unwrap();
+        assert_eq!(nl.num_ops(), 0);
+        assert_eq!(nl.levels[0].outputs, vec![W_INPUTS, W_INPUTS + 1]);
+    }
+
+    #[test]
+    fn constant_tables_lower_to_constant_wires() {
+        let net = LutNetwork {
+            name: "const".into(),
+            input_size: 1,
+            input_bits: 1,
+            n_class: 1,
+            layers: vec![LutLayer {
+                indices: vec![vec![0]],
+                tables: vec![3, 3],
+                fan_in: 1,
+                in_bits: 1,
+                out_bits: 2,
+                signed_out: false,
+            }],
+        };
+        let nl = lower(&net).unwrap();
+        assert_eq!(nl.num_ops(), 0);
+        assert_eq!(nl.levels[0].outputs, vec![W_ONE, W_ONE]);
+    }
+
+    #[test]
+    fn rejects_signed_hidden_layers() {
+        let mut net = random_network(17, 6, 2, &[4, 2], 2, 2, 4);
+        net.layers[0].signed_out = true;
+        assert!(lower(&net).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_bit_widths() {
+        let net = LutNetwork {
+            name: "bad".into(),
+            input_size: 2,
+            input_bits: 2,
+            n_class: 1,
+            layers: vec![LutLayer {
+                indices: vec![vec![0, 1]],
+                tables: vec![0; 1 << 2],
+                fan_in: 2,
+                in_bits: 1, // != input_bits
+                out_bits: 2,
+                signed_out: false,
+            }],
+        };
+        assert!(lower(&net).is_err());
+    }
+
+    #[test]
+    fn structural_hashing_shares_identical_luts() {
+        // Two L-LUTs with the same wiring and table must share all ops.
+        let mut net = random_network(13, 6, 2, &[2, 2], 3, 2, 4);
+        let l0 = &mut net.layers[0];
+        l0.indices[1] = l0.indices[0].clone();
+        let e = l0.entries();
+        let (a, b) = l0.tables.split_at_mut(e);
+        b.copy_from_slice(a);
+        let nl = lower(&net).unwrap();
+        let lvl = &nl.levels[0];
+        assert_eq!(&lvl.outputs[..2], &lvl.outputs[2..]);
+    }
+}

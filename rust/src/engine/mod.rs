@@ -1,0 +1,192 @@
+//! Compiled fabric engine: pluggable inference backends over a converted
+//! [`LutNetwork`].
+//!
+//! The paper's premise is that an L-LUT network is a pure Boolean circuit
+//! ("each L-LUT layer is evaluated in one clock cycle"). The scalar
+//! simulator ([`crate::netlist::Simulator`]) honours that functionally but
+//! executes it as per-sample table lookups. This subsystem instead
+//! *compiles* the network once — [`lower`] expands every truth table into
+//! per-output-bit Boolean functions (support reduction + ROBDD, shared
+//! via structural hashing) and emits a levelized [`BitNetlist`] of fused
+//! word ops — and then evaluates it bitsliced: 64 independent samples
+//! packed per `u64`, batch inference as word-wide AND/OR/XOR streaming
+//! ([`BitslicedEngine`]).
+//!
+//! Both execution strategies sit behind [`InferenceBackend`], so the
+//! server, the CLI and the repro examples select a backend by
+//! configuration ([`BackendKind`]) rather than by concrete type; future
+//! device-specific lowerings slot in behind the same trait.
+//!
+//! Picking a backend: `Scalar` has zero compile cost and wins on tiny
+//! batches and very wide tables; `Bitsliced` pays one lowering pass per
+//! network and wins on batch workloads, increasingly so the more
+//! structure (small support, shared logic, low fan-in × bit-width) the
+//! trained tables carry.
+
+pub mod bitslice;
+pub mod lower;
+
+pub use bitslice::BitslicedEngine;
+pub use lower::{BitNetlist, Level, MuxOp};
+
+use anyhow::bail;
+
+use crate::luts::LutNetwork;
+use crate::netlist::{SimResult, Simulator};
+
+/// Which inference engine executes a converted network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Per-sample scalar table lookups (`netlist::Simulator`).
+    #[default]
+    Scalar,
+    /// Compiled bit-level netlist, 64 samples per word.
+    Bitsliced,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Bitsliced => "bitsliced",
+        }
+    }
+
+    /// The kind selected by the `NEURALUT_ENGINE` environment variable
+    /// (`Scalar` when unset) — one definition of the env protocol for
+    /// the examples and any other env-driven entry point.
+    pub fn from_env() -> crate::Result<BackendKind> {
+        match std::env::var("NEURALUT_ENGINE") {
+            Ok(v) => v.parse(),
+            Err(_) => Ok(BackendKind::Scalar),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s {
+            "scalar" => Ok(BackendKind::Scalar),
+            "bitsliced" => Ok(BackendKind::Bitsliced),
+            other => bail!("unknown engine '{other}' (scalar | bitsliced)"),
+        }
+    }
+}
+
+/// A batch-inference execution strategy for one converted network.
+///
+/// Implementations must be bit-exact with respect to the quantized
+/// fabric semantics: identical logit codes, identical argmax predictions.
+pub trait InferenceBackend: Send + Sync {
+    /// Stable backend name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Pipeline latency in cycles (one per L-LUT layer).
+    fn latency_cycles(&self) -> usize;
+
+    /// Run raw feature rows (`[batch * input_size]` floats in [0, 1]).
+    fn run_batch(&self, x: &[f32]) -> SimResult;
+
+    /// Classification accuracy over a labelled set.
+    fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
+        let r = self.run_batch(x);
+        let correct = r
+            .predictions
+            .iter()
+            .zip(y)
+            .filter(|(&p, &t)| p as i32 == t)
+            .count();
+        correct as f64 / y.len().max(1) as f64
+    }
+}
+
+impl<'a> InferenceBackend for Simulator<'a> {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn latency_cycles(&self) -> usize {
+        Simulator::latency_cycles(self)
+    }
+
+    fn run_batch(&self, x: &[f32]) -> SimResult {
+        self.simulate_batch(x)
+    }
+}
+
+impl InferenceBackend for BitslicedEngine {
+    fn name(&self) -> &'static str {
+        "bitsliced"
+    }
+
+    fn latency_cycles(&self) -> usize {
+        BitslicedEngine::latency_cycles(self)
+    }
+
+    fn run_batch(&self, x: &[f32]) -> SimResult {
+        BitslicedEngine::run_batch(self, x)
+    }
+}
+
+/// Construct the backend of the requested kind for `net`. `Bitsliced`
+/// runs the lowering pass here and reports its failures (e.g. layers
+/// with inconsistent bit-widths).
+pub fn backend<'a>(
+    kind: BackendKind,
+    net: &'a LutNetwork,
+) -> crate::Result<Box<dyn InferenceBackend + 'a>> {
+    Ok(match kind {
+        BackendKind::Scalar => Box::new(Simulator::new(net)),
+        BackendKind::Bitsliced => Box::new(BitslicedEngine::compile(net)?),
+    })
+}
+
+/// Backend selected by the `NEURALUT_ENGINE` environment variable
+/// (`scalar` when unset) — how the repro examples opt into the compiled
+/// engine without changing their code paths.
+pub fn backend_from_env(net: &LutNetwork) -> crate::Result<Box<dyn InferenceBackend + '_>> {
+    backend(BackendKind::from_env()?, net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::random_network;
+
+    #[test]
+    fn kind_parses_and_displays() {
+        assert_eq!("scalar".parse::<BackendKind>().unwrap(), BackendKind::Scalar);
+        assert_eq!(
+            "bitsliced".parse::<BackendKind>().unwrap(),
+            BackendKind::Bitsliced
+        );
+        assert!("fpga".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Scalar);
+        assert_eq!(BackendKind::Bitsliced.to_string(), "bitsliced");
+    }
+
+    #[test]
+    fn both_backends_satisfy_the_trait_identically() {
+        let net = random_network(31, 9, 2, &[6, 4], 3, 2, 4);
+        let x: Vec<f32> = (0..9 * 100).map(|i| (i % 13) as f32 / 13.0).collect();
+        let y: Vec<i32> = (0..100).map(|i| (i % 4) as i32).collect();
+        let scalar = backend(BackendKind::Scalar, &net).unwrap();
+        let bits = backend(BackendKind::Bitsliced, &net).unwrap();
+        assert_eq!(scalar.name(), "scalar");
+        assert_eq!(bits.name(), "bitsliced");
+        assert_eq!(scalar.latency_cycles(), bits.latency_cycles());
+        let a = scalar.run_batch(&x);
+        let b = bits.run_batch(&x);
+        assert_eq!(a.logit_codes, b.logit_codes);
+        assert_eq!(a.predictions, b.predictions);
+        assert!((scalar.accuracy(&x, &y) - bits.accuracy(&x, &y)).abs() < 1e-12);
+    }
+}

@@ -23,14 +23,34 @@
 //! * [`luts`] — truth tables and the converted L-LUT network model.
 //! * [`netlist`] — cycle-accurate LUT-network simulator (the FPGA fabric
 //!   substitute).
+//! * [`engine`] — compiled fabric engine: bit-level lowering pass +
+//!   bitsliced (64-samples-per-word) evaluator behind the
+//!   `InferenceBackend` trait.
 //! * [`rtl`] — Verilog + testbench generation.
 //! * [`synth`] — Vivado-substitute synthesis/P&R cost model (support
 //!   reduction, ROBDD, 6-LUT covering, timing).
-//! * [`server`] — threaded inference server: router + dynamic batcher.
+//! * [`server`] — threaded inference server: router + dynamic batcher,
+//!   backend-selectable.
+//!
+//! ## Compiled fabric engine
+//!
+//! `engine::lower` compiles a converted network once: every L-LUT truth
+//! table is expanded into per-output-bit Boolean functions over the
+//! previous layer's wires, support-reduced and ROBDD-factored
+//! (`synth::boolfn` / `synth::robdd`), and emitted as a levelized netlist
+//! of fused word-wide mux ops. `engine::BitslicedEngine` then evaluates
+//! 64 samples per `u64` word — batch inference as pure AND/OR/XOR
+//! streaming, bit-exact against `netlist::Simulator`. Pick the `scalar`
+//! backend for tiny batches or one-off runs (zero compile cost); pick
+//! `bitsliced` for batch/serving workloads, where word-level parallelism
+//! and logic sharing amortize the one-time lowering. The server
+//! (`ServerConfig::backend`), the CLI (`--engine`) and the examples
+//! (`NEURALUT_ENGINE`) all select backends through `engine::BackendKind`.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod luts;
 pub mod manifest;
 pub mod netlist;

@@ -48,10 +48,18 @@ impl LutLayer {
         if self.tables.len() != self.num_luts() * self.entries() {
             bail!("table size mismatch");
         }
-        let max_code = 1i16 << self.out_bits;
+        // Code ranges in i32: `1i16 << out_bits` overflows (panics in
+        // debug, wraps in release) once out_bits >= 15, and i16 codes
+        // cannot hold wider outputs anyway.
+        if self.out_bits == 0 || self.out_bits > 15 {
+            bail!("out_bits {} unsupported (i16 codes hold 1..=15 bits)",
+                  self.out_bits);
+        }
+        let max_code = 1i32 << self.out_bits;
         for &v in &self.tables {
+            let v = v as i32;
             let ok = if self.signed_out {
-                let q = (1i16 << (self.out_bits - 1)) - 1;
+                let q = (1i32 << (self.out_bits - 1)) - 1;
                 (-q..=q).contains(&v)
             } else {
                 (0..max_code).contains(&v)
@@ -290,6 +298,17 @@ mod tests {
             assert_eq!(a.tables, b.tables);
             assert_eq!(a.indices, b.indices);
         }
+    }
+
+    #[test]
+    fn validate_handles_wide_out_bits_without_shift_overflow() {
+        let mut net = random_network(4, 4, 2, &[2], 2, 2, 4);
+        net.layers[0].out_bits = 15; // widest supported: must not panic
+        net.validate().unwrap();
+        net.layers[0].out_bits = 16; // would overflow i16 — rejected, not UB
+        assert!(net.validate().is_err());
+        net.layers[0].out_bits = 0;
+        assert!(net.validate().is_err());
     }
 
     #[test]

@@ -26,9 +26,9 @@ use anyhow::{bail, Context, Result};
 use neuralut::coordinator::pipeline::{self, PipelineOpts};
 use neuralut::coordinator::trainer::{TrainOpts, Trainer};
 use neuralut::data::{Dataset, Workload};
+use neuralut::engine::{self, BackendKind, InferenceBackend as _};
 use neuralut::luts::{convert, LutNetwork};
 use neuralut::manifest::Manifest;
-use neuralut::netlist::Simulator;
 use neuralut::nn::params::ParamStore;
 use neuralut::runtime::Runtime;
 use neuralut::server::{Server, ServerConfig};
@@ -91,6 +91,14 @@ impl Opts {
     fn flag(&self, key: &str) -> bool {
         self.get(key).is_some()
     }
+
+    /// `--engine scalar|bitsliced` (default scalar).
+    fn engine(&self) -> Result<BackendKind> {
+        self.get("engine")
+            .map(|v| v.parse().context("--engine"))
+            .transpose()
+            .map(|k| k.unwrap_or_default())
+    }
 }
 
 fn load_bundle(name: &str) -> Result<(Manifest, Dataset)> {
@@ -137,10 +145,11 @@ fn print_usage() {
          pipeline <config> [--seed N] [--epochs N] [--out DIR] [--rtl]\n  \
          convert <config> --params F --out F    trained params -> L-LUTs\n  \
          synth <config> --net F                 synthesis cost report\n  \
-         simulate <config> --net F              fabric accuracy on test set\n  \
+         simulate <config> --net F [--engine scalar|bitsliced]\n  \
          rtl <config> --net F --out DIR         emit Verilog bundle\n  \
          vcd <config> --net F --out FILE        dump pipeline waveform (GTKWave)\n  \
          serve <config> --net F [--rate R] [--requests N] [--batch-window US]\n  \
+         \x20     [--engine scalar|bitsliced] [--server-config FILE.toml]\n  \
          suite <file.toml>                      run a batch of pipelines"
     );
 }
@@ -261,12 +270,16 @@ fn cmd_simulate(pos: &[String], opts: &Opts) -> Result<()> {
     let name = pos.first().context("usage: simulate <config> --net F")?;
     let (_m, ds) = load_bundle(name)?;
     let net = LutNetwork::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
-    let sim = Simulator::new(&net);
     let t0 = std::time::Instant::now();
-    let acc = sim.accuracy(&ds.test_x, &ds.test_y);
+    let backend = engine::backend(opts.engine()?, &net)?;
+    let compile_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let acc = backend.accuracy(&ds.test_x, &ds.test_y);
     let dt = t0.elapsed().as_secs_f64();
-    println!("fabric accuracy: {:.4} on {} samples ({:.0} samples/s, latency {} cycles)",
-             acc, ds.n_test(), ds.n_test() as f64 / dt, sim.latency_cycles());
+    println!("fabric accuracy: {:.4} on {} samples ({:.0} samples/s, latency {} cycles, \
+              {} engine, compile {:.3}s)",
+             acc, ds.n_test(), ds.n_test() as f64 / dt, backend.latency_cycles(),
+             backend.name(), compile_s);
     Ok(())
 }
 
@@ -322,13 +335,22 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
     )?);
     let n_req = opts.usize("requests")?.unwrap_or(10_000);
     let rate = opts.f64("rate")?.unwrap_or(50_000.0);
-    let window_us = opts.usize("batch-window")?.unwrap_or(200);
-    let cfg = ServerConfig {
-        max_batch: opts.usize("max-batch")?.unwrap_or(256),
-        batch_window: std::time::Duration::from_micros(window_us as u64),
+    // File config first (TOML subset), CLI flags override.
+    let mut cfg = match opts.get("server-config") {
+        Some(path) => ServerConfig::load(&PathBuf::from(path))?,
+        None => ServerConfig::default(),
     };
-    println!("serving {} at {:.0} req/s for {} requests (window {} us)...",
-             net.name, rate, n_req, window_us);
+    if let Some(mb) = opts.usize("max-batch")? {
+        cfg.max_batch = mb;
+    }
+    if let Some(us) = opts.usize("batch-window")? {
+        cfg.batch_window = std::time::Duration::from_micros(us as u64);
+    }
+    if let Some(kind) = opts.get("engine") {
+        cfg.backend = kind.parse().context("--engine")?;
+    }
+    println!("serving {} at {:.0} req/s for {} requests (window {} us, {} engine)...",
+             net.name, rate, n_req, cfg.batch_window.as_micros(), cfg.backend);
     let server = Server::start(net.clone(), cfg);
     let client = server.client();
     let workload = Workload::poisson(&ds, 99, n_req, rate);

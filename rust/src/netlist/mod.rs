@@ -39,6 +39,40 @@ pub struct SimResult {
     pub total_cycles: usize,
 }
 
+impl SimResult {
+    /// Assemble a result from raw logit codes: argmax predictions (ties
+    /// break toward the lowest class index, as in the JAX argmax) and the
+    /// pipeline cycle accounting — first result after `latency_cycles`,
+    /// then one sample per cycle. Shared by every inference backend so
+    /// the bit-exactness contract has a single definition.
+    pub fn from_logit_codes(
+        logit_codes: Vec<i16>,
+        n_class: usize,
+        latency_cycles: usize,
+    ) -> SimResult {
+        let n_class = n_class.max(1);
+        let batch = logit_codes.len() / n_class;
+        let predictions = logit_codes
+            .chunks_exact(n_class)
+            .map(|row| {
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best as u32
+            })
+            .collect();
+        SimResult {
+            predictions,
+            logit_codes,
+            latency_cycles,
+            total_cycles: latency_cycles + batch.saturating_sub(1),
+        }
+    }
+}
+
 /// The fabric simulator for one converted network.
 pub struct Simulator<'a> {
     net: &'a LutNetwork,
@@ -115,27 +149,7 @@ impl<'a> Simulator<'a> {
             }
         }
 
-        let predictions = logit_codes
-            .chunks_exact(n_class)
-            .map(|row| {
-                let mut best = 0usize;
-                for (i, &v) in row.iter().enumerate() {
-                    if v > row[best] {
-                        best = i;
-                    }
-                }
-                best as u32
-            })
-            .collect();
-
-        let latency = self.latency_cycles();
-        SimResult {
-            predictions,
-            logit_codes,
-            latency_cycles: latency,
-            // Pipelined: first result after `latency` cycles, then 1/cycle.
-            total_cycles: latency + batch.saturating_sub(1),
-        }
+        SimResult::from_logit_codes(logit_codes, n_class, self.latency_cycles())
     }
 
     /// Evaluate one sample through all layers into `logits`.

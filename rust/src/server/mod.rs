@@ -1,19 +1,22 @@
-//! Threaded inference server: request router + dynamic batcher over the
-//! netlist simulator (the deployed "fabric").
+//! Threaded inference server: request router + dynamic batcher over a
+//! configurable inference backend (the deployed "fabric").
 //!
 //! Architecture (vLLM-router-like, scaled to this system): clients submit
 //! feature vectors through a channel; the batcher thread collects requests
-//! up to `max_batch` or `batch_window`, runs one batched fabric simulation,
-//! and replies through per-request channels. Latency percentiles come from
-//! enqueue→reply timestamps.
+//! up to `max_batch` or `batch_window`, runs one batched fabric inference
+//! through the configured [`engine::InferenceBackend`] (scalar simulator
+//! or the compiled bitsliced engine), and replies through per-request
+//! channels. Latency percentiles come from enqueue→reply timestamps.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::config::TomlDoc;
+use crate::engine::{self, BackendKind, InferenceBackend};
 use crate::luts::LutNetwork;
 use crate::netlist::Simulator;
 
@@ -24,6 +27,8 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch.
     pub batch_window: Duration,
+    /// Which inference engine executes the batches.
+    pub backend: BackendKind,
 }
 
 impl Default for ServerConfig {
@@ -31,7 +36,51 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 256,
             batch_window: Duration::from_micros(200),
+            backend: BackendKind::Scalar,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Parse a server-config file in the `config` module's TOML subset:
+    ///
+    /// ```toml
+    /// max_batch = 512
+    /// batch_window_us = 100
+    /// backend = "bitsliced"   # or "scalar" (the default)
+    /// ```
+    ///
+    /// All keys are optional; unknown keys are rejected so typos fail
+    /// loudly.
+    pub fn parse_toml(text: &str) -> Result<ServerConfig> {
+        let doc = TomlDoc::parse(text)?;
+        for key in doc.root.keys() {
+            if !matches!(key.as_str(), "max_batch" | "batch_window_us" | "backend") {
+                bail!("unknown server config key '{key}'");
+            }
+        }
+        if let Some(name) = doc.tables.keys().next() {
+            bail!("unexpected table '[[{name}]]' in server config");
+        }
+        let mut cfg = ServerConfig::default();
+        if let Some(v) = doc.root.get("max_batch") {
+            cfg.max_batch = v.as_usize()?.max(1);
+        }
+        if let Some(v) = doc.root.get("batch_window_us") {
+            cfg.batch_window = Duration::from_micros(v.as_usize()? as u64);
+        }
+        if let Some(v) = doc.root.get("backend") {
+            cfg.backend = v.as_str()?.parse()?;
+        }
+        Ok(cfg)
+    }
+
+    /// Load a server-config file from disk.
+    pub fn load(path: &std::path::Path) -> Result<ServerConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse_toml(&text)
+            .with_context(|| format!("parsing {}", path.display()))
     }
 }
 
@@ -120,7 +169,21 @@ impl Drop for Server {
 }
 
 fn batcher_loop(net: Arc<LutNetwork>, cfg: ServerConfig, rx: Receiver<Request>) {
-    let sim = Simulator::new(&net);
+    // Build the configured backend inside the serving thread (compilation
+    // of the bitsliced engine happens once, before the first request).
+    // A network the lowering pass rejects still serves — on the scalar
+    // fallback — rather than taking the server down.
+    let backend: Box<dyn InferenceBackend + '_> =
+        match engine::backend(cfg.backend, &net) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!(
+                "server: {} backend unavailable ({e:#}); falling back to scalar",
+                cfg.backend
+            );
+            Box::new(Simulator::new(&net))
+        }
+    };
     let in_sz = net.input_size;
     loop {
         // Block for the first request of a batch.
@@ -146,7 +209,7 @@ fn batcher_loop(net: Arc<LutNetwork>, cfg: ServerConfig, rx: Receiver<Request>) 
         for r in &batch {
             x.extend_from_slice(&r.features);
         }
-        let result = sim.simulate_batch(&x);
+        let result = backend.run_batch(&x);
         let bs = batch.len();
         for (req, &pred) in batch.into_iter().zip(&result.predictions) {
             let _ = req.reply.send(Reply {
@@ -179,6 +242,41 @@ mod tests {
     }
 
     #[test]
+    fn bitsliced_backend_serves_identical_predictions() {
+        let net = Arc::new(random_network(24, 8, 2, &[6, 3], 3, 2, 4));
+        let sim = Simulator::new(&net);
+        let server = Server::start(net.clone(), ServerConfig {
+            backend: BackendKind::Bitsliced,
+            ..Default::default()
+        });
+        let client = server.client();
+        for i in 0..20 {
+            let feats: Vec<f32> = (0..8).map(|j| ((i + j) % 6) as f32 / 6.0).collect();
+            let want = sim.simulate_batch(&feats).predictions[0];
+            assert_eq!(client.infer(feats).unwrap().prediction, want);
+        }
+    }
+
+    #[test]
+    fn config_parses_from_toml_subset() {
+        let cfg = ServerConfig::parse_toml(
+            "max_batch = 512\nbatch_window_us = 100\nbackend = \"bitsliced\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.max_batch, 512);
+        assert_eq!(cfg.batch_window, Duration::from_micros(100));
+        assert_eq!(cfg.backend, BackendKind::Bitsliced);
+        // All keys optional -> defaults (backend defaults to Scalar).
+        let d = ServerConfig::parse_toml("").unwrap();
+        assert_eq!(d.backend, BackendKind::Scalar);
+        assert_eq!(d.max_batch, ServerConfig::default().max_batch);
+        // Typos and bad values fail loudly.
+        assert!(ServerConfig::parse_toml("max_bach = 4").is_err());
+        assert!(ServerConfig::parse_toml("backend = \"fpga\"").is_err());
+        assert!(ServerConfig::parse_toml("[[run]]\nconfig = \"x\"").is_err());
+    }
+
+    #[test]
     fn rejects_bad_feature_length() {
         let net = Arc::new(random_network(22, 8, 2, &[4, 2], 3, 2, 4));
         let server = Server::start(net, ServerConfig::default());
@@ -191,6 +289,7 @@ mod tests {
         let server = Server::start(net, ServerConfig {
             max_batch: 16,
             batch_window: Duration::from_micros(500),
+            ..Default::default()
         });
         let client = server.client();
         let handles: Vec<_> = (0..8)

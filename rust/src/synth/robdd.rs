@@ -1,27 +1,50 @@
-//! Reduced Ordered BDD node counting over flat truth tables.
+//! Reduced Ordered BDDs over flat truth tables: node counting (the
+//! synthesis complexity metric) and graph construction (the compiled-
+//! engine lowering substrate).
 //!
-//! Variable order is address-bit order (LSB split last). The count is
+//! Variable order is address-bit order (LSB split last). The structure is
 //! computed by the level-merge construction: level `j` nodes are the
 //! distinct, non-redundant (lo != hi) sub-functions of `2^j` entries.
-//! This is exactly the ROBDD size for the fixed order and runs in
+//! This is exactly the ROBDD for the fixed order and runs in
 //! O(2^k · k) with hashing — fast enough to BDD every L-LUT in a design.
 //!
 //! The node count is the logic-complexity metric of the synthesis model:
 //! structured functions (LogicNets' thresholded linear maps) collapse to
 //! few nodes, dense NeuraLUT sub-network tables stay near-random — the
 //! paper's observation that NeuraLUT tables "offer less opportunity for
-//! logic simplification".
+//! logic simplification". The same graph drives `engine::lower`, which
+//! maps every decision node onto one word-wide mux op.
 
 use std::collections::HashMap;
 
-/// Number of ROBDD nodes (internal decision nodes, terminals excluded).
-pub fn node_count(bits: &[u8], k: usize) -> usize {
+/// One internal decision node: test variable `var`; follow `hi` when the
+/// variable is 1, `lo` when it is 0. Child ids `0`/`1` are the terminal
+/// constants; id `n >= 2` is `nodes[n - 2]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BddNode {
+    pub var: u32,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+/// A reduced ordered BDD of one single-output function. `nodes` is in
+/// bottom-up topological order (children always precede parents), so a
+/// single forward pass evaluates or lowers the whole graph.
+#[derive(Debug, Clone)]
+pub struct Robdd {
+    pub nodes: Vec<BddNode>,
+    /// Root id: `0`/`1` for constant functions, else `index + 2`.
+    pub root: u32,
+}
+
+/// Build the ROBDD of a function given as a `2^k`-entry 0/1 truth table
+/// (address bit `j` is variable `j`; variable `k-1` is tested first).
+pub fn build(bits: &[u8], k: usize) -> Robdd {
     debug_assert_eq!(bits.len(), 1usize << k);
     // ids of current level's sub-functions; start with terminal ids 0/1.
     let mut ids: Vec<u32> = bits.iter().map(|&b| b as u32).collect();
-    let mut next_id = 2u32;
-    let mut total = 0usize;
-    for _level in 0..k {
+    let mut nodes: Vec<BddNode> = Vec::new();
+    for level in 0..k {
         let mut memo: HashMap<(u32, u32), u32> = HashMap::new();
         let mut merged = Vec::with_capacity(ids.len() / 2);
         for pair in ids.chunks_exact(2) {
@@ -31,16 +54,20 @@ pub fn node_count(bits: &[u8], k: usize) -> usize {
                 continue;
             }
             let id = *memo.entry((lo, hi)).or_insert_with(|| {
-                let id = next_id;
-                next_id += 1;
-                id
+                nodes.push(BddNode { var: level as u32, lo, hi });
+                (nodes.len() + 1) as u32
             });
             merged.push(id);
         }
-        total += memo.len();
         ids = merged;
     }
-    total
+    debug_assert_eq!(ids.len(), 1);
+    Robdd { nodes, root: ids[0] }
+}
+
+/// Number of ROBDD nodes (internal decision nodes, terminals excluded).
+pub fn node_count(bits: &[u8], k: usize) -> usize {
+    build(bits, k).nodes.len()
 }
 
 #[cfg(test)]
@@ -83,6 +110,38 @@ mod tests {
         // A random 10-input function has close to the maximum ~2^(k-log k)
         // nodes; definitely far more than any structured function.
         assert!(n > 100, "n = {n}");
+    }
+
+    #[test]
+    fn build_graph_evaluates_back_to_the_table() {
+        // Walking the node graph must reproduce the function on every
+        // address, and the node order must be bottom-up topological.
+        let eval = |r: &Robdd, addr: usize| -> u8 {
+            let mut id = r.root;
+            while id >= 2 {
+                let n = r.nodes[(id - 2) as usize];
+                id = if (addr >> n.var) & 1 == 1 { n.hi } else { n.lo };
+            }
+            id as u8
+        };
+        let mut state = 0xC0FFEEu64;
+        for k in 0..=8usize {
+            let bits: Vec<u8> = (0..1usize << k)
+                .map(|_| {
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((state >> 37) & 1) as u8
+                })
+                .collect();
+            let r = build(&bits, k);
+            assert_eq!(r.nodes.len(), node_count(&bits, k));
+            for (i, n) in r.nodes.iter().enumerate() {
+                assert!((n.lo as usize) < i + 2 && (n.hi as usize) < i + 2,
+                        "child precedes parent");
+            }
+            for (addr, &b) in bits.iter().enumerate() {
+                assert_eq!(eval(&r, addr), b, "k={k} addr={addr}");
+            }
+        }
     }
 
     #[test]

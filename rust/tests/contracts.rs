@@ -8,6 +8,7 @@ use std::time::Duration;
 use neuralut::coordinator::experiments::{mean_std, RunSummary};
 use neuralut::coordinator::schedule::sgdr_lr;
 use neuralut::data::{Dataset, Workload};
+use neuralut::engine::BackendKind;
 use neuralut::luts::random_network;
 use neuralut::netlist::vcd;
 use neuralut::netlist::Simulator;
@@ -103,10 +104,37 @@ fn server_under_burst_load_preserves_fifo_correctness() {
     let server = Server::start(net.clone(), ServerConfig {
         max_batch: 8,
         batch_window: Duration::from_micros(50),
+        ..Default::default()
     });
     let client = server.client();
     // burst: submit 200 async then collect
     let w = Workload::poisson(&ds, 4, 200, 1e9); // effectively instant
+    let mut pending = Vec::new();
+    let mut want = Vec::new();
+    for (_, feats) in w.requests {
+        want.push(sim.simulate_batch(&feats).predictions[0]);
+        pending.push(client.infer_async(feats).unwrap());
+    }
+    for (rx, want) in pending.into_iter().zip(want) {
+        assert_eq!(rx.recv().unwrap().prediction, want);
+    }
+}
+
+#[test]
+fn server_config_file_selects_the_bitsliced_backend_end_to_end() {
+    // Config file (TOML subset) -> ServerConfig -> serving thread compiles
+    // the engine -> replies must match the scalar fabric bit-exactly.
+    let cfg = ServerConfig::parse_toml(
+        "max_batch = 16\nbatch_window_us = 50\nbackend = \"bitsliced\"",
+    )
+    .unwrap();
+    assert_eq!(cfg.backend, BackendKind::Bitsliced);
+    let net = Arc::new(random_network(30, 6, 2, &[5, 3], 2, 2, 4));
+    let ds = Dataset::synthetic(8, 11, 64, 6, 3);
+    let sim = Simulator::new(&net);
+    let server = Server::start(net.clone(), cfg);
+    let client = server.client();
+    let w = Workload::poisson(&ds, 9, 100, 1e9);
     let mut pending = Vec::new();
     let mut want = Vec::new();
     for (_, feats) in w.requests {

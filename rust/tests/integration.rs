@@ -9,6 +9,7 @@ use std::sync::Arc;
 use neuralut::coordinator::pipeline::{self, PipelineOpts};
 use neuralut::coordinator::trainer::{TrainOpts, Trainer};
 use neuralut::data::Dataset;
+use neuralut::engine::BitslicedEngine;
 use neuralut::luts::{convert, LutNetwork};
 use neuralut::manifest::Manifest;
 use neuralut::netlist::Simulator;
@@ -118,6 +119,27 @@ fn netlist_sim_matches_saved_network_after_roundtrip() {
         sim1.simulate_batch(x).logit_codes,
         sim2.simulate_batch(x).logit_codes
     );
+}
+
+#[test]
+fn bitsliced_engine_matches_scalar_on_real_converted_model() {
+    // The compiled fabric engine must be bit-exact on a *trained*
+    // network, not just on random tables — trained tables carry the
+    // structure (small support, shared sub-functions) the lowering pass
+    // exploits, so this exercises the literal/constant/sharing paths.
+    let Some((m, ds)) = bundle("moons-neuralut") else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = Trainer::new(&rt, &m, &ds).unwrap();
+    let r = trainer
+        .run(7, &TrainOpts { epochs: Some(2), quiet: true, ..Default::default() })
+        .unwrap();
+    let net = convert::convert(&rt, &m, &r.params).unwrap();
+    let sim = Simulator::new(&net);
+    let eng = BitslicedEngine::compile(&net).unwrap();
+    let a = sim.simulate_batch(&ds.test_x);
+    let b = eng.run_batch(&ds.test_x);
+    assert_eq!(a.logit_codes, b.logit_codes);
+    assert_eq!(a.predictions, b.predictions);
 }
 
 #[test]

@@ -2,6 +2,7 @@
 //! substrates: netlist simulation, synthesis model, RTL packing, LUT
 //! serialization, sparsity/wiring invariants, server batching.
 
+use neuralut::engine::BitslicedEngine;
 use neuralut::luts::{random_network, LutNetwork};
 use neuralut::netlist::{quantize_input, Simulator};
 use neuralut::nn::formulas;
@@ -66,6 +67,49 @@ fn prop_simulator_is_permutation_invariant_over_batch() {
                 || b.predictions[1] != a2.predictions[0]
             {
                 return Err("batch result differs from singles".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bitsliced_engine_is_bit_exact_against_scalar_simulator() {
+    // The compiled engine must reproduce the scalar fabric exactly —
+    // logit codes and predictions — across fan-ins, bit-widths and batch
+    // sizes that straddle the 64-lane word boundary (ragged tails).
+    forall_res(
+        0x5B,
+        30,
+        |r| {
+            let net = arb_network(r);
+            // 1..=200 covers sub-word, exact-word and multi-word batches;
+            // force a few ragged-tail cases explicitly.
+            let batch = match r.below(4) {
+                0 => 1 + r.below(63),
+                1 => 64 * (1 + r.below(3)),
+                2 => 64 * (1 + r.below(3)) + 1 + r.below(63),
+                _ => 1 + r.below(200),
+            };
+            let x: Vec<f32> =
+                (0..batch * net.input_size).map(|_| r.f32()).collect();
+            (net, x)
+        },
+        |(net, x)| {
+            let sim = Simulator::new(net);
+            let eng = BitslicedEngine::compile(net).map_err(|e| e.to_string())?;
+            let a = sim.simulate_batch(x);
+            let b = eng.run_batch(x);
+            if a.logit_codes != b.logit_codes {
+                return Err("logit codes diverge".into());
+            }
+            if a.predictions != b.predictions {
+                return Err("predictions diverge".into());
+            }
+            if a.latency_cycles != b.latency_cycles
+                || a.total_cycles != b.total_cycles
+            {
+                return Err("pipeline accounting diverges".into());
             }
             Ok(())
         },
