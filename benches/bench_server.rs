@@ -1,28 +1,37 @@
-//! Serving stack: router + dynamic batcher over the fabric simulator —
-//! throughput and latency percentiles vs offered load and batching window
-//! (the edge-deployment claim, and the knob study for the batcher).
+//! Serving-runtime bench: worker-pool scaling and the backpressure
+//! envelope. Two drives over the multi-worker sharded server:
+//!
+//! * closed-loop drain — flood the bounded queue and time until every
+//!   reply lands: the compute-bound throughput ceiling per worker count
+//!   and backend (all workers share ONE compiled fabric);
+//! * open-loop shed — paced Poisson arrivals submitted with the
+//!   non-blocking `try_infer`, measuring served rate vs rejection rate.
+//!
+//! Writes `BENCH_server.json` (throughput, p50/p99 latency, rejection
+//! rate per row) so the serving perf trajectory is tracked PR over PR.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use neuralut::data::{Dataset, Workload};
-use neuralut::luts::random_network;
-use neuralut::server::{Server, ServerConfig};
+use neuralut::engine::BackendKind;
+use neuralut::luts::{random_network, LutNetwork};
+use neuralut::server::{Server, ServerConfig, ServerStats};
+use neuralut::util::json::{obj, Json};
 use neuralut::util::stats;
 
-fn drive(net: Arc<neuralut::luts::LutNetwork>, cfg: ServerConfig, rate: f64,
-         n_req: usize) -> (f64, stats::Summary) {
+/// Closed-loop drain: submit `n_req` async requests as fast as the
+/// bounded queue accepts them (blocking on backpressure) and time until
+/// every reply lands.
+fn drain(net: Arc<LutNetwork>, cfg: ServerConfig, n_req: usize)
+         -> (f64, stats::Summary, ServerStats) {
     let ds = Dataset::synthetic(1, 16, 256, net.input_size, net.n_class);
     let server = Server::start(net, cfg);
     let client = server.client();
-    let workload = Workload::poisson(&ds, 2, n_req, rate);
+    let workload = Workload::poisson(&ds, 2, n_req, 1e9); // effectively instant
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n_req);
-    for (t_arrival, feats) in workload.requests {
-        let now = t0.elapsed().as_secs_f64();
-        if t_arrival > now {
-            std::thread::sleep(Duration::from_secs_f64(t_arrival - now));
-        }
+    for (_, feats) in workload.requests {
         pending.push(client.infer_async(feats).unwrap());
     }
     let lat_us: Vec<f64> = pending
@@ -30,39 +39,123 @@ fn drive(net: Arc<neuralut::luts::LutNetwork>, cfg: ServerConfig, rate: f64,
         .map(|rx| rx.recv().unwrap().latency.as_secs_f64() * 1e6)
         .collect();
     let wall = t0.elapsed().as_secs_f64();
-    (n_req as f64 / wall, stats::summarize(&lat_us))
+    (n_req as f64 / wall, stats::summarize(&lat_us), server.stats())
+}
+
+/// Open-loop shed: paced arrivals through `try_infer`; a full queue sheds
+/// (Overloaded) instead of blocking.
+fn shed(net: Arc<LutNetwork>, cfg: ServerConfig, rate: f64, n_req: usize)
+        -> (f64, f64, stats::Summary) {
+    let ds = Dataset::synthetic(1, 16, 256, net.input_size, net.n_class);
+    let server = Server::start(net, cfg);
+    let client = server.client();
+    let workload = Workload::poisson(&ds, 3, n_req, rate);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for (t_arrival, feats) in workload.requests {
+        let now = t0.elapsed().as_secs_f64();
+        if t_arrival > now {
+            std::thread::sleep(Duration::from_secs_f64(t_arrival - now));
+        }
+        match client.try_infer(feats) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    let lat_us: Vec<f64> = pending
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().latency.as_secs_f64() * 1e6)
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    (
+        (n_req - rejected) as f64 / wall,
+        rejected as f64 / n_req as f64,
+        stats::summarize(&lat_us),
+    )
 }
 
 fn main() {
-    println!("== bench_server: router + dynamic batcher ==");
+    println!("== bench_server: multi-worker sharded serving runtime ==");
     let net = Arc::new(random_network(11, 196, 2, &[64, 32, 10], 6, 2, 4));
     let n_req = 30_000;
+    let mut rows: Vec<Json> = Vec::new();
 
-    println!("\n-- throughput / latency vs offered load (window 100us, max_batch 512) --");
-    for rate in [20_000.0, 50_000.0, 100_000.0, 200_000.0] {
+    println!("\n-- worker scaling, closed-loop drain ({n_req} requests, max_batch 256) --");
+    let mut bits_1w = 0.0f64;
+    let mut bits_4w = 0.0f64;
+    for backend in [BackendKind::Scalar, BackendKind::Bitsliced] {
+        for workers in [1usize, 2, 4] {
+            let cfg = ServerConfig {
+                max_batch: 256,
+                batch_window: Duration::from_micros(50),
+                backend,
+                workers,
+                queue_depth: 4096,
+            };
+            let (tput, s, st) = drain(net.clone(), cfg, n_req);
+            println!(
+                "{:<9} workers {workers} -> {tput:>8.0} req/s  p50 {:>7.0}us \
+                 p99 {:>7.0}us  mean batch {:.1}",
+                backend.as_str(), s.p50, s.p99, st.mean_batch
+            );
+            if backend == BackendKind::Bitsliced && workers == 1 {
+                bits_1w = tput;
+            }
+            if backend == BackendKind::Bitsliced && workers == 4 {
+                bits_4w = tput;
+            }
+            rows.push(obj(vec![
+                ("section", Json::Str("saturation".into())),
+                ("backend", Json::Str(backend.as_str().into())),
+                ("workers", Json::Num(workers as f64)),
+                ("requests", Json::Num(n_req as f64)),
+                ("served_per_s", Json::Num(tput)),
+                ("p50_us", Json::Num(s.p50)),
+                ("p99_us", Json::Num(s.p99)),
+                ("rejection_rate", Json::Num(0.0)),
+                ("mean_batch", Json::Num(st.mean_batch)),
+            ]));
+        }
+    }
+    println!(
+        "bitsliced scaling, 4 workers vs 1: {:.2}x ({:.0} -> {:.0} req/s)",
+        bits_4w / bits_1w.max(1e-9), bits_1w, bits_4w
+    );
+
+    println!("\n-- backpressure envelope: open-loop try_infer (queue_depth 64, 2 workers) --");
+    for rate in [50_000.0f64, 100_000.0, 200_000.0] {
         let cfg = ServerConfig {
-            max_batch: 512,
+            max_batch: 256,
             batch_window: Duration::from_micros(100),
-            ..Default::default()
+            backend: BackendKind::Bitsliced,
+            workers: 2,
+            queue_depth: 64,
         };
-        let (tput, s) = drive(net.clone(), cfg, rate, n_req);
+        let (tput, rej, s) = shed(net.clone(), cfg, rate, 20_000);
         println!(
-            "offered {:>7.0}/s -> served {:>7.0}/s  p50 {:>6.0}us p95 {:>6.0}us p99 {:>6.0}us",
-            rate, tput, s.p50, s.p95, s.p99
+            "offered {rate:>7.0}/s -> served {tput:>7.0}/s  shed {:>5.1}%  \
+             p50 {:>6.0}us p99 {:>6.0}us",
+            rej * 100.0, s.p50, s.p99
         );
+        rows.push(obj(vec![
+            ("section", Json::Str("backpressure".into())),
+            ("backend", Json::Str("bitsliced".into())),
+            ("workers", Json::Num(2.0)),
+            ("queue_depth", Json::Num(64.0)),
+            ("offered_per_s", Json::Num(rate)),
+            ("served_per_s", Json::Num(tput)),
+            ("p50_us", Json::Num(s.p50)),
+            ("p99_us", Json::Num(s.p99)),
+            ("rejection_rate", Json::Num(rej)),
+        ]));
     }
 
-    println!("\n-- batching-window ablation (offered 100k/s) --");
-    for window_us in [0u64, 50, 100, 200, 500] {
-        let cfg = ServerConfig {
-            max_batch: 512,
-            batch_window: Duration::from_micros(window_us),
-            ..Default::default()
-        };
-        let (tput, s) = drive(net.clone(), cfg, 100_000.0, n_req);
-        println!(
-            "window {:>4}us -> served {:>7.0}/s  p50 {:>6.0}us p99 {:>6.0}us",
-            window_us, tput, s.p50, s.p99
-        );
+    let n_rows = rows.len();
+    let out = Json::Arr(rows).to_string();
+    if let Err(e) = std::fs::write("BENCH_server.json", &out) {
+        eprintln!("could not write BENCH_server.json: {e}");
+    } else {
+        println!("\nwrote BENCH_server.json ({n_rows} rows)");
     }
 }

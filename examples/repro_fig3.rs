@@ -26,7 +26,7 @@ fn ascii_boundary(rt: &Runtime, config: &str, seed: u64) -> anyhow::Result<Vec<S
     };
     let r = pipeline::run(rt, &m, &ds, seed, &opts)?;
     // Backend selected by NEURALUT_ENGINE (scalar | bitsliced).
-    let fabric = engine::backend_from_env(&r.net)?;
+    let fabric = engine::backend_from_env(std::sync::Arc::new(r.net))?;
     let (w, h) = (40usize, 18usize);
     let mut grid = Vec::with_capacity(w * h * 2);
     for row in 0..h {

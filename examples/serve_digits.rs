@@ -4,7 +4,8 @@
 //! and throughput — the edge-deployment scenario the paper motivates.
 //!
 //! Run: `cargo run --release --example serve_digits`
-//! (env NEURALUT_EPOCHS to shorten training; --rate/--requests like the CLI)
+//! (env NEURALUT_EPOCHS to shorten training, NEURALUT_ENGINE to pick the
+//! backend, NEURALUT_WORKERS to size the serving worker pool)
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -40,13 +41,25 @@ fn main() -> anyhow::Result<()> {
 
     let n_req = 20_000;
     let rate = 100_000.0; // offered load, req/s
-    // NEURALUT_ENGINE=bitsliced serves through the compiled fabric engine.
+    // NEURALUT_ENGINE=bitsliced serves through the compiled fabric engine;
+    // NEURALUT_WORKERS sizes the batcher pool (all workers share one
+    // compiled program).
     let backend = neuralut::engine::BackendKind::from_env()?;
-    let server = Server::start(net.clone(), ServerConfig {
+    let workers = match std::env::var("NEURALUT_WORKERS") {
+        Ok(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("NEURALUT_WORKERS = '{v}' is not a number"))?,
+        Err(_) => 2,
+    };
+    let cfg = ServerConfig {
         max_batch: 512,
         batch_window: Duration::from_micros(100),
         backend,
-    });
+        workers,
+        ..Default::default()
+    };
+    cfg.validate()?; // zero/absurd NEURALUT_WORKERS fails loudly, like the CLI
+    let server = Server::start(net.clone(), cfg);
     let client = server.client();
     let workload = Workload::poisson(&ds, 42, n_req, rate);
 
@@ -76,6 +89,11 @@ fn main() -> anyhow::Result<()> {
              s.p50, s.p95, s.p99, s.max);
     println!("served acc : {:.4} (labels follow the jittered test stream)",
              hits as f64 / n_req as f64);
+    let st = server.stats();
+    println!("server     : {} served / {} rejected over {} workers; \
+              mean batch {:.1}, p99 {:.0} us (internal)",
+             st.served, st.rejected, st.per_worker_served.len(),
+             st.mean_batch, st.latency_p99_us);
     println!("\nfabric latency itself is {} cycles — the serving stack \
               (batching window, queueing) dominates, as it should.",
              net.layers.len());

@@ -13,6 +13,8 @@
 //! for paper-scale circuits). Blocks shard across threads with
 //! [`crate::util::pool`], mirroring the scalar simulator's batching.
 
+use std::sync::Arc;
+
 use crate::luts::LutNetwork;
 use crate::netlist::{quantize_input, SimResult};
 use crate::util::pool;
@@ -23,9 +25,13 @@ use super::lower::{self, BitNetlist, W_INPUTS};
 /// amortize over a handful of 64-sample blocks).
 const PARALLEL_THRESHOLD: usize = 512;
 
-/// The compiled-fabric inference engine.
+/// The compiled-fabric inference engine: a cheap executor over a shared,
+/// compile-once program. The expensive artifact is the [`BitNetlist`]
+/// behind the `Arc` — N serving workers each hold their own
+/// `BitslicedEngine` but stream the *same* compiled program, so a server
+/// start runs the lowering pass exactly once regardless of worker count.
 pub struct BitslicedEngine {
-    nl: BitNetlist,
+    nl: Arc<BitNetlist>,
 }
 
 /// Per-worker scratch: wire buffer + inter-level plane buffer.
@@ -47,7 +53,19 @@ impl BitslicedEngine {
     /// Compile a network (lowering pass); see [`lower::lower`] for the
     /// conditions under which compilation fails.
     pub fn compile(net: &LutNetwork) -> crate::Result<Self> {
-        Ok(BitslicedEngine { nl: lower::lower(net)? })
+        Ok(Self::from_program(Arc::new(lower::lower(net)?)))
+    }
+
+    /// Wrap an already-compiled program — the per-worker constructor: no
+    /// lowering pass, no copies, just another reference to the shared
+    /// `BitNetlist`.
+    pub fn from_program(nl: Arc<BitNetlist>) -> Self {
+        BitslicedEngine { nl }
+    }
+
+    /// The shared compiled program this executor streams.
+    pub fn program(&self) -> &Arc<BitNetlist> {
+        &self.nl
     }
 
     /// The compiled representation (inspection, cost reporting).
@@ -227,5 +245,21 @@ mod tests {
         let eng = BitslicedEngine::compile(&net).unwrap();
         let r = eng.run_batch(&[]);
         assert!(r.predictions.is_empty() && r.logit_codes.is_empty());
+    }
+
+    #[test]
+    fn executors_from_one_program_share_it_and_agree() {
+        let net = random_network(8, 6, 2, &[4, 2], 2, 2, 4);
+        let prog = Arc::new(lower::lower(&net).unwrap());
+        let a = BitslicedEngine::from_program(prog.clone());
+        let b = BitslicedEngine::from_program(prog.clone());
+        assert!(Arc::ptr_eq(a.program(), b.program()));
+        assert!(Arc::ptr_eq(a.program(), &prog));
+        assert_eq!(Arc::strong_count(&prog), 3);
+        let x: Vec<f32> = (0..6 * 65).map(|i| (i % 7) as f32 / 7.0).collect();
+        let ra = a.run_batch(&x);
+        let rb = b.run_batch(&x);
+        assert_eq!(ra.logit_codes, rb.logit_codes);
+        assert_eq!(ra.predictions, rb.predictions);
     }
 }

@@ -17,6 +17,13 @@
 //! configuration ([`BackendKind`]) rather than by concrete type; future
 //! device-specific lowerings slot in behind the same trait.
 //!
+//! Ownership: backends constructed through [`backend`] / [`SharedFabric`]
+//! are `'static` — they share the network (and the compiled program)
+//! through `Arc`s, so worker threads can own them outright. A
+//! [`SharedFabric`] is the compile-once artifact; its
+//! [`executor`](SharedFabric::executor)s are cheap per-worker handles — N
+//! serving workers share one lowering pass instead of compiling N times.
+//!
 //! Picking a backend: `Scalar` has zero compile cost and wins on tiny
 //! batches and very wide tables; `Bitsliced` pays one lowering pass per
 //! network and wins on batch workloads, increasingly so the more
@@ -29,10 +36,12 @@ pub mod lower;
 pub use bitslice::BitslicedEngine;
 pub use lower::{BitNetlist, Level, MuxOp};
 
+use std::sync::Arc;
+
 use anyhow::bail;
 
 use crate::luts::LutNetwork;
-use crate::netlist::{SimResult, Simulator};
+use crate::netlist::{ScalarPlan, SimResult, Simulator};
 
 /// Which inference engine executes a converted network.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -136,23 +145,116 @@ impl InferenceBackend for BitslicedEngine {
     }
 }
 
-/// Construct the backend of the requested kind for `net`. `Bitsliced`
-/// runs the lowering pass here and reports its failures (e.g. layers
-/// with inconsistent bit-widths).
-pub fn backend<'a>(
+/// Owning scalar backend: shares the network through an `Arc` and reuses
+/// the simulator's hot loop via [`ScalarPlan`]. This is the `'static`
+/// sibling of the borrowing [`Simulator`] — what worker threads (which
+/// outlive any borrow) execute.
+pub struct ScalarEngine {
+    net: Arc<LutNetwork>,
+    plan: Arc<ScalarPlan>,
+}
+
+impl ScalarEngine {
+    pub fn new(net: Arc<LutNetwork>) -> Self {
+        let plan = Arc::new(ScalarPlan::new(&net));
+        ScalarEngine { net, plan }
+    }
+
+    /// Per-worker constructor over an already-built plan — no re-flattening
+    /// of the wiring; N workers share one plan like they share one program.
+    pub fn from_parts(net: Arc<LutNetwork>, plan: Arc<ScalarPlan>) -> Self {
+        ScalarEngine { net, plan }
+    }
+}
+
+impl InferenceBackend for ScalarEngine {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn latency_cycles(&self) -> usize {
+        self.net.layers.len()
+    }
+
+    fn run_batch(&self, x: &[f32]) -> SimResult {
+        self.plan.simulate_batch(&self.net, x)
+    }
+}
+
+/// A compile-once, share-everywhere fabric: the expensive artifacts (the
+/// network, and for `Bitsliced` the lowered program) held behind `Arc`s,
+/// from which any number of cheap per-worker [`executor`](Self::executor)s
+/// can be spawned. The serving runtime compiles one `SharedFabric` per
+/// server start and hands every worker thread its own executor — N workers,
+/// one lowering pass.
+pub enum SharedFabric {
+    Scalar { net: Arc<LutNetwork>, plan: Arc<ScalarPlan> },
+    Bitsliced { program: Arc<BitNetlist> },
+}
+
+impl SharedFabric {
+    /// The scalar fabric for `net` (infallible — nothing to lower; the
+    /// shared artifact is the flattened wiring plan).
+    pub fn scalar(net: Arc<LutNetwork>) -> SharedFabric {
+        let plan = Arc::new(ScalarPlan::new(&net));
+        SharedFabric::Scalar { net, plan }
+    }
+
+    /// Compile the fabric once. `Bitsliced` runs the lowering pass here
+    /// and reports its failures (e.g. layers with inconsistent bit-widths).
+    pub fn compile(kind: BackendKind, net: Arc<LutNetwork>) -> crate::Result<SharedFabric> {
+        Ok(match kind {
+            BackendKind::Scalar => Self::scalar(net),
+            BackendKind::Bitsliced => SharedFabric::Bitsliced {
+                program: Arc::new(lower::lower(&net)?),
+            },
+        })
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            SharedFabric::Scalar { .. } => BackendKind::Scalar,
+            SharedFabric::Bitsliced { .. } => BackendKind::Bitsliced,
+        }
+    }
+
+    /// Spawn one executor. Cheap by contract: never re-runs the lowering
+    /// pass, never re-flattens wiring, never copies tables — `Arc` clones
+    /// only.
+    pub fn executor(&self) -> Box<dyn InferenceBackend> {
+        match self {
+            SharedFabric::Scalar { net, plan } => {
+                Box::new(ScalarEngine::from_parts(net.clone(), plan.clone()))
+            }
+            SharedFabric::Bitsliced { program } => {
+                Box::new(BitslicedEngine::from_program(program.clone()))
+            }
+        }
+    }
+
+    /// The shared compiled program (`None` for the scalar fabric).
+    pub fn program(&self) -> Option<&Arc<BitNetlist>> {
+        match self {
+            SharedFabric::Scalar { .. } => None,
+            SharedFabric::Bitsliced { program } => Some(program),
+        }
+    }
+}
+
+/// Construct a `'static` backend of the requested kind for a shared
+/// network — one compile, one executor. For a worker pool sharing a
+/// single compile, use [`SharedFabric`] directly.
+pub fn backend(
     kind: BackendKind,
-    net: &'a LutNetwork,
-) -> crate::Result<Box<dyn InferenceBackend + 'a>> {
-    Ok(match kind {
-        BackendKind::Scalar => Box::new(Simulator::new(net)),
-        BackendKind::Bitsliced => Box::new(BitslicedEngine::compile(net)?),
-    })
+    net: Arc<LutNetwork>,
+) -> crate::Result<Box<dyn InferenceBackend>> {
+    Ok(SharedFabric::compile(kind, net)?.executor())
 }
 
 /// Backend selected by the `NEURALUT_ENGINE` environment variable
 /// (`scalar` when unset) — how the repro examples opt into the compiled
 /// engine without changing their code paths.
-pub fn backend_from_env(net: &LutNetwork) -> crate::Result<Box<dyn InferenceBackend + '_>> {
+pub fn backend_from_env(net: Arc<LutNetwork>) -> crate::Result<Box<dyn InferenceBackend>> {
     backend(BackendKind::from_env()?, net)
 }
 
@@ -175,11 +277,11 @@ mod tests {
 
     #[test]
     fn both_backends_satisfy_the_trait_identically() {
-        let net = random_network(31, 9, 2, &[6, 4], 3, 2, 4);
+        let net = Arc::new(random_network(31, 9, 2, &[6, 4], 3, 2, 4));
         let x: Vec<f32> = (0..9 * 100).map(|i| (i % 13) as f32 / 13.0).collect();
         let y: Vec<i32> = (0..100).map(|i| (i % 4) as i32).collect();
-        let scalar = backend(BackendKind::Scalar, &net).unwrap();
-        let bits = backend(BackendKind::Bitsliced, &net).unwrap();
+        let scalar = backend(BackendKind::Scalar, net.clone()).unwrap();
+        let bits = backend(BackendKind::Bitsliced, net.clone()).unwrap();
         assert_eq!(scalar.name(), "scalar");
         assert_eq!(bits.name(), "bitsliced");
         assert_eq!(scalar.latency_cycles(), bits.latency_cycles());
@@ -188,5 +290,34 @@ mod tests {
         assert_eq!(a.logit_codes, b.logit_codes);
         assert_eq!(a.predictions, b.predictions);
         assert!((scalar.accuracy(&x, &y) - bits.accuracy(&x, &y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn owning_scalar_engine_matches_borrowing_simulator() {
+        let net = Arc::new(random_network(33, 7, 2, &[5, 3], 2, 2, 4));
+        let x: Vec<f32> = (0..7 * 90).map(|i| (i % 17) as f32 / 17.0).collect();
+        let own = ScalarEngine::new(net.clone());
+        let sim = Simulator::new(&net);
+        assert_eq!(own.run_batch(&x).logit_codes,
+                   sim.simulate_batch(&x).logit_codes);
+        assert_eq!(own.latency_cycles(), sim.latency_cycles());
+    }
+
+    #[test]
+    fn shared_fabric_spawns_executors_without_recompiling() {
+        let net = Arc::new(random_network(32, 8, 2, &[6, 3], 3, 2, 4));
+        let fabric = SharedFabric::compile(BackendKind::Bitsliced, net.clone()).unwrap();
+        assert_eq!(fabric.kind(), BackendKind::Bitsliced);
+        let prog = fabric.program().unwrap().clone();
+        let a = fabric.executor();
+        let b = fabric.executor();
+        // ONE compiled instance, four holders: fabric + our clone + 2 executors.
+        assert_eq!(Arc::strong_count(&prog), 4);
+        let x: Vec<f32> = (0..8 * 70).map(|i| (i % 11) as f32 / 11.0).collect();
+        assert_eq!(a.run_batch(&x).logit_codes, b.run_batch(&x).logit_codes);
+        // Scalar fabric carries no compiled program.
+        let sf = SharedFabric::compile(BackendKind::Scalar, net).unwrap();
+        assert!(sf.program().is_none());
+        assert_eq!(sf.executor().name(), "scalar");
     }
 }

@@ -29,8 +29,10 @@
 //! * [`rtl`] — Verilog + testbench generation.
 //! * [`synth`] — Vivado-substitute synthesis/P&R cost model (support
 //!   reduction, ROBDD, 6-LUT covering, timing).
-//! * [`server`] — threaded inference server: router + dynamic batcher,
-//!   backend-selectable.
+//! * [`server`] — multi-worker sharded inference serving runtime: bounded
+//!   request queue, N batcher threads over one shared compiled fabric,
+//!   explicit backpressure (`try_infer` → `Overloaded`), graceful
+//!   drain-on-shutdown, atomic serving stats.
 //!
 //! ## Compiled fabric engine
 //!
@@ -46,6 +48,11 @@
 //! and logic sharing amortize the one-time lowering. The server
 //! (`ServerConfig::backend`), the CLI (`--engine`) and the examples
 //! (`NEURALUT_ENGINE`) all select backends through `engine::BackendKind`.
+//!
+//! Backends constructed through `engine::backend` / `engine::SharedFabric`
+//! are `'static`: they hold the network (and compiled program) behind
+//! `Arc`s, so the serving runtime's worker threads own cheap executors of
+//! one shared compile — N workers, one lowering pass per server start.
 
 pub mod config;
 pub mod coordinator;

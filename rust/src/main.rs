@@ -149,7 +149,8 @@ fn print_usage() {
          rtl <config> --net F --out DIR         emit Verilog bundle\n  \
          vcd <config> --net F --out FILE        dump pipeline waveform (GTKWave)\n  \
          serve <config> --net F [--rate R] [--requests N] [--batch-window US]\n  \
-         \x20     [--engine scalar|bitsliced] [--server-config FILE.toml]\n  \
+         \x20     [--workers N] [--queue-depth N] [--engine scalar|bitsliced]\n  \
+         \x20     [--server-config FILE.toml]\n  \
          suite <file.toml>                      run a batch of pipelines"
     );
 }
@@ -269,9 +270,11 @@ fn cmd_synth(pos: &[String], opts: &Opts) -> Result<()> {
 fn cmd_simulate(pos: &[String], opts: &Opts) -> Result<()> {
     let name = pos.first().context("usage: simulate <config> --net F")?;
     let (_m, ds) = load_bundle(name)?;
-    let net = LutNetwork::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
+    let net = Arc::new(LutNetwork::load(
+        &PathBuf::from(opts.get("net").context("--net required")?),
+    )?);
     let t0 = std::time::Instant::now();
-    let backend = engine::backend(opts.engine()?, &net)?;
+    let backend = engine::backend(opts.engine()?, net)?;
     let compile_s = t0.elapsed().as_secs_f64();
     let t0 = std::time::Instant::now();
     let acc = backend.accuracy(&ds.test_x, &ds.test_y);
@@ -349,8 +352,17 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
     if let Some(kind) = opts.get("engine") {
         cfg.backend = kind.parse().context("--engine")?;
     }
-    println!("serving {} at {:.0} req/s for {} requests (window {} us, {} engine)...",
-             net.name, rate, n_req, cfg.batch_window.as_micros(), cfg.backend);
+    if let Some(w) = opts.usize("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(d) = opts.usize("queue-depth")? {
+        cfg.queue_depth = d;
+    }
+    cfg.validate()?;
+    println!("serving {} at {:.0} req/s for {} requests \
+              (window {} us, {} engine, {} workers, queue depth {})...",
+             net.name, rate, n_req, cfg.batch_window.as_micros(), cfg.backend,
+             cfg.workers, cfg.queue_depth);
     let server = Server::start(net.clone(), cfg);
     let client = server.client();
     let workload = Workload::poisson(&ds, 99, n_req, rate);
@@ -378,5 +390,15 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
     println!("latency us : p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
              s.p50, s.p95, s.p99, s.max);
     println!("batch size : mean {:.1}  p95 {:.0}", bs.mean, bs.p95);
+    let st = server.stats();
+    println!("server     : {} served, {} rejected, {} batches (mean {:.1})",
+             st.served, st.rejected, st.batches, st.mean_batch);
+    println!("per worker : served {:?}, throughput [{}] req/s",
+             st.per_worker_served,
+             st.per_worker_rps
+                 .iter()
+                 .map(|r| format!("{r:.0}"))
+                 .collect::<Vec<_>>()
+                 .join(", "));
     Ok(())
 }

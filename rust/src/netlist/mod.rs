@@ -73,9 +73,15 @@ impl SimResult {
     }
 }
 
-/// The fabric simulator for one converted network.
-pub struct Simulator<'a> {
-    net: &'a LutNetwork,
+/// Precomputed evaluation plan for one network: scratch sizing + dense
+/// wiring. Split out of [`Simulator`] so backends with different network
+/// ownership (the borrowing `Simulator`, the `Arc`-owning
+/// `engine::ScalarEngine` the serving workers use) share one hot loop.
+///
+/// Every method takes the network again; it must be the same network the
+/// plan was built from (the plan caches only derived shapes and wiring).
+#[derive(Debug, Clone)]
+pub struct ScalarPlan {
     /// Widest layer (for scratch sizing).
     max_width: usize,
     /// Per layer: wiring flattened to `[num_luts * fan_in]` (dense, cache-
@@ -83,8 +89,8 @@ pub struct Simulator<'a> {
     flat_indices: Vec<Vec<u32>>,
 }
 
-impl<'a> Simulator<'a> {
-    pub fn new(net: &'a LutNetwork) -> Self {
+impl ScalarPlan {
+    pub fn new(net: &LutNetwork) -> Self {
         let max_width = net
             .layers
             .iter()
@@ -97,23 +103,18 @@ impl<'a> Simulator<'a> {
             .iter()
             .map(|l| l.indices.iter().flatten().copied().collect())
             .collect();
-        Simulator { net, max_width, flat_indices }
-    }
-
-    /// Latency in cycles of one sample (registered output per layer).
-    pub fn latency_cycles(&self) -> usize {
-        self.net.layers.len()
+        ScalarPlan { max_width, flat_indices }
     }
 
     /// Simulate a batch of raw feature rows (`[batch * input_size]` floats
     /// in [0, 1]); multi-threaded over the batch when it is large enough
     /// to amortize thread spawn (~10 us each on this substrate — small
     /// batches run inline, which keeps single-sample serving latency low).
-    pub fn simulate_batch(&self, x: &[f32]) -> SimResult {
-        let in_sz = self.net.input_size;
+    pub fn simulate_batch(&self, net: &LutNetwork, x: &[f32]) -> SimResult {
+        let in_sz = net.input_size;
         assert_eq!(x.len() % in_sz, 0, "ragged batch");
         let batch = x.len() / in_sz;
-        let n_class = self.net.n_class;
+        let n_class = net.n_class;
         let mut logit_codes = vec![0i16; batch * n_class];
 
         const PARALLEL_THRESHOLD: usize = 64;
@@ -122,7 +123,7 @@ impl<'a> Simulator<'a> {
             let mut nxt = vec![0u16; self.max_width];
             for sample in 0..batch {
                 let row = &x[sample * in_sz..(sample + 1) * in_sz];
-                self.simulate_one(row, &mut cur, &mut nxt,
+                self.simulate_one(net, row, &mut cur, &mut nxt,
                     &mut logit_codes[sample * n_class..(sample + 1) * n_class]);
             }
         } else {
@@ -137,7 +138,7 @@ impl<'a> Simulator<'a> {
                     let mut nxt = vec![0u16; self.max_width];
                     for (row_i, sample) in range.clone().enumerate() {
                         let row = &x[sample * in_sz..(sample + 1) * in_sz];
-                        self.simulate_one(row, &mut cur, &mut nxt,
+                        self.simulate_one(net, row, &mut cur, &mut nxt,
                             &mut out[row_i * n_class..(row_i + 1) * n_class]);
                     }
                     (range.start, out)
@@ -149,18 +150,18 @@ impl<'a> Simulator<'a> {
             }
         }
 
-        SimResult::from_logit_codes(logit_codes, n_class, self.latency_cycles())
+        SimResult::from_logit_codes(logit_codes, n_class, net.layers.len())
     }
 
     /// Evaluate one sample through all layers into `logits`.
-    fn simulate_one(&self, row: &[f32], cur: &mut Vec<u16>, nxt: &mut Vec<u16>,
-                    logits: &mut [i16]) {
-        let in_bits = self.net.input_bits;
+    fn simulate_one(&self, net: &LutNetwork, row: &[f32], cur: &mut Vec<u16>,
+                    nxt: &mut Vec<u16>, logits: &mut [i16]) {
+        let in_bits = net.input_bits;
         for (i, &v) in row.iter().enumerate() {
             cur[i] = quantize_input(v, in_bits);
         }
-        let n_layers = self.net.layers.len();
-        for (li, layer) in self.net.layers.iter().enumerate() {
+        let n_layers = net.layers.len();
+        for (li, layer) in net.layers.iter().enumerate() {
             let entries = layer.entries();
             let bits = layer.in_bits;
             let fan_in = layer.fan_in;
@@ -185,6 +186,29 @@ impl<'a> Simulator<'a> {
                 std::mem::swap(cur, nxt);
             }
         }
+    }
+}
+
+/// The fabric simulator for one converted network (borrowing; for an
+/// owning, `'static` backend see `engine::ScalarEngine`).
+pub struct Simulator<'a> {
+    net: &'a LutNetwork,
+    plan: ScalarPlan,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(net: &'a LutNetwork) -> Self {
+        Simulator { net, plan: ScalarPlan::new(net) }
+    }
+
+    /// Latency in cycles of one sample (registered output per layer).
+    pub fn latency_cycles(&self) -> usize {
+        self.net.layers.len()
+    }
+
+    /// Simulate a batch of raw feature rows; see [`ScalarPlan::simulate_batch`].
+    pub fn simulate_batch(&self, x: &[f32]) -> SimResult {
+        self.plan.simulate_batch(self.net, x)
     }
 
     /// Classification accuracy over a labelled set.

@@ -1,13 +1,25 @@
-//! Threaded inference server: request router + dynamic batcher over a
-//! configurable inference backend (the deployed "fabric").
+//! Multi-worker sharded inference serving runtime: a bounded request
+//! queue fanned out to N batcher threads over one shared compiled fabric.
 //!
 //! Architecture (vLLM-router-like, scaled to this system): clients submit
-//! feature vectors through a channel; the batcher thread collects requests
-//! up to `max_batch` or `batch_window`, runs one batched fabric inference
-//! through the configured [`engine::InferenceBackend`] (scalar simulator
-//! or the compiled bitsliced engine), and replies through per-request
-//! channels. Latency percentiles come from enqueue→reply timestamps.
+//! feature vectors into a bounded MPMC queue ([`crate::util::pool::BoundedQueue`]);
+//! each of `workers` batcher threads pulls requests up to `max_batch` or
+//! `batch_window`, runs one batched fabric inference through its own
+//! executor of the *shared* [`SharedFabric`] (the bitsliced program is
+//! compiled exactly once per server start, then referenced by every
+//! worker), and replies through per-request channels.
+//!
+//! Backpressure is explicit: [`Client::try_infer`] never blocks and
+//! returns [`ServerError::Overloaded`] when the queue is full (counted in
+//! [`ServerStats::rejected`]); the blocking [`Client::infer`] /
+//! [`Client::infer_async`] paths wait for queue space instead. Shutdown is
+//! graceful: dropping the [`Server`] closes the queue (new submissions
+//! fail fast with [`ServerError::Stopped`]), workers drain and answer the
+//! backlog, then join. Serving counters — requests served/rejected,
+//! batch-size histogram, per-worker throughput, latency percentiles — are
+//! kept in lock-free atomics and snapshot via [`Server::stats`].
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -16,19 +28,28 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::TomlDoc;
-use crate::engine::{self, BackendKind, InferenceBackend};
+use crate::engine::{BackendKind, BitNetlist, InferenceBackend, SharedFabric};
 use crate::luts::LutNetwork;
-use crate::netlist::Simulator;
+use crate::util::pool::{BoundedQueue, Pop, PushError};
+
+/// Upper bound on `workers` — more threads than this is a config bug.
+pub const MAX_WORKERS: usize = 512;
+/// Upper bound on `queue_depth` — a deeper queue only hides overload.
+pub const MAX_QUEUE_DEPTH: usize = 1 << 20;
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Maximum requests folded into one fabric batch.
     pub max_batch: usize,
-    /// How long the batcher waits to fill a batch.
+    /// How long a batcher waits to fill a batch.
     pub batch_window: Duration,
     /// Which inference engine executes the batches.
     pub backend: BackendKind,
+    /// Batcher threads sharing the request queue (and the compiled fabric).
+    pub workers: usize,
+    /// Bounded request-queue depth — the backpressure limit.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -37,6 +58,8 @@ impl Default for ServerConfig {
             max_batch: 256,
             batch_window: Duration::from_micros(200),
             backend: BackendKind::Scalar,
+            workers: 1,
+            queue_depth: 1024,
         }
     }
 }
@@ -48,14 +71,20 @@ impl ServerConfig {
     /// max_batch = 512
     /// batch_window_us = 100
     /// backend = "bitsliced"   # or "scalar" (the default)
+    /// workers = 4
+    /// queue_depth = 2048
     /// ```
     ///
     /// All keys are optional; unknown keys are rejected so typos fail
-    /// loudly.
+    /// loudly, and zero or absurd `workers` / `queue_depth` values are
+    /// config errors, not clamped surprises.
     pub fn parse_toml(text: &str) -> Result<ServerConfig> {
         let doc = TomlDoc::parse(text)?;
         for key in doc.root.keys() {
-            if !matches!(key.as_str(), "max_batch" | "batch_window_us" | "backend") {
+            if !matches!(
+                key.as_str(),
+                "max_batch" | "batch_window_us" | "backend" | "workers" | "queue_depth"
+            ) {
                 bail!("unknown server config key '{key}'");
             }
         }
@@ -72,7 +101,30 @@ impl ServerConfig {
         if let Some(v) = doc.root.get("backend") {
             cfg.backend = v.as_str()?.parse()?;
         }
+        if let Some(v) = doc.root.get("workers") {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.root.get("queue_depth") {
+            cfg.queue_depth = v.as_usize()?;
+        }
+        cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Range-check `workers` and `queue_depth` — shared by `parse_toml`
+    /// and the CLI flag path, so zero/absurd values fail loudly everywhere
+    /// instead of being clamped somewhere downstream.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.workers > MAX_WORKERS {
+            bail!("workers = {} out of range (1..={MAX_WORKERS})", self.workers);
+        }
+        if self.queue_depth == 0 || self.queue_depth > MAX_QUEUE_DEPTH {
+            bail!(
+                "queue_depth = {} out of range (1..={MAX_QUEUE_DEPTH})",
+                self.queue_depth
+            );
+        }
+        Ok(())
     }
 
     /// Load a server-config file from disk.
@@ -83,6 +135,30 @@ impl ServerConfig {
             .with_context(|| format!("parsing {}", path.display()))
     }
 }
+
+/// Why the serving runtime did not accept a request. Carried inside the
+/// `anyhow` error chain so callers can downcast and react (shed vs retry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerError {
+    /// The bounded request queue is full — explicit backpressure; shed
+    /// the request or retry later.
+    Overloaded,
+    /// The server has stopped (or is draining for shutdown).
+    Stopped,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServerError::Overloaded => {
+                write!(f, "server overloaded: request queue is full")
+            }
+            ServerError::Stopped => write!(f, "server stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 struct Request {
     features: Vec<f32>,
@@ -97,19 +173,163 @@ pub struct Reply {
     pub latency: Duration,
     /// Size of the fabric batch this request rode in.
     pub batch_size: usize,
+    /// Which worker thread served the batch.
+    pub worker: usize,
 }
 
-/// Handle for submitting requests.
+// ---------------------------------------------------------------------------
+// Stats
+
+/// Log2 latency buckets: bucket `i` covers `[2^i, 2^{i+1})` microseconds.
+const LAT_BUCKETS: usize = 32;
+/// Log2 batch-size buckets: bucket `i` covers sizes `[2^i, 2^{i+1})`.
+const BATCH_BUCKETS: usize = 16;
+
+fn log2_bucket(v: u64, n_buckets: usize) -> usize {
+    (63 - v.max(1).leading_zeros() as usize).min(n_buckets - 1)
+}
+
+/// Approximate percentile from a log2 histogram (linear interpolation
+/// inside the crossing bucket).
+fn hist_percentile(hist: &[u64], q: f64) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    let rank = q * total as f64;
+    let mut cum = 0f64;
+    for (i, &c) in hist.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let next = cum + c as f64;
+        if next >= rank {
+            let lo = (1u64 << i) as f64;
+            let hi = (1u64 << (i + 1)) as f64;
+            let frac = ((rank - cum) / c as f64).clamp(0.0, 1.0);
+            return lo + frac * (hi - lo);
+        }
+        cum = next;
+    }
+    (1u64 << hist.len().min(63)) as f64
+}
+
+/// Lock-free serving counters, written by workers and clients, snapshot
+/// on demand.
+struct StatsInner {
+    started: Instant,
+    served: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+    batch_hist: Vec<AtomicU64>,
+    lat_hist: Vec<AtomicU64>,
+    per_worker: Vec<AtomicU64>,
+}
+
+impl StatsInner {
+    fn new(workers: usize) -> Self {
+        StatsInner {
+            started: Instant::now(),
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_hist: (0..BATCH_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            lat_hist: (0..LAT_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            per_worker: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn record_batch(&self, worker: usize, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.served.fetch_add(size as u64, Ordering::Relaxed);
+        self.per_worker[worker].fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_hist[log2_bucket(size as u64, BATCH_BUCKETS)]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_latency(&self, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        self.lat_hist[log2_bucket(us, LAT_BUCKETS)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> ServerStats {
+        let served = self.served.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let uptime_s = self.started.elapsed().as_secs_f64();
+        let per_worker_served: Vec<u64> =
+            self.per_worker.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let lat: Vec<u64> =
+            self.lat_hist.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        ServerStats {
+            served,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch: served as f64 / batches.max(1) as f64,
+            batch_hist: self
+                .batch_hist
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
+            per_worker_rps: per_worker_served
+                .iter()
+                .map(|&s| s as f64 / uptime_s.max(1e-9))
+                .collect(),
+            per_worker_served,
+            latency_p50_us: hist_percentile(&lat, 0.50),
+            latency_p95_us: hist_percentile(&lat, 0.95),
+            latency_p99_us: hist_percentile(&lat, 0.99),
+            uptime_s,
+        }
+    }
+}
+
+/// Point-in-time snapshot of the serving counters.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    /// Requests answered (across all workers).
+    pub served: u64,
+    /// Requests shed by [`Client::try_infer`] backpressure.
+    pub rejected: u64,
+    /// Fabric batches executed.
+    pub batches: u64,
+    /// served / batches.
+    pub mean_batch: f64,
+    /// Batches per log2 size bucket (bucket `i` = sizes `[2^i, 2^{i+1})`).
+    pub batch_hist: Vec<u64>,
+    /// Requests served per worker thread.
+    pub per_worker_served: Vec<u64>,
+    /// Per-worker served-requests/s over the server's uptime.
+    pub per_worker_rps: Vec<f64>,
+    /// Approximate enqueue→reply latency percentiles (log2-bucketed), us.
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub uptime_s: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Client / Server
+
+struct ServerShared {
+    queue: BoundedQueue<Request>,
+    stats: StatsInner,
+}
+
+/// Handle for submitting requests; cheap to clone, usable from any thread,
+/// outlives the `Server` (submissions after shutdown fail with
+/// [`ServerError::Stopped`]).
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Request>,
+    shared: Arc<ServerShared>,
     input_size: usize,
 }
 
 impl Client {
-    /// Submit one request; blocks until the prediction is ready.
-    pub fn infer(&self, features: Vec<f32>) -> Result<Reply> {
-        let (reply_tx, reply_rx) = mpsc::channel();
+    fn check_features(&self, features: &[f32]) -> Result<()> {
         if features.len() != self.input_size {
             bail!(
                 "feature vector has {} values, model expects {}",
@@ -117,91 +337,171 @@ impl Client {
                 self.input_size
             );
         }
-        self.tx
-            .send(Request { features, enqueued: Instant::now(), reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        reply_rx
-            .recv()
+        Ok(())
+    }
+
+    fn request(&self, features: Vec<f32>) -> (Request, Receiver<Reply>) {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        (
+            Request { features, enqueued: Instant::now(), reply: reply_tx },
+            reply_rx,
+        )
+    }
+
+    /// Submit one request; applies backpressure (blocks while the queue is
+    /// full) and then blocks until the prediction is ready.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Reply> {
+        let rx = self.infer_async(features)?;
+        rx.recv()
             .map_err(|_| anyhow::anyhow!("server dropped request"))
     }
 
-    /// Submit asynchronously; returns the receiver.
+    /// Submit asynchronously; returns the reply receiver. Blocks only
+    /// while the queue is full.
     pub fn infer_async(&self, features: Vec<f32>) -> Result<Receiver<Reply>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        if features.len() != self.input_size {
-            bail!("bad feature length");
+        self.check_features(&features)?;
+        let (req, rx) = self.request(features);
+        self.shared
+            .queue
+            .push(req)
+            .map_err(|_| anyhow::Error::from(ServerError::Stopped))?;
+        Ok(rx)
+    }
+
+    /// Non-blocking submit — the backpressure edge. A full queue returns
+    /// [`ServerError::Overloaded`] (counted in [`ServerStats::rejected`]);
+    /// a stopped server returns [`ServerError::Stopped`]. Both downcast
+    /// from the `anyhow` error.
+    pub fn try_infer(&self, features: Vec<f32>) -> Result<Receiver<Reply>> {
+        self.check_features(&features)?;
+        let (req, rx) = self.request(features);
+        match self.shared.queue.try_push(req) {
+            Ok(()) => Ok(rx),
+            Err(PushError::Full(_)) => {
+                self.shared.stats.record_rejected();
+                Err(ServerError::Overloaded.into())
+            }
+            Err(PushError::Closed(_)) => Err(ServerError::Stopped.into()),
         }
-        self.tx
-            .send(Request { features, enqueued: Instant::now(), reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(reply_rx)
+    }
+
+    /// Serving counters (shared with [`Server::stats`]).
+    pub fn stats(&self) -> ServerStats {
+        self.shared.stats.snapshot()
     }
 }
 
-/// The running server; dropping it stops the batcher thread.
+/// The running server; dropping it closes the queue, drains and answers
+/// the backlog, and joins every worker.
 pub struct Server {
-    tx: Option<Sender<Request>>,
-    handle: Option<JoinHandle<()>>,
+    shared: Arc<ServerShared>,
+    fabric: SharedFabric,
+    handles: Vec<JoinHandle<()>>,
     input_size: usize,
 }
 
 impl Server {
-    /// Start serving a converted network.
+    /// Start serving a converted network with `cfg.workers` batcher
+    /// threads over one shared fabric. The lowering pass (for the
+    /// bitsliced backend) runs exactly once, here; each worker only gets a
+    /// cheap executor. A network the lowering pass rejects still serves —
+    /// on the scalar fallback — rather than taking the server down.
+    ///
+    /// Start never fails: a hand-built `cfg` that skipped
+    /// [`ServerConfig::validate`] has its `workers`/`queue_depth` clamped
+    /// into range as a last resort — loudly, on stderr (the parse and CLI
+    /// paths have already rejected such values as errors).
     pub fn start(net: Arc<LutNetwork>, cfg: ServerConfig) -> Server {
-        let (tx, rx) = mpsc::channel::<Request>();
+        if let Err(e) = cfg.validate() {
+            eprintln!(
+                "server: invalid config ({e:#}); clamping into range — \
+                 call ServerConfig::validate() to reject this earlier"
+            );
+        }
+        let workers = cfg.workers.clamp(1, MAX_WORKERS);
         let input_size = net.input_size;
-        let handle = std::thread::spawn(move || batcher_loop(net, cfg, rx));
-        Server { tx: Some(tx), handle: Some(handle), input_size }
+        let fabric = match SharedFabric::compile(cfg.backend, net.clone()) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!(
+                    "server: {} backend unavailable ({e:#}); falling back to scalar",
+                    cfg.backend
+                );
+                SharedFabric::scalar(net)
+            }
+        };
+        let shared = Arc::new(ServerShared {
+            queue: BoundedQueue::new(cfg.queue_depth.clamp(1, MAX_QUEUE_DEPTH)),
+            stats: StatsInner::new(workers),
+        });
+        let max_batch = cfg.max_batch.max(1);
+        let window = cfg.batch_window;
+        // Executors are built here, synchronously, before any thread spawns
+        // — so the compile-exactly-once property is a construction-time
+        // invariant, not a runtime race.
+        let handles = (0..workers)
+            .map(|w| {
+                let exec = fabric.executor();
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(w, exec, sh, max_batch, window))
+            })
+            .collect();
+        Server { shared, fabric, handles, input_size }
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone().unwrap(), input_size: self.input_size }
+        Client { shared: self.shared.clone(), input_size: self.input_size }
+    }
+
+    /// Number of worker threads actually running.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Snapshot of the serving counters.
+    pub fn stats(&self) -> ServerStats {
+        self.shared.stats.snapshot()
+    }
+
+    /// The compiled program every worker shares (`None` on the scalar
+    /// backend — there is nothing compiled to share).
+    pub fn shared_program(&self) -> Option<Arc<BitNetlist>> {
+        self.fabric.program().cloned()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
+        self.shared.queue.close();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn batcher_loop(net: Arc<LutNetwork>, cfg: ServerConfig, rx: Receiver<Request>) {
-    // Build the configured backend inside the serving thread (compilation
-    // of the bitsliced engine happens once, before the first request).
-    // A network the lowering pass rejects still serves — on the scalar
-    // fallback — rather than taking the server down.
-    let backend: Box<dyn InferenceBackend + '_> =
-        match engine::backend(cfg.backend, &net) {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!(
-                "server: {} backend unavailable ({e:#}); falling back to scalar",
-                cfg.backend
-            );
-            Box::new(Simulator::new(&net))
-        }
-    };
-    let in_sz = net.input_size;
+fn worker_loop(
+    worker: usize,
+    backend: Box<dyn InferenceBackend>,
+    shared: Arc<ServerShared>,
+    max_batch: usize,
+    window: Duration,
+) {
     loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders gone -> shutdown
-        };
+        // Block for the first request of a batch; `None` = closed + drained.
+        let Some(first) = shared.queue.pop() else { return };
+        let in_sz = first.features.len();
         let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch {
+        let deadline = Instant::now() + window;
+        while batch.len() < max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            match shared.queue.pop_timeout(deadline - now) {
+                Pop::Item(r) => batch.push(r),
+                // Closed: finish this batch; the outer pop() exits once
+                // the backlog is drained.
+                Pop::TimedOut | Pop::Closed => break,
             }
         }
         // One fabric run for the whole batch.
@@ -211,11 +511,15 @@ fn batcher_loop(net: Arc<LutNetwork>, cfg: ServerConfig, rx: Receiver<Request>) 
         }
         let result = backend.run_batch(&x);
         let bs = batch.len();
+        shared.stats.record_batch(worker, bs);
         for (req, &pred) in batch.into_iter().zip(&result.predictions) {
+            let latency = req.enqueued.elapsed();
+            shared.stats.record_latency(latency);
             let _ = req.reply.send(Reply {
                 prediction: pred,
-                latency: req.enqueued.elapsed(),
+                latency,
                 batch_size: bs,
+                worker,
             });
         }
     }
@@ -225,6 +529,7 @@ fn batcher_loop(net: Arc<LutNetwork>, cfg: ServerConfig, rx: Receiver<Request>) 
 mod tests {
     use super::*;
     use crate::luts::random_network;
+    use crate::netlist::Simulator;
 
     #[test]
     fn serves_and_matches_direct_simulation() {
@@ -260,20 +565,28 @@ mod tests {
     #[test]
     fn config_parses_from_toml_subset() {
         let cfg = ServerConfig::parse_toml(
-            "max_batch = 512\nbatch_window_us = 100\nbackend = \"bitsliced\"",
+            "max_batch = 512\nbatch_window_us = 100\nbackend = \"bitsliced\"\n\
+             workers = 4\nqueue_depth = 64",
         )
         .unwrap();
         assert_eq!(cfg.max_batch, 512);
         assert_eq!(cfg.batch_window, Duration::from_micros(100));
         assert_eq!(cfg.backend, BackendKind::Bitsliced);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.queue_depth, 64);
         // All keys optional -> defaults (backend defaults to Scalar).
         let d = ServerConfig::parse_toml("").unwrap();
         assert_eq!(d.backend, BackendKind::Scalar);
         assert_eq!(d.max_batch, ServerConfig::default().max_batch);
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.queue_depth, 1024);
         // Typos and bad values fail loudly.
         assert!(ServerConfig::parse_toml("max_bach = 4").is_err());
         assert!(ServerConfig::parse_toml("backend = \"fpga\"").is_err());
         assert!(ServerConfig::parse_toml("[[run]]\nconfig = \"x\"").is_err());
+        assert!(ServerConfig::parse_toml("workers = 0").is_err());
+        assert!(ServerConfig::parse_toml("workers = 100000").is_err());
+        assert!(ServerConfig::parse_toml("queue_depth = 0").is_err());
     }
 
     #[test]
@@ -308,5 +621,133 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn worker_pool_shares_one_compiled_program() {
+        let net = Arc::new(random_network(41, 8, 2, &[6, 3], 3, 2, 4));
+        let server = Server::start(net.clone(), ServerConfig {
+            backend: BackendKind::Bitsliced,
+            workers: 4,
+            ..Default::default()
+        });
+        assert_eq!(server.workers(), 4);
+        let prog = server.shared_program().expect("bitsliced fabric has a program");
+        // ONE compiled BitNetlist, referenced by: the fabric + this clone
+        // + each of the 4 worker executors. If any worker had compiled its
+        // own program, this count (and the program identity) would differ.
+        assert_eq!(Arc::strong_count(&prog), 4 + 2);
+        // The scalar fabric has nothing compiled to share.
+        let scalar = Server::start(net, ServerConfig { workers: 3, ..Default::default() });
+        assert!(scalar.shared_program().is_none());
+        assert_eq!(scalar.workers(), 3);
+    }
+
+    #[test]
+    fn multi_worker_serving_matches_direct_simulation() {
+        let net = Arc::new(random_network(42, 8, 2, &[6, 3], 3, 2, 4));
+        let sim = Simulator::new(&net);
+        let server = Server::start(net.clone(), ServerConfig {
+            workers: 4,
+            backend: BackendKind::Bitsliced,
+            ..Default::default()
+        });
+        let client = server.client();
+        for i in 0..64 {
+            let feats: Vec<f32> = (0..8).map(|j| ((i * 3 + j) % 9) as f32 / 9.0).collect();
+            let want = sim.simulate_batch(&feats).predictions[0];
+            let got = client.infer(feats).unwrap();
+            assert_eq!(got.prediction, want);
+            assert!(got.worker < 4);
+        }
+    }
+
+    #[test]
+    fn try_infer_sheds_with_overloaded_when_queue_is_full() {
+        let net = Arc::new(random_network(44, 6, 2, &[4, 2], 2, 2, 4));
+        let server = Server::start(net, ServerConfig {
+            workers: 1,
+            queue_depth: 1,
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            ..Default::default()
+        });
+        let client = server.client();
+        let feats = vec![0.5f32; 6];
+        let mut pending = Vec::new();
+        let mut rejected = 0u64;
+        let t0 = Instant::now();
+        // Flood a depth-1 queue; the single worker cannot keep up with a
+        // tight submit loop, so Overloaded must surface quickly.
+        while rejected == 0 && t0.elapsed() < Duration::from_secs(10) {
+            match client.try_infer(feats.clone()) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => {
+                    assert_eq!(
+                        e.downcast_ref::<ServerError>(),
+                        Some(&ServerError::Overloaded)
+                    );
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "depth-1 queue never reported Overloaded");
+        assert_eq!(server.stats().rejected, rejected);
+        // Every accepted request is still answered.
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+    }
+
+    #[test]
+    fn stats_account_served_requests_batches_and_latency() {
+        let net = Arc::new(random_network(45, 6, 2, &[4, 2], 2, 2, 4));
+        let server = Server::start(net, ServerConfig { workers: 2, ..Default::default() });
+        let client = server.client();
+        for i in 0..40 {
+            let feats: Vec<f32> = (0..6).map(|j| ((i + j) % 5) as f32 / 5.0).collect();
+            client.infer(feats).unwrap();
+        }
+        let s = server.stats();
+        assert_eq!(s.served, 40);
+        assert_eq!(s.rejected, 0);
+        assert!(s.batches >= 1 && s.batches <= 40);
+        assert!((s.mean_batch - s.served as f64 / s.batches as f64).abs() < 1e-9);
+        assert_eq!(s.per_worker_served.len(), 2);
+        assert_eq!(s.per_worker_served.iter().sum::<u64>(), 40);
+        assert_eq!(s.batch_hist.iter().sum::<u64>(), s.batches);
+        assert!(s.latency_p50_us.is_finite() && s.latency_p50_us > 0.0);
+        assert!(s.latency_p99_us >= s.latency_p50_us);
+        assert!(s.uptime_s > 0.0);
+        // Client sees the same counters.
+        assert_eq!(client.stats().served, 40);
+    }
+
+    #[test]
+    fn stopped_server_fails_fast_with_explicit_error() {
+        let net = Arc::new(random_network(46, 6, 2, &[4, 2], 2, 2, 4));
+        let server = Server::start(net, ServerConfig::default());
+        let client = server.client();
+        drop(server);
+        let err = client.infer(vec![0.0; 6]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServerError>(), Some(&ServerError::Stopped));
+        assert_eq!(err.to_string(), "server stopped");
+        let err = client.try_infer(vec![0.0; 6]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServerError>(), Some(&ServerError::Stopped));
+    }
+
+    #[test]
+    fn log2_histogram_percentiles_are_sane() {
+        // 100 samples in bucket 3 ([8, 16)): every percentile lands there.
+        let mut hist = vec![0u64; 8];
+        hist[3] = 100;
+        let p50 = hist_percentile(&hist, 0.50);
+        assert!((8.0..16.0).contains(&p50), "p50 = {p50}");
+        assert!(hist_percentile(&hist, 0.99) >= p50);
+        assert!(hist_percentile(&[0u64; 8], 0.5).is_nan());
+        assert_eq!(log2_bucket(0, 8), 0);
+        assert_eq!(log2_bucket(1, 8), 0);
+        assert_eq!(log2_bucket(9, 8), 3);
+        assert_eq!(log2_bucket(u64::MAX, 8), 7);
     }
 }

@@ -1,6 +1,11 @@
 //! Scoped data-parallel helpers over std threads (tokio is not vendored in
 //! this offline image; the netlist simulator and workload sweeps only need
-//! fork-join parallelism, which `std::thread::scope` provides cleanly).
+//! fork-join parallelism, which `std::thread::scope` provides cleanly),
+//! plus the bounded MPMC queue the serving runtime shards work over.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Number of worker threads to use (`NEURALUT_THREADS` overrides).
 pub fn num_threads() -> usize {
@@ -72,6 +77,150 @@ where
     });
 }
 
+/// Why a push into a [`BoundedQueue`] was not accepted. The item is handed
+/// back so the caller can reply to it or retry.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity — shed load or wait for a consumer.
+    Full(T),
+    /// Queue closed — no new work is accepted.
+    Closed(T),
+}
+
+/// Outcome of a timed pop.
+#[derive(Debug)]
+pub enum Pop<T> {
+    Item(T),
+    /// Nothing arrived before the deadline (the queue may still get items).
+    TimedOut,
+    /// Closed *and* drained: no item will ever arrive again.
+    Closed,
+}
+
+/// Bounded multi-producer multi-consumer queue over `Mutex` + `Condvar`
+/// (std `mpsc` is single-consumer, and crossbeam is not vendored offline).
+///
+/// Semantics chosen for serving: [`try_push`](Self::try_push) is the
+/// backpressure primitive (never blocks, reports `Full` explicitly);
+/// [`push`](Self::push) blocks producers while full; closing wakes every
+/// waiter — producers fail fast, consumers drain the backlog and only then
+/// observe closure. That drain-then-closed order is what lets a server
+/// shut down gracefully: every accepted request is still answered.
+pub struct BoundedQueue<T> {
+    capacity: usize,
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        BoundedQueue {
+            capacity: capacity.max(1),
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space; `Err(item)` once closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.capacity {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: `None` only once closed *and* fully drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with a deadline; distinguishes "nothing yet" from "never again".
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            st = self.not_empty.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Reject future pushes and wake every waiter. Items already queued
+    /// remain poppable.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +255,62 @@ mod tests {
         parallel_chunks_mut::<u32, _>(&mut [], 0, |_, _| {});
         let v: Vec<usize> = parallel_ranges(0, 4, |_, r| r.len());
         assert!(v.iter().sum::<usize>() == 0);
+    }
+
+    #[test]
+    fn queue_is_fifo_and_bounded() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert!(matches!(
+            q.pop_timeout(Duration::from_millis(1)),
+            Pop::TimedOut
+        ));
+    }
+
+    #[test]
+    fn closed_queue_drains_then_reports_closed() {
+        let q = BoundedQueue::new(4);
+        q.try_push("a").unwrap();
+        q.close();
+        match q.try_push("b") {
+            Err(PushError::Closed("b")) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // backlog still drains before closure is observed
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), None);
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
+    }
+
+    #[test]
+    fn close_wakes_blocked_producers_and_consumers() {
+        use std::sync::Arc;
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(0u32).unwrap();
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || q.push(7)) // blocks: queue full
+        };
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                // drains the backlog (0, and 7 if the producer won the
+                // race before close), then sees None
+                while q.pop().is_some() {}
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        // producer either got its item in before close or had it returned
+        let _ = producer.join().unwrap();
+        consumer.join().unwrap();
     }
 }

@@ -2,11 +2,14 @@
 //! substrates: netlist simulation, synthesis model, RTL packing, LUT
 //! serialization, sparsity/wiring invariants, server batching.
 
+use std::time::Duration;
+
 use neuralut::engine::BitslicedEngine;
 use neuralut::luts::{random_network, LutNetwork};
 use neuralut::netlist::{quantize_input, Simulator};
 use neuralut::nn::formulas;
 use neuralut::rtl;
+use neuralut::server::{ServerConfig, MAX_QUEUE_DEPTH, MAX_WORKERS};
 use neuralut::synth::{self, boolfn, robdd};
 use neuralut::util::check::{forall, forall_res};
 use neuralut::util::rng::Rng;
@@ -113,6 +116,70 @@ fn prop_bitsliced_engine_is_bit_exact_against_scalar_simulator() {
             }
             Ok(())
         },
+    );
+}
+
+#[test]
+fn prop_server_config_toml_roundtrips() {
+    // Generated valid docs (all five keys, shuffled order) parse back to
+    // exactly the values written — including the new `workers` and
+    // `queue_depth` keys.
+    forall_res(
+        0x5C,
+        80,
+        |r| {
+            let workers = 1 + r.below(MAX_WORKERS);
+            let queue_depth = 1 + r.below(4096);
+            let max_batch = 1 + r.below(2048);
+            let window_us = r.below(5000);
+            let backend = if r.below(2) == 0 { "scalar" } else { "bitsliced" };
+            let mut lines = vec![
+                format!("workers = {workers}"),
+                format!("queue_depth = {queue_depth}"),
+                format!("max_batch = {max_batch}"),
+                format!("batch_window_us = {window_us}"),
+                format!("backend = \"{backend}\"  # engine"),
+            ];
+            r.shuffle(&mut lines);
+            (lines.join("\n"), workers, queue_depth, max_batch, window_us, backend)
+        },
+        |(doc, workers, queue_depth, max_batch, window_us, backend)| {
+            let cfg = ServerConfig::parse_toml(doc).map_err(|e| e.to_string())?;
+            if cfg.workers != *workers {
+                return Err(format!("workers {} != {workers}", cfg.workers));
+            }
+            if cfg.queue_depth != *queue_depth {
+                return Err(format!("queue_depth {} != {queue_depth}", cfg.queue_depth));
+            }
+            if cfg.max_batch != *max_batch {
+                return Err(format!("max_batch {} != {max_batch}", cfg.max_batch));
+            }
+            if cfg.batch_window != Duration::from_micros(*window_us as u64) {
+                return Err("batch_window did not round-trip".into());
+            }
+            if cfg.backend.as_str() != *backend {
+                return Err(format!("backend {} != {backend}", cfg.backend));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_server_config_rejects_zero_absurd_and_unknown() {
+    forall(
+        0x5D,
+        60,
+        |r| match r.below(7) {
+            0 => "workers = 0".to_string(),
+            1 => format!("workers = {}", MAX_WORKERS + 1 + r.below(1_000_000)),
+            2 => "queue_depth = 0".to_string(),
+            3 => format!("queue_depth = {}", MAX_QUEUE_DEPTH + 1 + r.below(1_000_000)),
+            4 => format!("wrokers = {}", 1 + r.below(8)), // typo'd key
+            5 => "workers = -3".to_string(),
+            _ => format!("queue_depth = \"{}\"", 1 + r.below(8)), // wrong type
+        },
+        |doc| ServerConfig::parse_toml(doc).is_err(),
     );
 }
 

@@ -1,0 +1,192 @@
+//! Serving-runtime concurrency tests: differential bit-exactness under
+//! bursty multi-client load across worker counts and backends, graceful
+//! shutdown with requests in flight (watchdog-guarded), and the
+//! feature-length error contract shared by every submission path.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use neuralut::engine::BackendKind;
+use neuralut::luts::random_network;
+use neuralut::netlist::Simulator;
+use neuralut::server::{Server, ServerConfig, ServerError};
+
+/// Deterministic per-(thread, request) feature vector.
+fn feats_for(thread: usize, i: usize, n_feat: usize) -> Vec<f32> {
+    (0..n_feat)
+        .map(|j| ((thread * 31 + i * 7 + j) % 17) as f32 / 17.0)
+        .collect()
+}
+
+/// Run `f` on a helper thread and panic if it does not finish in time —
+/// turns a deadlock into a test failure instead of a hung `cargo test`.
+/// A panic inside `f` is re-raised as itself, not mislabeled as a deadlock.
+fn with_watchdog<F: FnOnce() + Send + 'static>(label: &str, timeout: Duration, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(timeout) {
+        Ok(()) => {
+            handle.join().unwrap();
+        }
+        // Sender dropped without sending: the closure panicked — propagate
+        // the original panic payload.
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = handle.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{label}: deadlocked (watchdog fired after {timeout:?})");
+        }
+    }
+}
+
+#[test]
+fn concurrent_bursty_clients_are_bit_exact_across_workers_and_backends() {
+    let net = Arc::new(random_network(71, 8, 2, &[6, 3], 3, 2, 4));
+    // Burst sizes deliberately straddle the bitslice engine's 64-lane
+    // word: 63 and 65 force ragged tail blocks inside served batches.
+    let bursts = [1usize, 63, 65, 7];
+    for workers in [1usize, 2, 8] {
+        for backend in [BackendKind::Scalar, BackendKind::Bitsliced] {
+            let server = Server::start(net.clone(), ServerConfig {
+                workers,
+                max_batch: 32,
+                batch_window: Duration::from_micros(200),
+                backend,
+                ..Default::default()
+            });
+            let client = server.client();
+            std::thread::scope(|scope| {
+                for t in 0..4usize {
+                    let c = client.clone();
+                    let net = net.clone();
+                    scope.spawn(move || {
+                        let sim = Simulator::new(&net);
+                        for (b, &size) in bursts.iter().enumerate() {
+                            // Burst: submit all async, then collect — the
+                            // servers sees overlapping multi-client load.
+                            let mut pending = Vec::with_capacity(size);
+                            let mut want = Vec::with_capacity(size);
+                            for i in 0..size {
+                                let f = feats_for(t, b * 1000 + i, 8);
+                                want.push(sim.simulate_batch(&f).predictions[0]);
+                                pending.push(c.infer_async(f).unwrap());
+                            }
+                            for (rx, want) in pending.into_iter().zip(want) {
+                                let got = rx.recv().unwrap();
+                                assert_eq!(
+                                    got.prediction, want,
+                                    "diverged: workers={workers} backend={backend}"
+                                );
+                                assert!(got.worker < workers);
+                            }
+                        }
+                    });
+                }
+            });
+            let total: usize = bursts.iter().sum::<usize>() * 4;
+            let s = server.stats();
+            assert_eq!(
+                s.served, total as u64,
+                "stats lost requests: workers={workers} backend={backend}"
+            );
+            assert_eq!(s.per_worker_served.iter().sum::<u64>(), total as u64);
+        }
+    }
+}
+
+#[test]
+fn dropping_server_with_requests_in_flight_answers_them_all() {
+    with_watchdog("shutdown-drain", Duration::from_secs(120), || {
+        for backend in [BackendKind::Scalar, BackendKind::Bitsliced] {
+            let net = Arc::new(random_network(72, 6, 2, &[4, 2], 2, 2, 4));
+            let server = Server::start(net, ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                batch_window: Duration::from_micros(500),
+                backend,
+                ..Default::default()
+            });
+            let client = server.client();
+            let mut pending = Vec::new();
+            for i in 0..300usize {
+                let f: Vec<f32> = (0..6).map(|j| ((i + j) % 9) as f32 / 9.0).collect();
+                pending.push(client.infer_async(f).unwrap());
+            }
+            // Drop with (almost certainly) requests still queued: shutdown
+            // must drain — every accepted request gets an answer.
+            drop(server);
+            for rx in pending {
+                rx.recv().expect("accepted request dropped at shutdown");
+            }
+            // And new submissions fail fast with the explicit error.
+            let err = client.infer(vec![0.0; 6]).unwrap_err();
+            assert_eq!(err.downcast_ref::<ServerError>(), Some(&ServerError::Stopped));
+        }
+    });
+}
+
+#[test]
+fn shutdown_races_with_live_clients_without_deadlock() {
+    with_watchdog("shutdown-race", Duration::from_secs(120), || {
+        let net = Arc::new(random_network(73, 6, 2, &[4, 2], 2, 2, 4));
+        let server = Server::start(net, ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_window: Duration::from_micros(100),
+            ..Default::default()
+        });
+        let client = server.client();
+        let clients: Vec<_> = (0..4usize)
+            .map(|t| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let mut answered = 0usize;
+                    for i in 0.. {
+                        let f = feats_for(t, i, 6);
+                        match c.infer(f) {
+                            Ok(_) => answered += 1,
+                            Err(e) => {
+                                // The only acceptable refusal is Stopped.
+                                assert_eq!(
+                                    e.downcast_ref::<ServerError>(),
+                                    Some(&ServerError::Stopped),
+                                    "unexpected error: {e:#}"
+                                );
+                                break;
+                            }
+                        }
+                    }
+                    answered
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        drop(server); // close + drain + join, racing the submit loops
+        for h in clients {
+            // Every client exits; whatever was accepted was answered.
+            let _ = h.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn infer_and_infer_async_report_identical_feature_length_errors() {
+    // Regression: `infer_async` used to report a bare "bad feature
+    // length" while `infer` named both lengths. All submission paths must
+    // share the detailed message.
+    let net = Arc::new(random_network(74, 8, 2, &[4, 2], 2, 2, 4));
+    let server = Server::start(net, ServerConfig::default());
+    let client = server.client();
+    let e_sync = client.infer(vec![0.0; 3]).unwrap_err().to_string();
+    let e_async = client.infer_async(vec![0.0; 3]).unwrap_err().to_string();
+    let e_try = client.try_infer(vec![0.0; 3]).unwrap_err().to_string();
+    assert_eq!(e_sync, "feature vector has 3 values, model expects 8");
+    assert_eq!(e_async, e_sync);
+    assert_eq!(e_try, e_sync);
+}
