@@ -1,14 +1,14 @@
-//! Fabric inference throughput: the scalar simulator (per-sample table
-//! lookups) vs the compiled bitsliced engine (64 samples per word) across
-//! the paper's circuit scales — the inference-latency substrate behind
-//! Fig. 6 / Table III and the serving hot path. Also reports
-//! single-sample latency (scalar path) and writes `BENCH_engine.json`
-//! rows (samples/sec for both backends) so the perf trajectory is tracked
-//! PR over PR.
+//! Fabric inference throughput: the scalar backend (per-sample table
+//! lookups) vs the compiled bitsliced backend (64 samples per word)
+//! across the paper's circuit scales — the inference-latency substrate
+//! behind Fig. 6 / Table III and the serving hot path. Both run as
+//! sessions of the unified `Model::compile` API, selected by registry
+//! name. Also reports single-sample latency (scalar path) and writes
+//! `BENCH_engine.json` rows (samples/sec for both backends) so the perf
+//! trajectory is tracked PR over PR.
 
-use neuralut::engine::BitslicedEngine;
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::random_network;
-use neuralut::netlist::Simulator;
 use neuralut::util::bench::bench;
 use neuralut::util::json::{obj, Json};
 
@@ -27,15 +27,23 @@ fn main() {
     let n_cases = cases.len();
     let mut rows: Vec<Json> = Vec::new();
     for (name, input, bits, widths, fan_in, beta) in cases {
-        let net = random_network(1, input, bits, &widths, fan_in, beta, 4);
-        let sim = Simulator::new(&net);
+        let model = Model::from_network(
+            random_network(1, input, bits, &widths, fan_in, beta, 4),
+        );
+        let scalar = model
+            .compile(&FabricOptions::new().backend("scalar"))
+            .expect("scalar compile")
+            .session();
         let t0 = std::time::Instant::now();
-        let eng = BitslicedEngine::compile(&net).expect("lowering failed");
+        let fabric = model
+            .compile(&FabricOptions::new().backend("bitsliced"))
+            .expect("lowering failed");
         let compile_s = t0.elapsed().as_secs_f64();
+        let bitsliced = fabric.session();
         println!(
             "-- {name}: {} L-LUTs, compiled to {} word ops in {:.3}s",
-            net.num_luts(),
-            eng.netlist().num_ops(),
+            model.num_luts(),
+            fabric.bit_netlist().expect("bitsliced program").num_ops(),
             compile_s
         );
         let batch = 4096usize;
@@ -49,7 +57,7 @@ fn main() {
             200,
             Some((batch as f64, "samples")),
             || {
-                std::hint::black_box(sim.simulate_batch(&x));
+                std::hint::black_box(scalar.infer_batch(&x).unwrap());
             },
         );
         let m_bits = bench(
@@ -59,7 +67,7 @@ fn main() {
             200,
             Some((batch as f64, "samples")),
             || {
-                std::hint::black_box(eng.run_batch(&x));
+                std::hint::black_box(bitsliced.infer_batch(&x).unwrap());
             },
         );
         let scalar_sps = m_scalar.throughput.map(|(t, _)| t).unwrap_or(0.0);
@@ -73,8 +81,11 @@ fn main() {
         rows.push(obj(vec![
             ("name", Json::Str(name.to_string())),
             ("batch", Json::Num(batch as f64)),
-            ("l_luts", Json::Num(net.num_luts() as f64)),
-            ("word_ops", Json::Num(eng.netlist().num_ops() as f64)),
+            ("l_luts", Json::Num(model.num_luts() as f64)),
+            (
+                "word_ops",
+                Json::Num(fabric.bit_netlist().expect("bitsliced program").num_ops() as f64),
+            ),
             ("compile_s", Json::Num(compile_s)),
             ("scalar_samples_per_s", Json::Num(scalar_sps)),
             ("bitsliced_samples_per_s", Json::Num(bits_sps)),
@@ -89,7 +100,7 @@ fn main() {
             50_000,
             Some((1.0, "samples")),
             || {
-                std::hint::black_box(sim.simulate_batch(&one));
+                std::hint::black_box(scalar.infer_batch(&one).unwrap());
             },
         );
     }

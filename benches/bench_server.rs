@@ -7,26 +7,27 @@
 //! * open-loop shed — paced Poisson arrivals submitted with the
 //!   non-blocking `try_infer`, measuring served rate vs rejection rate.
 //!
+//! Backends are selected by registry name through the unified
+//! `Model::compile` path — adding a backend to the sweep is one string.
 //! Writes `BENCH_server.json` (throughput, p50/p99 latency, rejection
 //! rate per row) so the serving perf trajectory is tracked PR over PR.
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use neuralut::data::{Dataset, Workload};
-use neuralut::engine::BackendKind;
-use neuralut::luts::{random_network, LutNetwork};
-use neuralut::server::{Server, ServerConfig, ServerStats};
+use neuralut::fabric::{FabricOptions, Model};
+use neuralut::luts::random_network;
+use neuralut::server::ServerStats;
 use neuralut::util::json::{obj, Json};
 use neuralut::util::stats;
 
 /// Closed-loop drain: submit `n_req` async requests as fast as the
 /// bounded queue accepts them (blocking on backpressure) and time until
 /// every reply lands.
-fn drain(net: Arc<LutNetwork>, cfg: ServerConfig, n_req: usize)
+fn drain(model: &Model, opts: &FabricOptions, n_req: usize)
          -> (f64, stats::Summary, ServerStats) {
-    let ds = Dataset::synthetic(1, 16, 256, net.input_size, net.n_class);
-    let server = Server::start(net, cfg);
+    let ds = Dataset::synthetic(1, 16, 256, model.input_size(), model.n_class());
+    let server = model.compile(opts).expect("compile").serve();
     let client = server.client();
     let workload = Workload::poisson(&ds, 2, n_req, 1e9); // effectively instant
     let t0 = Instant::now();
@@ -44,10 +45,10 @@ fn drain(net: Arc<LutNetwork>, cfg: ServerConfig, n_req: usize)
 
 /// Open-loop shed: paced arrivals through `try_infer`; a full queue sheds
 /// (Overloaded) instead of blocking.
-fn shed(net: Arc<LutNetwork>, cfg: ServerConfig, rate: f64, n_req: usize)
+fn shed(model: &Model, opts: &FabricOptions, rate: f64, n_req: usize)
         -> (f64, f64, stats::Summary) {
-    let ds = Dataset::synthetic(1, 16, 256, net.input_size, net.n_class);
-    let server = Server::start(net, cfg);
+    let ds = Dataset::synthetic(1, 16, 256, model.input_size(), model.n_class());
+    let server = model.compile(opts).expect("compile").serve();
     let client = server.client();
     let workload = Workload::poisson(&ds, 3, n_req, rate);
     let t0 = Instant::now();
@@ -77,37 +78,36 @@ fn shed(net: Arc<LutNetwork>, cfg: ServerConfig, rate: f64, n_req: usize)
 
 fn main() {
     println!("== bench_server: multi-worker sharded serving runtime ==");
-    let net = Arc::new(random_network(11, 196, 2, &[64, 32, 10], 6, 2, 4));
+    let model = Model::from_network(random_network(11, 196, 2, &[64, 32, 10], 6, 2, 4));
     let n_req = 30_000;
     let mut rows: Vec<Json> = Vec::new();
 
     println!("\n-- worker scaling, closed-loop drain ({n_req} requests, max_batch 256) --");
     let mut bits_1w = 0.0f64;
     let mut bits_4w = 0.0f64;
-    for backend in [BackendKind::Scalar, BackendKind::Bitsliced] {
+    for backend in ["scalar", "bitsliced"] {
         for workers in [1usize, 2, 4] {
-            let cfg = ServerConfig {
-                max_batch: 256,
-                batch_window: Duration::from_micros(50),
-                backend,
-                workers,
-                queue_depth: 4096,
-            };
-            let (tput, s, st) = drain(net.clone(), cfg, n_req);
+            let opts = FabricOptions::new()
+                .backend(backend)
+                .max_batch(256)
+                .batch_window(Duration::from_micros(50))
+                .workers(workers)
+                .queue_depth(4096);
+            let (tput, s, st) = drain(&model, &opts, n_req);
             println!(
-                "{:<9} workers {workers} -> {tput:>8.0} req/s  p50 {:>7.0}us \
+                "{backend:<9} workers {workers} -> {tput:>8.0} req/s  p50 {:>7.0}us \
                  p99 {:>7.0}us  mean batch {:.1}",
-                backend.as_str(), s.p50, s.p99, st.mean_batch
+                s.p50, s.p99, st.mean_batch
             );
-            if backend == BackendKind::Bitsliced && workers == 1 {
+            if backend == "bitsliced" && workers == 1 {
                 bits_1w = tput;
             }
-            if backend == BackendKind::Bitsliced && workers == 4 {
+            if backend == "bitsliced" && workers == 4 {
                 bits_4w = tput;
             }
             rows.push(obj(vec![
                 ("section", Json::Str("saturation".into())),
-                ("backend", Json::Str(backend.as_str().into())),
+                ("backend", Json::Str(backend.into())),
                 ("workers", Json::Num(workers as f64)),
                 ("requests", Json::Num(n_req as f64)),
                 ("served_per_s", Json::Num(tput)),
@@ -125,14 +125,13 @@ fn main() {
 
     println!("\n-- backpressure envelope: open-loop try_infer (queue_depth 64, 2 workers) --");
     for rate in [50_000.0f64, 100_000.0, 200_000.0] {
-        let cfg = ServerConfig {
-            max_batch: 256,
-            batch_window: Duration::from_micros(100),
-            backend: BackendKind::Bitsliced,
-            workers: 2,
-            queue_depth: 64,
-        };
-        let (tput, rej, s) = shed(net.clone(), cfg, rate, 20_000);
+        let opts = FabricOptions::new()
+            .backend("bitsliced")
+            .max_batch(256)
+            .batch_window(Duration::from_micros(100))
+            .workers(2)
+            .queue_depth(64);
+        let (tput, rej, s) = shed(&model, &opts, rate, 20_000);
         println!(
             "offered {rate:>7.0}/s -> served {tput:>7.0}/s  shed {:>5.1}%  \
              p50 {:>6.0}us p99 {:>6.0}us",

@@ -1,15 +1,19 @@
-//! Quickstart: the whole NeuraLUT codesign loop in ~40 lines.
+//! Quickstart: the whole NeuraLUT codesign loop in ~50 lines.
 //!
 //! Trains the two-moons toy model (AOT train steps via PJRT), converts the
 //! trained sub-networks into L-LUT truth tables, verifies the fabric
-//! simulator against the float model, emits Verilog, and prints the
-//! synthesis estimate.
+//! simulator against the float model, emits Verilog, prints the synthesis
+//! estimate — then reloads the saved model artifact through the unified
+//! inference API (`Model` → `CompiledFabric` → `Session`) and classifies
+//! the test set with it.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
+//! (NEURALUT_ENGINE picks the inference backend by registered name)
 
 use neuralut::coordinator::pipeline::{self, PipelineOpts};
 use neuralut::coordinator::trainer::TrainOpts;
 use neuralut::data::Dataset;
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::manifest::Manifest;
 use neuralut::runtime::Runtime;
 
@@ -38,7 +42,16 @@ fn main() -> anyhow::Result<()> {
     println!("latency         : {:.1} ns ({} cycles, 1 cycle / L-LUT layer)",
              r.synth.latency_ns, r.synth.latency_cycles);
     println!("area-delay      : {:.3e} LUT*ns", r.synth.area_delay);
-    println!("\nartifacts in {}",
-             std::env::temp_dir().join("neuralut_quickstart").display());
+
+    // The pipeline saved the converted model; serve it back through the
+    // unified inference API — one artifact, backend picked by name.
+    let out_dir = std::env::temp_dir().join("neuralut_quickstart");
+    let model = Model::load(&out_dir.join("network.nlut"))?;
+    let session = model.compile(&FabricOptions::from_env()?)?.session();
+    let acc = session.accuracy(&dataset.test_x, &dataset.test_y)?;
+    println!("\nreloaded        : {}", model.info());
+    println!("session         : {} backend, test accuracy {:.4}",
+             session.backend_name(), acc);
+    println!("\nartifacts in {}", out_dir.display());
     Ok(())
 }

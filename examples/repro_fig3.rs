@@ -9,7 +9,7 @@ use neuralut::coordinator::experiments::{epochs_override, n_seeds, run_config, s
 use neuralut::coordinator::pipeline::{self, PipelineOpts};
 use neuralut::coordinator::trainer::TrainOpts;
 use neuralut::data::Dataset;
-use neuralut::engine::{self, InferenceBackend as _};
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::manifest::Manifest;
 use neuralut::runtime::Runtime;
 use neuralut::util::stats;
@@ -25,8 +25,10 @@ fn ascii_boundary(rt: &Runtime, config: &str, seed: u64) -> anyhow::Result<Vec<S
         emit_rtl: false,
     };
     let r = pipeline::run(rt, &m, &ds, seed, &opts)?;
-    // Backend selected by NEURALUT_ENGINE (scalar | bitsliced).
-    let fabric = engine::backend_from_env(std::sync::Arc::new(r.net))?;
+    // Backend selected by NEURALUT_ENGINE (any registered name).
+    let session = Model::from_network(r.net)
+        .compile(&FabricOptions::from_env()?)?
+        .session();
     let (w, h) = (40usize, 18usize);
     let mut grid = Vec::with_capacity(w * h * 2);
     for row in 0..h {
@@ -35,7 +37,7 @@ fn ascii_boundary(rt: &Runtime, config: &str, seed: u64) -> anyhow::Result<Vec<S
             grid.push(1.0 - row as f32 / (h - 1) as f32);
         }
     }
-    let preds = fabric.run_batch(&grid).predictions;
+    let preds = session.infer_batch(&grid)?.predictions;
     let mut lines = Vec::new();
     for row in 0..h {
         let line: String = (0..w)

@@ -7,16 +7,15 @@
 //! (env NEURALUT_EPOCHS to shorten training, NEURALUT_ENGINE to pick the
 //! backend, NEURALUT_WORKERS to size the serving worker pool)
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use neuralut::coordinator::experiments::epochs_override;
 use neuralut::coordinator::trainer::{TrainOpts, Trainer};
 use neuralut::data::{Dataset, Workload};
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::convert;
 use neuralut::manifest::Manifest;
 use neuralut::runtime::Runtime;
-use neuralut::server::{Server, ServerConfig};
 use neuralut::util::stats;
 
 fn main() -> anyhow::Result<()> {
@@ -35,31 +34,25 @@ fn main() -> anyhow::Result<()> {
     println!("float test accuracy: {:.4}", r.test_acc);
 
     println!("converting to L-LUT fabric ...");
-    let net = Arc::new(convert::convert(&rt, &m, &r.params)?);
-    println!("fabric: {} L-LUTs, {} layers, {} table bits",
-             net.num_luts(), net.layers.len(), net.table_bits());
+    let model = Model::from_network(convert::convert(&rt, &m, &r.params)?);
+    println!("fabric: {}", model.info());
 
     let n_req = 20_000;
     let rate = 100_000.0; // offered load, req/s
     // NEURALUT_ENGINE=bitsliced serves through the compiled fabric engine;
     // NEURALUT_WORKERS sizes the batcher pool (all workers share one
-    // compiled program).
-    let backend = neuralut::engine::BackendKind::from_env()?;
-    let workers = match std::env::var("NEURALUT_WORKERS") {
-        Ok(v) => v
-            .parse::<usize>()
-            .map_err(|_| anyhow::anyhow!("NEURALUT_WORKERS = '{v}' is not a number"))?,
-        Err(_) => 2,
-    };
-    let cfg = ServerConfig {
-        max_batch: 512,
-        batch_window: Duration::from_micros(100),
-        backend,
-        workers,
-        ..Default::default()
-    };
-    cfg.validate()?; // zero/absurd NEURALUT_WORKERS fails loudly, like the CLI
-    let server = Server::start(net.clone(), cfg);
+    // compiled program). Zero/absurd values fail loudly at compile, like
+    // the CLI.
+    let mut opts = FabricOptions::from_env()?
+        .max_batch(512)
+        .batch_window(Duration::from_micros(100));
+    if opts.get_workers().is_none() {
+        opts = opts.workers(2); // this demo defaults to a 2-worker pool
+    }
+    let fabric = model.compile(&opts)?;
+    println!("backend: {} ({} workers)",
+             fabric.backend_name(), fabric.tuning().workers);
+    let server = fabric.serve();
     let client = server.client();
     let workload = Workload::poisson(&ds, 42, n_req, rate);
 
@@ -96,6 +89,6 @@ fn main() -> anyhow::Result<()> {
              st.mean_batch, st.latency_p99_us);
     println!("\nfabric latency itself is {} cycles — the serving stack \
               (batching window, queueing) dominates, as it should.",
-             net.layers.len());
+             model.latency_cycles());
     Ok(())
 }

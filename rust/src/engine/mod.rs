@@ -1,5 +1,5 @@
-//! Compiled fabric engine: pluggable inference backends over a converted
-//! [`LutNetwork`].
+//! Execution backends over a converted [`LutNetwork`]: the compiled
+//! fabric engine and the traits every backend implements.
 //!
 //! The paper's premise is that an L-LUT network is a pure Boolean circuit
 //! ("each L-LUT layer is evaluated in one clock cycle"). The scalar
@@ -12,20 +12,26 @@
 //! packed per `u64`, batch inference as word-wide AND/OR/XOR streaming
 //! ([`BitslicedEngine`]).
 //!
-//! Both execution strategies sit behind [`InferenceBackend`], so the
-//! server, the CLI and the repro examples select a backend by
-//! configuration ([`BackendKind`]) rather than by concrete type; future
-//! device-specific lowerings slot in behind the same trait.
+//! Two traits split the execution contract along the compile/run seam:
 //!
-//! Ownership: backends constructed through [`backend`] / [`SharedFabric`]
-//! are `'static` — they share the network (and the compiled program)
-//! through `Arc`s, so worker threads can own them outright. A
-//! [`SharedFabric`] is the compile-once artifact; its
-//! [`executor`](SharedFabric::executor)s are cheap per-worker handles — N
-//! serving workers share one lowering pass instead of compiling N times.
+//! * [`FabricProgram`] is the **compile-once artifact** — the expensive
+//!   shared state (the network, and for the bitsliced backend the lowered
+//!   program) held behind `Arc`s, from which any number of cheap
+//!   [`executor`](FabricProgram::executor)s can be spawned. N serving
+//!   workers share one program; one lowering pass per
+//!   [`Model::compile`](crate::fabric::Model::compile).
+//! * [`InferenceBackend`] is the **per-worker executor** — `'static`,
+//!   owned outright by a worker thread, bit-exact against the scalar
+//!   fabric semantics.
 //!
-//! Picking a backend: `Scalar` has zero compile cost and wins on tiny
-//! batches and very wide tables; `Bitsliced` pays one lowering pass per
+//! Backends are selected *by name* through the
+//! [`BackendRegistry`](crate::fabric::BackendRegistry); `scalar`
+//! ([`ScalarProgram`]) and `bitsliced` ([`BitslicedProgram`]) are the
+//! registered built-ins. Nothing in this module enumerates backends — a
+//! new execution strategy is a registry entry, not a cross-crate surgery.
+//!
+//! Picking a backend: `scalar` has zero compile cost and wins on tiny
+//! batches and very wide tables; `bitsliced` pays one lowering pass per
 //! network and wins on batch workloads, increasingly so the more
 //! structure (small support, shared logic, low fan-in × bit-width) the
 //! trained tables carry.
@@ -38,57 +44,8 @@ pub use lower::{BitNetlist, Level, MuxOp};
 
 use std::sync::Arc;
 
-use anyhow::bail;
-
 use crate::luts::LutNetwork;
 use crate::netlist::{ScalarPlan, SimResult, Simulator};
-
-/// Which inference engine executes a converted network.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum BackendKind {
-    /// Per-sample scalar table lookups (`netlist::Simulator`).
-    #[default]
-    Scalar,
-    /// Compiled bit-level netlist, 64 samples per word.
-    Bitsliced,
-}
-
-impl BackendKind {
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            BackendKind::Scalar => "scalar",
-            BackendKind::Bitsliced => "bitsliced",
-        }
-    }
-
-    /// The kind selected by the `NEURALUT_ENGINE` environment variable
-    /// (`Scalar` when unset) — one definition of the env protocol for
-    /// the examples and any other env-driven entry point.
-    pub fn from_env() -> crate::Result<BackendKind> {
-        match std::env::var("NEURALUT_ENGINE") {
-            Ok(v) => v.parse(),
-            Err(_) => Ok(BackendKind::Scalar),
-        }
-    }
-}
-
-impl std::fmt::Display for BackendKind {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.as_str())
-    }
-}
-
-impl std::str::FromStr for BackendKind {
-    type Err = anyhow::Error;
-
-    fn from_str(s: &str) -> crate::Result<Self> {
-        match s {
-            "scalar" => Ok(BackendKind::Scalar),
-            "bitsliced" => Ok(BackendKind::Bitsliced),
-            other => bail!("unknown engine '{other}' (scalar | bitsliced)"),
-        }
-    }
-}
 
 /// A batch-inference execution strategy for one converted network.
 ///
@@ -114,6 +71,25 @@ pub trait InferenceBackend: Send + Sync {
             .filter(|(&p, &t)| p as i32 == t)
             .count();
         correct as f64 / y.len().max(1) as f64
+    }
+}
+
+/// A compile-once execution artifact: everything expensive (network,
+/// lowered program, flattened wiring) behind `Arc`s, spawning cheap
+/// per-worker executors on demand.
+///
+/// This is the object a [`crate::fabric::BackendRegistry`] factory
+/// returns and the serving runtime fans out across its worker pool.
+/// Spawning an executor is cheap *by contract*: it must never re-run a
+/// lowering pass, re-flatten wiring, or copy tables — `Arc` clones only.
+pub trait FabricProgram: Send + Sync {
+    /// Spawn one executor over the shared compiled state.
+    fn executor(&self) -> Box<dyn InferenceBackend>;
+
+    /// The shared lowered bit-netlist, for backends that have one
+    /// (`None` for table-lookup backends with nothing compiled to share).
+    fn bit_netlist(&self) -> Option<&Arc<BitNetlist>> {
+        None
     }
 }
 
@@ -181,81 +157,54 @@ impl InferenceBackend for ScalarEngine {
     }
 }
 
-/// A compile-once, share-everywhere fabric: the expensive artifacts (the
-/// network, and for `Bitsliced` the lowered program) held behind `Arc`s,
-/// from which any number of cheap per-worker [`executor`](Self::executor)s
-/// can be spawned. The serving runtime compiles one `SharedFabric` per
-/// server start and hands every worker thread its own executor — N workers,
-/// one lowering pass.
-pub enum SharedFabric {
-    Scalar { net: Arc<LutNetwork>, plan: Arc<ScalarPlan> },
-    Bitsliced { program: Arc<BitNetlist> },
-}
-
-impl SharedFabric {
-    /// The scalar fabric for `net` (infallible — nothing to lower; the
-    /// shared artifact is the flattened wiring plan).
-    pub fn scalar(net: Arc<LutNetwork>) -> SharedFabric {
-        let plan = Arc::new(ScalarPlan::new(&net));
-        SharedFabric::Scalar { net, plan }
-    }
-
-    /// Compile the fabric once. `Bitsliced` runs the lowering pass here
-    /// and reports its failures (e.g. layers with inconsistent bit-widths).
-    pub fn compile(kind: BackendKind, net: Arc<LutNetwork>) -> crate::Result<SharedFabric> {
-        Ok(match kind {
-            BackendKind::Scalar => Self::scalar(net),
-            BackendKind::Bitsliced => SharedFabric::Bitsliced {
-                program: Arc::new(lower::lower(&net)?),
-            },
-        })
-    }
-
-    pub fn kind(&self) -> BackendKind {
-        match self {
-            SharedFabric::Scalar { .. } => BackendKind::Scalar,
-            SharedFabric::Bitsliced { .. } => BackendKind::Bitsliced,
-        }
-    }
-
-    /// Spawn one executor. Cheap by contract: never re-runs the lowering
-    /// pass, never re-flattens wiring, never copies tables — `Arc` clones
-    /// only.
-    pub fn executor(&self) -> Box<dyn InferenceBackend> {
-        match self {
-            SharedFabric::Scalar { net, plan } => {
-                Box::new(ScalarEngine::from_parts(net.clone(), plan.clone()))
-            }
-            SharedFabric::Bitsliced { program } => {
-                Box::new(BitslicedEngine::from_program(program.clone()))
-            }
-        }
-    }
-
-    /// The shared compiled program (`None` for the scalar fabric).
-    pub fn program(&self) -> Option<&Arc<BitNetlist>> {
-        match self {
-            SharedFabric::Scalar { .. } => None,
-            SharedFabric::Bitsliced { program } => Some(program),
-        }
-    }
-}
-
-/// Construct a `'static` backend of the requested kind for a shared
-/// network — one compile, one executor. For a worker pool sharing a
-/// single compile, use [`SharedFabric`] directly.
-pub fn backend(
-    kind: BackendKind,
+/// The `scalar` built-in's compile-once artifact: nothing to lower — the
+/// shared state is the network plus its flattened wiring plan.
+pub struct ScalarProgram {
     net: Arc<LutNetwork>,
-) -> crate::Result<Box<dyn InferenceBackend>> {
-    Ok(SharedFabric::compile(kind, net)?.executor())
+    plan: Arc<ScalarPlan>,
 }
 
-/// Backend selected by the `NEURALUT_ENGINE` environment variable
-/// (`scalar` when unset) — how the repro examples opt into the compiled
-/// engine without changing their code paths.
-pub fn backend_from_env(net: Arc<LutNetwork>) -> crate::Result<Box<dyn InferenceBackend>> {
-    backend(BackendKind::from_env()?, net)
+impl ScalarProgram {
+    /// Build the shared wiring plan (infallible — no lowering pass).
+    pub fn new(net: Arc<LutNetwork>) -> Self {
+        let plan = Arc::new(ScalarPlan::new(&net));
+        ScalarProgram { net, plan }
+    }
+}
+
+impl FabricProgram for ScalarProgram {
+    fn executor(&self) -> Box<dyn InferenceBackend> {
+        Box::new(ScalarEngine::from_parts(self.net.clone(), self.plan.clone()))
+    }
+}
+
+/// The `bitsliced` built-in's compile-once artifact: the lowered,
+/// levelized word-op program every executor streams.
+pub struct BitslicedProgram {
+    program: Arc<BitNetlist>,
+}
+
+impl BitslicedProgram {
+    /// Run the lowering pass once. Fails on networks the pass rejects
+    /// (e.g. signed codes on a non-final layer).
+    pub fn compile(net: &LutNetwork) -> crate::Result<Self> {
+        Ok(BitslicedProgram { program: Arc::new(lower::lower(net)?) })
+    }
+
+    /// Wrap an already-lowered program.
+    pub fn from_netlist(program: Arc<BitNetlist>) -> Self {
+        BitslicedProgram { program }
+    }
+}
+
+impl FabricProgram for BitslicedProgram {
+    fn executor(&self) -> Box<dyn InferenceBackend> {
+        Box::new(BitslicedEngine::from_program(self.program.clone()))
+    }
+
+    fn bit_netlist(&self) -> Option<&Arc<BitNetlist>> {
+        Some(&self.program)
+    }
 }
 
 #[cfg(test)]
@@ -264,24 +213,12 @@ mod tests {
     use crate::luts::random_network;
 
     #[test]
-    fn kind_parses_and_displays() {
-        assert_eq!("scalar".parse::<BackendKind>().unwrap(), BackendKind::Scalar);
-        assert_eq!(
-            "bitsliced".parse::<BackendKind>().unwrap(),
-            BackendKind::Bitsliced
-        );
-        assert!("fpga".parse::<BackendKind>().is_err());
-        assert_eq!(BackendKind::default(), BackendKind::Scalar);
-        assert_eq!(BackendKind::Bitsliced.to_string(), "bitsliced");
-    }
-
-    #[test]
-    fn both_backends_satisfy_the_trait_identically() {
+    fn both_builtin_programs_are_bit_exact_and_trait_complete() {
         let net = Arc::new(random_network(31, 9, 2, &[6, 4], 3, 2, 4));
         let x: Vec<f32> = (0..9 * 100).map(|i| (i % 13) as f32 / 13.0).collect();
         let y: Vec<i32> = (0..100).map(|i| (i % 4) as i32).collect();
-        let scalar = backend(BackendKind::Scalar, net.clone()).unwrap();
-        let bits = backend(BackendKind::Bitsliced, net.clone()).unwrap();
+        let scalar = ScalarProgram::new(net.clone()).executor();
+        let bits = BitslicedProgram::compile(&net).unwrap().executor();
         assert_eq!(scalar.name(), "scalar");
         assert_eq!(bits.name(), "bitsliced");
         assert_eq!(scalar.latency_cycles(), bits.latency_cycles());
@@ -304,20 +241,20 @@ mod tests {
     }
 
     #[test]
-    fn shared_fabric_spawns_executors_without_recompiling() {
+    fn programs_spawn_executors_without_recompiling() {
         let net = Arc::new(random_network(32, 8, 2, &[6, 3], 3, 2, 4));
-        let fabric = SharedFabric::compile(BackendKind::Bitsliced, net.clone()).unwrap();
-        assert_eq!(fabric.kind(), BackendKind::Bitsliced);
-        let prog = fabric.program().unwrap().clone();
+        let fabric = BitslicedProgram::compile(&net).unwrap();
+        let prog = fabric.bit_netlist().unwrap().clone();
         let a = fabric.executor();
         let b = fabric.executor();
-        // ONE compiled instance, four holders: fabric + our clone + 2 executors.
+        // ONE compiled instance, four holders: program + our clone + 2
+        // executors.
         assert_eq!(Arc::strong_count(&prog), 4);
         let x: Vec<f32> = (0..8 * 70).map(|i| (i % 11) as f32 / 11.0).collect();
         assert_eq!(a.run_batch(&x).logit_codes, b.run_batch(&x).logit_codes);
-        // Scalar fabric carries no compiled program.
-        let sf = SharedFabric::compile(BackendKind::Scalar, net).unwrap();
-        assert!(sf.program().is_none());
-        assert_eq!(sf.executor().name(), "scalar");
+        // The scalar program carries no lowered bit-netlist.
+        let sp = ScalarProgram::new(net);
+        assert!(sp.bit_netlist().is_none());
+        assert_eq!(sp.executor().name(), "scalar");
     }
 }

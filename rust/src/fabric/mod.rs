@@ -1,0 +1,400 @@
+//! The unified inference API: **`Model` → `CompiledFabric` → `Session`**.
+//!
+//! The paper's core claim is that entire sub-networks hide inside LUTs —
+//! one model artifact, many ways to execute it. This module is that
+//! claim as an API: callers hold *one* [`Model`] and pick the execution
+//! strategy as a pluggable, by-name choice.
+//!
+//! ```text
+//! Model::load("net.nlut")            // or Model::from_network(net)
+//!   .compile(&FabricOptions::from_env()?.backend("bitsliced"))?
+//!   ├─ .session()                    // in-process batch inference
+//!   └─ .serve()                      // multi-worker serving runtime
+//! ```
+//!
+//! * [`Model`] wraps the converted network (`Arc<LutNetwork>`) plus its
+//!   metadata — name, shape, table bits, latency cycles ([`ModelInfo`]).
+//! * [`Model::compile`] resolves the backend *by name* through the
+//!   [`BackendRegistry`] (built-ins: `scalar`, `bitsliced`) and runs its
+//!   factory exactly once, yielding a [`CompiledFabric`] — the shared,
+//!   compile-once artifact.
+//! * [`CompiledFabric::session`] spawns an in-process [`Session`] for
+//!   direct batch inference; [`CompiledFabric::serve`] starts the
+//!   multi-worker [`Server`] pool, every worker sharing the one compiled
+//!   program.
+//!
+//! Configuration funnels through one path: [`FabricOptions`] layers
+//! builder calls over `NEURALUT_ENGINE`/`NEURALUT_WORKERS` over a parsed
+//! [`ServerConfig`](crate::server::ServerConfig) file over defaults, and
+//! every unknown-backend error lists the registered names.
+
+pub mod options;
+pub mod registry;
+
+pub use options::{FabricOptions, FabricTuning, DEFAULT_BACKEND};
+pub use registry::{
+    BackendEntry, BackendFactory, BackendRegistry, BatchAffinity, Capabilities, CompileCost,
+};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::engine::{BitNetlist, FabricProgram, InferenceBackend};
+use crate::luts::LutNetwork;
+use crate::netlist::SimResult;
+use crate::server::Server;
+
+/// Metadata of a loaded model — everything reports and logs need
+/// without touching the tables.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Feature count of one input row.
+    pub input_size: usize,
+    /// Bit-width of the quantized circuit inputs.
+    pub input_bits: usize,
+    pub n_class: usize,
+    /// L-LUTs per circuit layer.
+    pub layer_widths: Vec<usize>,
+    pub num_luts: usize,
+    /// Total truth-table storage in bits (the design's "ROM size").
+    pub table_bits: usize,
+    /// Pipeline latency: one cycle per L-LUT layer.
+    pub latency_cycles: usize,
+}
+
+impl std::fmt::Display for ModelInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {} -> {:?} -> {} classes, {} L-LUTs, {} table bits, {} cycles",
+            self.name,
+            self.input_size,
+            self.layer_widths,
+            self.n_class,
+            self.num_luts,
+            self.table_bits,
+            self.latency_cycles
+        )
+    }
+}
+
+/// One converted model artifact: the entry point of the inference API.
+///
+/// Cheap to clone (the network sits behind an `Arc`); compile it as many
+/// times as there are execution strategies worth comparing.
+#[derive(Clone)]
+pub struct Model {
+    net: Arc<LutNetwork>,
+}
+
+impl Model {
+    /// Load an NLUT file from disk.
+    pub fn load(path: &Path) -> crate::Result<Model> {
+        Ok(Model::from_network(LutNetwork::load(path)?))
+    }
+
+    /// Wrap an in-memory converted network.
+    pub fn from_network(net: LutNetwork) -> Model {
+        Model { net: Arc::new(net) }
+    }
+
+    /// Wrap an already-shared network without cloning it.
+    pub fn from_arc(net: Arc<LutNetwork>) -> Model {
+        Model { net }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.net.name
+    }
+
+    pub fn input_size(&self) -> usize {
+        self.net.input_size
+    }
+
+    pub fn n_class(&self) -> usize {
+        self.net.n_class
+    }
+
+    pub fn num_luts(&self) -> usize {
+        self.net.num_luts()
+    }
+
+    pub fn table_bits(&self) -> usize {
+        self.net.table_bits()
+    }
+
+    /// Pipeline latency in cycles (one per L-LUT layer).
+    pub fn latency_cycles(&self) -> usize {
+        self.net.layers.len()
+    }
+
+    /// The shared network this model wraps.
+    pub fn network(&self) -> &Arc<LutNetwork> {
+        &self.net
+    }
+
+    /// Snapshot of the model metadata.
+    pub fn info(&self) -> ModelInfo {
+        ModelInfo {
+            name: self.net.name.clone(),
+            input_size: self.net.input_size,
+            input_bits: self.net.input_bits,
+            n_class: self.net.n_class,
+            layer_widths: self.net.layers.iter().map(|l| l.num_luts()).collect(),
+            num_luts: self.net.num_luts(),
+            table_bits: self.net.table_bits(),
+            latency_cycles: self.net.layers.len(),
+        }
+    }
+
+    /// Compile this model for execution: resolve `opts`' backend name
+    /// through the global [`BackendRegistry`], validate the tuning, and
+    /// run the backend factory **exactly once**. Everything downstream —
+    /// sessions, serving workers — shares the one compiled program.
+    pub fn compile(&self, opts: &FabricOptions) -> crate::Result<CompiledFabric> {
+        self.compile_with(BackendRegistry::global(), opts)
+    }
+
+    /// [`compile`](Self::compile) against an explicit registry (isolated
+    /// tests; embedders with their own backend set).
+    pub fn compile_with(
+        &self,
+        registry: &BackendRegistry,
+        opts: &FabricOptions,
+    ) -> crate::Result<CompiledFabric> {
+        let entry = registry.resolve(opts.backend_or_default())?;
+        let tuning = opts.resolve_tuning()?;
+        let program = entry.compile(self.net.clone())?;
+        Ok(CompiledFabric { model: self.clone(), entry, program, tuning })
+    }
+}
+
+// `Debug` goes through `ModelInfo` — tables are megabytes of `i16`s
+// nobody wants in a log line.
+impl std::fmt::Debug for Model {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Model({})", self.info())
+    }
+}
+
+/// A compiled model: one backend's shared, compile-once program plus the
+/// resolved tuning. Spawn any number of [`session`](Self::session)s and
+/// [`serve`](Self::serve) pools from it — none of them recompiles.
+pub struct CompiledFabric {
+    model: Model,
+    entry: BackendEntry,
+    program: Arc<dyn FabricProgram>,
+    tuning: FabricTuning,
+}
+
+impl CompiledFabric {
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Canonical name of the backend that compiled this fabric.
+    pub fn backend_name(&self) -> &str {
+        self.entry.name()
+    }
+
+    pub fn capabilities(&self) -> Capabilities {
+        self.entry.capabilities()
+    }
+
+    /// The serving knobs [`serve`](Self::serve) will use.
+    pub fn tuning(&self) -> &FabricTuning {
+        &self.tuning
+    }
+
+    /// The shared compiled program.
+    pub fn program(&self) -> &Arc<dyn FabricProgram> {
+        &self.program
+    }
+
+    /// The lowered bit-netlist, for backends that build one (`None` for
+    /// table-lookup backends).
+    pub fn bit_netlist(&self) -> Option<&Arc<BitNetlist>> {
+        self.program.bit_netlist()
+    }
+
+    /// Spawn one raw executor (cheap; `Arc` clones only). Prefer
+    /// [`session`](Self::session) unless you are building your own pool.
+    pub fn executor(&self) -> Box<dyn InferenceBackend> {
+        self.program.executor()
+    }
+
+    /// An in-process inference session over the shared program.
+    pub fn session(&self) -> Session {
+        Session {
+            exec: self.program.executor(),
+            input_size: self.model.input_size(),
+            n_class: self.model.n_class(),
+        }
+    }
+
+    /// Start the multi-worker serving runtime: `tuning().workers`
+    /// batcher threads over one bounded request queue, every worker
+    /// executing this fabric's shared program. Infallible — compilation
+    /// and validation already happened in [`Model::compile`].
+    pub fn serve(&self) -> Server {
+        Server::start(self.program.clone(), self.model.input_size(), &self.tuning)
+    }
+}
+
+impl std::fmt::Debug for CompiledFabric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CompiledFabric({} via {})", self.model.info(), self.entry.name())
+    }
+}
+
+/// In-process batch inference over one compiled fabric — the
+/// direct-call sibling of the serving runtime's
+/// [`Client`](crate::server::Client).
+pub struct Session {
+    exec: Box<dyn InferenceBackend>,
+    input_size: usize,
+    n_class: usize,
+}
+
+impl Session {
+    /// Stable name of the executing backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.exec.name()
+    }
+
+    /// Pipeline latency in cycles.
+    pub fn latency_cycles(&self) -> usize {
+        self.exec.latency_cycles()
+    }
+
+    fn check_batch(&self, x: &[f32]) -> crate::Result<usize> {
+        if self.input_size == 0 || x.len() % self.input_size != 0 {
+            bail!(
+                "batch of {} values is not a whole number of {}-feature rows",
+                x.len(),
+                self.input_size
+            );
+        }
+        Ok(x.len() / self.input_size)
+    }
+
+    /// Run raw feature rows (`[batch * input_size]` floats in [0, 1]).
+    pub fn infer_batch(&self, x: &[f32]) -> crate::Result<SimResult> {
+        self.check_batch(x)?;
+        Ok(self.exec.run_batch(x))
+    }
+
+    /// Classify a single feature row.
+    pub fn infer_one(&self, row: &[f32]) -> crate::Result<u32> {
+        if self.input_size == 0 || row.len() != self.input_size {
+            bail!(
+                "feature vector has {} values, model expects {}",
+                row.len(),
+                self.input_size
+            );
+        }
+        Ok(self.exec.run_batch(row).predictions[0])
+    }
+
+    /// Classification accuracy over a labelled set.
+    pub fn accuracy(&self, x: &[f32], y: &[i32]) -> crate::Result<f64> {
+        let batch = self.check_batch(x)?;
+        if batch != y.len() {
+            bail!("{batch} feature rows but {} labels", y.len());
+        }
+        Ok(self.exec.accuracy(x, y))
+    }
+
+    /// Classes the model predicts over.
+    pub fn n_class(&self) -> usize {
+        self.n_class
+    }
+
+    /// Feature count of one input row.
+    pub fn input_size(&self) -> usize {
+        self.input_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::random_network;
+    use crate::netlist::Simulator;
+
+    fn model() -> Model {
+        Model::from_network(random_network(91, 8, 2, &[6, 3], 3, 2, 4))
+    }
+
+    #[test]
+    fn model_metadata_reflects_the_network() {
+        let m = model();
+        let info = m.info();
+        assert_eq!(info.input_size, 8);
+        assert_eq!(info.n_class, 3);
+        assert_eq!(info.layer_widths, vec![6, 3]);
+        assert_eq!(info.latency_cycles, 2);
+        assert_eq!(info.num_luts, m.num_luts());
+        assert_eq!(info.table_bits, m.table_bits());
+        assert_eq!(m.name(), info.name);
+        assert!(info.to_string().contains("L-LUTs"));
+    }
+
+    #[test]
+    fn sessions_of_both_builtins_are_bit_exact() {
+        let m = model();
+        let scalar = m.compile(&FabricOptions::new()).unwrap();
+        let bits = m.compile(&FabricOptions::new().backend(" BITSLICED ")).unwrap();
+        assert_eq!(scalar.backend_name(), "scalar");
+        assert_eq!(bits.backend_name(), "bitsliced");
+        let x: Vec<f32> = (0..8 * 130).map(|i| (i % 13) as f32 / 13.0).collect();
+        let a = scalar.session().infer_batch(&x).unwrap();
+        let b = bits.session().infer_batch(&x).unwrap();
+        assert_eq!(a.logit_codes, b.logit_codes);
+        assert_eq!(a.predictions, b.predictions);
+        let sim = Simulator::new(m.network());
+        assert_eq!(sim.simulate_batch(&x).logit_codes, a.logit_codes);
+    }
+
+    #[test]
+    fn compile_happens_once_per_fabric_not_per_session() {
+        let m = model();
+        let fabric = m.compile(&FabricOptions::new().backend("bitsliced")).unwrap();
+        let prog = fabric.bit_netlist().unwrap().clone();
+        let s1 = fabric.session();
+        let s2 = fabric.session();
+        // One lowered program: fabric + our clone + two session executors.
+        assert_eq!(Arc::strong_count(&prog), 4);
+        let x: Vec<f32> = (0..8 * 5).map(|i| (i % 7) as f32 / 7.0).collect();
+        assert_eq!(
+            s1.infer_batch(&x).unwrap().logit_codes,
+            s2.infer_batch(&x).unwrap().logit_codes
+        );
+    }
+
+    #[test]
+    fn session_rejects_ragged_batches_and_label_mismatches() {
+        let s = model().compile(&FabricOptions::new()).unwrap().session();
+        assert!(s.infer_batch(&[0.0; 9]).is_err());
+        assert!(s.infer_batch(&[0.0; 16]).is_ok());
+        assert!(s.infer_one(&[0.0; 7]).is_err());
+        assert!(s.infer_one(&[0.0; 8]).is_ok());
+        assert!(s.accuracy(&[0.0; 16], &[0, 1, 2]).is_err());
+        assert!(s.accuracy(&[0.0; 16], &[0, 1]).is_ok());
+    }
+
+    #[test]
+    fn unknown_backend_and_bad_tuning_fail_at_compile() {
+        let m = model();
+        let err = m
+            .compile(&FabricOptions::new().backend("fpga"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown backend 'fpga'"), "{err}");
+        assert!(err.contains("scalar"), "{err}");
+        assert!(m.compile(&FabricOptions::new().workers(0)).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! [`FabricOptions`]: the one resolution path from *any* configuration
+//! surface — builder calls, `NEURALUT_ENGINE`/`NEURALUT_WORKERS`
+//! environment variables, server config files — to a validated set of
+//! compile + serving knobs.
+//!
+//! Precedence, highest first:
+//!
+//! 1. explicit builder calls ([`backend`](FabricOptions::backend),
+//!    [`workers`](FabricOptions::workers), …) — how CLI flags are applied;
+//! 2. environment (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`);
+//! 3. a [`ServerConfig`] file passed to
+//!    [`from_env_and_config`](FabricOptions::from_env_and_config);
+//! 4. defaults (`scalar`, 1 worker, queue depth 1024, max batch 256,
+//!    200 µs batch window).
+//!
+//! Backend names are resolved through the
+//! [`BackendRegistry`](crate::fabric::BackendRegistry) at
+//! [`Model::compile`](crate::fabric::Model::compile) time —
+//! case/whitespace-insensitive, with unknown names erroring against the
+//! list of registered names. Worker/queue ranges share the server's
+//! [`MAX_WORKERS`]/[`MAX_QUEUE_DEPTH`] bounds, so zero or absurd values
+//! are errors on every path, never clamped surprises.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use crate::server::{ServerConfig, MAX_QUEUE_DEPTH, MAX_WORKERS};
+
+/// Backend compiled when nothing selects one explicitly.
+pub const DEFAULT_BACKEND: &str = "scalar";
+
+/// Resolved serving knobs a [`CompiledFabric`](crate::fabric::CompiledFabric)
+/// hands the worker pool. Produced only by [`FabricOptions`] resolution,
+/// so the ranges are already validated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FabricTuning {
+    /// Maximum requests folded into one fabric batch.
+    pub max_batch: usize,
+    /// How long a batcher waits to fill a batch.
+    pub batch_window: Duration,
+    /// Batcher threads sharing the request queue (and the program).
+    pub workers: usize,
+    /// Bounded request-queue depth — the backpressure limit.
+    pub queue_depth: usize,
+}
+
+impl Default for FabricTuning {
+    fn default() -> Self {
+        FabricTuning {
+            max_batch: 256,
+            batch_window: Duration::from_micros(200),
+            workers: 1,
+            queue_depth: 1024,
+        }
+    }
+}
+
+impl FabricTuning {
+    /// The one range check for serving knobs — shared by the options
+    /// builder ([`FabricOptions::resolve_tuning`]) and the config-file
+    /// parser ([`ServerConfig::validate`]), so the two paths cannot
+    /// drift.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.workers == 0 || self.workers > MAX_WORKERS {
+            bail!("workers = {} out of range (1..={MAX_WORKERS})", self.workers);
+        }
+        if self.queue_depth == 0 || self.queue_depth > MAX_QUEUE_DEPTH {
+            bail!(
+                "queue_depth = {} out of range (1..={MAX_QUEUE_DEPTH})",
+                self.queue_depth
+            );
+        }
+        if self.max_batch == 0 {
+            bail!("max_batch = 0 (need at least 1 request per batch)");
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`Model::compile`](crate::fabric::Model::compile): backend
+/// by name plus serving knobs. Unset fields keep layered defaults — see
+/// the module docs for the precedence order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FabricOptions {
+    backend: Option<String>,
+    workers: Option<usize>,
+    queue_depth: Option<usize>,
+    max_batch: Option<usize>,
+    batch_window: Option<Duration>,
+}
+
+impl FabricOptions {
+    /// All fields unset: compiles the [`DEFAULT_BACKEND`] with default
+    /// tuning.
+    pub fn new() -> FabricOptions {
+        FabricOptions::default()
+    }
+
+    // ---- builder ----------------------------------------------------------
+
+    /// Select the backend by registry name (case/whitespace-insensitive).
+    pub fn backend(mut self, name: impl Into<String>) -> Self {
+        self.backend = Some(name.into());
+        self
+    }
+
+    /// Batcher threads for [`serve`](crate::fabric::CompiledFabric::serve)
+    /// (1..=[`MAX_WORKERS`]).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
+        self
+    }
+
+    /// Bounded request-queue depth (1..=[`MAX_QUEUE_DEPTH`]).
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = Some(n);
+        self
+    }
+
+    /// Maximum requests folded into one fabric batch (≥ 1).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = Some(n);
+        self
+    }
+
+    /// How long a batcher waits to fill a batch.
+    pub fn batch_window(mut self, window: Duration) -> Self {
+        self.batch_window = Some(window);
+        self
+    }
+
+    // ---- getters (what is *set*, before defaulting) -----------------------
+
+    pub fn get_backend(&self) -> Option<&str> {
+        self.backend.as_deref()
+    }
+
+    pub fn get_workers(&self) -> Option<usize> {
+        self.workers
+    }
+
+    pub fn get_queue_depth(&self) -> Option<usize> {
+        self.queue_depth
+    }
+
+    pub fn get_max_batch(&self) -> Option<usize> {
+        self.max_batch
+    }
+
+    pub fn get_batch_window(&self) -> Option<Duration> {
+        self.batch_window
+    }
+
+    /// The backend name that will be resolved at compile time.
+    pub fn backend_or_default(&self) -> &str {
+        self.backend.as_deref().unwrap_or(DEFAULT_BACKEND)
+    }
+
+    // ---- resolution -------------------------------------------------------
+
+    /// Options from the process environment only (`NEURALUT_ENGINE`,
+    /// `NEURALUT_WORKERS`); everything else stays unset.
+    pub fn from_env() -> crate::Result<FabricOptions> {
+        Self::from_env_and_config(None)
+    }
+
+    /// The single env+config resolution path: start from `cfg` (a parsed
+    /// server-config file, when given), then let environment variables
+    /// override it. Builder calls applied afterwards override both —
+    /// that is how CLI flags win.
+    pub fn from_env_and_config(cfg: Option<&ServerConfig>) -> crate::Result<FabricOptions> {
+        Self::with_env(&|key| std::env::var(key).ok(), cfg)
+    }
+
+    /// [`from_env_and_config`](Self::from_env_and_config) with an
+    /// injectable environment, so precedence is testable without
+    /// touching (racy, process-global) real env vars.
+    pub fn with_env(
+        env: &dyn Fn(&str) -> Option<String>,
+        cfg: Option<&ServerConfig>,
+    ) -> crate::Result<FabricOptions> {
+        let mut opts = FabricOptions::new();
+        if let Some(c) = cfg {
+            opts.backend = Some(c.backend.clone());
+            opts.workers = Some(c.workers);
+            opts.queue_depth = Some(c.queue_depth);
+            opts.max_batch = Some(c.max_batch);
+            opts.batch_window = Some(c.batch_window);
+        }
+        if let Some(v) = env("NEURALUT_ENGINE") {
+            opts.backend = Some(v);
+        }
+        if let Some(v) = env("NEURALUT_WORKERS") {
+            let n = v
+                .trim()
+                .parse::<usize>()
+                .with_context(|| format!("NEURALUT_WORKERS = '{v}' is not a number"))?;
+            opts.workers = Some(n);
+        }
+        Ok(opts)
+    }
+
+    /// Validate ranges and fill defaults. Called by
+    /// [`Model::compile`](crate::fabric::Model::compile); public so
+    /// option sets can be checked without compiling anything.
+    pub fn resolve_tuning(&self) -> crate::Result<FabricTuning> {
+        let d = FabricTuning::default();
+        let tuning = FabricTuning {
+            max_batch: self.max_batch.unwrap_or(d.max_batch),
+            batch_window: self.batch_window.unwrap_or(d.batch_window),
+            workers: self.workers.unwrap_or(d.workers),
+            queue_depth: self.queue_depth.unwrap_or(d.queue_depth),
+        };
+        tuning.validate()?;
+        Ok(tuning)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_env(_: &str) -> Option<String> {
+        None
+    }
+
+    #[test]
+    fn defaults_match_server_config_defaults() {
+        let t = FabricOptions::new().resolve_tuning().unwrap();
+        let c = ServerConfig::default();
+        assert_eq!(t.max_batch, c.max_batch);
+        assert_eq!(t.batch_window, c.batch_window);
+        assert_eq!(t.workers, c.workers);
+        assert_eq!(t.queue_depth, c.queue_depth);
+        assert_eq!(FabricOptions::new().backend_or_default(), c.backend);
+    }
+
+    #[test]
+    fn builder_overrides_env_overrides_config() {
+        let cfg = ServerConfig { workers: 3, backend: "scalar".into(), ..Default::default() };
+        // Config alone.
+        let o = FabricOptions::with_env(&no_env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_workers(), Some(3));
+        assert_eq!(o.get_backend(), Some("scalar"));
+        // Env beats config.
+        let env = |key: &str| match key {
+            "NEURALUT_ENGINE" => Some(" Bitsliced ".to_string()),
+            "NEURALUT_WORKERS" => Some("5".to_string()),
+            _ => None,
+        };
+        let o = FabricOptions::with_env(&env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_workers(), Some(5));
+        assert_eq!(o.get_backend(), Some(" Bitsliced "));
+        // Builder beats env.
+        let o = o.workers(7).backend("scalar");
+        assert_eq!(o.get_workers(), Some(7));
+        assert_eq!(o.backend_or_default(), "scalar");
+    }
+
+    #[test]
+    fn bad_env_workers_is_an_error() {
+        let env = |key: &str| {
+            (key == "NEURALUT_WORKERS").then(|| "many".to_string())
+        };
+        let err = FabricOptions::with_env(&env, None).unwrap_err().to_string();
+        assert!(err.contains("NEURALUT_WORKERS"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_tuning_is_rejected() {
+        assert!(FabricOptions::new().workers(0).resolve_tuning().is_err());
+        assert!(FabricOptions::new().workers(MAX_WORKERS + 1).resolve_tuning().is_err());
+        assert!(FabricOptions::new().queue_depth(0).resolve_tuning().is_err());
+        assert!(FabricOptions::new()
+            .queue_depth(MAX_QUEUE_DEPTH + 1)
+            .resolve_tuning()
+            .is_err());
+        assert!(FabricOptions::new().max_batch(0).resolve_tuning().is_err());
+        assert!(FabricOptions::new().workers(MAX_WORKERS).resolve_tuning().is_ok());
+    }
+}

@@ -1,0 +1,245 @@
+//! The pluggable backend registry: execution strategies by *name*.
+//!
+//! Every inference backend is an entry mapping a normalized name to a
+//! factory (`Arc<LutNetwork>` → compile-once [`FabricProgram`]) plus its
+//! [`Capabilities`]. `scalar` and `bitsliced` are registered built-ins;
+//! tests and downstream crates [`register`](BackendRegistry::register)
+//! their own (mock backends, device-specific lowerings, assembled
+//! sub-network variants) and select them through
+//! [`FabricOptions`](crate::fabric::FabricOptions) exactly like the
+//! built-ins — a new backend is a registry entry, not a cross-crate
+//! surgery.
+//!
+//! Name lookups are case- and whitespace-insensitive
+//! (`NEURALUT_ENGINE=" Bitsliced "` selects `bitsliced`), and every
+//! unknown-name error lists the currently registered names.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::bail;
+
+use crate::engine::{BitslicedProgram, FabricProgram, ScalarProgram};
+use crate::luts::LutNetwork;
+
+/// Compiles one network into a shared, executor-spawning program.
+pub type BackendFactory =
+    Arc<dyn Fn(Arc<LutNetwork>) -> crate::Result<Arc<dyn FabricProgram>> + Send + Sync>;
+
+/// One-time cost class of a backend's compile step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompileCost {
+    /// No compile step worth measuring (table lookups run as-is).
+    Free,
+    /// A full lowering pass per network (support reduction, ROBDD,
+    /// netlist emission) — amortized over batch/serving workloads.
+    Lowering,
+}
+
+/// The batch shape a backend is built for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchAffinity {
+    /// Per-sample execution: batch size 1 costs the same per sample.
+    Single,
+    /// Word-parallel execution: wants ≥ 64-sample batches to fill lanes.
+    Wide,
+}
+
+/// Static facts about a backend, consulted when picking one for a
+/// workload and surfaced in logs/reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Whether the backend accepts signed codes on *hidden* layers.
+    /// (The NLUT format allows them; the bitsliced lowering pass rejects
+    /// them — only the final logit layer may be signed there.)
+    pub signed_hidden: bool,
+    /// Preferred batch shape.
+    pub batch_affinity: BatchAffinity,
+    /// One-time compile cost paid per [`Model::compile`](crate::fabric::Model::compile).
+    pub compile_cost: CompileCost,
+}
+
+/// A registered backend: canonical name, capabilities, factory.
+#[derive(Clone)]
+pub struct BackendEntry {
+    name: String,
+    caps: Capabilities,
+    factory: BackendFactory,
+}
+
+impl BackendEntry {
+    /// Canonical (normalized) backend name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn capabilities(&self) -> Capabilities {
+        self.caps
+    }
+
+    /// Run the factory: compile `net` into the shared program.
+    pub fn compile(&self, net: Arc<LutNetwork>) -> crate::Result<Arc<dyn FabricProgram>> {
+        (self.factory)(net)
+    }
+}
+
+impl std::fmt::Debug for BackendEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BackendEntry")
+            .field("name", &self.name)
+            .field("caps", &self.caps)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Canonical form used for registration and lookup: trimmed, ASCII
+/// lowercase. `" Bitsliced "` and `bitsliced` are the same backend.
+pub fn normalize_name(name: &str) -> String {
+    name.trim().to_ascii_lowercase()
+}
+
+/// The name → factory table. One process-wide instance
+/// ([`BackendRegistry::global`]) serves every resolution path — CLI
+/// flags, `NEURALUT_ENGINE`, server config files and tests all look up
+/// the same entries.
+pub struct BackendRegistry {
+    entries: Mutex<BTreeMap<String, BackendEntry>>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (no built-ins) — for isolated tests.
+    pub fn empty() -> BackendRegistry {
+        BackendRegistry { entries: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The process-wide registry with the built-ins pre-registered:
+    ///
+    /// | name        | compile cost | batch affinity | signed hidden |
+    /// |-------------|--------------|----------------|---------------|
+    /// | `scalar`    | free         | single-sample  | yes           |
+    /// | `bitsliced` | lowering     | wide (64-lane) | no            |
+    pub fn global() -> &'static BackendRegistry {
+        static GLOBAL: OnceLock<BackendRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let reg = BackendRegistry::empty();
+            reg.register(
+                "scalar",
+                Capabilities {
+                    signed_hidden: true,
+                    batch_affinity: BatchAffinity::Single,
+                    compile_cost: CompileCost::Free,
+                },
+                Arc::new(|net: Arc<LutNetwork>| {
+                    Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
+                }),
+            )
+            .expect("registering built-in 'scalar'");
+            reg.register(
+                "bitsliced",
+                Capabilities {
+                    signed_hidden: false,
+                    batch_affinity: BatchAffinity::Wide,
+                    compile_cost: CompileCost::Lowering,
+                },
+                Arc::new(|net: Arc<LutNetwork>| {
+                    Ok(Arc::new(BitslicedProgram::compile(&net)?) as Arc<dyn FabricProgram>)
+                }),
+            )
+            .expect("registering built-in 'bitsliced'");
+            reg
+        })
+    }
+
+    /// Register a backend under `name` (normalized). Duplicate names are
+    /// an error — a backend is registered exactly once per process.
+    pub fn register(
+        &self,
+        name: &str,
+        caps: Capabilities,
+        factory: BackendFactory,
+    ) -> crate::Result<()> {
+        let canon = normalize_name(name);
+        if canon.is_empty() {
+            bail!("backend name '{name}' is empty after normalization");
+        }
+        let mut entries = self.entries.lock().unwrap();
+        if entries.contains_key(&canon) {
+            bail!("backend '{canon}' is already registered");
+        }
+        entries.insert(canon.clone(), BackendEntry { name: canon, caps, factory });
+        Ok(())
+    }
+
+    /// Registered names, sorted — the list every unknown-name error cites.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Look up a backend by (case/whitespace-insensitive) name. The
+    /// error for an unknown name lists what *is* registered — uniform
+    /// across the CLI, env vars, config files and the builder API.
+    pub fn resolve(&self, name: &str) -> crate::Result<BackendEntry> {
+        let canon = normalize_name(name);
+        let entries = self.entries.lock().unwrap();
+        match entries.get(&canon) {
+            Some(e) => Ok(e.clone()),
+            None => {
+                let names: Vec<&str> = entries.keys().map(|s| s.as_str()).collect();
+                bail!(
+                    "unknown backend '{}' (registered: {})",
+                    name.trim(),
+                    names.join(", ")
+                )
+            }
+        }
+    }
+
+    /// Capabilities of a registered backend.
+    pub fn capabilities(&self, name: &str) -> crate::Result<Capabilities> {
+        Ok(self.resolve(name)?.capabilities())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_case_and_whitespace_insensitively() {
+        let reg = BackendRegistry::global();
+        assert_eq!(reg.resolve("scalar").unwrap().name(), "scalar");
+        assert_eq!(reg.resolve(" Bitsliced ").unwrap().name(), "bitsliced");
+        assert_eq!(reg.resolve("SCALAR").unwrap().name(), "scalar");
+        let caps = reg.capabilities("bitsliced").unwrap();
+        assert_eq!(caps.compile_cost, CompileCost::Lowering);
+        assert_eq!(caps.batch_affinity, BatchAffinity::Wide);
+        assert!(!caps.signed_hidden);
+        assert!(reg.capabilities("scalar").unwrap().signed_hidden);
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered_names() {
+        let err = BackendRegistry::global().resolve("fpga").unwrap_err().to_string();
+        assert!(err.contains("unknown backend 'fpga'"), "{err}");
+        assert!(err.contains("bitsliced"), "{err}");
+        assert!(err.contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_and_empty_registrations_are_rejected() {
+        let reg = BackendRegistry::empty();
+        let caps = Capabilities {
+            signed_hidden: true,
+            batch_affinity: BatchAffinity::Single,
+            compile_cost: CompileCost::Free,
+        };
+        let factory: BackendFactory =
+            Arc::new(|net| Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>));
+        reg.register("Mock", caps, factory.clone()).unwrap();
+        // Same name modulo case/whitespace → duplicate.
+        assert!(reg.register(" mock ", caps, factory.clone()).is_err());
+        assert!(reg.register("   ", caps, factory).is_err());
+        assert_eq!(reg.names(), vec!["mock".to_string()]);
+        assert_eq!(reg.resolve("MOCK ").unwrap().name(), "mock");
+    }
+}

@@ -23,41 +23,56 @@
 //! * [`luts`] — truth tables and the converted L-LUT network model.
 //! * [`netlist`] — cycle-accurate LUT-network simulator (the FPGA fabric
 //!   substitute).
-//! * [`engine`] — compiled fabric engine: bit-level lowering pass +
-//!   bitsliced (64-samples-per-word) evaluator behind the
-//!   `InferenceBackend` trait.
+//! * [`engine`] — execution backends: the bit-level lowering pass +
+//!   bitsliced (64-samples-per-word) evaluator, behind the
+//!   `FabricProgram` (compile-once) / `InferenceBackend` (per-worker)
+//!   traits.
+//! * [`fabric`] — **the unified inference API**: `Model` →
+//!   `CompiledFabric` → `Session`/serving, with the pluggable
+//!   `BackendRegistry` (backends by name) and the `FabricOptions`
+//!   resolution path (builder < env < config file < defaults).
 //! * [`rtl`] — Verilog + testbench generation.
 //! * [`synth`] — Vivado-substitute synthesis/P&R cost model (support
 //!   reduction, ROBDD, 6-LUT covering, timing).
 //! * [`server`] — multi-worker sharded inference serving runtime: bounded
 //!   request queue, N batcher threads over one shared compiled fabric,
 //!   explicit backpressure (`try_infer` → `Overloaded`), graceful
-//!   drain-on-shutdown, atomic serving stats.
+//!   drain-on-shutdown, atomic serving stats. Started via
+//!   `CompiledFabric::serve`.
 //!
-//! ## Compiled fabric engine
+//! ## The inference API
 //!
-//! `engine::lower` compiles a converted network once: every L-LUT truth
-//! table is expanded into per-output-bit Boolean functions over the
-//! previous layer's wires, support-reduced and ROBDD-factored
-//! (`synth::boolfn` / `synth::robdd`), and emitted as a levelized netlist
-//! of fused word-wide mux ops. `engine::BitslicedEngine` then evaluates
-//! 64 samples per `u64` word — batch inference as pure AND/OR/XOR
-//! streaming, bit-exact against `netlist::Simulator`. Pick the `scalar`
-//! backend for tiny batches or one-off runs (zero compile cost); pick
-//! `bitsliced` for batch/serving workloads, where word-level parallelism
-//! and logic sharing amortize the one-time lowering. The server
-//! (`ServerConfig::backend`), the CLI (`--engine`) and the examples
-//! (`NEURALUT_ENGINE`) all select backends through `engine::BackendKind`.
+//! One model artifact, execution strategy as a pluggable choice:
 //!
-//! Backends constructed through `engine::backend` / `engine::SharedFabric`
-//! are `'static`: they hold the network (and compiled program) behind
-//! `Arc`s, so the serving runtime's worker threads own cheap executors of
-//! one shared compile — N workers, one lowering pass per server start.
+//! ```ignore
+//! use neuralut::fabric::{FabricOptions, Model};
+//!
+//! let model = Model::load(path)?;                       // or from_network(net)
+//! let fabric = model.compile(
+//!     &FabricOptions::from_env()?.backend("bitsliced"), // by registry name
+//! )?;
+//! let session = fabric.session();                       // in-process batches
+//! let result = session.infer_batch(&x)?;
+//! let server = fabric.serve();                          // worker-pool serving
+//! let reply = server.client().infer(feats)?;
+//! ```
+//!
+//! `Model::compile` resolves the backend name through
+//! `fabric::BackendRegistry` — `scalar` (zero compile cost, per-sample
+//! lookups) and `bitsliced` (one lowering pass, 64 samples per word) are
+//! built-ins; tests and extensions register more. The backend factory
+//! runs exactly once per compile; sessions and serving workers all share
+//! the one compiled program (`Arc` clones only). Configuration funnels
+//! through `FabricOptions::from_env_and_config`: defaults, then a server
+//! config file, then `NEURALUT_ENGINE`/`NEURALUT_WORKERS`, then explicit
+//! builder/CLI settings — with uniform, name-listing errors for unknown
+//! backends on every path.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod fabric;
 pub mod luts;
 pub mod manifest;
 pub mod netlist;

@@ -161,50 +161,118 @@ impl LutNetwork {
     }
 
     /// Load an NLUT v1 file.
+    ///
+    /// Rejections are diagnosable from the message alone: bad magic and
+    /// bad version report expected vs. actual values, and every
+    /// truncated read reports what was being read, the byte offset, and
+    /// the file length.
     pub fn load(path: &Path) -> Result<LutNetwork> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path)
-                .with_context(|| format!("opening {}", path.display()))?,
-        );
-        let r32 = |f: &mut dyn Read| -> Result<u32> {
-            let mut b = [0u8; 4];
-            f.read_exact(&mut b)?;
-            Ok(u32::from_le_bytes(b))
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("reading metadata of {}", path.display()))?
+            .len();
+        let mut r = NlutReader {
+            f: std::io::BufReader::new(file),
+            path,
+            file_len,
+            offset: 0,
         };
-        if r32(&mut f)? != Self::MAGIC {
-            bail!("bad magic");
+        let magic = r.u32("magic")?;
+        if magic != Self::MAGIC {
+            bail!(
+                "{}: bad NLUT magic 0x{magic:08X} (expected 0x{:08X} \"NLUT\"); \
+                 file is {file_len} bytes and is not an NLUT model",
+                path.display(),
+                Self::MAGIC
+            );
         }
-        if r32(&mut f)? != Self::VERSION {
-            bail!("bad version");
+        let version = r.u32("version")?;
+        if version != Self::VERSION {
+            bail!(
+                "{}: unsupported NLUT version {version} (this build reads \
+                 version {}; file is {file_len} bytes)",
+                path.display(),
+                Self::VERSION
+            );
         }
-        let name_len = r32(&mut f)? as usize;
+        let name_len = r.u32("name length")? as usize;
+        // Untrusted size fields are checked against the file length (and
+        // sane format bounds) *before* any allocation or shift, so a
+        // corrupt header is an error message, not a panic or OOM.
+        if name_len as u64 > file_len {
+            bail!(
+                "{}: absurd name length {name_len} in NLUT header (file is \
+                 {file_len} bytes)",
+                path.display()
+            );
+        }
         let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let input_size = r32(&mut f)? as usize;
-        let input_bits = r32(&mut f)? as usize;
-        let n_class = r32(&mut f)? as usize;
-        let n_layers = r32(&mut f)? as usize;
+        r.bytes(&mut name, "model name")?;
+        let input_size = r.u32("input_size")? as usize;
+        let input_bits = r.u32("input_bits")? as usize;
+        let n_class = r.u32("n_class")? as usize;
+        let n_layers = r.u32("layer count")? as usize;
+        // Every layer needs at least a 20-byte header, so the claimed
+        // count must fit in the file before reserving space for it.
+        if (n_layers as u64).saturating_mul(20) > file_len {
+            bail!(
+                "{}: absurd layer count {n_layers} in NLUT header (file is \
+                 {file_len} bytes)",
+                path.display()
+            );
+        }
         let mut layers = Vec::with_capacity(n_layers);
-        for _ in 0..n_layers {
-            let num_luts = r32(&mut f)? as usize;
-            let fan_in = r32(&mut f)? as usize;
-            let in_bits = r32(&mut f)? as usize;
-            let out_bits = r32(&mut f)? as usize;
-            let signed_out = r32(&mut f)? != 0;
+        for li in 0..n_layers {
+            let num_luts = r.u32("layer num_luts")? as usize;
+            let fan_in = r.u32("layer fan_in")? as usize;
+            let in_bits = r.u32("layer in_bits")? as usize;
+            let out_bits = r.u32("layer out_bits")? as usize;
+            let signed_out = r.u32("layer signed_out")? != 0;
+            // `entries = 1 << (in_bits * fan_in)` must not shift-overflow,
+            // and the claimed payload must actually fit in the file.
+            const MAX_ADDR_BITS: usize = 26;
+            if in_bits == 0 || in_bits > 15 {
+                bail!(
+                    "{}: layer {li} claims in_bits = {in_bits} (supported: 1..=15)",
+                    path.display()
+                );
+            }
+            let addr_bits = in_bits.saturating_mul(fan_in);
+            if addr_bits > MAX_ADDR_BITS {
+                bail!(
+                    "{}: layer {li} claims {addr_bits} table address bits \
+                     (in_bits {in_bits} × fan_in {fan_in}; supported: \
+                     <= {MAX_ADDR_BITS})",
+                    path.display()
+                );
+            }
+            let claimed = (num_luts as u64)
+                .saturating_mul(fan_in as u64 * 4 + ((1u64 << addr_bits) * 2));
+            if r.offset.saturating_add(claimed) > file_len {
+                bail!(
+                    "{}: truncated NLUT file: layer {li} claims {num_luts} \
+                     LUTs × (fan_in {fan_in} + 2^{addr_bits} entries) = \
+                     {claimed} payload bytes at offset {}, but file is \
+                     {file_len} bytes",
+                    path.display(),
+                    r.offset
+                );
+            }
             let mut indices = Vec::with_capacity(num_luts);
             for _ in 0..num_luts {
                 let mut row = Vec::with_capacity(fan_in);
                 for _ in 0..fan_in {
-                    row.push(r32(&mut f)?);
+                    row.push(r.u32("wire index")?);
                 }
                 indices.push(row);
             }
             let entries = 1usize << (in_bits * fan_in);
             let mut tables = vec![0i16; num_luts * entries];
+            let table_what = format!("layer {li} table entry");
             for v in tables.iter_mut() {
-                let mut b = [0u8; 2];
-                f.read_exact(&mut b)?;
-                *v = i16::from_le_bytes(b);
+                *v = r.i16(&table_what)?;
             }
             layers.push(LutLayer {
                 indices,
@@ -222,8 +290,49 @@ impl LutNetwork {
             n_class,
             layers,
         };
-        net.validate()?;
+        net.validate()
+            .with_context(|| format!("validating {}", path.display()))?;
         Ok(net)
+    }
+}
+
+/// Position-tracking reader for NLUT files: every short read becomes an
+/// error naming the field being read, the byte offset, and the total
+/// file length — so a truncated or mislabeled file is diagnosable from
+/// the message alone.
+struct NlutReader<'a> {
+    f: std::io::BufReader<std::fs::File>,
+    path: &'a Path,
+    file_len: u64,
+    offset: u64,
+}
+
+impl NlutReader<'_> {
+    fn bytes(&mut self, buf: &mut [u8], what: &str) -> Result<()> {
+        self.f.read_exact(buf).map_err(|e| {
+            anyhow::anyhow!(
+                "{}: truncated NLUT file: needed {} byte(s) for {what} at \
+                 offset {}, but file is {} bytes: {e}",
+                self.path.display(),
+                buf.len(),
+                self.offset,
+                self.file_len
+            )
+        })?;
+        self.offset += buf.len() as u64;
+        Ok(())
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.bytes(&mut b, what)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn i16(&mut self, what: &str) -> Result<i16> {
+        let mut b = [0u8; 2];
+        self.bytes(&mut b, what)?;
+        Ok(i16::from_le_bytes(b))
     }
 }
 

@@ -19,19 +19,18 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use neuralut::coordinator::pipeline::{self, PipelineOpts};
 use neuralut::coordinator::trainer::{TrainOpts, Trainer};
 use neuralut::data::{Dataset, Workload};
-use neuralut::engine::{self, BackendKind, InferenceBackend as _};
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::{convert, LutNetwork};
 use neuralut::manifest::Manifest;
 use neuralut::nn::params::ParamStore;
 use neuralut::runtime::Runtime;
-use neuralut::server::{Server, ServerConfig};
+use neuralut::server::ServerConfig;
 use neuralut::synth::synthesize;
 use neuralut::util::stats;
 
@@ -92,12 +91,27 @@ impl Opts {
         self.get(key).is_some()
     }
 
-    /// `--engine scalar|bitsliced` (default scalar).
-    fn engine(&self) -> Result<BackendKind> {
-        self.get("engine")
-            .map(|v| v.parse().context("--engine"))
-            .transpose()
-            .map(|k| k.unwrap_or_default())
+    /// Fabric options for inference commands: config file (if any), then
+    /// env (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`), then the CLI flags —
+    /// one resolution path, CLI winning.
+    fn fabric(&self, file_cfg: Option<&ServerConfig>) -> Result<FabricOptions> {
+        let mut fo = FabricOptions::from_env_and_config(file_cfg)?;
+        if let Some(engine) = self.get("engine") {
+            fo = fo.backend(engine);
+        }
+        if let Some(w) = self.usize("workers")? {
+            fo = fo.workers(w);
+        }
+        if let Some(d) = self.usize("queue-depth")? {
+            fo = fo.queue_depth(d);
+        }
+        if let Some(mb) = self.usize("max-batch")? {
+            fo = fo.max_batch(mb);
+        }
+        if let Some(us) = self.usize("batch-window")? {
+            fo = fo.batch_window(std::time::Duration::from_micros(us as u64));
+        }
+        Ok(fo)
     }
 }
 
@@ -145,13 +159,16 @@ fn print_usage() {
          pipeline <config> [--seed N] [--epochs N] [--out DIR] [--rtl]\n  \
          convert <config> --params F --out F    trained params -> L-LUTs\n  \
          synth <config> --net F                 synthesis cost report\n  \
-         simulate <config> --net F [--engine scalar|bitsliced]\n  \
+         simulate <config> --net F [--engine BACKEND]\n  \
          rtl <config> --net F --out DIR         emit Verilog bundle\n  \
          vcd <config> --net F --out FILE        dump pipeline waveform (GTKWave)\n  \
          serve <config> --net F [--rate R] [--requests N] [--batch-window US]\n  \
-         \x20     [--workers N] [--queue-depth N] [--engine scalar|bitsliced]\n  \
+         \x20     [--workers N] [--queue-depth N] [--engine BACKEND]\n  \
          \x20     [--server-config FILE.toml]\n  \
-         suite <file.toml>                      run a batch of pipelines"
+         suite <file.toml>                      run a batch of pipelines\n\n\
+         BACKEND is a registered backend name ({}); NEURALUT_ENGINE /\n\
+         NEURALUT_WORKERS set ambient defaults the flags override.",
+        neuralut::fabric::BackendRegistry::global().names().join(" | ")
     );
 }
 
@@ -270,19 +287,18 @@ fn cmd_synth(pos: &[String], opts: &Opts) -> Result<()> {
 fn cmd_simulate(pos: &[String], opts: &Opts) -> Result<()> {
     let name = pos.first().context("usage: simulate <config> --net F")?;
     let (_m, ds) = load_bundle(name)?;
-    let net = Arc::new(LutNetwork::load(
-        &PathBuf::from(opts.get("net").context("--net required")?),
-    )?);
+    let model = Model::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
     let t0 = std::time::Instant::now();
-    let backend = engine::backend(opts.engine()?, net)?;
+    let fabric = model.compile(&opts.fabric(None)?)?;
     let compile_s = t0.elapsed().as_secs_f64();
+    let session = fabric.session();
     let t0 = std::time::Instant::now();
-    let acc = backend.accuracy(&ds.test_x, &ds.test_y);
+    let acc = session.accuracy(&ds.test_x, &ds.test_y)?;
     let dt = t0.elapsed().as_secs_f64();
     println!("fabric accuracy: {:.4} on {} samples ({:.0} samples/s, latency {} cycles, \
               {} engine, compile {:.3}s)",
-             acc, ds.n_test(), ds.n_test() as f64 / dt, backend.latency_cycles(),
-             backend.name(), compile_s);
+             acc, ds.n_test(), ds.n_test() as f64 / dt, session.latency_cycles(),
+             session.backend_name(), compile_s);
     Ok(())
 }
 
@@ -333,37 +349,21 @@ fn cmd_suite(pos: &[String]) -> Result<()> {
 fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
     let name = pos.first().context("usage: serve <config> --net F")?;
     let (_m, ds) = load_bundle(name)?;
-    let net = Arc::new(LutNetwork::load(
-        &PathBuf::from(opts.get("net").context("--net required")?),
-    )?);
+    let model = Model::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
     let n_req = opts.usize("requests")?.unwrap_or(10_000);
     let rate = opts.f64("rate")?.unwrap_or(50_000.0);
-    // File config first (TOML subset), CLI flags override.
-    let mut cfg = match opts.get("server-config") {
-        Some(path) => ServerConfig::load(&PathBuf::from(path))?,
-        None => ServerConfig::default(),
-    };
-    if let Some(mb) = opts.usize("max-batch")? {
-        cfg.max_batch = mb;
-    }
-    if let Some(us) = opts.usize("batch-window")? {
-        cfg.batch_window = std::time::Duration::from_micros(us as u64);
-    }
-    if let Some(kind) = opts.get("engine") {
-        cfg.backend = kind.parse().context("--engine")?;
-    }
-    if let Some(w) = opts.usize("workers")? {
-        cfg.workers = w;
-    }
-    if let Some(d) = opts.usize("queue-depth")? {
-        cfg.queue_depth = d;
-    }
-    cfg.validate()?;
+    // One resolution path: defaults < config file < env < CLI flags.
+    let file_cfg = opts
+        .get("server-config")
+        .map(|path| ServerConfig::load(&PathBuf::from(path)))
+        .transpose()?;
+    let fabric = model.compile(&opts.fabric(file_cfg.as_ref())?)?;
+    let tuning = fabric.tuning();
     println!("serving {} at {:.0} req/s for {} requests \
               (window {} us, {} engine, {} workers, queue depth {})...",
-             net.name, rate, n_req, cfg.batch_window.as_micros(), cfg.backend,
-             cfg.workers, cfg.queue_depth);
-    let server = Server::start(net.clone(), cfg);
+             model.name(), rate, n_req, tuning.batch_window.as_micros(),
+             fabric.backend_name(), tuning.workers, tuning.queue_depth);
+    let server = fabric.serve();
     let client = server.client();
     let workload = Workload::poisson(&ds, 99, n_req, rate);
 

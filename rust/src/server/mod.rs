@@ -5,9 +5,15 @@
 //! feature vectors into a bounded MPMC queue ([`crate::util::pool::BoundedQueue`]);
 //! each of `workers` batcher threads pulls requests up to `max_batch` or
 //! `batch_window`, runs one batched fabric inference through its own
-//! executor of the *shared* [`SharedFabric`] (the bitsliced program is
-//! compiled exactly once per server start, then referenced by every
-//! worker), and replies through per-request channels.
+//! executor of the *shared* [`FabricProgram`] (compiled exactly once per
+//! [`Model::compile`](crate::fabric::Model::compile), then referenced by
+//! every worker), and replies through per-request channels.
+//!
+//! Servers are started through the fabric API —
+//! [`CompiledFabric::serve`](crate::fabric::CompiledFabric::serve) — which
+//! resolves the backend by name, validates the tuning, and hands this
+//! module an already-compiled program; `Server::start` is a thin
+//! crate-internal shim under it.
 //!
 //! Backpressure is explicit: [`Client::try_infer`] never blocks and
 //! returns [`ServerError::Overloaded`] when the queue is full (counted in
@@ -28,8 +34,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::TomlDoc;
-use crate::engine::{BackendKind, BitNetlist, InferenceBackend, SharedFabric};
-use crate::luts::LutNetwork;
+use crate::engine::{BitNetlist, FabricProgram, InferenceBackend};
+use crate::fabric::{BackendRegistry, FabricTuning, DEFAULT_BACKEND};
 use crate::util::pool::{BoundedQueue, Pop, PushError};
 
 /// Upper bound on `workers` — more threads than this is a config bug.
@@ -37,15 +43,18 @@ pub const MAX_WORKERS: usize = 512;
 /// Upper bound on `queue_depth` — a deeper queue only hides overload.
 pub const MAX_QUEUE_DEPTH: usize = 1 << 20;
 
-/// Server tuning knobs.
+/// A parsed server-config *file*: the on-disk tuning format. Feed it to
+/// [`FabricOptions::from_env_and_config`](crate::fabric::FabricOptions::from_env_and_config)
+/// — the one resolution path every entry point shares — rather than
+/// consuming it directly.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Maximum requests folded into one fabric batch.
     pub max_batch: usize,
     /// How long a batcher waits to fill a batch.
     pub batch_window: Duration,
-    /// Which inference engine executes the batches.
-    pub backend: BackendKind,
+    /// Registry name of the backend executing the batches.
+    pub backend: String,
     /// Batcher threads sharing the request queue (and the compiled fabric).
     pub workers: usize,
     /// Bounded request-queue depth — the backpressure limit.
@@ -54,12 +63,14 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        // One source of truth for the knob defaults: `FabricTuning`.
+        let t = FabricTuning::default();
         ServerConfig {
-            max_batch: 256,
-            batch_window: Duration::from_micros(200),
-            backend: BackendKind::Scalar,
-            workers: 1,
-            queue_depth: 1024,
+            max_batch: t.max_batch,
+            batch_window: t.batch_window,
+            backend: DEFAULT_BACKEND.to_string(),
+            workers: t.workers,
+            queue_depth: t.queue_depth,
         }
     }
 }
@@ -70,14 +81,24 @@ impl ServerConfig {
     /// ```toml
     /// max_batch = 512
     /// batch_window_us = 100
-    /// backend = "bitsliced"   # or "scalar" (the default)
+    /// backend = "bitsliced"   # any registered backend name
     /// workers = 4
     /// queue_depth = 2048
     /// ```
     ///
     /// All keys are optional; unknown keys are rejected so typos fail
-    /// loudly, and zero or absurd `workers` / `queue_depth` values are
-    /// config errors, not clamped surprises.
+    /// loudly, zero or absurd `workers` / `queue_depth` values are
+    /// config errors (not clamped surprises), and `backend` must name a
+    /// registered backend — the error for an unknown name lists what is
+    /// registered.
+    ///
+    /// Resolution is against [`BackendRegistry::global`], deliberately at
+    /// parse time so a typo'd name fails where the file is read. Register
+    /// custom backends before parsing config files that name them; an
+    /// embedder driving an isolated registry through
+    /// [`Model::compile_with`](crate::fabric::Model::compile_with) should
+    /// set [`FabricOptions`](crate::fabric::FabricOptions) directly
+    /// rather than round-tripping names through a config file.
     pub fn parse_toml(text: &str) -> Result<ServerConfig> {
         let doc = TomlDoc::parse(text)?;
         for key in doc.root.keys() {
@@ -99,7 +120,12 @@ impl ServerConfig {
             cfg.batch_window = Duration::from_micros(v.as_usize()? as u64);
         }
         if let Some(v) = doc.root.get("backend") {
-            cfg.backend = v.as_str()?.parse()?;
+            // Resolve now so a bad name fails at parse time with the
+            // registry's uniform name-listing error; store canonical.
+            cfg.backend = BackendRegistry::global()
+                .resolve(v.as_str()?)?
+                .name()
+                .to_string();
         }
         if let Some(v) = doc.root.get("workers") {
             cfg.workers = v.as_usize()?;
@@ -111,20 +137,18 @@ impl ServerConfig {
         Ok(cfg)
     }
 
-    /// Range-check `workers` and `queue_depth` — shared by `parse_toml`
-    /// and the CLI flag path, so zero/absurd values fail loudly everywhere
-    /// instead of being clamped somewhere downstream.
+    /// Range-check the knobs — zero/absurd values fail loudly at parse
+    /// time instead of being clamped downstream. Delegates to
+    /// [`FabricTuning::validate`], the one range check both the config
+    /// file and the builder path share.
     pub fn validate(&self) -> Result<()> {
-        if self.workers == 0 || self.workers > MAX_WORKERS {
-            bail!("workers = {} out of range (1..={MAX_WORKERS})", self.workers);
+        FabricTuning {
+            max_batch: self.max_batch,
+            batch_window: self.batch_window,
+            workers: self.workers,
+            queue_depth: self.queue_depth,
         }
-        if self.queue_depth == 0 || self.queue_depth > MAX_QUEUE_DEPTH {
-            bail!(
-                "queue_depth = {} out of range (1..={MAX_QUEUE_DEPTH})",
-                self.queue_depth
-            );
-        }
-        Ok(())
+        .validate()
     }
 
     /// Load a server-config file from disk.
@@ -393,60 +417,46 @@ impl Client {
 
 /// The running server; dropping it closes the queue, drains and answers
 /// the backlog, and joins every worker.
+///
+/// Started via [`CompiledFabric::serve`](crate::fabric::CompiledFabric::serve);
+/// there is no public constructor here — compilation, backend resolution
+/// and tuning validation all live in the fabric layer.
 pub struct Server {
     shared: Arc<ServerShared>,
-    fabric: SharedFabric,
+    program: Arc<dyn FabricProgram>,
     handles: Vec<JoinHandle<()>>,
     input_size: usize,
 }
 
 impl Server {
-    /// Start serving a converted network with `cfg.workers` batcher
-    /// threads over one shared fabric. The lowering pass (for the
-    /// bitsliced backend) runs exactly once, here; each worker only gets a
-    /// cheap executor. A network the lowering pass rejects still serves —
-    /// on the scalar fallback — rather than taking the server down.
-    ///
-    /// Start never fails: a hand-built `cfg` that skipped
-    /// [`ServerConfig::validate`] has its `workers`/`queue_depth` clamped
-    /// into range as a last resort — loudly, on stderr (the parse and CLI
-    /// paths have already rejected such values as errors).
-    pub fn start(net: Arc<LutNetwork>, cfg: ServerConfig) -> Server {
-        if let Err(e) = cfg.validate() {
-            eprintln!(
-                "server: invalid config ({e:#}); clamping into range — \
-                 call ServerConfig::validate() to reject this earlier"
-            );
-        }
-        let workers = cfg.workers.clamp(1, MAX_WORKERS);
-        let input_size = net.input_size;
-        let fabric = match SharedFabric::compile(cfg.backend, net.clone()) {
-            Ok(f) => f,
-            Err(e) => {
-                eprintln!(
-                    "server: {} backend unavailable ({e:#}); falling back to scalar",
-                    cfg.backend
-                );
-                SharedFabric::scalar(net)
-            }
-        };
+    /// Spawn `tuning.workers` batcher threads over an already-compiled
+    /// program. Crate-internal shim under
+    /// [`CompiledFabric::serve`](crate::fabric::CompiledFabric::serve):
+    /// by the time control reaches here the backend factory has run
+    /// (exactly once) and the tuning has been range-checked, so starting
+    /// cannot fail. Each worker only gets a cheap executor of `program`.
+    pub(crate) fn start(
+        program: Arc<dyn FabricProgram>,
+        input_size: usize,
+        tuning: &FabricTuning,
+    ) -> Server {
         let shared = Arc::new(ServerShared {
-            queue: BoundedQueue::new(cfg.queue_depth.clamp(1, MAX_QUEUE_DEPTH)),
-            stats: StatsInner::new(workers),
+            queue: BoundedQueue::new(tuning.queue_depth),
+            stats: StatsInner::new(tuning.workers),
         });
-        let max_batch = cfg.max_batch.max(1);
-        let window = cfg.batch_window;
+        let max_batch = tuning.max_batch;
+        let window = tuning.batch_window;
         // Executors are built here, synchronously, before any thread spawns
         // — so the compile-exactly-once property is a construction-time
         // invariant, not a runtime race.
-        let handles = (0..workers)
+        let handles = (0..tuning.workers)
             .map(|w| {
-                let exec = fabric.executor();
+                let exec = program.executor();
                 let sh = shared.clone();
                 std::thread::spawn(move || worker_loop(w, exec, sh, max_batch, window))
             })
             .collect();
-        Server { shared, fabric, handles, input_size }
+        Server { shared, program, handles, input_size }
     }
 
     pub fn client(&self) -> Client {
@@ -463,10 +473,10 @@ impl Server {
         self.shared.stats.snapshot()
     }
 
-    /// The compiled program every worker shares (`None` on the scalar
-    /// backend — there is nothing compiled to share).
+    /// The lowered bit-netlist every worker shares (`None` for backends
+    /// with nothing compiled to share, e.g. `scalar`).
     pub fn shared_program(&self) -> Option<Arc<BitNetlist>> {
-        self.fabric.program().cloned()
+        self.program.bit_netlist().cloned()
     }
 }
 
@@ -528,14 +538,21 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::{FabricOptions, Model};
     use crate::luts::random_network;
     use crate::netlist::Simulator;
+
+    /// Compile-and-serve helper for these tests: the fabric API path
+    /// every caller uses.
+    fn serve(net: Arc<crate::luts::LutNetwork>, opts: &FabricOptions) -> Server {
+        Model::from_arc(net).compile(opts).unwrap().serve()
+    }
 
     #[test]
     fn serves_and_matches_direct_simulation() {
         let net = Arc::new(random_network(21, 8, 2, &[6, 3], 3, 2, 4));
         let sim = Simulator::new(&net);
-        let server = Server::start(net.clone(), ServerConfig::default());
+        let server = serve(net.clone(), &FabricOptions::new());
         let client = server.client();
         for i in 0..20 {
             let feats: Vec<f32> = (0..8).map(|j| ((i + j) % 5) as f32 / 5.0).collect();
@@ -550,10 +567,7 @@ mod tests {
     fn bitsliced_backend_serves_identical_predictions() {
         let net = Arc::new(random_network(24, 8, 2, &[6, 3], 3, 2, 4));
         let sim = Simulator::new(&net);
-        let server = Server::start(net.clone(), ServerConfig {
-            backend: BackendKind::Bitsliced,
-            ..Default::default()
-        });
+        let server = serve(net.clone(), &FabricOptions::new().backend("bitsliced"));
         let client = server.client();
         for i in 0..20 {
             let feats: Vec<f32> = (0..8).map(|j| ((i + j) % 6) as f32 / 6.0).collect();
@@ -571,18 +585,23 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.max_batch, 512);
         assert_eq!(cfg.batch_window, Duration::from_micros(100));
-        assert_eq!(cfg.backend, BackendKind::Bitsliced);
+        assert_eq!(cfg.backend, "bitsliced");
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.queue_depth, 64);
-        // All keys optional -> defaults (backend defaults to Scalar).
+        // Backend names normalize to the registry's canonical form.
+        let cfg = ServerConfig::parse_toml("backend = \" Bitsliced \"").unwrap();
+        assert_eq!(cfg.backend, "bitsliced");
+        // All keys optional -> defaults (backend defaults to scalar).
         let d = ServerConfig::parse_toml("").unwrap();
-        assert_eq!(d.backend, BackendKind::Scalar);
+        assert_eq!(d.backend, "scalar");
         assert_eq!(d.max_batch, ServerConfig::default().max_batch);
         assert_eq!(d.workers, 1);
         assert_eq!(d.queue_depth, 1024);
         // Typos and bad values fail loudly.
         assert!(ServerConfig::parse_toml("max_bach = 4").is_err());
-        assert!(ServerConfig::parse_toml("backend = \"fpga\"").is_err());
+        let err = ServerConfig::parse_toml("backend = \"fpga\"").unwrap_err().to_string();
+        assert!(err.contains("unknown backend 'fpga'"), "{err}");
+        assert!(err.contains("registered:"), "{err}");
         assert!(ServerConfig::parse_toml("[[run]]\nconfig = \"x\"").is_err());
         assert!(ServerConfig::parse_toml("workers = 0").is_err());
         assert!(ServerConfig::parse_toml("workers = 100000").is_err());
@@ -592,18 +611,19 @@ mod tests {
     #[test]
     fn rejects_bad_feature_length() {
         let net = Arc::new(random_network(22, 8, 2, &[4, 2], 3, 2, 4));
-        let server = Server::start(net, ServerConfig::default());
+        let server = serve(net, &FabricOptions::new());
         assert!(server.client().infer(vec![0.0; 3]).is_err());
     }
 
     #[test]
     fn concurrent_clients_all_get_replies() {
         let net = Arc::new(random_network(23, 4, 2, &[4, 2], 2, 2, 4));
-        let server = Server::start(net, ServerConfig {
-            max_batch: 16,
-            batch_window: Duration::from_micros(500),
-            ..Default::default()
-        });
+        let server = serve(
+            net,
+            &FabricOptions::new()
+                .max_batch(16)
+                .batch_window(Duration::from_micros(500)),
+        );
         let client = server.client();
         let handles: Vec<_> = (0..8)
             .map(|t| {
@@ -626,19 +646,19 @@ mod tests {
     #[test]
     fn worker_pool_shares_one_compiled_program() {
         let net = Arc::new(random_network(41, 8, 2, &[6, 3], 3, 2, 4));
-        let server = Server::start(net.clone(), ServerConfig {
-            backend: BackendKind::Bitsliced,
-            workers: 4,
-            ..Default::default()
-        });
+        let server = serve(
+            net.clone(),
+            &FabricOptions::new().backend("bitsliced").workers(4),
+        );
         assert_eq!(server.workers(), 4);
         let prog = server.shared_program().expect("bitsliced fabric has a program");
-        // ONE compiled BitNetlist, referenced by: the fabric + this clone
-        // + each of the 4 worker executors. If any worker had compiled its
-        // own program, this count (and the program identity) would differ.
+        // ONE compiled BitNetlist, referenced by: the program held by the
+        // server + this clone + each of the 4 worker executors. If any
+        // worker had compiled its own program, this count (and the
+        // program identity) would differ.
         assert_eq!(Arc::strong_count(&prog), 4 + 2);
-        // The scalar fabric has nothing compiled to share.
-        let scalar = Server::start(net, ServerConfig { workers: 3, ..Default::default() });
+        // The scalar program has nothing compiled to share.
+        let scalar = serve(net, &FabricOptions::new().workers(3));
         assert!(scalar.shared_program().is_none());
         assert_eq!(scalar.workers(), 3);
     }
@@ -647,11 +667,10 @@ mod tests {
     fn multi_worker_serving_matches_direct_simulation() {
         let net = Arc::new(random_network(42, 8, 2, &[6, 3], 3, 2, 4));
         let sim = Simulator::new(&net);
-        let server = Server::start(net.clone(), ServerConfig {
-            workers: 4,
-            backend: BackendKind::Bitsliced,
-            ..Default::default()
-        });
+        let server = serve(
+            net.clone(),
+            &FabricOptions::new().backend("bitsliced").workers(4),
+        );
         let client = server.client();
         for i in 0..64 {
             let feats: Vec<f32> = (0..8).map(|j| ((i * 3 + j) % 9) as f32 / 9.0).collect();
@@ -665,13 +684,14 @@ mod tests {
     #[test]
     fn try_infer_sheds_with_overloaded_when_queue_is_full() {
         let net = Arc::new(random_network(44, 6, 2, &[4, 2], 2, 2, 4));
-        let server = Server::start(net, ServerConfig {
-            workers: 1,
-            queue_depth: 1,
-            max_batch: 1,
-            batch_window: Duration::ZERO,
-            ..Default::default()
-        });
+        let server = serve(
+            net,
+            &FabricOptions::new()
+                .workers(1)
+                .queue_depth(1)
+                .max_batch(1)
+                .batch_window(Duration::ZERO),
+        );
         let client = server.client();
         let feats = vec![0.5f32; 6];
         let mut pending = Vec::new();
@@ -702,7 +722,7 @@ mod tests {
     #[test]
     fn stats_account_served_requests_batches_and_latency() {
         let net = Arc::new(random_network(45, 6, 2, &[4, 2], 2, 2, 4));
-        let server = Server::start(net, ServerConfig { workers: 2, ..Default::default() });
+        let server = serve(net, &FabricOptions::new().workers(2));
         let client = server.client();
         for i in 0..40 {
             let feats: Vec<f32> = (0..6).map(|j| ((i + j) % 5) as f32 / 5.0).collect();
@@ -726,7 +746,7 @@ mod tests {
     #[test]
     fn stopped_server_fails_fast_with_explicit_error() {
         let net = Arc::new(random_network(46, 6, 2, &[4, 2], 2, 2, 4));
-        let server = Server::start(net, ServerConfig::default());
+        let server = serve(net, &FabricOptions::new());
         let client = server.client();
         drop(server);
         let err = client.infer(vec![0.0; 6]).unwrap_err();

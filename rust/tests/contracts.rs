@@ -8,11 +8,11 @@ use std::time::Duration;
 use neuralut::coordinator::experiments::{mean_std, RunSummary};
 use neuralut::coordinator::schedule::sgdr_lr;
 use neuralut::data::{Dataset, Workload};
-use neuralut::engine::BackendKind;
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::random_network;
 use neuralut::netlist::vcd;
 use neuralut::netlist::Simulator;
-use neuralut::server::{Server, ServerConfig};
+use neuralut::server::ServerConfig;
 use neuralut::synth::synthesize;
 use neuralut::util::json::Json;
 
@@ -101,11 +101,14 @@ fn server_under_burst_load_preserves_fifo_correctness() {
     let net = Arc::new(random_network(10, 6, 2, &[4, 3], 2, 2, 4));
     let ds = Dataset::synthetic(3, 10, 64, 6, 3);
     let sim = Simulator::new(&net);
-    let server = Server::start(net.clone(), ServerConfig {
-        max_batch: 8,
-        batch_window: Duration::from_micros(50),
-        ..Default::default()
-    });
+    let server = Model::from_arc(net.clone())
+        .compile(
+            &FabricOptions::new()
+                .max_batch(8)
+                .batch_window(Duration::from_micros(50)),
+        )
+        .unwrap()
+        .serve();
     let client = server.client();
     // burst: submit 200 async then collect
     let w = Workload::poisson(&ds, 4, 200, 1e9); // effectively instant
@@ -122,17 +125,23 @@ fn server_under_burst_load_preserves_fifo_correctness() {
 
 #[test]
 fn server_config_file_selects_the_bitsliced_backend_end_to_end() {
-    // Config file (TOML subset) -> ServerConfig -> serving thread compiles
-    // the engine -> replies must match the scalar fabric bit-exactly.
+    // Config file (TOML subset) -> ServerConfig -> FabricOptions -> the
+    // fabric compiles the engine -> replies must match the scalar fabric
+    // bit-exactly. (Env injected as empty so the test is deterministic
+    // under a stray NEURALUT_ENGINE.)
     let cfg = ServerConfig::parse_toml(
         "max_batch = 16\nbatch_window_us = 50\nbackend = \"bitsliced\"",
     )
     .unwrap();
-    assert_eq!(cfg.backend, BackendKind::Bitsliced);
+    assert_eq!(cfg.backend, "bitsliced");
+    let opts = FabricOptions::with_env(&|_| None, Some(&cfg)).unwrap();
     let net = Arc::new(random_network(30, 6, 2, &[5, 3], 2, 2, 4));
     let ds = Dataset::synthetic(8, 11, 64, 6, 3);
     let sim = Simulator::new(&net);
-    let server = Server::start(net.clone(), cfg);
+    let fabric = Model::from_arc(net.clone()).compile(&opts).unwrap();
+    assert_eq!(fabric.backend_name(), "bitsliced");
+    assert_eq!(fabric.tuning().max_batch, 16);
+    let server = fabric.serve();
     let client = server.client();
     let w = Workload::poisson(&ds, 9, 100, 1e9);
     let mut pending = Vec::new();

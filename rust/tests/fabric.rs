@@ -1,0 +1,260 @@
+//! Tests of the unified inference API surface: a mock backend registered
+//! by name drives both `session()` inference and a running `serve()`
+//! pool bit-exactly against the scalar path; built-in backends agree
+//! end-to-end; corrupt NLUT model files are rejected with diagnosable
+//! errors.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use neuralut::engine::{FabricProgram, InferenceBackend, ScalarProgram};
+use neuralut::fabric::{
+    BackendRegistry, BatchAffinity, Capabilities, CompileCost, FabricOptions, Model,
+};
+use neuralut::luts::{random_network, LutNetwork};
+use neuralut::netlist::{SimResult, Simulator};
+
+// ---------------------------------------------------------------------------
+// Mock backend: scalar semantics under a new registry name, with compile
+// and executor-spawn counters so sharing is observable.
+
+struct MockProgram {
+    inner: ScalarProgram,
+    spawned: Arc<AtomicUsize>,
+}
+
+struct MockExecutor {
+    inner: Box<dyn InferenceBackend>,
+}
+
+impl InferenceBackend for MockExecutor {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn latency_cycles(&self) -> usize {
+        self.inner.latency_cycles()
+    }
+
+    fn run_batch(&self, x: &[f32]) -> SimResult {
+        self.inner.run_batch(x)
+    }
+}
+
+impl FabricProgram for MockProgram {
+    fn executor(&self) -> Box<dyn InferenceBackend> {
+        self.spawned.fetch_add(1, Ordering::SeqCst);
+        Box::new(MockExecutor { inner: self.inner.executor() })
+    }
+}
+
+/// Register the mock once per process; returns (compile count, spawn
+/// count) shared with every program the factory builds.
+fn register_mock() -> (Arc<AtomicUsize>, Arc<AtomicUsize>) {
+    use std::sync::OnceLock;
+    static COUNTERS: OnceLock<(Arc<AtomicUsize>, Arc<AtomicUsize>)> = OnceLock::new();
+    COUNTERS
+        .get_or_init(|| {
+            let compiled = Arc::new(AtomicUsize::new(0));
+            let spawned = Arc::new(AtomicUsize::new(0));
+            let (c, s) = (compiled.clone(), spawned.clone());
+            BackendRegistry::global()
+                .register(
+                    "mock",
+                    Capabilities {
+                        signed_hidden: true,
+                        batch_affinity: BatchAffinity::Single,
+                        compile_cost: CompileCost::Free,
+                    },
+                    Arc::new(move |net: Arc<LutNetwork>| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        Ok(Arc::new(MockProgram {
+                            inner: ScalarProgram::new(net),
+                            spawned: s.clone(),
+                        }) as Arc<dyn FabricProgram>)
+                    }),
+                )
+                .expect("mock registers once");
+            (compiled, spawned)
+        })
+        .clone()
+}
+
+#[test]
+fn registered_mock_backend_drives_session_and_serve_bit_exactly() {
+    let (compiled, spawned) = register_mock();
+    let net = Arc::new(random_network(81, 8, 2, &[6, 3], 3, 2, 4));
+    let sim = Simulator::new(&net);
+    let model = Model::from_arc(net.clone());
+
+    // The mock is selectable by name — case/whitespace-insensitively —
+    // exactly like a built-in.
+    let fabric = model
+        .compile(&FabricOptions::new().backend(" MOCK ").workers(3))
+        .unwrap();
+    assert_eq!(fabric.backend_name(), "mock");
+    assert_eq!(fabric.capabilities().compile_cost, CompileCost::Free);
+    assert_eq!(compiled.load(Ordering::SeqCst), 1, "factory ran exactly once");
+
+    // session(): in-process inference, bit-exact vs the scalar fabric.
+    let session = fabric.session();
+    assert_eq!(session.backend_name(), "mock");
+    let x: Vec<f32> = (0..8 * 70).map(|i| (i % 11) as f32 / 11.0).collect();
+    let got = session.infer_batch(&x).unwrap();
+    let want = sim.simulate_batch(&x);
+    assert_eq!(got.logit_codes, want.logit_codes);
+    assert_eq!(got.predictions, want.predictions);
+
+    // serve(): a running worker pool over the same compiled program.
+    let server = fabric.serve();
+    assert_eq!(server.workers(), 3);
+    let client = server.client();
+    for i in 0..32 {
+        let feats: Vec<f32> = (0..8).map(|j| ((i + j) % 9) as f32 / 9.0).collect();
+        let want = sim.simulate_batch(&feats).predictions[0];
+        assert_eq!(client.infer(feats).unwrap().prediction, want);
+    }
+    drop(server);
+    // One session + three workers spawned executors; nothing recompiled.
+    assert_eq!(spawned.load(Ordering::SeqCst), 4);
+    assert_eq!(compiled.load(Ordering::SeqCst), 1);
+    // The registry lists the mock alongside the built-ins, and the
+    // unknown-name error cites it.
+    assert!(BackendRegistry::global().names().contains(&"mock".to_string()));
+    let err = model
+        .compile(&FabricOptions::new().backend("fpga"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown backend 'fpga'"), "{err}");
+    assert!(err.contains("mock"), "{err}");
+}
+
+#[test]
+fn builtin_backends_are_bit_exact_through_sessions_and_serving() {
+    let net = Arc::new(random_network(82, 7, 2, &[5, 3], 2, 2, 4));
+    let sim = Simulator::new(&net);
+    let model = Model::from_arc(net.clone());
+    let x: Vec<f32> = (0..7 * 90).map(|i| (i % 13) as f32 / 13.0).collect();
+    let want = sim.simulate_batch(&x);
+    for backend in ["scalar", "bitsliced"] {
+        let fabric = model
+            .compile(&FabricOptions::new().backend(backend).workers(2))
+            .unwrap();
+        let got = fabric.session().infer_batch(&x).unwrap();
+        assert_eq!(got.logit_codes, want.logit_codes, "{backend} session");
+        let server = fabric.serve();
+        let client = server.client();
+        for i in 0..16 {
+            let feats: Vec<f32> = (0..7).map(|j| ((i + j) % 5) as f32 / 5.0).collect();
+            let one = sim.simulate_batch(&feats).predictions[0];
+            assert_eq!(client.infer(feats).unwrap().prediction, one, "{backend} serve");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Corrupt NLUT files are rejected with errors that name the path, the
+// expected vs. actual values, and the file length.
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("neuralut_fabric_{name}.nlut"))
+}
+
+#[test]
+fn nlut_load_rejects_bad_magic_with_expected_and_actual() {
+    let path = tmp("bad_magic");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 32]);
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", LutNetwork::load(&path).unwrap_err());
+    assert!(err.contains("bad NLUT magic 0xDEADBEEF"), "{err}");
+    assert!(err.contains("0x4E4C5554"), "{err}");
+    assert!(err.contains(&path.display().to_string()), "{err}");
+    assert!(err.contains("40 bytes"), "{err}");
+}
+
+#[test]
+fn nlut_load_rejects_bad_version_with_expected_and_actual() {
+    let path = tmp("bad_version");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&0x4E4C5554u32.to_le_bytes()); // good magic
+    bytes.extend_from_slice(&99u32.to_le_bytes()); // unsupported version
+    bytes.extend_from_slice(&[0u8; 8]);
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", LutNetwork::load(&path).unwrap_err());
+    assert!(err.contains("unsupported NLUT version 99"), "{err}");
+    assert!(err.contains("version 1"), "{err}");
+    assert!(err.contains(&path.display().to_string()), "{err}");
+}
+
+#[test]
+fn nlut_load_reports_truncated_header_with_offset_and_length() {
+    let path = tmp("trunc_header");
+    // Magic plus half a version field: 6 bytes.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&0x4E4C5554u32.to_le_bytes());
+    bytes.extend_from_slice(&[1u8, 0]);
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", LutNetwork::load(&path).unwrap_err());
+    assert!(err.contains("truncated NLUT file"), "{err}");
+    assert!(err.contains("version"), "{err}");
+    assert!(err.contains("offset 4"), "{err}");
+    assert!(err.contains("file is 6 bytes"), "{err}");
+}
+
+#[test]
+fn nlut_load_rejects_absurd_header_fields_without_panicking() {
+    // in_bits = 16 with fan_in = 4 would shift-overflow
+    // `1 << (in_bits * fan_in)` without the header guards.
+    let path = tmp("absurd_header");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&0x4E4C5554u32.to_le_bytes());
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len = 1
+    bytes.push(b'x');
+    for v in [4u32, 2, 2, 1] {
+        // input_size, input_bits, n_class, n_layers
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let header_len = bytes.len();
+    // layer 0: num_luts=2, fan_in=4, in_bits=16, out_bits=4, signed=0.
+    for v in [2u32, 4, 16, 4, 0] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", LutNetwork::load(&path).unwrap_err());
+    assert!(err.contains("in_bits = 16"), "{err}");
+
+    // A huge claimed num_luts in a tiny file is rejected against the
+    // actual file length before any allocation is attempted.
+    let path = tmp("absurd_numluts");
+    bytes.truncate(header_len);
+    for v in [u32::MAX, 2, 2, 4, 0] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", LutNetwork::load(&path).unwrap_err());
+    assert!(err.contains("truncated NLUT file"), "{err}");
+    assert!(err.contains("claims 4294967295"), "{err}");
+}
+
+#[test]
+fn nlut_load_reports_truncation_inside_the_payload() {
+    // A valid file cut short mid-tables must say what was being read and
+    // how big the file actually is.
+    let net = random_network(83, 6, 2, &[4, 2], 2, 2, 4);
+    let full_path = tmp("full");
+    net.save(&full_path).unwrap();
+    let mut bytes = std::fs::read(&full_path).unwrap();
+    let cut_len = bytes.len() - 3;
+    bytes.truncate(cut_len);
+    let path = tmp("trunc_payload");
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", LutNetwork::load(&path).unwrap_err());
+    assert!(err.contains("truncated NLUT file"), "{err}");
+    assert!(err.contains(&format!("file is {cut_len} bytes")), "{err}");
+    // And the untruncated file still loads.
+    assert!(LutNetwork::load(&full_path).is_ok());
+}

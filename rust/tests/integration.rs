@@ -9,13 +9,12 @@ use std::sync::Arc;
 use neuralut::coordinator::pipeline::{self, PipelineOpts};
 use neuralut::coordinator::trainer::{TrainOpts, Trainer};
 use neuralut::data::Dataset;
-use neuralut::engine::BitslicedEngine;
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::{convert, LutNetwork};
 use neuralut::manifest::Manifest;
 use neuralut::netlist::Simulator;
 use neuralut::nn::formulas;
 use neuralut::runtime::Runtime;
-use neuralut::server::{Server, ServerConfig};
 use neuralut::synth::synthesize;
 
 fn bundle(name: &str) -> Option<(Manifest, Dataset)> {
@@ -133,11 +132,14 @@ fn bitsliced_engine_matches_scalar_on_real_converted_model() {
     let r = trainer
         .run(7, &TrainOpts { epochs: Some(2), quiet: true, ..Default::default() })
         .unwrap();
-    let net = convert::convert(&rt, &m, &r.params).unwrap();
-    let sim = Simulator::new(&net);
-    let eng = BitslicedEngine::compile(&net).unwrap();
+    let model = Model::from_network(convert::convert(&rt, &m, &r.params).unwrap());
+    let sim = Simulator::new(model.network());
+    let session = model
+        .compile(&FabricOptions::new().backend("bitsliced"))
+        .unwrap()
+        .session();
     let a = sim.simulate_batch(&ds.test_x);
-    let b = eng.run_batch(&ds.test_x);
+    let b = session.infer_batch(&ds.test_x).unwrap();
     assert_eq!(a.logit_codes, b.logit_codes);
     assert_eq!(a.predictions, b.predictions);
 }
@@ -152,7 +154,10 @@ fn server_agrees_with_direct_simulation_on_real_model() {
         .unwrap();
     let net = Arc::new(convert::convert(&rt, &m, &r.params).unwrap());
     let sim = Simulator::new(&net);
-    let server = Server::start(net.clone(), ServerConfig::default());
+    let server = Model::from_arc(net.clone())
+        .compile(&FabricOptions::new())
+        .unwrap()
+        .serve();
     let client = server.client();
     for i in 0..32 {
         let row = ds.test_row(i).to_vec();

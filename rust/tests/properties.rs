@@ -4,7 +4,7 @@
 
 use std::time::Duration;
 
-use neuralut::engine::BitslicedEngine;
+use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::{random_network, LutNetwork};
 use neuralut::netlist::{quantize_input, Simulator};
 use neuralut::nn::formulas;
@@ -100,9 +100,12 @@ fn prop_bitsliced_engine_is_bit_exact_against_scalar_simulator() {
         },
         |(net, x)| {
             let sim = Simulator::new(net);
-            let eng = BitslicedEngine::compile(net).map_err(|e| e.to_string())?;
+            let session = Model::from_network(net.clone())
+                .compile(&FabricOptions::new().backend("bitsliced"))
+                .map_err(|e| e.to_string())?
+                .session();
             let a = sim.simulate_batch(x);
-            let b = eng.run_batch(x);
+            let b = session.infer_batch(x).map_err(|e| e.to_string())?;
             if a.logit_codes != b.logit_codes {
                 return Err("logit codes diverge".into());
             }
@@ -180,6 +183,109 @@ fn prop_server_config_rejects_zero_absurd_and_unknown() {
             _ => format!("queue_depth = \"{}\"", 1 + r.below(8)), // wrong type
         },
         |doc| ServerConfig::parse_toml(doc).is_err(),
+    );
+}
+
+#[test]
+fn prop_fabric_options_validation_matches_server_config_rules() {
+    // The FabricOptions builder enforces the same ranges as the config
+    // file parser: zero/absurd workers, queue depths and max batches are
+    // compile errors; in-range sets (with either built-in backend, any
+    // case/whitespace) compile.
+    let model = Model::from_network(random_network(0x5E, 5, 2, &[3, 2], 2, 2, 4));
+    forall(
+        0x5E,
+        40,
+        |r| match r.below(8) {
+            0 => (FabricOptions::new().workers(0), false),
+            1 => (
+                FabricOptions::new().workers(MAX_WORKERS + 1 + r.below(1_000_000)),
+                false,
+            ),
+            2 => (FabricOptions::new().queue_depth(0), false),
+            3 => (
+                FabricOptions::new().queue_depth(MAX_QUEUE_DEPTH + 1 + r.below(1_000_000)),
+                false,
+            ),
+            4 => (FabricOptions::new().max_batch(0), false),
+            // Unknown backend names never compile, whatever the spelling.
+            5 => (
+                FabricOptions::new().backend(format!("no-such-backend-{}", r.below(100))),
+                false,
+            ),
+            _ => {
+                let name = if r.below(2) == 0 { " Scalar " } else { "BITSLICED" };
+                (
+                    FabricOptions::new()
+                        .backend(name)
+                        .workers(1 + r.below(MAX_WORKERS))
+                        .queue_depth(1 + r.below(4096))
+                        .max_batch(1 + r.below(1024)),
+                    true,
+                )
+            }
+        },
+        |(opts, should_compile)| model.compile(opts).is_ok() == *should_compile,
+    );
+}
+
+#[test]
+fn prop_fabric_options_precedence_is_builder_env_config() {
+    // The one resolution path: config file < env < builder, per field,
+    // for every combination of present/absent layers.
+    forall_res(
+        0x5F,
+        80,
+        |r| {
+            let env_engine = (r.below(2) == 0).then(|| " Bitsliced ".to_string());
+            let env_workers = (r.below(2) == 0).then(|| (1 + r.below(9)).to_string());
+            let has_cfg = r.below(2) == 0;
+            let cfg_workers = 1 + r.below(9);
+            let builder_workers = (r.below(2) == 0).then(|| 1 + r.below(9));
+            (env_engine, env_workers, has_cfg, cfg_workers, builder_workers)
+        },
+        |(env_engine, env_workers, has_cfg, cfg_workers, builder_workers)| {
+            let cfg = ServerConfig {
+                workers: *cfg_workers,
+                backend: "scalar".to_string(),
+                ..Default::default()
+            };
+            let env = |key: &str| match key {
+                "NEURALUT_ENGINE" => env_engine.clone(),
+                "NEURALUT_WORKERS" => env_workers.clone(),
+                _ => None,
+            };
+            let mut opts = FabricOptions::with_env(&env, has_cfg.then_some(&cfg))
+                .map_err(|e| e.to_string())?;
+            if let Some(w) = builder_workers {
+                opts = opts.workers(*w);
+            }
+            // Backend: env beats config; unset everywhere -> default.
+            let want_backend = if let Some(e) = env_engine {
+                Some(e.as_str())
+            } else if *has_cfg {
+                Some("scalar")
+            } else {
+                None
+            };
+            if opts.get_backend() != want_backend {
+                return Err(format!(
+                    "backend {:?} != {want_backend:?}",
+                    opts.get_backend()
+                ));
+            }
+            // Workers: builder beats env beats config.
+            let want_workers = (*builder_workers)
+                .or(env_workers.as_ref().map(|w| w.parse::<usize>().unwrap()))
+                .or(has_cfg.then_some(*cfg_workers));
+            if opts.get_workers() != want_workers {
+                return Err(format!(
+                    "workers {:?} != {want_workers:?}",
+                    opts.get_workers()
+                ));
+            }
+            Ok(())
+        },
     );
 }
 

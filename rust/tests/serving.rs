@@ -7,10 +7,16 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
-use neuralut::engine::BackendKind;
-use neuralut::luts::random_network;
+use neuralut::fabric::{FabricOptions, Model};
+use neuralut::luts::{random_network, LutNetwork};
 use neuralut::netlist::Simulator;
-use neuralut::server::{Server, ServerConfig, ServerError};
+use neuralut::server::{Server, ServerError};
+
+/// Compile-and-serve through the unified fabric API — the only way a
+/// server starts.
+fn serve(net: &Arc<LutNetwork>, opts: &FabricOptions) -> Server {
+    Model::from_arc(net.clone()).compile(opts).unwrap().serve()
+}
 
 /// Deterministic per-(thread, request) feature vector.
 fn feats_for(thread: usize, i: usize, n_feat: usize) -> Vec<f32> {
@@ -52,14 +58,15 @@ fn concurrent_bursty_clients_are_bit_exact_across_workers_and_backends() {
     // word: 63 and 65 force ragged tail blocks inside served batches.
     let bursts = [1usize, 63, 65, 7];
     for workers in [1usize, 2, 8] {
-        for backend in [BackendKind::Scalar, BackendKind::Bitsliced] {
-            let server = Server::start(net.clone(), ServerConfig {
-                workers,
-                max_batch: 32,
-                batch_window: Duration::from_micros(200),
-                backend,
-                ..Default::default()
-            });
+        for backend in ["scalar", "bitsliced"] {
+            let server = serve(
+                &net,
+                &FabricOptions::new()
+                    .workers(workers)
+                    .max_batch(32)
+                    .batch_window(Duration::from_micros(200))
+                    .backend(backend),
+            );
             let client = server.client();
             std::thread::scope(|scope| {
                 for t in 0..4usize {
@@ -103,15 +110,16 @@ fn concurrent_bursty_clients_are_bit_exact_across_workers_and_backends() {
 #[test]
 fn dropping_server_with_requests_in_flight_answers_them_all() {
     with_watchdog("shutdown-drain", Duration::from_secs(120), || {
-        for backend in [BackendKind::Scalar, BackendKind::Bitsliced] {
+        for backend in ["scalar", "bitsliced"] {
             let net = Arc::new(random_network(72, 6, 2, &[4, 2], 2, 2, 4));
-            let server = Server::start(net, ServerConfig {
-                workers: 2,
-                max_batch: 4,
-                batch_window: Duration::from_micros(500),
-                backend,
-                ..Default::default()
-            });
+            let server = serve(
+                &net,
+                &FabricOptions::new()
+                    .workers(2)
+                    .max_batch(4)
+                    .batch_window(Duration::from_micros(500))
+                    .backend(backend),
+            );
             let client = server.client();
             let mut pending = Vec::new();
             for i in 0..300usize {
@@ -135,12 +143,13 @@ fn dropping_server_with_requests_in_flight_answers_them_all() {
 fn shutdown_races_with_live_clients_without_deadlock() {
     with_watchdog("shutdown-race", Duration::from_secs(120), || {
         let net = Arc::new(random_network(73, 6, 2, &[4, 2], 2, 2, 4));
-        let server = Server::start(net, ServerConfig {
-            workers: 2,
-            max_batch: 8,
-            batch_window: Duration::from_micros(100),
-            ..Default::default()
-        });
+        let server = serve(
+            &net,
+            &FabricOptions::new()
+                .workers(2)
+                .max_batch(8)
+                .batch_window(Duration::from_micros(100)),
+        );
         let client = server.client();
         let clients: Vec<_> = (0..4usize)
             .map(|t| {
@@ -181,7 +190,7 @@ fn infer_and_infer_async_report_identical_feature_length_errors() {
     // length" while `infer` named both lengths. All submission paths must
     // share the detailed message.
     let net = Arc::new(random_network(74, 8, 2, &[4, 2], 2, 2, 4));
-    let server = Server::start(net, ServerConfig::default());
+    let server = serve(&net, &FabricOptions::new());
     let client = server.client();
     let e_sync = client.infer(vec![0.0; 3]).unwrap_err().to_string();
     let e_async = client.infer_async(vec![0.0; 3]).unwrap_err().to_string();
