@@ -10,7 +10,9 @@
 //! Backends are selected by registry name through the unified
 //! `Model::compile` path — adding a backend to the sweep is one string.
 //! Writes `BENCH_server.json` (throughput, p50/p99 latency, rejection
-//! rate per row) so the serving perf trajectory is tracked PR over PR.
+//! rate per row) so the serving perf trajectory is tracked PR over PR —
+//! the CI `bench-smoke` gate reads it against `BENCH_baseline.json`.
+//! `NEURALUT_BENCH_QUICK=1` shrinks the request counts for CI smoke runs.
 
 use std::time::{Duration, Instant};
 
@@ -77,9 +79,13 @@ fn shed(model: &Model, opts: &FabricOptions, rate: f64, n_req: usize)
 }
 
 fn main() {
-    println!("== bench_server: multi-worker sharded serving runtime ==");
+    let quick = std::env::var_os("NEURALUT_BENCH_QUICK").is_some_and(|v| !v.is_empty());
+    println!(
+        "== bench_server: multi-worker sharded serving runtime{} ==",
+        if quick { " (quick mode)" } else { "" }
+    );
     let model = Model::from_network(random_network(11, 196, 2, &[64, 32, 10], 6, 2, 4));
-    let n_req = 30_000;
+    let n_req = if quick { 4_000 } else { 30_000 };
     let mut rows: Vec<Json> = Vec::new();
 
     println!("\n-- worker scaling, closed-loop drain ({n_req} requests, max_batch 256) --");
@@ -124,14 +130,16 @@ fn main() {
     );
 
     println!("\n-- backpressure envelope: open-loop try_infer (queue_depth 64, 2 workers) --");
-    for rate in [50_000.0f64, 100_000.0, 200_000.0] {
+    let rates: &[f64] = if quick { &[100_000.0] } else { &[50_000.0, 100_000.0, 200_000.0] };
+    let shed_req = if quick { 4_000 } else { 20_000 };
+    for &rate in rates {
         let opts = FabricOptions::new()
             .backend("bitsliced")
             .max_batch(256)
             .batch_window(Duration::from_micros(100))
             .workers(2)
             .queue_depth(64);
-        let (tput, rej, s) = shed(&model, &opts, rate, 20_000);
+        let (tput, rej, s) = shed(&model, &opts, rate, shed_req);
         println!(
             "offered {rate:>7.0}/s -> served {tput:>7.0}/s  shed {:>5.1}%  \
              p50 {:>6.0}us p99 {:>6.0}us",

@@ -47,11 +47,28 @@ fn main() -> anyhow::Result<()> {
     // unified inference API — one artifact, backend picked by name.
     let out_dir = std::env::temp_dir().join("neuralut_quickstart");
     let model = Model::load(&out_dir.join("network.nlut"))?;
-    let session = model.compile(&FabricOptions::from_env()?)?.session();
+    // NEURALUT_ENGINE / NEURALUT_OPT_LEVEL still pick the backend and
+    // netlist optimization level; when nothing is set this demo compiles
+    // the bitsliced engine through a .nfab fabric cache, so a second run
+    // skips the lowering + optimization passes entirely.
+    let mut opts = FabricOptions::from_env()?;
+    if opts.get_backend().is_none() {
+        opts = opts.backend("bitsliced");
+        if opts.get_fabric_cache().is_none() {
+            opts = opts.fabric_cache(out_dir.join("network.nfab"));
+        }
+    }
+    let fabric = model.compile(&opts)?;
+    let session = fabric.session();
     let acc = session.accuracy(&dataset.test_x, &dataset.test_y)?;
     println!("\nreloaded        : {}", model.info());
-    println!("session         : {} backend, test accuracy {:.4}",
-             session.backend_name(), acc);
+    match fabric.num_word_ops() {
+        Some(ops) => println!("session         : {} backend at {} ({ops} word ops), \
+                               accuracy {:.4}",
+                              session.backend_name(), fabric.opt_level(), acc),
+        None => println!("session         : {} backend, test accuracy {:.4}",
+                         session.backend_name(), acc),
+    }
     println!("\nartifacts in {}", out_dir.display());
     Ok(())
 }

@@ -5,7 +5,10 @@
 //!
 //! Run: `cargo run --release --example serve_digits`
 //! (env NEURALUT_EPOCHS to shorten training, NEURALUT_ENGINE to pick the
-//! backend, NEURALUT_WORKERS to size the serving worker pool)
+//! backend, NEURALUT_WORKERS to size the serving worker pool,
+//! NEURALUT_OPT_LEVEL to pick the netlist optimization level, and
+//! NEURALUT_FABRIC_CACHE=FILE.nfab to reuse a precompiled fabric across
+//! restarts)
 
 use std::time::Duration;
 
@@ -50,8 +53,13 @@ fn main() -> anyhow::Result<()> {
         opts = opts.workers(2); // this demo defaults to a 2-worker pool
     }
     let fabric = model.compile(&opts)?;
-    println!("backend: {} ({} workers)",
-             fabric.backend_name(), fabric.tuning().workers);
+    match fabric.num_word_ops() {
+        Some(ops) => println!("backend: {} at {} ({ops} word ops, {} workers)",
+                              fabric.backend_name(), fabric.opt_level(),
+                              fabric.tuning().workers),
+        None => println!("backend: {} ({} workers)",
+                         fabric.backend_name(), fabric.tuning().workers),
+    }
     let server = fabric.serve();
     let client = server.client();
     let workload = Workload::poisson(&ds, 42, n_req, rate);

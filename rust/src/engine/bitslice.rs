@@ -50,16 +50,21 @@ impl Scratch {
 }
 
 impl BitslicedEngine {
-    /// Compile a network (lowering pass); see [`lower::lower`] for the
+    /// Compile a network — lowering pass plus the default-level
+    /// [`opt`](super::opt) pipeline; see [`lower::lower`] for the
     /// conditions under which compilation fails.
     pub fn compile(net: &LutNetwork) -> crate::Result<Self> {
-        Ok(Self::from_program(Arc::new(lower::lower(net)?)))
+        let mut nl = lower::lower(net)?;
+        super::opt::optimize(&mut nl, super::opt::OptLevel::default());
+        Ok(Self::from_program(Arc::new(nl)))
     }
 
     /// Wrap an already-compiled program — the per-worker constructor: no
     /// lowering pass, no copies, just another reference to the shared
-    /// `BitNetlist`.
+    /// `BitNetlist`. Debug builds re-check the program's structural
+    /// invariants (the evaluator indexes scratch buffers with them).
     pub fn from_program(nl: Arc<BitNetlist>) -> Self {
+        nl.debug_check();
         BitslicedEngine { nl }
     }
 

@@ -50,12 +50,19 @@ pub struct Level {
     /// Scratch wires needed to evaluate this level
     /// (`2 consts + n_in_planes + ops.len()`).
     pub n_wires: usize,
-    /// Input planes consumed: previous width × previous bits-per-value.
+    /// Input planes consumed — always the previous level's
+    /// `outputs.len()` (for level 0: `input_size * input_bits`).
     pub n_in_planes: usize,
-    /// Wire id of every output bit-plane, `[num_luts * out_bits]`,
-    /// bit-plane `b` of L-LUT `i` at index `i * out_bits + b`.
+    /// Wire id of every output bit-plane. As lowered this is
+    /// `[num_luts * out_bits]` with bit-plane `b` of L-LUT `i` at index
+    /// `i * out_bits + b`; after `engine::opt` plane compaction (`O2`) an
+    /// *intermediate* level keeps only the distinct planes the next level
+    /// reads. The final level's logit-plane layout is never compacted.
     pub outputs: Vec<u32>,
+    /// L-LUTs of the original circuit layer (metadata; unchanged by
+    /// optimization).
     pub num_luts: usize,
+    /// Bits per L-LUT output in the original layer (metadata).
     pub out_bits: usize,
 }
 
@@ -82,6 +89,97 @@ impl BitNetlist {
     /// Total word ops per 64-sample block — the compiled cost metric.
     pub fn num_ops(&self) -> usize {
         self.levels.iter().map(|l| l.ops.len()).sum()
+    }
+
+    /// Recompute every derived stat — per-level `n_wires`, the global
+    /// `max_wires`/`max_planes` — from the ops and outputs. This is the
+    /// *one* place those numbers come from: `lower` calls it after
+    /// building, `engine::opt` after every pass pipeline, and the `.nfab`
+    /// loader after decoding, so no pass maintains them ad hoc.
+    pub fn recompute_stats(&mut self) {
+        let mut max_wires = 2;
+        let mut max_planes = 0;
+        for level in &mut self.levels {
+            level.n_wires = W_INPUTS as usize + level.n_in_planes + level.ops.len();
+            max_wires = max_wires.max(level.n_wires);
+            max_planes = max_planes.max(level.n_in_planes.max(level.outputs.len()));
+        }
+        self.max_wires = max_wires;
+        self.max_planes = max_planes;
+    }
+
+    /// Structural invariants every consumer relies on: the plane chain
+    /// (each level consumes exactly what the previous produced), dense
+    /// sequential op `dst` ids, topological operand order, in-bounds
+    /// outputs, the logit-plane layout, and stats consistent with
+    /// [`recompute_stats`](Self::recompute_stats).
+    pub fn check(&self) -> Result<()> {
+        let mut prev_planes = self.input_size * self.input_bits;
+        let (mut max_wires, mut max_planes) = (2usize, 0usize);
+        for (li, level) in self.levels.iter().enumerate() {
+            if level.n_in_planes != prev_planes {
+                bail!(
+                    "level {li}: consumes {} planes but the previous level \
+                     produces {prev_planes}",
+                    level.n_in_planes
+                );
+            }
+            let base = W_INPUTS as usize + level.n_in_planes;
+            for (i, op) in level.ops.iter().enumerate() {
+                if op.dst as usize != base + i {
+                    bail!("level {li} op {i}: dst {} is not dense (expected {})",
+                          op.dst, base + i);
+                }
+                for src in [op.sel, op.hi, op.lo] {
+                    if src as usize >= base + i {
+                        bail!("level {li} op {i}: operand {src} is not earlier \
+                               than dst {}", op.dst);
+                    }
+                }
+            }
+            if level.n_wires != base + level.ops.len() {
+                bail!("level {li}: n_wires {} != {} (2 consts + {} planes + {} ops)",
+                      level.n_wires, base + level.ops.len(), level.n_in_planes,
+                      level.ops.len());
+            }
+            for &w in &level.outputs {
+                if w as usize >= level.n_wires {
+                    bail!("level {li}: output wire {w} >= n_wires {}", level.n_wires);
+                }
+            }
+            max_wires = max_wires.max(level.n_wires);
+            max_planes = max_planes.max(level.n_in_planes.max(level.outputs.len()));
+            prev_planes = level.outputs.len();
+        }
+        match self.levels.last() {
+            None => bail!("netlist has no levels"),
+            Some(last) if last.outputs.len() != self.n_class * self.logit_bits => bail!(
+                "final level produces {} planes, logit layout needs {} \
+                 ({} classes x {} bits)",
+                last.outputs.len(),
+                self.n_class * self.logit_bits,
+                self.n_class,
+                self.logit_bits
+            ),
+            Some(_) => {}
+        }
+        if self.max_wires != max_wires || self.max_planes != max_planes {
+            bail!(
+                "stale stats: max_wires {} (actual {max_wires}), max_planes {} \
+                 (actual {max_planes}) — recompute_stats was not run",
+                self.max_wires,
+                self.max_planes
+            );
+        }
+        Ok(())
+    }
+
+    /// Debug-build assertion wrapper around [`check`](Self::check).
+    pub fn debug_check(&self) {
+        #[cfg(debug_assertions)]
+        if let Err(e) = self.check() {
+            panic!("inconsistent BitNetlist: {e}");
+        }
     }
 }
 
@@ -130,10 +228,12 @@ pub fn lower(net: &LutNetwork) -> Result<BitNetlist> {
                 for (addr, slot) in bits_buf.iter_mut().enumerate() {
                     *slot = ((table[addr] as u16) >> b) as u8 & 1;
                 }
-                let sup = boolfn::support(&bits_buf, k);
-                let root = if sup.is_empty() {
-                    if bits_buf[0] == 0 { W_ZERO } else { W_ONE }
+                let root = if let Some(c) = boolfn::const_value(&bits_buf) {
+                    // Constant bit (common in trained tables: saturated or
+                    // dead units) — skip support analysis entirely.
+                    if c == 0 { W_ZERO } else { W_ONE }
                 } else {
+                    let sup = boolfn::support(&bits_buf, k);
                     let proj = boolfn::project(&bits_buf, k, &sup);
                     let bdd = robdd::build(&proj, sup.len());
                     // Map BDD node ids to wires, bottom-up.
@@ -172,22 +272,21 @@ pub fn lower(net: &LutNetwork) -> Result<BitNetlist> {
         prev_bits = layer.out_bits;
     }
     let last = net.layers.last().expect("validated network has layers");
-    let max_wires = levels.iter().map(|l| l.n_wires).max().unwrap_or(2);
-    let max_planes = levels
-        .iter()
-        .map(|l| l.n_in_planes.max(l.outputs.len()))
-        .max()
-        .unwrap_or(0);
-    Ok(BitNetlist {
+    let mut nl = BitNetlist {
         levels,
         input_size: net.input_size,
         input_bits: net.input_bits,
         n_class: net.n_class,
         logit_bits: last.out_bits,
         signed_logits: last.signed_out,
-        max_wires,
-        max_planes,
-    })
+        max_wires: 0,
+        max_planes: 0,
+    };
+    // Derived stats come from exactly one place; the debug check keeps the
+    // build honest against the invariants every consumer assumes.
+    nl.recompute_stats();
+    nl.debug_check();
+    Ok(nl)
 }
 
 #[cfg(test)]

@@ -8,9 +8,11 @@
 //! *compiles* the network once — [`lower`] expands every truth table into
 //! per-output-bit Boolean functions (support reduction + ROBDD, shared
 //! via structural hashing) and emits a levelized [`BitNetlist`] of fused
-//! word ops — and then evaluates it bitsliced: 64 independent samples
-//! packed per `u64`, batch inference as word-wide AND/OR/XOR streaming
-//! ([`BitslicedEngine`]).
+//! word ops, the [`opt`] pass pipeline then sweeps it like a synthesis
+//! flow would (constant folding, cross-level CSE, dead-wire elimination,
+//! plane compaction — [`OptLevel`] picks how hard) — and then evaluates
+//! it bitsliced: 64 independent samples packed per `u64`, batch
+//! inference as word-wide AND/OR/XOR streaming ([`BitslicedEngine`]).
 //!
 //! Two traits split the execution contract along the compile/run seam:
 //!
@@ -38,9 +40,11 @@
 
 pub mod bitslice;
 pub mod lower;
+pub mod opt;
 
 pub use bitslice::BitslicedEngine;
 pub use lower::{BitNetlist, Level, MuxOp};
+pub use opt::{optimize, OptLevel, OptReport};
 
 use std::sync::Arc;
 
@@ -185,13 +189,23 @@ pub struct BitslicedProgram {
 }
 
 impl BitslicedProgram {
-    /// Run the lowering pass once. Fails on networks the pass rejects
-    /// (e.g. signed codes on a non-final layer).
+    /// Run the lowering pass once at the default [`OptLevel`]. Fails on
+    /// networks the pass rejects (e.g. signed codes on a non-final layer).
     pub fn compile(net: &LutNetwork) -> crate::Result<Self> {
-        Ok(BitslicedProgram { program: Arc::new(lower::lower(net)?) })
+        Self::compile_opt(net, OptLevel::default())
     }
 
-    /// Wrap an already-lowered program.
+    /// Lower and then run the [`opt`] pass pipeline at `level` — the
+    /// registry factory path, where the level comes from
+    /// [`FabricOptions`](crate::fabric::FabricOptions).
+    pub fn compile_opt(net: &LutNetwork, level: OptLevel) -> crate::Result<Self> {
+        let mut nl = lower::lower(net)?;
+        opt::optimize(&mut nl, level);
+        Ok(BitslicedProgram { program: Arc::new(nl) })
+    }
+
+    /// Wrap an already-lowered (and possibly persisted-and-reloaded)
+    /// program.
     pub fn from_netlist(program: Arc<BitNetlist>) -> Self {
         BitslicedProgram { program }
     }

@@ -1,0 +1,141 @@
+//! Backward dead-wire elimination, inter-level plane compaction and wire
+//! renumbering.
+//!
+//! Liveness seeds from each level's outputs and walks the op list
+//! backwards: an op whose `dst` nothing reads is dropped (this sweeps the
+//! subtrees [`simplify`](super::simplify) strands, and — at `O2`, where
+//! compaction shrinks what upstream levels must produce — entire L-LUTs
+//! the next layer's sparse wiring never samples).
+//!
+//! Compaction runs on each adjacent level pair, back to front: output
+//! planes the consuming level never reads are removed from the producing
+//! level's `outputs`, and duplicate planes (two outputs naming the same
+//! wire) collapse to one, with the consumer's plane references rewritten.
+//! Because the sweep is backward, the producing level is then DCE'd
+//! against its *already shrunk* output set, cascading dead logic toward
+//! the inputs. The final level's outputs (the logit planes) and level 0's
+//! input planes (the quantized network inputs) keep their layouts — the
+//! evaluator's transposes depend on them.
+
+use std::collections::HashMap;
+
+use crate::engine::lower::{BitNetlist, MuxOp, W_INPUTS};
+
+/// Remap one wire: constants and planes through `plane_map`, op results
+/// through `dst_map`.
+fn remap(w: u32, old_base: u32, plane_map: &[Option<u32>], dst_map: &HashMap<u32, u32>) -> u32 {
+    if w < W_INPUTS {
+        w
+    } else if w < old_base {
+        let p = plane_map[(w - W_INPUTS) as usize].expect("remapped plane is live");
+        W_INPUTS + p
+    } else {
+        dst_map[&w]
+    }
+}
+
+/// Run DCE (and, with `compact`, plane compaction) in place. Returns
+/// `(dead_ops, dead_planes)`.
+pub(super) fn run(nl: &mut BitNetlist, compact: bool) -> (u64, u64) {
+    let (mut dead_ops, mut dead_planes) = (0u64, 0u64);
+    for i in (0..nl.levels.len()).rev() {
+        let (head, tail) = nl.levels.split_at_mut(i);
+        let lvl = &mut tail[0];
+
+        // Liveness, backwards from the outputs.
+        let mut live = vec![false; lvl.n_wires];
+        for &w in &lvl.outputs {
+            live[w as usize] = true;
+        }
+        let mut kept: Vec<MuxOp> = Vec::with_capacity(lvl.ops.len());
+        for op in lvl.ops.iter().rev() {
+            if live[op.dst as usize] {
+                live[op.sel as usize] = true;
+                live[op.hi as usize] = true;
+                live[op.lo as usize] = true;
+                kept.push(*op);
+            } else {
+                dead_ops += 1;
+            }
+        }
+        kept.reverse();
+        lvl.ops = kept;
+
+        if !compact || i == 0 {
+            continue;
+        }
+        // Compact the plane interface with the producing level: keep one
+        // plane per live, distinct produced wire.
+        let prev = &mut head[i - 1];
+        let old_base = W_INPUTS + lvl.n_in_planes as u32;
+        let mut plane_map: Vec<Option<u32>> = vec![None; lvl.n_in_planes];
+        let mut new_prev_outputs: Vec<u32> = Vec::new();
+        let mut plane_of_wire: HashMap<u32, u32> = HashMap::new();
+        for p in 0..lvl.n_in_planes {
+            if !live[W_INPUTS as usize + p] {
+                continue;
+            }
+            let w = prev.outputs[p];
+            let np = *plane_of_wire.entry(w).or_insert_with(|| {
+                new_prev_outputs.push(w);
+                (new_prev_outputs.len() - 1) as u32
+            });
+            plane_map[p] = Some(np);
+        }
+        dead_planes += (prev.outputs.len() - new_prev_outputs.len()) as u64;
+        prev.outputs = new_prev_outputs;
+
+        // Rewrite this level onto the compacted plane base.
+        let mut dst_map: HashMap<u32, u32> = HashMap::new();
+        let mut next = W_INPUTS + prev.outputs.len() as u32;
+        let ops = std::mem::take(&mut lvl.ops);
+        lvl.ops = ops
+            .into_iter()
+            .map(|op| {
+                let mapped = MuxOp {
+                    sel: remap(op.sel, old_base, &plane_map, &dst_map),
+                    hi: remap(op.hi, old_base, &plane_map, &dst_map),
+                    lo: remap(op.lo, old_base, &plane_map, &dst_map),
+                    dst: next,
+                };
+                dst_map.insert(op.dst, next);
+                next += 1;
+                mapped
+            })
+            .collect();
+        let outputs = std::mem::take(&mut lvl.outputs);
+        lvl.outputs = outputs
+            .into_iter()
+            .map(|w| remap(w, old_base, &plane_map, &dst_map))
+            .collect();
+        lvl.n_in_planes = prev.outputs.len();
+        lvl.n_wires = next as usize;
+    }
+    (dead_ops, dead_planes)
+}
+
+/// Re-pack every level's op `dst` ids densely after op removal (levels
+/// already rewritten by compaction come out unchanged).
+pub(super) fn renumber(nl: &mut BitNetlist) {
+    for lvl in &mut nl.levels {
+        let base = W_INPUTS + lvl.n_in_planes as u32;
+        let mut dst_map: HashMap<u32, u32> = HashMap::new();
+        let mut next = base;
+        let get = |w: u32, m: &HashMap<u32, u32>| if w < base { w } else { m[&w] };
+        for slot in lvl.ops.iter_mut() {
+            let op = *slot;
+            *slot = MuxOp {
+                sel: get(op.sel, &dst_map),
+                hi: get(op.hi, &dst_map),
+                lo: get(op.lo, &dst_map),
+                dst: next,
+            };
+            dst_map.insert(op.dst, next);
+            next += 1;
+        }
+        for w in &mut lvl.outputs {
+            *w = get(*w, &dst_map);
+        }
+        lvl.n_wires = next as usize;
+    }
+}

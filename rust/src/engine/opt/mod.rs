@@ -1,0 +1,328 @@
+//! Netlist optimization pass pipeline over the lowered [`BitNetlist`].
+//!
+//! The lowering pass emits the ROBDD-derived mux graph essentially
+//! verbatim: per-level structural hashing shares identical `(sel, hi, lo)`
+//! triples, but nothing looks *across* register planes. A real synthesis
+//! flow sweeps much more — and every node it sweeps is wall-clock time the
+//! bitsliced evaluator stops paying per 64-sample block. This module is
+//! that sweep, run once at compile time between `lower` and execution:
+//!
+//! * **Constant folding + mux simplification** (`simplify` pass): a
+//!   level's output that is constant (`W_ZERO`/`W_ONE`) makes the next
+//!   level's plane constant, so muxes selecting on it collapse to one
+//!   branch (`mux(0, h, l) = l`, `mux(1, h, l) = h`); equal branches
+//!   (`mux(s, a, a) = a`) and literal forms (`mux(s, 1, 0) = s`)
+//!   disappear; `mux(s, s, l)`/`mux(s, h, s)` canonicalize to
+//!   `mux(s, 1, l)`/`mux(s, h, 0)`, exposing further sharing.
+//! * **Global common-subexpression elimination** (also `simplify`, `O2`):
+//!   value numbering that persists across levels. Two planes carrying the
+//!   same value — duplicate L-LUT outputs, constants, shared literals —
+//!   get one value id, so ops that differed only in which duplicate plane
+//!   they read now merge, which the per-build wire-keyed hashing cannot see.
+//! * **Dead-wire elimination + renumbering** (`dce` pass): backward
+//!   liveness from each level's outputs removes ops whose results are
+//!   never read (including entire L-LUTs the next layer's sparse wiring
+//!   skips), then re-packs `dst` ids densely.
+//! * **Level compaction / plane repacking** (also `dce`, `O2`): output
+//!   planes the next level never reads are dropped and duplicate planes
+//!   deduplicated, shrinking the evaluator's double-buffer
+//!   (`max_planes`) and per-level scratch (`max_wires`), which
+//!   [`BitNetlist::recompute_stats`] re-derives afterwards.
+//!
+//! Every pass is semantics-preserving on the quantized fabric: `O0`, `O1`
+//! and `O2` netlists are bit-exact against each other and against the
+//! scalar simulator (differentially property-tested in
+//! `tests/properties.rs`).
+
+mod dce;
+mod simplify;
+
+use anyhow::bail;
+
+use super::lower::BitNetlist;
+
+/// How hard [`optimize`] works on the lowered netlist.
+///
+/// | level | passes                                                        |
+/// |-------|---------------------------------------------------------------|
+/// | `O0`  | none — the lowering pass output, verbatim                     |
+/// | `O1`  | constant folding + mux simplification, per-level CSE, DCE     |
+/// | `O2`  | `O1` + cross-level value numbering (global CSE) + plane compaction |
+///
+/// `O1` is the default: it is cheap (one linear pass over the ops) and
+/// strictly removes work. `O2` additionally shrinks the inter-level
+/// planes, which pays off on networks whose layers are wider than what
+/// the next layer's sparse wiring actually reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum OptLevel {
+    /// Lowered netlist verbatim (no optimization passes).
+    O0,
+    /// Constant folding, mux simplification, per-level CSE, dead-wire
+    /// elimination.
+    #[default]
+    O1,
+    /// `O1` plus global (cross-level) CSE and plane compaction.
+    O2,
+}
+
+impl OptLevel {
+    /// Stable index used by CLI flags and the `.nfab` header.
+    pub fn index(self) -> u32 {
+        match self {
+            OptLevel::O0 => 0,
+            OptLevel::O1 => 1,
+            OptLevel::O2 => 2,
+        }
+    }
+
+    /// Inverse of [`index`](Self::index); rejects unknown levels.
+    pub fn from_index(i: u32) -> crate::Result<OptLevel> {
+        match i {
+            0 => Ok(OptLevel::O0),
+            1 => Ok(OptLevel::O1),
+            2 => Ok(OptLevel::O2),
+            other => bail!("unknown opt level {other} (supported: 0, 1, 2)"),
+        }
+    }
+}
+
+impl std::fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "O{}", self.index())
+    }
+}
+
+impl std::str::FromStr for OptLevel {
+    type Err = anyhow::Error;
+
+    /// Accepts `0`/`1`/`2` and `O0`/`o1`/`O2` (trimmed).
+    fn from_str(s: &str) -> crate::Result<OptLevel> {
+        let t = s.trim();
+        let digits = t
+            .strip_prefix('O')
+            .or_else(|| t.strip_prefix('o'))
+            .unwrap_or(t);
+        match digits {
+            "0" => Ok(OptLevel::O0),
+            "1" => Ok(OptLevel::O1),
+            "2" => Ok(OptLevel::O2),
+            _ => bail!("unknown opt level '{s}' (supported: O0, O1, O2)"),
+        }
+    }
+}
+
+/// What [`optimize`] removed, for logs and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptReport {
+    /// Ops folded away by constant/mux simplification.
+    pub folded: u64,
+    /// Ops merged into an equivalent earlier op (CSE).
+    pub merged: u64,
+    /// Ops removed as dead (result never read).
+    pub dead_ops: u64,
+    /// Inter-level planes dropped by compaction (`O2` only).
+    pub dead_planes: u64,
+}
+
+impl OptReport {
+    /// Total ops removed by all passes.
+    pub fn removed_ops(&self) -> u64 {
+        self.folded + self.merged + self.dead_ops
+    }
+}
+
+/// Run the pass pipeline for `level` in place. Returns what was removed.
+/// The netlist's derived stats (`n_wires`, `max_wires`, `max_planes`) are
+/// recomputed afterwards and the structural invariants re-checked (debug
+/// builds), so an optimized netlist is as trustworthy as a lowered one.
+pub fn optimize(nl: &mut BitNetlist, level: OptLevel) -> OptReport {
+    let mut report = OptReport::default();
+    if level == OptLevel::O0 {
+        return report;
+    }
+    let global = level == OptLevel::O2;
+    let (folded, merged) = simplify::run(nl, global);
+    report.folded = folded;
+    report.merged = merged;
+    let (dead_ops, dead_planes) = dce::run(nl, global);
+    report.dead_ops = dead_ops;
+    report.dead_planes = dead_planes;
+    dce::renumber(nl);
+    nl.recompute_stats();
+    nl.debug_check();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::lower::{self, W_INPUTS, W_ONE};
+    use crate::luts::{random_network, structured_network, LutLayer, LutNetwork};
+
+    fn lowered(net: &LutNetwork) -> BitNetlist {
+        lower::lower(net).unwrap()
+    }
+
+    #[test]
+    fn opt_level_parses_and_round_trips() {
+        for (s, want) in [
+            ("0", OptLevel::O0),
+            ("O1", OptLevel::O1),
+            (" o2 ", OptLevel::O2),
+            ("2", OptLevel::O2),
+        ] {
+            let got: OptLevel = s.parse().unwrap();
+            assert_eq!(got, want);
+            assert_eq!(OptLevel::from_index(got.index()).unwrap(), got);
+        }
+        assert!("O3".parse::<OptLevel>().is_err());
+        assert!("fast".parse::<OptLevel>().is_err());
+        assert!(OptLevel::from_index(7).is_err());
+        assert_eq!(OptLevel::default(), OptLevel::O1);
+        assert_eq!(OptLevel::O2.to_string(), "O2");
+    }
+
+    #[test]
+    fn o0_is_the_identity() {
+        let net = random_network(19, 10, 2, &[8, 4], 3, 2, 4);
+        let mut nl = lowered(&net);
+        let before = nl.num_ops();
+        let rep = optimize(&mut nl, OptLevel::O0);
+        assert_eq!(rep, OptReport::default());
+        assert_eq!(nl.num_ops(), before);
+    }
+
+    #[test]
+    fn higher_levels_never_add_ops_and_keep_invariants() {
+        for seed in [3u64, 11, 29] {
+            let net = random_network(seed, 12, 2, &[8, 6, 3], 3, 2, 4);
+            let mut prev = usize::MAX;
+            for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+                let mut nl = lowered(&net);
+                optimize(&mut nl, level);
+                nl.check().unwrap();
+                assert!(
+                    nl.num_ops() <= prev,
+                    "{level} grew the netlist: {} > {prev}",
+                    nl.num_ops()
+                );
+                prev = nl.num_ops();
+            }
+        }
+    }
+
+    #[test]
+    fn constant_layer_outputs_fold_through_the_next_level() {
+        // Layer 0 emits constants only; every layer-1 op must fold away.
+        let net = LutNetwork {
+            name: "const-feed".into(),
+            input_size: 2,
+            input_bits: 1,
+            n_class: 2,
+            layers: vec![
+                LutLayer {
+                    indices: vec![vec![0, 1], vec![1, 0]],
+                    tables: vec![1, 1, 1, 1, 0, 0, 0, 0],
+                    fan_in: 2,
+                    in_bits: 1,
+                    out_bits: 1,
+                    signed_out: false,
+                },
+                LutLayer {
+                    indices: vec![vec![0, 1], vec![1, 0]],
+                    tables: (0..8).map(|i| (i % 4) as i16 - 1).collect(),
+                    fan_in: 2,
+                    in_bits: 1,
+                    out_bits: 3,
+                    signed_out: true,
+                },
+            ],
+        };
+        let mut nl = lowered(&net);
+        let rep = optimize(&mut nl, OptLevel::O1);
+        assert_eq!(nl.num_ops(), 0, "constant planes must fold everything");
+        assert!(rep.folded > 0 || rep.dead_ops > 0 || nl.levels[1].ops.is_empty());
+        // All logit planes are constant wires now.
+        assert!(nl.levels[1].outputs.iter().all(|&w| w <= W_ONE));
+    }
+
+    #[test]
+    fn duplicate_lut_outputs_merge_downstream_only_at_o2() {
+        // Two identical L-LUTs in layer 0 produce duplicate planes; layer 1
+        // reads both. O2's value numbering merges the duplicate work.
+        let mut net = random_network(23, 6, 2, &[2, 2], 3, 2, 4);
+        let l0 = &mut net.layers[0];
+        l0.indices[1] = l0.indices[0].clone();
+        let e = l0.entries();
+        let (a, b) = l0.tables.split_at_mut(e);
+        b.copy_from_slice(a);
+        let mut o1 = lowered(&net);
+        optimize(&mut o1, OptLevel::O1);
+        let mut o2 = lowered(&net);
+        let rep = optimize(&mut o2, OptLevel::O2);
+        assert!(
+            o2.num_ops() <= o1.num_ops(),
+            "O2 ({}) must not exceed O1 ({})",
+            o2.num_ops(),
+            o1.num_ops()
+        );
+        // The duplicate planes themselves are compacted away.
+        assert!(rep.dead_planes > 0, "duplicate planes should be dropped");
+        assert!(o2.levels[1].n_in_planes < o1.levels[1].n_in_planes);
+        assert_eq!(o2.levels[1].n_in_planes, o2.levels[0].outputs.len());
+    }
+
+    #[test]
+    fn dead_units_are_swept_at_o2() {
+        // A wide hidden layer feeding a narrow output layer: most hidden
+        // units are never read and their ops must disappear at O2.
+        let net = random_network(31, 12, 2, &[32, 2], 2, 2, 4);
+        let mut o0 = lowered(&net);
+        let mut o2 = lowered(&net);
+        optimize(&mut o2, OptLevel::O2);
+        o0.recompute_stats();
+        assert!(
+            (o2.num_ops() as f64) < 0.9 * o0.num_ops() as f64,
+            "expected >10% dead work: O0 {} -> O2 {}",
+            o0.num_ops(),
+            o2.num_ops()
+        );
+        assert!(o2.max_planes <= o0.max_planes);
+        assert!(o2.max_wires <= o0.max_wires);
+    }
+
+    #[test]
+    fn structured_networks_shrink_hard_at_every_level() {
+        let net = structured_network(7, 16, 2, &[16, 8, 4], 3, 2, 4);
+        let o0 = lowered(&net).num_ops();
+        let mut n1 = lowered(&net);
+        optimize(&mut n1, OptLevel::O1);
+        let mut n2 = lowered(&net);
+        optimize(&mut n2, OptLevel::O2);
+        assert!(n1.num_ops() <= o0);
+        assert!(n2.num_ops() <= n1.num_ops());
+        assert!(
+            (n2.num_ops() as f64) <= 0.9 * o0.max(1) as f64,
+            "trained-like tables must shed >=10%: O0 {o0} -> O2 {}",
+            n2.num_ops()
+        );
+    }
+
+    #[test]
+    fn optimized_ops_stay_densely_numbered_and_topological() {
+        let net = structured_network(13, 10, 2, &[8, 6, 3], 3, 2, 4);
+        for level in [OptLevel::O1, OptLevel::O2] {
+            let mut nl = lowered(&net);
+            optimize(&mut nl, level);
+            for lvl in &nl.levels {
+                let base = W_INPUTS as usize + lvl.n_in_planes;
+                for (i, op) in lvl.ops.iter().enumerate() {
+                    assert_eq!(op.dst as usize, base + i);
+                    for src in [op.sel, op.hi, op.lo] {
+                        assert!((src as usize) < base + i);
+                    }
+                }
+            }
+        }
+    }
+}

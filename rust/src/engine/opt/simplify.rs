@@ -1,0 +1,148 @@
+//! Forward simplification over the levelized netlist: constant folding,
+//! constant-input mux collapsing, literal canonicalization and common-
+//! subexpression elimination, all driven by **value numbering**.
+//!
+//! Every wire is mapped to a value id. Constants are values `0`/`1`;
+//! input planes inherit the value of the producing output in the previous
+//! level (`O2`) or get fresh ids (`O1`, where only constants propagate
+//! across the register plane). Each op is then folded on its operand
+//! *values* — which sees through duplicate planes, aliased wires and
+//! constants in a way the build-time wire-keyed hashing cannot:
+//!
+//! * `mux(0, h, l) = l`, `mux(1, h, l) = h` — constant select;
+//! * `mux(s, a, a) = a` — equal branches;
+//! * `mux(s, s, l) = mux(s, 1, l)`, `mux(s, h, s) = mux(s, h, 0)` —
+//!   select-in-branch canonicalization (exposes more sharing);
+//! * `mux(s, 1, 0) = s` — literal;
+//! * identical `(sel, hi, lo)` value triples share one op (CSE). With
+//!   `global` set the CSE table persists across levels, so a function
+//!   already computed by an earlier level is re-used whenever a plane
+//!   still carries its value.
+//!
+//! Folded ops leave the level's op list immediately; outputs are rewired
+//! to the surviving representative. The pass never reorders surviving
+//! ops, so topological order is preserved by construction. Dead ops it
+//! strands (results nothing reads anymore) are swept by the companion
+//! [`dce`](super::dce) pass.
+
+use std::collections::HashMap;
+
+use crate::engine::lower::{BitNetlist, MuxOp, W_INPUTS, W_ONE, W_ZERO};
+
+/// Value ids of the constant-0 / constant-1 planes (mirroring the wire
+/// ids, so `wire <= W_ONE` ⇔ `value <= V_ONE`).
+const V_ZERO: u32 = 0;
+const V_ONE: u32 = 1;
+
+/// Run the pass in place. Returns `(folded, merged)` op counts.
+pub(super) fn run(nl: &mut BitNetlist, global: bool) -> (u64, u64) {
+    let mut next_val: u32 = 2;
+    let n_input_planes = nl.input_size * nl.input_bits;
+    let mut plane_vals: Vec<u32> = (0..n_input_planes as u32).map(|i| 2 + i).collect();
+    next_val += n_input_planes as u32;
+    // (sel, hi, lo) value triple -> value id. Persists across levels when
+    // `global`, giving cross-level CSE; cleared per level otherwise.
+    let mut cse: HashMap<(u32, u32, u32), u32> = HashMap::new();
+    let (mut folded, mut merged) = (0u64, 0u64);
+
+    for level in &mut nl.levels {
+        if !global {
+            cse.clear();
+        }
+        debug_assert_eq!(level.n_in_planes, plane_vals.len());
+        let base = W_INPUTS as usize + level.n_in_planes;
+        // Old wire id -> value id (wires are dense after lower/renumber).
+        let mut val_of = vec![u32::MAX; level.n_wires];
+        val_of[W_ZERO as usize] = V_ZERO;
+        val_of[W_ONE as usize] = V_ONE;
+        // Value id -> wire (in the *new* numbering) that carries it here.
+        let mut wire_of_val: HashMap<u32, u32> = HashMap::new();
+        wire_of_val.insert(V_ZERO, W_ZERO);
+        wire_of_val.insert(V_ONE, W_ONE);
+        for (p, &v) in plane_vals.iter().enumerate() {
+            let w = W_INPUTS + p as u32;
+            val_of[w as usize] = v;
+            wire_of_val.entry(v).or_insert(w);
+        }
+
+        let mut new_ops: Vec<MuxOp> = Vec::with_capacity(level.ops.len());
+        let mut next_wire = base as u32;
+        for op in &level.ops {
+            let sv = val_of[op.sel as usize];
+            let mut hv = val_of[op.hi as usize];
+            let mut lv = val_of[op.lo as usize];
+            let fold = if sv == V_ZERO {
+                Some(lv)
+            } else if sv == V_ONE {
+                Some(hv)
+            } else if hv == lv {
+                Some(hv)
+            } else {
+                if sv == hv {
+                    hv = V_ONE; // mux(s, s, l) = s | l = mux(s, 1, l)
+                }
+                if sv == lv {
+                    lv = V_ZERO; // mux(s, h, s) = s & h = mux(s, h, 0)
+                }
+                (hv == V_ONE && lv == V_ZERO).then_some(sv) // literal
+            };
+            if let Some(v) = fold {
+                val_of[op.dst as usize] = v;
+                folded += 1;
+                continue;
+            }
+            let key = (sv, hv, lv);
+            let v = match cse.get(&key) {
+                Some(&v) => {
+                    if wire_of_val.contains_key(&v) {
+                        // Same function already materialized in this level.
+                        val_of[op.dst as usize] = v;
+                        merged += 1;
+                        continue;
+                    }
+                    v // known value, but not carried by any wire here
+                }
+                None => {
+                    let v = next_val;
+                    next_val += 1;
+                    cse.insert(key, v);
+                    v
+                }
+            };
+            let dst = next_wire;
+            next_wire += 1;
+            new_ops.push(MuxOp {
+                sel: wire_of_val[&sv],
+                hi: wire_of_val[&hv],
+                lo: wire_of_val[&lv],
+                dst,
+            });
+            wire_of_val.insert(v, dst);
+            val_of[op.dst as usize] = v;
+        }
+
+        let out_vals: Vec<u32> = level.outputs.iter().map(|&w| val_of[w as usize]).collect();
+        level.ops = new_ops;
+        level.outputs = out_vals.iter().map(|&v| wire_of_val[&v]).collect();
+        level.n_wires = next_wire as usize;
+        // Next level's planes carry these values. At O1 only constants
+        // propagate; every other plane gets a fresh, unrelated id.
+        plane_vals = if global {
+            out_vals
+        } else {
+            out_vals
+                .iter()
+                .map(|&v| {
+                    if v <= V_ONE {
+                        v
+                    } else {
+                        let nv = next_val;
+                        next_val += 1;
+                        nv
+                    }
+                })
+                .collect()
+        };
+    }
+    (folded, merged)
+}

@@ -1,0 +1,340 @@
+//! `.nfab` — the versioned, persistent compiled-fabric artifact.
+//!
+//! `Model::compile` is a real cost for the bitsliced backend (support
+//! reduction, ROBDD construction, the `engine::opt` pass pipeline). A
+//! `.nfab` file makes that a *ship-once* step: one process compiles and
+//! saves ([`CompiledFabric::save`](crate::fabric::CompiledFabric::save)),
+//! every worker process and every restart loads
+//! ([`Model::load_fabric`](crate::fabric::Model::load_fabric) /
+//! [`Model::compile_cached`](crate::fabric::Model::compile_cached)) the
+//! pre-optimized program and serves bit-exactly identical outputs.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! u32  magic     0x4E464142 ("NFAB")
+//! u32  version   1
+//! u32  backend name length, then that many UTF-8 bytes
+//! u64  model digest (LutNetwork::digest of the source network)
+//! u32  opt level index (0 / 1 / 2)
+//! u32  level count, then per level:
+//!      u32 n_in_planes, u32 num_luts, u32 out_bits,
+//!      u32 op count,     ops as 4 x u32 (sel, hi, lo, dst),
+//!      u32 output count, outputs as u32
+//! u32  input_size, u32 input_bits, u32 n_class,
+//! u32  logit_bits, u32 signed_logits
+//! ```
+//!
+//! Derived stats (`n_wires`, `max_wires`, `max_planes`) are deliberately
+//! *not* stored: [`BitNetlist::recompute_stats`] re-derives them on load
+//! and [`BitNetlist::check`] then validates the whole structure, so a
+//! corrupted payload is an error message, never an out-of-bounds index in
+//! the evaluator's hot loop.
+//!
+//! The reader follows the same offset-carrying error discipline as the
+//! NLUT loader: every rejection names the file, the field being read, the
+//! byte offset, and expected-vs-actual values, and every untrusted count
+//! is checked against the remaining file length *before* any allocation
+//! or shift.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::{BitNetlist, Level, MuxOp, OptLevel};
+
+/// "NFAB", in the same hex-spelling convention as the NLUT magic.
+pub const NFAB_MAGIC: u32 = 0x4E464142;
+/// Current artifact format version.
+pub const NFAB_VERSION: u32 = 1;
+
+/// Everything the envelope records about the program it carries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NfabHeader {
+    /// Canonical registry name of the backend that compiled the program.
+    pub backend: String,
+    /// Optimization level the program was compiled at.
+    pub opt_level: OptLevel,
+    /// [`LutNetwork::digest`](crate::luts::LutNetwork::digest) of the
+    /// source model — loading against any other model is rejected.
+    pub model_digest: u64,
+}
+
+/// Serialize a compiled program into a `.nfab` file. Writes to a
+/// temporary sibling and renames, so concurrent readers never observe a
+/// half-written artifact.
+pub(crate) fn save(
+    path: &Path,
+    backend: &str,
+    opt_level: OptLevel,
+    model_digest: u64,
+    nl: &BitNetlist,
+) -> Result<()> {
+    // The loader rejects names over 256 bytes as absurd; refusing to
+    // write such an artifact here beats persisting one that every
+    // subsequent load refuses (a self-invalidating cache).
+    if backend.len() > 256 {
+        bail!(
+            "backend name of {} bytes is too long for a .nfab artifact \
+             (limit 256)",
+            backend.len()
+        );
+    }
+    let mut out: Vec<u8> = Vec::with_capacity(64 + nl.num_ops() * 16);
+    let w32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
+    w32(&mut out, NFAB_MAGIC);
+    w32(&mut out, NFAB_VERSION);
+    w32(&mut out, backend.len() as u32);
+    out.extend_from_slice(backend.as_bytes());
+    out.extend_from_slice(&model_digest.to_le_bytes());
+    w32(&mut out, opt_level.index());
+    w32(&mut out, nl.levels.len() as u32);
+    for level in &nl.levels {
+        w32(&mut out, level.n_in_planes as u32);
+        w32(&mut out, level.num_luts as u32);
+        w32(&mut out, level.out_bits as u32);
+        w32(&mut out, level.ops.len() as u32);
+        for op in &level.ops {
+            for v in [op.sel, op.hi, op.lo, op.dst] {
+                w32(&mut out, v);
+            }
+        }
+        w32(&mut out, level.outputs.len() as u32);
+        for &w in &level.outputs {
+            w32(&mut out, w);
+        }
+    }
+    for v in [
+        nl.input_size as u32,
+        nl.input_bits as u32,
+        nl.n_class as u32,
+        nl.logit_bits as u32,
+        nl.signed_logits as u32,
+    ] {
+        w32(&mut out, v);
+    }
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension(format!("nfab.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &out).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Parse and validate a `.nfab` file. The returned netlist has passed
+/// [`BitNetlist::check`]; header/model consistency (digest, backend,
+/// opt level) is the caller's decision to enforce —
+/// [`Model::load_fabric`](crate::fabric::Model::load_fabric) does.
+pub(crate) fn load(path: &Path) -> Result<(NfabHeader, BitNetlist)> {
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = NfabReader { bytes: &bytes, path, offset: 0 };
+    let magic = r.u32("magic")?;
+    if magic != NFAB_MAGIC {
+        bail!(
+            "{}: bad .nfab magic 0x{magic:08X} (expected 0x{NFAB_MAGIC:08X} \
+             \"NFAB\"); file is {} bytes and is not a compiled-fabric artifact",
+            path.display(),
+            bytes.len()
+        );
+    }
+    let version = r.u32("version")?;
+    if version != NFAB_VERSION {
+        bail!(
+            "{}: unsupported .nfab version {version} (this build reads version \
+             {NFAB_VERSION}; file is {} bytes)",
+            path.display(),
+            bytes.len()
+        );
+    }
+    let name_len = r.u32("backend name length")? as usize;
+    if name_len > r.remaining() || name_len > 256 {
+        bail!(
+            "{}: absurd backend name length {name_len} in .nfab header (file \
+             is {} bytes)",
+            path.display(),
+            bytes.len()
+        );
+    }
+    let backend = String::from_utf8(r.take(name_len, "backend name")?.to_vec())
+        .with_context(|| format!("{}: backend name is not UTF-8", path.display()))?;
+    let model_digest = r.u64("model digest")?;
+    let opt_level = OptLevel::from_index(r.u32("opt level")?)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let n_levels = r.u32("level count")? as usize;
+    // Every level needs at least a 20-byte header.
+    if n_levels.saturating_mul(20) > r.remaining() {
+        bail!(
+            "{}: absurd level count {n_levels} in .nfab header (only {} bytes \
+             remain at offset {})",
+            path.display(),
+            r.remaining(),
+            r.offset
+        );
+    }
+    let mut levels = Vec::with_capacity(n_levels);
+    for li in 0..n_levels {
+        let n_in_planes = r.u32("level n_in_planes")? as usize;
+        let num_luts = r.u32("level num_luts")? as usize;
+        let out_bits = r.u32("level out_bits")? as usize;
+        let n_ops = r.u32("level op count")? as usize;
+        if n_ops.saturating_mul(16) > r.remaining() {
+            bail!(
+                "{}: truncated .nfab artifact: level {li} claims {n_ops} ops \
+                 ({} payload bytes) at offset {}, but only {} bytes remain",
+                path.display(),
+                n_ops.saturating_mul(16),
+                r.offset,
+                r.remaining()
+            );
+        }
+        let what = format!("level {li} op");
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let sel = r.u32(&what)?;
+            let hi = r.u32(&what)?;
+            let lo = r.u32(&what)?;
+            let dst = r.u32(&what)?;
+            ops.push(MuxOp { sel, hi, lo, dst });
+        }
+        let n_outputs = r.u32("level output count")? as usize;
+        if n_outputs.saturating_mul(4) > r.remaining() {
+            bail!(
+                "{}: truncated .nfab artifact: level {li} claims {n_outputs} \
+                 outputs at offset {}, but only {} bytes remain",
+                path.display(),
+                r.offset,
+                r.remaining()
+            );
+        }
+        let what = format!("level {li} output wire");
+        let mut outputs = Vec::with_capacity(n_outputs);
+        for _ in 0..n_outputs {
+            outputs.push(r.u32(&what)?);
+        }
+        levels.push(Level { ops, n_wires: 0, n_in_planes, outputs, num_luts, out_bits });
+    }
+    let input_size = r.u32("input_size")? as usize;
+    let input_bits = r.u32("input_bits")? as usize;
+    let n_class = r.u32("n_class")? as usize;
+    let logit_bits = r.u32("logit_bits")? as usize;
+    let signed_logits = r.u32("signed_logits")? != 0;
+    if r.remaining() != 0 {
+        bail!(
+            "{}: {} trailing byte(s) after the .nfab payload at offset {}",
+            path.display(),
+            r.remaining(),
+            r.offset
+        );
+    }
+    let mut nl = BitNetlist {
+        levels,
+        input_size,
+        input_bits,
+        n_class,
+        logit_bits,
+        signed_logits,
+        max_wires: 0,
+        max_planes: 0,
+    };
+    nl.recompute_stats();
+    nl.check()
+        .with_context(|| format!("validating {}", path.display()))?;
+    Ok((NfabHeader { backend, opt_level, model_digest }, nl))
+}
+
+/// Position-tracking reader: every short read names the field, the byte
+/// offset, and the file length (mirrors `NlutReader`).
+struct NfabReader<'a> {
+    bytes: &'a [u8],
+    path: &'a Path,
+    offset: usize,
+}
+
+impl<'a> NfabReader<'a> {
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.offset
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "{}: truncated .nfab artifact: needed {n} byte(s) for {what} at \
+                 offset {}, but file is {} bytes",
+                self.path.display(),
+                self.offset,
+                self.bytes.len()
+            );
+        }
+        let s = &self.bytes[self.offset..self.offset + n];
+        self.offset += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::lower;
+    use crate::luts::random_network;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("neuralut_artifact_{name}.nfab"))
+    }
+
+    #[test]
+    fn nfab_payload_round_trips_exactly() {
+        let net = random_network(51, 8, 2, &[6, 3], 3, 2, 4);
+        let mut nl = lower::lower(&net).unwrap();
+        crate::engine::optimize(&mut nl, OptLevel::O2);
+        let path = tmp("roundtrip");
+        save(&path, "bitsliced", OptLevel::O2, net.digest(), &nl).unwrap();
+        let (header, back) = load(&path).unwrap();
+        assert_eq!(header.backend, "bitsliced");
+        assert_eq!(header.opt_level, OptLevel::O2);
+        assert_eq!(header.model_digest, net.digest());
+        assert_eq!(back.num_ops(), nl.num_ops());
+        assert_eq!(back.max_wires, nl.max_wires);
+        assert_eq!(back.max_planes, nl.max_planes);
+        assert_eq!(back.levels.len(), nl.levels.len());
+        for (a, b) in back.levels.iter().zip(&nl.levels) {
+            assert_eq!(a.ops, b.ops);
+            assert_eq!(a.outputs, b.outputs);
+            assert_eq!(a.n_in_planes, b.n_in_planes);
+            assert_eq!(a.n_wires, b.n_wires);
+        }
+        assert_eq!(back.logit_bits, nl.logit_bits);
+        assert_eq!(back.signed_logits, nl.signed_logits);
+    }
+
+    #[test]
+    fn corrupt_payload_fails_the_structural_check() {
+        let net = random_network(52, 8, 2, &[6, 3], 3, 2, 4);
+        let nl = lower::lower(&net).unwrap();
+        let path = tmp("corrupt");
+        save(&path, "bitsliced", OptLevel::O0, net.digest(), &nl).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Smash the final level's last output wire (it sits right before
+        // the 20-byte trailer): the decoded netlist must fail validation,
+        // not index out of bounds later in the evaluator.
+        let n = bytes.len();
+        bytes[n - 24..n - 20].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("validating"), "{err:#}");
+    }
+}

@@ -24,22 +24,34 @@
 //!   program.
 //!
 //! Configuration funnels through one path: [`FabricOptions`] layers
-//! builder calls over `NEURALUT_ENGINE`/`NEURALUT_WORKERS` over a parsed
+//! builder calls over `NEURALUT_ENGINE`/`NEURALUT_WORKERS`/
+//! `NEURALUT_OPT_LEVEL`/`NEURALUT_FABRIC_CACHE` over a parsed
 //! [`ServerConfig`](crate::server::ServerConfig) file over defaults, and
 //! every unknown-backend error lists the registered names.
+//!
+//! Compilation is a ship-once step: [`CompiledFabric::save`] persists
+//! the optimized program as a versioned `.nfab` [`artifact`] (backend
+//! name + opt level + model digest + netlist), and
+//! [`Model::compile_cached`] / [`Model::load_fabric`] reuse it across
+//! worker processes and restarts — bit-exactly, with stale or corrupt
+//! artifacts rejected by digest and structural validation.
 
+pub mod artifact;
 pub mod options;
 pub mod registry;
 
+pub use artifact::{NfabHeader, NFAB_MAGIC, NFAB_VERSION};
+pub use crate::engine::OptLevel;
 pub use options::{FabricOptions, FabricTuning, DEFAULT_BACKEND};
 pub use registry::{
     BackendEntry, BackendFactory, BackendRegistry, BatchAffinity, Capabilities, CompileCost,
+    ProgramLoader,
 };
 
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::bail;
+use anyhow::{bail, Context};
 
 use crate::engine::{BitNetlist, FabricProgram, InferenceBackend};
 use crate::luts::LutNetwork;
@@ -152,8 +164,11 @@ impl Model {
 
     /// Compile this model for execution: resolve `opts`' backend name
     /// through the global [`BackendRegistry`], validate the tuning, and
-    /// run the backend factory **exactly once**. Everything downstream —
-    /// sessions, serving workers — shares the one compiled program.
+    /// run the backend factory **exactly once** at the requested
+    /// [`OptLevel`]. Everything downstream — sessions, serving workers —
+    /// shares the one compiled program. When `opts` carries a
+    /// [`fabric_cache`](FabricOptions::fabric_cache) path this routes
+    /// through [`compile_cached`](Self::compile_cached).
     pub fn compile(&self, opts: &FabricOptions) -> crate::Result<CompiledFabric> {
         self.compile_with(BackendRegistry::global(), opts)
     }
@@ -165,10 +180,168 @@ impl Model {
         registry: &BackendRegistry,
         opts: &FabricOptions,
     ) -> crate::Result<CompiledFabric> {
+        if let Some(path) = opts.get_fabric_cache() {
+            return self.compile_cached_with(registry, opts, path);
+        }
+        self.compile_fresh(registry, opts)
+    }
+
+    fn compile_fresh(
+        &self,
+        registry: &BackendRegistry,
+        opts: &FabricOptions,
+    ) -> crate::Result<CompiledFabric> {
         let entry = registry.resolve(opts.backend_or_default())?;
         let tuning = opts.resolve_tuning()?;
-        let program = entry.compile(self.net.clone())?;
-        Ok(CompiledFabric { model: self.clone(), entry, program, tuning })
+        let opt_level = opts.opt_level_or_default();
+        let program = entry.compile(self.net.clone(), opt_level)?;
+        Ok(CompiledFabric { model: self.clone(), entry, program, tuning, opt_level })
+    }
+
+    /// Compile-once, serve-many: reuse the `.nfab` artifact at `path`
+    /// when it is fresh — same model digest, same backend, same opt
+    /// level — otherwise compile and (re)write it. Workers and restarts
+    /// thereby share one precompiled, pre-optimized program instead of
+    /// paying the lowering + optimization passes per process. Requires a
+    /// persistable backend (e.g. `bitsliced`).
+    pub fn compile_cached(
+        &self,
+        opts: &FabricOptions,
+        path: &Path,
+    ) -> crate::Result<CompiledFabric> {
+        self.compile_cached_with(BackendRegistry::global(), opts, path)
+    }
+
+    /// [`compile_cached`](Self::compile_cached) against an explicit
+    /// registry.
+    pub fn compile_cached_with(
+        &self,
+        registry: &BackendRegistry,
+        opts: &FabricOptions,
+        path: &Path,
+    ) -> crate::Result<CompiledFabric> {
+        // Fail fast on a non-persistable backend: a cache path was asked
+        // for explicitly, so silently skipping the cache would lie.
+        let entry = registry.resolve(opts.backend_or_default())?;
+        if !entry.capabilities().persistable {
+            bail!(
+                "backend '{}' does not produce a persistable compiled-fabric \
+                 artifact (.nfab); drop the fabric cache or pick a persistable \
+                 backend",
+                entry.name()
+            );
+        }
+        if path.exists() {
+            match self.load_fabric_with(registry, opts, path) {
+                Ok(fabric) => return Ok(fabric),
+                // Stale or corrupt cache: say why (a cache that thrashes
+                // every startup should be diagnosable), then recompile
+                // below and overwrite.
+                Err(e) => eprintln!(
+                    "warning: fabric cache {} not reusable, recompiling: {e:#}",
+                    path.display()
+                ),
+            }
+        }
+        let fabric = self.compile_fresh(registry, opts)?;
+        // The cache is an optimization, not an availability dependency: a
+        // failed write (read-only volume, permissions) must not take down
+        // a process that just compiled a perfectly good program.
+        if let Err(e) = fabric.save(path) {
+            eprintln!(
+                "warning: could not write fabric cache {}: {e:#}",
+                path.display()
+            );
+        }
+        Ok(fabric)
+    }
+
+    /// Strictly load a `.nfab` artifact for this model: the recorded
+    /// model digest must match this network, and — when `opts` pins them
+    /// explicitly — the recorded backend and opt level must match too.
+    /// Any mismatch, truncation or corruption is an error naming the
+    /// file, the field and expected-vs-actual values; nothing is ever
+    /// recompiled here (that is [`compile_cached`](Self::compile_cached)'s
+    /// job).
+    pub fn load_fabric(&self, opts: &FabricOptions, path: &Path) -> crate::Result<CompiledFabric> {
+        self.load_fabric_with(BackendRegistry::global(), opts, path)
+    }
+
+    /// [`load_fabric`](Self::load_fabric) against an explicit registry.
+    pub fn load_fabric_with(
+        &self,
+        registry: &BackendRegistry,
+        opts: &FabricOptions,
+        path: &Path,
+    ) -> crate::Result<CompiledFabric> {
+        let (header, nl) = artifact::load(path)?;
+        if let Some(requested) = opts.get_backend() {
+            let canon = registry::normalize_name(requested);
+            if canon != header.backend {
+                bail!(
+                    "{}: artifact was compiled by backend '{}' but options \
+                     request '{canon}'",
+                    path.display(),
+                    header.backend
+                );
+            }
+        }
+        if let Some(level) = opts.get_opt_level() {
+            if level != header.opt_level {
+                bail!(
+                    "{}: artifact was compiled at {} but options request {level} \
+                     (stale artifact?)",
+                    path.display(),
+                    header.opt_level
+                );
+            }
+        }
+        let digest = self.net.digest();
+        if header.model_digest != digest {
+            bail!(
+                "{}: artifact was compiled from a model with digest \
+                 {:016x}, but this model ('{}') has digest {digest:016x} — \
+                 stale or mismatched artifact",
+                path.display(),
+                header.model_digest,
+                self.net.name
+            );
+        }
+        if nl.input_size != self.net.input_size
+            || nl.input_bits != self.net.input_bits
+            || nl.n_class != self.net.n_class
+        {
+            bail!(
+                "{}: artifact shape ({} inputs x {} bits -> {} classes) does \
+                 not match model '{}' ({} x {} -> {})",
+                path.display(),
+                nl.input_size,
+                nl.input_bits,
+                nl.n_class,
+                self.net.name,
+                self.net.input_size,
+                self.net.input_bits,
+                self.net.n_class
+            );
+        }
+        let entry = registry.resolve(&header.backend).with_context(|| {
+            format!("{}: resolving the artifact's backend", path.display())
+        })?;
+        let tuning = opts.resolve_tuning()?;
+        let program = entry.load_program(self.net.clone(), Arc::new(nl))?;
+        Ok(CompiledFabric {
+            model: self.clone(),
+            entry,
+            program,
+            tuning,
+            opt_level: header.opt_level,
+        })
+    }
+
+    /// Stable digest of the underlying network (what `.nfab` artifacts
+    /// record).
+    pub fn digest(&self) -> u64 {
+        self.net.digest()
     }
 }
 
@@ -182,12 +355,14 @@ impl std::fmt::Debug for Model {
 
 /// A compiled model: one backend's shared, compile-once program plus the
 /// resolved tuning. Spawn any number of [`session`](Self::session)s and
-/// [`serve`](Self::serve) pools from it — none of them recompiles.
+/// [`serve`](Self::serve) pools from it — none of them recompiles — or
+/// [`save`](Self::save) it as a `.nfab` artifact other processes load.
 pub struct CompiledFabric {
     model: Model,
     entry: BackendEntry,
     program: Arc<dyn FabricProgram>,
     tuning: FabricTuning,
+    opt_level: OptLevel,
 }
 
 impl CompiledFabric {
@@ -202,6 +377,43 @@ impl CompiledFabric {
 
     pub fn capabilities(&self) -> Capabilities {
         self.entry.capabilities()
+    }
+
+    /// The netlist optimization level this fabric was compiled (or
+    /// loaded) at.
+    pub fn opt_level(&self) -> OptLevel {
+        self.opt_level
+    }
+
+    /// Word ops per 64-sample block of the compiled program (`None` for
+    /// table-lookup backends with nothing lowered) — the compiled cost
+    /// metric benches and the CI gate track.
+    pub fn num_word_ops(&self) -> Option<usize> {
+        self.program.bit_netlist().map(|nl| nl.num_ops())
+    }
+
+    /// Persist this fabric as a versioned `.nfab` artifact: the backend
+    /// name, opt level, the source model's digest, and the compiled
+    /// program. Another process with the same model loads it via
+    /// [`Model::load_fabric`] / [`Model::compile_cached`] and serves
+    /// bit-exactly identical outputs without recompiling. Errors for
+    /// backends whose programs are not persistable.
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        if !self.entry.capabilities().persistable {
+            bail!(
+                "backend '{}' does not produce a persistable compiled-fabric \
+                 artifact (.nfab)",
+                self.entry.name()
+            );
+        }
+        let Some(nl) = self.program.bit_netlist() else {
+            bail!(
+                "backend '{}' is marked persistable but exposes no compiled \
+                 bit-netlist to save",
+                self.entry.name()
+            );
+        };
+        artifact::save(path, self.entry.name(), self.opt_level, self.model.digest(), nl)
     }
 
     /// The serving knobs [`serve`](Self::serve) will use.
@@ -384,6 +596,53 @@ mod tests {
         assert!(s.infer_one(&[0.0; 8]).is_ok());
         assert!(s.accuracy(&[0.0; 16], &[0, 1, 2]).is_err());
         assert!(s.accuracy(&[0.0; 16], &[0, 1]).is_ok());
+    }
+
+    #[test]
+    fn opt_levels_compile_and_never_grow_the_program() {
+        let m = model();
+        let mut prev = usize::MAX;
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let fabric = m
+                .compile(&FabricOptions::new().backend("bitsliced").opt_level(level))
+                .unwrap();
+            assert_eq!(fabric.opt_level(), level);
+            let ops = fabric.num_word_ops().expect("bitsliced has a netlist");
+            assert!(ops <= prev, "{level} grew the program: {ops} > {prev}");
+            prev = ops;
+        }
+        // Scalar has nothing lowered and reports the default level.
+        let scalar = m.compile(&FabricOptions::new()).unwrap();
+        assert!(scalar.num_word_ops().is_none());
+        assert_eq!(scalar.opt_level(), OptLevel::O1);
+    }
+
+    #[test]
+    fn fabric_cache_round_trips_through_compile() {
+        let m = model();
+        let path = std::env::temp_dir().join("neuralut_fabric_mod_cache.nfab");
+        let _ = std::fs::remove_file(&path);
+        let opts = FabricOptions::new()
+            .backend("bitsliced")
+            .opt_level(OptLevel::O2)
+            .fabric_cache(&path);
+        let x: Vec<f32> = (0..8 * 70).map(|i| (i % 9) as f32 / 9.0).collect();
+        // First compile populates the cache...
+        let a = m.compile(&opts).unwrap();
+        assert!(path.exists(), "compile with fabric_cache must write the artifact");
+        // ...second compile loads it and serves identical outputs.
+        let b = m.compile(&opts).unwrap();
+        assert_eq!(a.num_word_ops(), b.num_word_ops());
+        assert_eq!(
+            a.session().infer_batch(&x).unwrap().logit_codes,
+            b.session().infer_batch(&x).unwrap().logit_codes
+        );
+        // The scalar backend cannot cache; asking for it is an error.
+        let err = m
+            .compile(&FabricOptions::new().fabric_cache(&path))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("persistable"), "{err}");
     }
 
     #[test]

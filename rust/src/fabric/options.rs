@@ -1,17 +1,18 @@
 //! [`FabricOptions`]: the one resolution path from *any* configuration
-//! surface — builder calls, `NEURALUT_ENGINE`/`NEURALUT_WORKERS`
-//! environment variables, server config files — to a validated set of
-//! compile + serving knobs.
+//! surface — builder calls, `NEURALUT_ENGINE`/`NEURALUT_WORKERS`/
+//! `NEURALUT_OPT_LEVEL`/`NEURALUT_FABRIC_CACHE` environment variables,
+//! server config files — to a validated set of compile + serving knobs.
 //!
 //! Precedence, highest first:
 //!
 //! 1. explicit builder calls ([`backend`](FabricOptions::backend),
 //!    [`workers`](FabricOptions::workers), …) — how CLI flags are applied;
-//! 2. environment (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`);
+//! 2. environment (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`,
+//!    `NEURALUT_OPT_LEVEL`, `NEURALUT_FABRIC_CACHE`);
 //! 3. a [`ServerConfig`] file passed to
 //!    [`from_env_and_config`](FabricOptions::from_env_and_config);
-//! 4. defaults (`scalar`, 1 worker, queue depth 1024, max batch 256,
-//!    200 µs batch window).
+//! 4. defaults (`scalar`, opt level `O1`, no fabric cache, 1 worker,
+//!    queue depth 1024, max batch 256, 200 µs batch window).
 //!
 //! Backend names are resolved through the
 //! [`BackendRegistry`](crate::fabric::BackendRegistry) at
@@ -21,10 +22,12 @@
 //! [`MAX_WORKERS`]/[`MAX_QUEUE_DEPTH`] bounds, so zero or absurd values
 //! are errors on every path, never clamped surprises.
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{bail, Context};
 
+use crate::engine::OptLevel;
 use crate::server::{ServerConfig, MAX_QUEUE_DEPTH, MAX_WORKERS};
 
 /// Backend compiled when nothing selects one explicitly.
@@ -84,6 +87,8 @@ impl FabricTuning {
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FabricOptions {
     backend: Option<String>,
+    opt_level: Option<OptLevel>,
+    fabric_cache: Option<PathBuf>,
     workers: Option<usize>,
     queue_depth: Option<usize>,
     max_batch: Option<usize>,
@@ -102,6 +107,22 @@ impl FabricOptions {
     /// Select the backend by registry name (case/whitespace-insensitive).
     pub fn backend(mut self, name: impl Into<String>) -> Self {
         self.backend = Some(name.into());
+        self
+    }
+
+    /// Netlist optimization level the backend compiles at (`O0`/`O1`/`O2`;
+    /// default `O1`). Backends without a compile step ignore it.
+    pub fn opt_level(mut self, level: OptLevel) -> Self {
+        self.opt_level = Some(level);
+        self
+    }
+
+    /// Persist/reuse the compiled program at this `.nfab` path:
+    /// [`Model::compile`](crate::fabric::Model::compile) loads it when it
+    /// is fresh (same model digest, backend and opt level) and compiles +
+    /// saves otherwise. Requires a persistable backend.
+    pub fn fabric_cache(mut self, path: impl Into<PathBuf>) -> Self {
+        self.fabric_cache = Some(path.into());
         self
     }
 
@@ -136,6 +157,14 @@ impl FabricOptions {
         self.backend.as_deref()
     }
 
+    pub fn get_opt_level(&self) -> Option<OptLevel> {
+        self.opt_level
+    }
+
+    pub fn get_fabric_cache(&self) -> Option<&std::path::Path> {
+        self.fabric_cache.as_deref()
+    }
+
     pub fn get_workers(&self) -> Option<usize> {
         self.workers
     }
@@ -157,10 +186,16 @@ impl FabricOptions {
         self.backend.as_deref().unwrap_or(DEFAULT_BACKEND)
     }
 
+    /// The optimization level the backend will compile at.
+    pub fn opt_level_or_default(&self) -> OptLevel {
+        self.opt_level.unwrap_or_default()
+    }
+
     // ---- resolution -------------------------------------------------------
 
     /// Options from the process environment only (`NEURALUT_ENGINE`,
-    /// `NEURALUT_WORKERS`); everything else stays unset.
+    /// `NEURALUT_WORKERS`, `NEURALUT_OPT_LEVEL`, `NEURALUT_FABRIC_CACHE`);
+    /// everything else stays unset.
     pub fn from_env() -> crate::Result<FabricOptions> {
         Self::from_env_and_config(None)
     }
@@ -183,6 +218,11 @@ impl FabricOptions {
         let mut opts = FabricOptions::new();
         if let Some(c) = cfg {
             opts.backend = Some(c.backend.clone());
+            // `None` = key omitted in the file: stays unset, so it neither
+            // pins the opt level nor invalidates a cached `.nfab` artifact
+            // compiled at a different level.
+            opts.opt_level = c.opt_level;
+            opts.fabric_cache = c.fabric_cache.clone();
             opts.workers = Some(c.workers);
             opts.queue_depth = Some(c.queue_depth);
             opts.max_batch = Some(c.max_batch);
@@ -197,6 +237,15 @@ impl FabricOptions {
                 .parse::<usize>()
                 .with_context(|| format!("NEURALUT_WORKERS = '{v}' is not a number"))?;
             opts.workers = Some(n);
+        }
+        if let Some(v) = env("NEURALUT_OPT_LEVEL") {
+            let level = v
+                .parse::<OptLevel>()
+                .with_context(|| format!("NEURALUT_OPT_LEVEL = '{v}'"))?;
+            opts.opt_level = Some(level);
+        }
+        if let Some(v) = env("NEURALUT_FABRIC_CACHE") {
+            opts.fabric_cache = Some(PathBuf::from(v));
         }
         Ok(opts)
     }
@@ -234,6 +283,44 @@ mod tests {
         assert_eq!(t.workers, c.workers);
         assert_eq!(t.queue_depth, c.queue_depth);
         assert_eq!(FabricOptions::new().backend_or_default(), c.backend);
+        assert_eq!(FabricOptions::new().opt_level_or_default(), OptLevel::O1);
+        assert!(c.opt_level.is_none(), "config default must not pin a level");
+        assert!(FabricOptions::new().get_fabric_cache().is_none());
+        assert!(c.fabric_cache.is_none());
+    }
+
+    #[test]
+    fn opt_level_and_cache_follow_the_precedence_chain() {
+        let cfg = ServerConfig {
+            opt_level: Some(OptLevel::O0),
+            fabric_cache: Some("cfg.nfab".into()),
+            ..Default::default()
+        };
+        // A config that omits both keys leaves both unset.
+        let bare = FabricOptions::with_env(&no_env, Some(&ServerConfig::default())).unwrap();
+        assert_eq!(bare.get_opt_level(), None);
+        assert_eq!(bare.get_fabric_cache(), None);
+        // Config alone.
+        let o = FabricOptions::with_env(&no_env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_opt_level(), Some(OptLevel::O0));
+        assert_eq!(o.get_fabric_cache(), Some(std::path::Path::new("cfg.nfab")));
+        // Env beats config.
+        let env = |key: &str| match key {
+            "NEURALUT_OPT_LEVEL" => Some(" o2 ".to_string()),
+            "NEURALUT_FABRIC_CACHE" => Some("env.nfab".to_string()),
+            _ => None,
+        };
+        let o = FabricOptions::with_env(&env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_opt_level(), Some(OptLevel::O2));
+        assert_eq!(o.get_fabric_cache(), Some(std::path::Path::new("env.nfab")));
+        // Builder beats env.
+        let o = o.opt_level(OptLevel::O1).fabric_cache("cli.nfab");
+        assert_eq!(o.get_opt_level(), Some(OptLevel::O1));
+        assert_eq!(o.get_fabric_cache(), Some(std::path::Path::new("cli.nfab")));
+        // A bad env level is an error naming the variable.
+        let bad = |key: &str| (key == "NEURALUT_OPT_LEVEL").then(|| "O9".to_string());
+        let err = FabricOptions::with_env(&bad, None).unwrap_err().to_string();
+        assert!(err.contains("NEURALUT_OPT_LEVEL"), "{err}");
     }
 
     #[test]

@@ -19,12 +19,25 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::bail;
 
-use crate::engine::{BitslicedProgram, FabricProgram, ScalarProgram};
+use crate::engine::{BitNetlist, BitslicedProgram, FabricProgram, OptLevel, ScalarProgram};
 use crate::luts::LutNetwork;
 
-/// Compiles one network into a shared, executor-spawning program.
-pub type BackendFactory =
-    Arc<dyn Fn(Arc<LutNetwork>) -> crate::Result<Arc<dyn FabricProgram>> + Send + Sync>;
+/// Compiles one network into a shared, executor-spawning program at the
+/// requested optimization level (backends without a compile step ignore
+/// the level).
+pub type BackendFactory = Arc<
+    dyn Fn(Arc<LutNetwork>, OptLevel) -> crate::Result<Arc<dyn FabricProgram>> + Send + Sync,
+>;
+
+/// Reconstructs a program from a persisted `.nfab` payload (a decoded,
+/// validated [`BitNetlist`]) instead of recompiling. Only backends whose
+/// compiled artifact *is* a lowered bit-netlist can register one — see
+/// [`Capabilities::persistable`].
+pub type ProgramLoader = Arc<
+    dyn Fn(Arc<LutNetwork>, Arc<BitNetlist>) -> crate::Result<Arc<dyn FabricProgram>>
+        + Send
+        + Sync,
+>;
 
 /// One-time cost class of a backend's compile step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,14 +70,24 @@ pub struct Capabilities {
     pub batch_affinity: BatchAffinity,
     /// One-time compile cost paid per [`Model::compile`](crate::fabric::Model::compile).
     pub compile_cost: CompileCost,
+    /// Whether the compiled program can be persisted to (and reloaded
+    /// from) a `.nfab` artifact. Must agree with [`ProgramLoader`]
+    /// presence (enforced at registration time); the backend's programs
+    /// must then also expose a lowered bit-netlist
+    /// ([`FabricProgram::bit_netlist`]) — that part is the
+    /// implementation's responsibility and is checked when a save is
+    /// attempted.
+    pub persistable: bool,
 }
 
-/// A registered backend: canonical name, capabilities, factory.
+/// A registered backend: canonical name, capabilities, factory, and (for
+/// persistable backends) the artifact loader.
 #[derive(Clone)]
 pub struct BackendEntry {
     name: String,
     caps: Capabilities,
     factory: BackendFactory,
+    loader: Option<ProgramLoader>,
 }
 
 impl BackendEntry {
@@ -77,9 +100,30 @@ impl BackendEntry {
         self.caps
     }
 
-    /// Run the factory: compile `net` into the shared program.
-    pub fn compile(&self, net: Arc<LutNetwork>) -> crate::Result<Arc<dyn FabricProgram>> {
-        (self.factory)(net)
+    /// Run the factory: compile `net` into the shared program at `opt`.
+    pub fn compile(
+        &self,
+        net: Arc<LutNetwork>,
+        opt: OptLevel,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        (self.factory)(net, opt)
+    }
+
+    /// Rebuild the shared program from a persisted, already-validated
+    /// netlist (the `.nfab` payload) — no lowering pass, no opt pipeline.
+    pub fn load_program(
+        &self,
+        net: Arc<LutNetwork>,
+        nl: Arc<BitNetlist>,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        match &self.loader {
+            Some(loader) => loader(net, nl),
+            None => bail!(
+                "backend '{}' is not persistable: it cannot load a compiled \
+                 fabric artifact",
+                self.name
+            ),
+        }
     }
 }
 
@@ -114,10 +158,10 @@ impl BackendRegistry {
 
     /// The process-wide registry with the built-ins pre-registered:
     ///
-    /// | name        | compile cost | batch affinity | signed hidden |
-    /// |-------------|--------------|----------------|---------------|
-    /// | `scalar`    | free         | single-sample  | yes           |
-    /// | `bitsliced` | lowering     | wide (64-lane) | no            |
+    /// | name        | compile cost | batch affinity | signed hidden | persistable |
+    /// |-------------|--------------|----------------|---------------|-------------|
+    /// | `scalar`    | free         | single-sample  | yes           | no          |
+    /// | `bitsliced` | lowering     | wide (64-lane) | no            | yes (.nfab) |
     pub fn global() -> &'static BackendRegistry {
         static GLOBAL: OnceLock<BackendRegistry> = OnceLock::new();
         GLOBAL.get_or_init(|| {
@@ -128,21 +172,27 @@ impl BackendRegistry {
                     signed_hidden: true,
                     batch_affinity: BatchAffinity::Single,
                     compile_cost: CompileCost::Free,
+                    persistable: false,
                 },
-                Arc::new(|net: Arc<LutNetwork>| {
+                Arc::new(|net: Arc<LutNetwork>, _opt: OptLevel| {
                     Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
                 }),
             )
             .expect("registering built-in 'scalar'");
-            reg.register(
+            reg.register_with_loader(
                 "bitsliced",
                 Capabilities {
                     signed_hidden: false,
                     batch_affinity: BatchAffinity::Wide,
                     compile_cost: CompileCost::Lowering,
+                    persistable: true,
                 },
-                Arc::new(|net: Arc<LutNetwork>| {
-                    Ok(Arc::new(BitslicedProgram::compile(&net)?) as Arc<dyn FabricProgram>)
+                Arc::new(|net: Arc<LutNetwork>, opt: OptLevel| {
+                    Ok(Arc::new(BitslicedProgram::compile_opt(&net, opt)?)
+                        as Arc<dyn FabricProgram>)
+                }),
+                Arc::new(|_net, nl: Arc<BitNetlist>| {
+                    Ok(Arc::new(BitslicedProgram::from_netlist(nl)) as Arc<dyn FabricProgram>)
                 }),
             )
             .expect("registering built-in 'bitsliced'");
@@ -150,23 +200,57 @@ impl BackendRegistry {
         })
     }
 
-    /// Register a backend under `name` (normalized). Duplicate names are
-    /// an error — a backend is registered exactly once per process.
+    /// Register a non-persistable backend under `name` (normalized).
+    /// Duplicate names are an error — a backend is registered exactly
+    /// once per process. Backends that can persist their compiled
+    /// program use [`register_with_loader`](Self::register_with_loader).
     pub fn register(
         &self,
         name: &str,
         caps: Capabilities,
         factory: BackendFactory,
     ) -> crate::Result<()> {
+        self.register_inner(name, caps, factory, None)
+    }
+
+    /// Register a persistable backend: `loader` rebuilds the shared
+    /// program from a `.nfab` payload without recompiling. The
+    /// `persistable` capability must agree with the loader's presence on
+    /// both registration paths, so capability reports never lie.
+    pub fn register_with_loader(
+        &self,
+        name: &str,
+        caps: Capabilities,
+        factory: BackendFactory,
+        loader: ProgramLoader,
+    ) -> crate::Result<()> {
+        self.register_inner(name, caps, factory, Some(loader))
+    }
+
+    fn register_inner(
+        &self,
+        name: &str,
+        caps: Capabilities,
+        factory: BackendFactory,
+        loader: Option<ProgramLoader>,
+    ) -> crate::Result<()> {
         let canon = normalize_name(name);
         if canon.is_empty() {
             bail!("backend name '{name}' is empty after normalization");
+        }
+        if caps.persistable != loader.is_some() {
+            bail!(
+                "backend '{canon}': persistable capability ({}) does not match \
+                 loader presence ({})",
+                caps.persistable,
+                loader.is_some()
+            );
         }
         let mut entries = self.entries.lock().unwrap();
         if entries.contains_key(&canon) {
             bail!("backend '{canon}' is already registered");
         }
-        entries.insert(canon.clone(), BackendEntry { name: canon, caps, factory });
+        entries.insert(canon.clone(), BackendEntry { name: canon, caps, factory, loader });
         Ok(())
     }
 
@@ -214,7 +298,10 @@ mod tests {
         assert_eq!(caps.compile_cost, CompileCost::Lowering);
         assert_eq!(caps.batch_affinity, BatchAffinity::Wide);
         assert!(!caps.signed_hidden);
-        assert!(reg.capabilities("scalar").unwrap().signed_hidden);
+        assert!(caps.persistable, "bitsliced programs persist as .nfab");
+        let scalar = reg.capabilities("scalar").unwrap();
+        assert!(scalar.signed_hidden);
+        assert!(!scalar.persistable);
     }
 
     #[test]
@@ -232,14 +319,57 @@ mod tests {
             signed_hidden: true,
             batch_affinity: BatchAffinity::Single,
             compile_cost: CompileCost::Free,
+            persistable: false,
         };
-        let factory: BackendFactory =
-            Arc::new(|net| Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>));
+        let factory: BackendFactory = Arc::new(|net, _opt| {
+            Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
+        });
         reg.register("Mock", caps, factory.clone()).unwrap();
         // Same name modulo case/whitespace → duplicate.
         assert!(reg.register(" mock ", caps, factory.clone()).is_err());
         assert!(reg.register("   ", caps, factory).is_err());
         assert_eq!(reg.names(), vec!["mock".to_string()]);
         assert_eq!(reg.resolve("MOCK ").unwrap().name(), "mock");
+    }
+
+    #[test]
+    fn persistable_capability_must_match_loader_presence() {
+        let reg = BackendRegistry::empty();
+        let caps_persist = Capabilities {
+            signed_hidden: false,
+            batch_affinity: BatchAffinity::Wide,
+            compile_cost: CompileCost::Lowering,
+            persistable: true,
+        };
+        let factory: BackendFactory = Arc::new(|net, _opt| {
+            Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
+        });
+        // persistable=true without a loader: rejected.
+        let err = reg.register("a", caps_persist, factory.clone()).unwrap_err();
+        assert!(err.to_string().contains("persistable"), "{err}");
+        // persistable=false with a loader: also rejected.
+        let loader: ProgramLoader = Arc::new(|_net, nl| {
+            Ok(Arc::new(BitslicedProgram::from_netlist(nl)) as Arc<dyn FabricProgram>)
+        });
+        let caps_not = Capabilities { persistable: false, ..caps_persist };
+        let err = reg
+            .register_with_loader("b", caps_not, factory.clone(), loader.clone())
+            .unwrap_err();
+        assert!(err.to_string().contains("persistable"), "{err}");
+        // Matching combinations register fine.
+        reg.register_with_loader("c", caps_persist, factory.clone(), loader).unwrap();
+        reg.register("d", caps_not, factory).unwrap();
+        // And a non-persistable entry refuses to load programs.
+        let nl = crate::engine::lower::lower(&crate::luts::random_network(
+            1, 4, 1, &[2, 2], 2, 1, 4,
+        ))
+        .unwrap();
+        let net = Arc::new(crate::luts::random_network(1, 4, 1, &[2, 2], 2, 1, 4));
+        let err = reg
+            .resolve("d")
+            .unwrap()
+            .load_program(net, Arc::new(nl))
+            .unwrap_err();
+        assert!(err.to_string().contains("not persistable"), "{err}");
     }
 }

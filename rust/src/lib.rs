@@ -23,14 +23,18 @@
 //! * [`luts`] — truth tables and the converted L-LUT network model.
 //! * [`netlist`] — cycle-accurate LUT-network simulator (the FPGA fabric
 //!   substitute).
-//! * [`engine`] — execution backends: the bit-level lowering pass +
-//!   bitsliced (64-samples-per-word) evaluator, behind the
-//!   `FabricProgram` (compile-once) / `InferenceBackend` (per-worker)
-//!   traits.
+//! * [`engine`] — execution backends: the bit-level lowering pass, the
+//!   `engine::opt` netlist optimization pipeline (`O0`/`O1`/`O2`:
+//!   constant folding, cross-level CSE, dead-wire elimination, plane
+//!   compaction), and the bitsliced (64-samples-per-word) evaluator,
+//!   behind the `FabricProgram` (compile-once) / `InferenceBackend`
+//!   (per-worker) traits.
 //! * [`fabric`] — **the unified inference API**: `Model` →
 //!   `CompiledFabric` → `Session`/serving, with the pluggable
-//!   `BackendRegistry` (backends by name) and the `FabricOptions`
-//!   resolution path (builder < env < config file < defaults).
+//!   `BackendRegistry` (backends by name), the `FabricOptions`
+//!   resolution path (builder < env < config file < defaults), and
+//!   persistent `.nfab` compiled-fabric artifacts
+//!   (`CompiledFabric::save` / `Model::compile_cached`).
 //! * [`rtl`] — Verilog + testbench generation.
 //! * [`synth`] — Vivado-substitute synthesis/P&R cost model (support
 //!   reduction, ROBDD, 6-LUT covering, timing).
@@ -64,9 +68,29 @@
 //! runs exactly once per compile; sessions and serving workers all share
 //! the one compiled program (`Arc` clones only). Configuration funnels
 //! through `FabricOptions::from_env_and_config`: defaults, then a server
-//! config file, then `NEURALUT_ENGINE`/`NEURALUT_WORKERS`, then explicit
+//! config file, then `NEURALUT_ENGINE`/`NEURALUT_WORKERS`/
+//! `NEURALUT_OPT_LEVEL`/`NEURALUT_FABRIC_CACHE`, then explicit
 //! builder/CLI settings — with uniform, name-listing errors for unknown
 //! backends on every path.
+//!
+//! ## Optimization levels and `.nfab` artifacts
+//!
+//! The bitsliced backend compiles through the `engine::opt` pass
+//! pipeline. `FabricOptions::opt_level` picks how hard it works: `O0`
+//! (lowered netlist verbatim), `O1` (default — constant folding, mux
+//! simplification, per-level CSE, dead-wire elimination) or `O2` (`O1`
+//! plus cross-level value numbering and plane compaction). All levels
+//! are bit-exact; higher levels only remove work from the evaluator's
+//! hot loop.
+//!
+//! Compilation itself becomes a ship-once step with the `.nfab`
+//! compiled-fabric artifact: `CompiledFabric::save(path)` persists the
+//! backend name, opt level, model digest and optimized program;
+//! `Model::compile_cached(&opts, path)` (or
+//! `FabricOptions::fabric_cache`) loads it when fresh and recompiles +
+//! rewrites it when stale or corrupt. Workers and restarts share one
+//! precompiled, pre-optimized program; a digest mismatch is an error,
+//! never a silently wrong answer.
 
 pub mod config;
 pub mod coordinator;

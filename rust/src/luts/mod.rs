@@ -121,6 +121,32 @@ impl LutNetwork {
             .sum()
     }
 
+    /// Stable FNV-1a digest of the whole model — name, shape, wiring and
+    /// tables. Compiled-fabric artifacts (`.nfab`) record it so a cached
+    /// program is never served against a different network than the one
+    /// it was compiled from.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.bytes(self.name.as_bytes());
+        for v in [self.input_size, self.input_bits, self.n_class, self.layers.len()] {
+            h.u64(v as u64);
+        }
+        for l in &self.layers {
+            for v in [l.fan_in, l.in_bits, l.out_bits, l.signed_out as usize, l.num_luts()] {
+                h.u64(v as u64);
+            }
+            for row in &l.indices {
+                for &i in row {
+                    h.u64(i as u64);
+                }
+            }
+            for &t in &l.tables {
+                h.u64(t as u16 as u64);
+            }
+        }
+        h.finish()
+    }
+
     // ---- serialization ----------------------------------------------------
 
     const MAGIC: u32 = 0x4E4C5554; // "NLUT"
@@ -336,6 +362,29 @@ impl NlutReader<'_> {
     }
 }
 
+/// FNV-1a 64-bit hasher (no external crates in the offline build).
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Fnv1a(0xcbf29ce484222325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 /// Build a small random-but-valid network for tests and benches.
 pub fn random_network(seed: u64, input_size: usize, input_bits: usize,
                       widths: &[usize], fan_in: usize, beta: usize,
@@ -384,6 +433,85 @@ pub fn random_network(seed: u64, input_size: usize, input_bits: usize,
     }
 }
 
+/// Build a *trained-like* network: every table is a quantized, clamped
+/// linear-threshold function of its address bits — the shape collapsed
+/// sub-networks actually take after training — with an occasional dead
+/// (constant) unit. Unlike [`random_network`]'s uniform tables, these
+/// carry the redundancy profile real NeuraLUT models have (saturated
+/// constant bits, shared comparator structure, duplicate outputs), which
+/// is exactly what the `engine::opt` pass pipeline recovers. Used by the
+/// repro benches and the optimization differential tests.
+pub fn structured_network(seed: u64, input_size: usize, input_bits: usize,
+                          widths: &[usize], fan_in: usize, beta: usize,
+                          out_bits: usize) -> LutNetwork {
+    use crate::util::rng::Rng;
+    const WEIGHTS: [i32; 7] = [-2, -1, -1, 0, 1, 1, 2];
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut prev = input_size;
+    for (li, &m) in widths.iter().enumerate() {
+        let last = li == widths.len() - 1;
+        let f = fan_in.min(prev);
+        let in_bits = if li == 0 { input_bits } else { beta };
+        let ob = if last { out_bits } else { beta };
+        let k = in_bits * f;
+        let entries = 1usize << k;
+        let q = (1i32 << (ob - 1)) - 1;
+        let indices: Vec<Vec<u32>> = (0..m)
+            .map(|_| {
+                rng.choose_distinct(prev, f).into_iter().map(|v| v as u32).collect()
+            })
+            .collect();
+        let mut tables: Vec<i16> = Vec::with_capacity(m * entries);
+        for _ in 0..m {
+            if rng.below(10) == 0 {
+                // Dead unit: saturated (or pruned) during training.
+                let c = if last {
+                    rng.below((2 * q + 1) as usize) as i32 - q
+                } else {
+                    rng.below(1 << ob) as i32
+                };
+                tables.extend(std::iter::repeat(c as i16).take(entries));
+                continue;
+            }
+            let w: Vec<i32> = (0..k).map(|_| WEIGHTS[rng.below(7)]).collect();
+            let bias = rng.below(2 * k + 1) as i32 - k as i32;
+            let shift = rng.below(2) as u32;
+            for addr in 0..entries {
+                let mut s = bias;
+                for (j, &wj) in w.iter().enumerate() {
+                    if (addr >> j) & 1 == 1 {
+                        s += wj;
+                    }
+                }
+                let v = s >> shift; // arithmetic: floor toward -inf
+                let v = if last {
+                    v.clamp(-q, q)
+                } else {
+                    v.clamp(0, (1 << ob) - 1)
+                };
+                tables.push(v as i16);
+            }
+        }
+        layers.push(LutLayer {
+            indices,
+            tables,
+            fan_in: f,
+            in_bits,
+            out_bits: ob,
+            signed_out: last,
+        });
+        prev = m;
+    }
+    LutNetwork {
+        name: format!("structured-{seed}"),
+        input_size,
+        input_bits,
+        n_class: *widths.last().unwrap(),
+        layers,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,6 +546,44 @@ mod tests {
         assert!(net.validate().is_err());
         net.layers[0].out_bits = 0;
         assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn structured_network_validates_and_carries_structure() {
+        let net = structured_network(5, 12, 2, &[8, 6, 3], 3, 2, 4);
+        net.validate().unwrap();
+        assert_eq!(net.n_class, 3);
+        assert_eq!(net.layers.len(), 3);
+        assert!(net.layers.last().unwrap().signed_out);
+        // Trained-like tables must be far from uniform noise: some table
+        // has a constant (saturated) output bit.
+        let any_constant_bit = net.layers.iter().any(|l| {
+            (0..l.num_luts()).any(|i| {
+                let t = l.table(i);
+                (0..l.out_bits).any(|b| {
+                    t.iter().all(|&v| (v as u16 >> b) & 1 == (t[0] as u16 >> b) & 1)
+                })
+            })
+        });
+        assert!(any_constant_bit, "no saturated bits — not trained-like");
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let net = random_network(6, 8, 2, &[4, 2], 2, 2, 4);
+        let d = net.digest();
+        assert_eq!(d, net.clone().digest(), "digest must be deterministic");
+        let mut other = net.clone();
+        other.layers[0].tables[0] ^= 1;
+        assert_ne!(d, other.digest(), "table change must change the digest");
+        let mut renamed = net.clone();
+        renamed.name = "else".into();
+        assert_ne!(d, renamed.digest(), "name change must change the digest");
+        assert_ne!(
+            random_network(7, 8, 2, &[4, 2], 2, 2, 4).digest(),
+            d,
+            "different seed, different digest"
+        );
     }
 
     #[test]

@@ -92,12 +92,19 @@ impl Opts {
     }
 
     /// Fabric options for inference commands: config file (if any), then
-    /// env (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`), then the CLI flags —
-    /// one resolution path, CLI winning.
+    /// env (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`, `NEURALUT_OPT_LEVEL`,
+    /// `NEURALUT_FABRIC_CACHE`), then the CLI flags — one resolution
+    /// path, CLI winning.
     fn fabric(&self, file_cfg: Option<&ServerConfig>) -> Result<FabricOptions> {
         let mut fo = FabricOptions::from_env_and_config(file_cfg)?;
         if let Some(engine) = self.get("engine") {
             fo = fo.backend(engine);
+        }
+        if let Some(level) = self.get("opt-level") {
+            fo = fo.opt_level(level.parse().context("--opt-level")?);
+        }
+        if let Some(path) = self.get("fabric-cache") {
+            fo = fo.fabric_cache(PathBuf::from(path));
         }
         if let Some(w) = self.usize("workers")? {
             fo = fo.workers(w);
@@ -159,15 +166,20 @@ fn print_usage() {
          pipeline <config> [--seed N] [--epochs N] [--out DIR] [--rtl]\n  \
          convert <config> --params F --out F    trained params -> L-LUTs\n  \
          synth <config> --net F                 synthesis cost report\n  \
-         simulate <config> --net F [--engine BACKEND]\n  \
+         simulate <config> --net F [--engine BACKEND] [--opt-level O0|O1|O2]\n  \
+         \x20     [--fabric-cache FILE.nfab]\n  \
          rtl <config> --net F --out DIR         emit Verilog bundle\n  \
          vcd <config> --net F --out FILE        dump pipeline waveform (GTKWave)\n  \
          serve <config> --net F [--rate R] [--requests N] [--batch-window US]\n  \
          \x20     [--workers N] [--queue-depth N] [--engine BACKEND]\n  \
+         \x20     [--opt-level O0|O1|O2] [--fabric-cache FILE.nfab]\n  \
          \x20     [--server-config FILE.toml]\n  \
          suite <file.toml>                      run a batch of pipelines\n\n\
          BACKEND is a registered backend name ({}); NEURALUT_ENGINE /\n\
-         NEURALUT_WORKERS set ambient defaults the flags override.",
+         NEURALUT_WORKERS / NEURALUT_OPT_LEVEL / NEURALUT_FABRIC_CACHE set\n\
+         ambient defaults the flags override. --opt-level picks the netlist\n\
+         optimization pipeline (O1 default); --fabric-cache compiles once\n\
+         into a .nfab artifact that later runs and other processes reload.",
         neuralut::fabric::BackendRegistry::global().names().join(" | ")
     );
 }
@@ -295,10 +307,14 @@ fn cmd_simulate(pos: &[String], opts: &Opts) -> Result<()> {
     let t0 = std::time::Instant::now();
     let acc = session.accuracy(&ds.test_x, &ds.test_y)?;
     let dt = t0.elapsed().as_secs_f64();
+    let ops = fabric
+        .num_word_ops()
+        .map(|n| format!(", {n} word ops"))
+        .unwrap_or_default();
     println!("fabric accuracy: {:.4} on {} samples ({:.0} samples/s, latency {} cycles, \
-              {} engine, compile {:.3}s)",
+              {} engine at {}{}, compile {:.3}s)",
              acc, ds.n_test(), ds.n_test() as f64 / dt, session.latency_cycles(),
-             session.backend_name(), compile_s);
+             session.backend_name(), fabric.opt_level(), ops, compile_s);
     Ok(())
 }
 
@@ -360,9 +376,10 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
     let fabric = model.compile(&opts.fabric(file_cfg.as_ref())?)?;
     let tuning = fabric.tuning();
     println!("serving {} at {:.0} req/s for {} requests \
-              (window {} us, {} engine, {} workers, queue depth {})...",
+              (window {} us, {} engine at {}, {} workers, queue depth {})...",
              model.name(), rate, n_req, tuning.batch_window.as_micros(),
-             fabric.backend_name(), tuning.workers, tuning.queue_depth);
+             fabric.backend_name(), fabric.opt_level(), tuning.workers,
+             tuning.queue_depth);
     let server = fabric.serve();
     let client = server.client();
     let workload = Workload::poisson(&ds, 99, n_req, rate);

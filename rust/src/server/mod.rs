@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::TomlDoc;
-use crate::engine::{BitNetlist, FabricProgram, InferenceBackend};
+use crate::engine::{BitNetlist, FabricProgram, InferenceBackend, OptLevel};
 use crate::fabric::{BackendRegistry, FabricTuning, DEFAULT_BACKEND};
 use crate::util::pool::{BoundedQueue, Pop, PushError};
 
@@ -55,6 +55,14 @@ pub struct ServerConfig {
     pub batch_window: Duration,
     /// Registry name of the backend executing the batches.
     pub backend: String,
+    /// Netlist optimization level the backend compiles at. `None` when
+    /// the file omits the key — the compile-time default then applies,
+    /// and (unlike an explicit level) a `.nfab` fabric cache built at any
+    /// level is still accepted.
+    pub opt_level: Option<OptLevel>,
+    /// Optional `.nfab` path: load the precompiled program when fresh,
+    /// compile-and-save otherwise (persistable backends only).
+    pub fabric_cache: Option<std::path::PathBuf>,
     /// Batcher threads sharing the request queue (and the compiled fabric).
     pub workers: usize,
     /// Bounded request-queue depth — the backpressure limit.
@@ -69,6 +77,8 @@ impl Default for ServerConfig {
             max_batch: t.max_batch,
             batch_window: t.batch_window,
             backend: DEFAULT_BACKEND.to_string(),
+            opt_level: None,
+            fabric_cache: None,
             workers: t.workers,
             queue_depth: t.queue_depth,
         }
@@ -81,7 +91,9 @@ impl ServerConfig {
     /// ```toml
     /// max_batch = 512
     /// batch_window_us = 100
-    /// backend = "bitsliced"   # any registered backend name
+    /// backend = "bitsliced"       # any registered backend name
+    /// opt_level = "O2"            # netlist optimization: "O0"/"O1"/"O2" (or 0/1/2)
+    /// fabric_cache = "net.nfab"   # precompiled-fabric artifact path
     /// workers = 4
     /// queue_depth = 2048
     /// ```
@@ -104,7 +116,13 @@ impl ServerConfig {
         for key in doc.root.keys() {
             if !matches!(
                 key.as_str(),
-                "max_batch" | "batch_window_us" | "backend" | "workers" | "queue_depth"
+                "max_batch"
+                    | "batch_window_us"
+                    | "backend"
+                    | "opt_level"
+                    | "fabric_cache"
+                    | "workers"
+                    | "queue_depth"
             ) {
                 bail!("unknown server config key '{key}'");
             }
@@ -126,6 +144,17 @@ impl ServerConfig {
                 .resolve(v.as_str()?)?
                 .name()
                 .to_string();
+        }
+        if let Some(v) = doc.root.get("opt_level") {
+            // Accept both `opt_level = "O2"` and `opt_level = 2`.
+            cfg.opt_level = Some(match v.as_str() {
+                Ok(s) => s.parse().context("server config key 'opt_level'")?,
+                Err(_) => OptLevel::from_index(v.as_usize()? as u32)
+                    .context("server config key 'opt_level'")?,
+            });
+        }
+        if let Some(v) = doc.root.get("fabric_cache") {
+            cfg.fabric_cache = Some(std::path::PathBuf::from(v.as_str()?));
         }
         if let Some(v) = doc.root.get("workers") {
             cfg.workers = v.as_usize()?;
@@ -580,20 +609,33 @@ mod tests {
     fn config_parses_from_toml_subset() {
         let cfg = ServerConfig::parse_toml(
             "max_batch = 512\nbatch_window_us = 100\nbackend = \"bitsliced\"\n\
+             opt_level = \"O2\"\nfabric_cache = \"net.nfab\"\n\
              workers = 4\nqueue_depth = 64",
         )
         .unwrap();
         assert_eq!(cfg.max_batch, 512);
         assert_eq!(cfg.batch_window, Duration::from_micros(100));
         assert_eq!(cfg.backend, "bitsliced");
+        assert_eq!(cfg.opt_level, Some(OptLevel::O2));
+        assert_eq!(cfg.fabric_cache.as_deref(),
+                   Some(std::path::Path::new("net.nfab")));
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.queue_depth, 64);
+        // Numeric opt levels parse too; unknown ones fail loudly.
+        assert_eq!(ServerConfig::parse_toml("opt_level = 0").unwrap().opt_level,
+                   Some(OptLevel::O0));
+        assert!(ServerConfig::parse_toml("opt_level = \"O9\"").is_err());
+        assert!(ServerConfig::parse_toml("opt_level = 3").is_err());
         // Backend names normalize to the registry's canonical form.
         let cfg = ServerConfig::parse_toml("backend = \" Bitsliced \"").unwrap();
         assert_eq!(cfg.backend, "bitsliced");
         // All keys optional -> defaults (backend defaults to scalar).
         let d = ServerConfig::parse_toml("").unwrap();
         assert_eq!(d.backend, "scalar");
+        // An omitted opt_level stays unset — it must not later masquerade
+        // as an explicit pin that rejects cached .nfab artifacts.
+        assert!(d.opt_level.is_none());
+        assert!(d.fabric_cache.is_none());
         assert_eq!(d.max_batch, ServerConfig::default().max_batch);
         assert_eq!(d.workers, 1);
         assert_eq!(d.queue_depth, 1024);

@@ -49,6 +49,12 @@ pub fn is_constant(bits: &[u8]) -> bool {
     bits.windows(2).all(|w| w[0] == w[1])
 }
 
+/// The function's constant value, when it has one (`None` otherwise).
+/// Lets callers fold constants without a separate support pass.
+pub fn const_value(bits: &[u8]) -> Option<u8> {
+    is_constant(bits).then(|| bits.first().copied().unwrap_or(0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +79,9 @@ mod tests {
         let bits = vec![1u8; 32];
         assert!(support(&bits, 5).is_empty());
         assert!(is_constant(&bits));
+        assert_eq!(const_value(&bits), Some(1));
+        assert_eq!(const_value(&vec![0u8; 4]), Some(0));
+        assert_eq!(const_value(&[0, 1]), None);
     }
 
     #[test]

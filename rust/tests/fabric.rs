@@ -1,17 +1,19 @@
 //! Tests of the unified inference API surface: a mock backend registered
 //! by name drives both `session()` inference and a running `serve()`
 //! pool bit-exactly against the scalar path; built-in backends agree
-//! end-to-end; corrupt NLUT model files are rejected with diagnosable
-//! errors.
+//! end-to-end; corrupt NLUT model files and corrupt/truncated/
+//! wrong-digest `.nfab` compiled-fabric artifacts are rejected with
+//! diagnosable errors; `Model::compile_cached` shares one precompiled
+//! program across "processes".
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use neuralut::engine::{FabricProgram, InferenceBackend, ScalarProgram};
+use neuralut::engine::{FabricProgram, InferenceBackend, OptLevel, ScalarProgram};
 use neuralut::fabric::{
     BackendRegistry, BatchAffinity, Capabilities, CompileCost, FabricOptions, Model,
 };
-use neuralut::luts::{random_network, LutNetwork};
+use neuralut::luts::{random_network, structured_network, LutNetwork};
 use neuralut::netlist::{SimResult, Simulator};
 
 // ---------------------------------------------------------------------------
@@ -65,8 +67,9 @@ fn register_mock() -> (Arc<AtomicUsize>, Arc<AtomicUsize>) {
                         signed_hidden: true,
                         batch_affinity: BatchAffinity::Single,
                         compile_cost: CompileCost::Free,
+                        persistable: false,
                     },
-                    Arc::new(move |net: Arc<LutNetwork>| {
+                    Arc::new(move |net: Arc<LutNetwork>, _opt: OptLevel| {
                         c.fetch_add(1, Ordering::SeqCst);
                         Ok(Arc::new(MockProgram {
                             inner: ScalarProgram::new(net),
@@ -257,4 +260,158 @@ fn nlut_load_reports_truncation_inside_the_payload() {
     assert!(err.contains(&format!("file is {cut_len} bytes")), "{err}");
     // And the untruncated file still loads.
     assert!(LutNetwork::load(&full_path).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// .nfab compiled-fabric artifacts: compile-once/serve-many across
+// "processes", with corrupt/truncated/stale artifacts rejected loudly.
+
+fn nfab(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("neuralut_fabric_{name}.nfab"))
+}
+
+#[test]
+fn compile_cached_shares_one_precompiled_program_across_processes() {
+    let net = structured_network(90, 10, 2, &[12, 6, 3], 3, 2, 4);
+    let x: Vec<f32> = (0..10 * 130).map(|i| (i % 17) as f32 / 17.0).collect();
+    let opts = FabricOptions::new().backend("bitsliced").opt_level(OptLevel::O2);
+    let path = nfab("cached");
+    let _ = std::fs::remove_file(&path);
+
+    // "Process" A compiles and populates the cache.
+    let a = Model::from_network(net.clone());
+    let fab_a = a.compile_cached(&opts, &path).unwrap();
+    assert!(path.exists(), "first compile_cached must write the artifact");
+    let bytes_after_first = std::fs::read(&path).unwrap();
+
+    // "Process" B (a fresh Model over the same network) loads it — same
+    // program, bit-exact outputs, artifact untouched.
+    let b = Model::from_network(net.clone());
+    let fab_b = b.compile_cached(&opts, &path).unwrap();
+    assert_eq!(fab_a.num_word_ops(), fab_b.num_word_ops());
+    assert_eq!(fab_b.opt_level(), OptLevel::O2);
+    let ra = fab_a.session().infer_batch(&x).unwrap();
+    let rb = fab_b.session().infer_batch(&x).unwrap();
+    assert_eq!(ra.logit_codes, rb.logit_codes);
+    assert_eq!(ra.predictions, rb.predictions);
+    assert_eq!(std::fs::read(&path).unwrap(), bytes_after_first,
+               "a cache hit must not rewrite the artifact");
+    // And both agree with the scalar fabric.
+    let sim = Simulator::new(&net);
+    assert_eq!(sim.simulate_batch(&x).logit_codes, rb.logit_codes);
+
+    // A *different* model against the same path is stale: recompiled and
+    // overwritten, never silently served.
+    let other_net = structured_network(91, 10, 2, &[12, 6, 3], 3, 2, 4);
+    let other = Model::from_network(other_net.clone());
+    let fab_o = other.compile_cached(&opts, &path).unwrap();
+    assert_ne!(std::fs::read(&path).unwrap(), bytes_after_first,
+               "stale artifact must be rewritten");
+    let want = Simulator::new(&other_net).simulate_batch(&x);
+    assert_eq!(fab_o.session().infer_batch(&x).unwrap().logit_codes,
+               want.logit_codes);
+}
+
+#[test]
+fn nfab_load_rejects_bad_magic_version_and_truncation_with_offsets() {
+    let net = random_network(92, 8, 2, &[6, 3], 3, 2, 4);
+    let model = Model::from_network(net);
+    let opts = FabricOptions::new().backend("bitsliced");
+    let path = nfab("good");
+    model.compile(&opts).unwrap().save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Bad magic: expected-vs-actual, path, length.
+    let bad = nfab("bad_magic");
+    let mut bytes = good.clone();
+    bytes[..4].copy_from_slice(&0xDEADBEEFu32.to_le_bytes());
+    std::fs::write(&bad, &bytes).unwrap();
+    let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
+    assert!(err.contains("bad .nfab magic 0xDEADBEEF"), "{err}");
+    assert!(err.contains("0x4E464142"), "{err}");
+    assert!(err.contains(&bad.display().to_string()), "{err}");
+
+    // Unsupported version.
+    let bad = nfab("bad_version");
+    let mut bytes = good.clone();
+    bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+    std::fs::write(&bad, &bytes).unwrap();
+    let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
+    assert!(err.contains("unsupported .nfab version 99"), "{err}");
+    assert!(err.contains("version 1"), "{err}");
+
+    // Truncation mid-payload names the field, offset and file length.
+    let bad = nfab("truncated");
+    let cut = good.len() - 7;
+    std::fs::write(&bad, &good[..cut]).unwrap();
+    let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
+    assert!(err.contains("truncated .nfab artifact"), "{err}");
+    assert!(err.contains(&format!("file is {cut} bytes")), "{err}");
+
+    // An absurd claimed op count is rejected against the remaining file
+    // length before any allocation. The first level's op count sits right
+    // after magic/version, name, digest, opt level, level count and the
+    // 12 bytes of level metadata.
+    let bad = nfab("absurd_ops");
+    let mut bytes = good.clone();
+    let name_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let ops_off = 12 + name_len + 8 + 4 + 4 + 12;
+    bytes[ops_off..ops_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&bad, &bytes).unwrap();
+    let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
+    assert!(err.contains("claims 4294967295 ops"), "{err}");
+
+    // The untouched artifact still loads.
+    assert!(model.load_fabric(&opts, &path).is_ok());
+}
+
+#[test]
+fn nfab_load_rejects_wrong_model_backend_and_opt_level() {
+    let net = random_network(93, 8, 2, &[6, 3], 3, 2, 4);
+    let model = Model::from_network(net);
+    let opts = FabricOptions::new().backend("bitsliced").opt_level(OptLevel::O1);
+    let path = nfab("strict");
+    model.compile(&opts).unwrap().save(&path).unwrap();
+
+    // Wrong model (digest mismatch).
+    let other = Model::from_network(random_network(94, 8, 2, &[6, 3], 3, 2, 4));
+    let err = format!("{:#}", other.load_fabric(&opts, &path).unwrap_err());
+    assert!(err.contains("digest"), "{err}");
+
+    // Backend pinned to something else than the artifact records.
+    let err = format!(
+        "{:#}",
+        model
+            .load_fabric(&FabricOptions::new().backend("scalar"), &path)
+            .unwrap_err()
+    );
+    assert!(err.contains("compiled by backend 'bitsliced'"), "{err}");
+    assert!(err.contains("'scalar'"), "{err}");
+
+    // Opt level pinned to something else than the artifact records.
+    let err = format!(
+        "{:#}",
+        model
+            .load_fabric(
+                &FabricOptions::new().backend("bitsliced").opt_level(OptLevel::O2),
+                &path
+            )
+            .unwrap_err()
+    );
+    assert!(err.contains("compiled at O1"), "{err}");
+    assert!(err.contains("O2"), "{err}");
+
+    // Unpinned options accept the artifact as recorded.
+    let loaded = model.load_fabric(&FabricOptions::new().backend("bitsliced"), &path).unwrap();
+    assert_eq!(loaded.opt_level(), OptLevel::O1);
+    assert_eq!(loaded.backend_name(), "bitsliced");
+}
+
+#[test]
+fn save_refuses_non_persistable_backends() {
+    let model = Model::from_network(random_network(95, 6, 2, &[4, 2], 2, 2, 4));
+    let fabric = model.compile(&FabricOptions::new()).unwrap(); // scalar
+    let err = fabric.save(&nfab("scalar")).unwrap_err().to_string();
+    assert!(err.contains("persistable"), "{err}");
+    assert!(err.contains("scalar"), "{err}");
 }

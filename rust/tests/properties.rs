@@ -4,8 +4,8 @@
 
 use std::time::Duration;
 
-use neuralut::fabric::{FabricOptions, Model};
-use neuralut::luts::{random_network, LutNetwork};
+use neuralut::fabric::{FabricOptions, Model, OptLevel};
+use neuralut::luts::{random_network, structured_network, LutNetwork};
 use neuralut::netlist::{quantize_input, Simulator};
 use neuralut::nn::formulas;
 use neuralut::rtl;
@@ -23,6 +23,34 @@ fn arb_network(r: &mut Rng) -> LutNetwork {
     let fan_in = 1 + r.below(4);
     let beta = 1 + r.below(3);
     random_network(r.next_u64(), input_size, input_bits, &widths, fan_in, beta, 4)
+}
+
+/// Like [`arb_network`] but alternating uniform-random tables with
+/// trained-like (threshold/saturated) tables — the shapes the netlist
+/// optimizer actually bites on.
+fn arb_network_mixed(r: &mut Rng) -> LutNetwork {
+    let input_size = 3 + r.below(12);
+    let input_bits = 1 + r.below(3);
+    let n_layers = 1 + r.below(3);
+    let mut widths: Vec<usize> = (0..n_layers).map(|_| 2 + r.below(8)).collect();
+    widths.push(2 + r.below(4));
+    let fan_in = 1 + r.below(4);
+    let beta = 1 + r.below(3);
+    if r.below(2) == 0 {
+        random_network(r.next_u64(), input_size, input_bits, &widths, fan_in, beta, 4)
+    } else {
+        structured_network(r.next_u64(), input_size, input_bits, &widths, fan_in, beta, 4)
+    }
+}
+
+/// Ragged batch sizes straddling the 64-lane word boundary.
+fn arb_ragged_batch(r: &mut Rng) -> usize {
+    match r.below(4) {
+        0 => 1 + r.below(63),
+        1 => 64 * (1 + r.below(3)),
+        2 => 64 * (1 + r.below(3)) + 1 + r.below(63),
+        _ => 1 + r.below(200),
+    }
 }
 
 #[test]
@@ -123,10 +151,98 @@ fn prop_bitsliced_engine_is_bit_exact_against_scalar_simulator() {
 }
 
 #[test]
+fn prop_optimized_netlists_are_bit_exact_at_every_level() {
+    // O0 (verbatim lowering), O1 (fold + DCE) and O2 (global CSE + plane
+    // compaction) must all reproduce the scalar fabric exactly — logit
+    // codes and predictions — on random *and* trained-like tables, across
+    // ragged batches. The optimizer may only ever remove work.
+    forall_res(
+        0x60,
+        24,
+        |r| {
+            let net = arb_network_mixed(r);
+            let batch = arb_ragged_batch(r);
+            let x: Vec<f32> = (0..batch * net.input_size).map(|_| r.f32()).collect();
+            (net, x)
+        },
+        |(net, x)| {
+            let sim = Simulator::new(net);
+            let want = sim.simulate_batch(x);
+            let model = Model::from_network(net.clone());
+            let mut prev_ops = usize::MAX;
+            for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+                let fabric = model
+                    .compile(&FabricOptions::new().backend("bitsliced").opt_level(level))
+                    .map_err(|e| e.to_string())?;
+                let ops = fabric.num_word_ops().ok_or("no word ops")?;
+                if ops > prev_ops {
+                    return Err(format!("{level} grew the netlist: {ops} > {prev_ops}"));
+                }
+                prev_ops = ops;
+                let got = fabric.session().infer_batch(x).map_err(|e| e.to_string())?;
+                if got.logit_codes != want.logit_codes {
+                    return Err(format!("{level}: logit codes diverge from scalar"));
+                }
+                if got.predictions != want.predictions {
+                    return Err(format!("{level}: predictions diverge from scalar"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nfab_artifacts_round_trip_bit_exactly() {
+    // A fabric saved by one "process" (CompiledFabric::save) and loaded
+    // into a fresh Model (Model::load_fabric) serves identical outputs
+    // with an identical op count — no recompilation, no drift.
+    forall_res(
+        0x61,
+        12,
+        |r| {
+            let net = arb_network_mixed(r);
+            let batch = 1 + r.below(150);
+            let x: Vec<f32> = (0..batch * net.input_size).map(|_| r.f32()).collect();
+            let level = match r.below(3) {
+                0 => OptLevel::O0,
+                1 => OptLevel::O1,
+                _ => OptLevel::O2,
+            };
+            (net, x, level)
+        },
+        |(net, x, level)| {
+            let opts = FabricOptions::new().backend("bitsliced").opt_level(*level);
+            let model = Model::from_network(net.clone());
+            let fabric = model.compile(&opts).map_err(|e| e.to_string())?;
+            let path = std::env::temp_dir().join(format!(
+                "neuralut_prop_nfab_{}_{level}.nfab",
+                net.name.replace('-', "_")
+            ));
+            fabric.save(&path).map_err(|e| e.to_string())?;
+            let fresh = Model::from_network(net.clone());
+            let loaded = fresh.load_fabric(&opts, &path).map_err(|e| e.to_string())?;
+            if loaded.num_word_ops() != fabric.num_word_ops() {
+                return Err("op count changed across save/load".into());
+            }
+            if loaded.opt_level() != *level {
+                return Err("opt level not preserved".into());
+            }
+            let a = fabric.session().infer_batch(x).map_err(|e| e.to_string())?;
+            let b = loaded.session().infer_batch(x).map_err(|e| e.to_string())?;
+            if a.logit_codes != b.logit_codes || a.predictions != b.predictions {
+                return Err("loaded artifact diverges from the saved fabric".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_server_config_toml_roundtrips() {
-    // Generated valid docs (all five keys, shuffled order) parse back to
-    // exactly the values written — including the new `workers` and
-    // `queue_depth` keys.
+    // Generated valid docs (all keys, shuffled order) parse back to
+    // exactly the values written — including the new `opt_level` key in
+    // both spellings.
     forall_res(
         0x5C,
         80,
@@ -136,18 +252,29 @@ fn prop_server_config_toml_roundtrips() {
             let max_batch = 1 + r.below(2048);
             let window_us = r.below(5000);
             let backend = if r.below(2) == 0 { "scalar" } else { "bitsliced" };
+            let opt = r.below(3);
+            let opt_line = if r.below(2) == 0 {
+                format!("opt_level = \"O{opt}\"")
+            } else {
+                format!("opt_level = {opt}")
+            };
             let mut lines = vec![
                 format!("workers = {workers}"),
                 format!("queue_depth = {queue_depth}"),
                 format!("max_batch = {max_batch}"),
                 format!("batch_window_us = {window_us}"),
                 format!("backend = \"{backend}\"  # engine"),
+                opt_line,
             ];
             r.shuffle(&mut lines);
-            (lines.join("\n"), workers, queue_depth, max_batch, window_us, backend)
+            (lines.join("\n"), workers, queue_depth, max_batch, window_us, backend, opt)
         },
-        |(doc, workers, queue_depth, max_batch, window_us, backend)| {
+        |(doc, workers, queue_depth, max_batch, window_us, backend, opt)| {
             let cfg = ServerConfig::parse_toml(doc).map_err(|e| e.to_string())?;
+            match cfg.opt_level {
+                Some(level) if level.index() as usize == *opt => {}
+                other => return Err(format!("opt_level {other:?} != O{opt}")),
+            }
             if cfg.workers != *workers {
                 return Err(format!("workers {} != {workers}", cfg.workers));
             }

@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""CI bench gate: read BENCH_engine.json / BENCH_server.json (written by
+`cargo bench --bench bench_netlist` / `--bench bench_server`) and fail if
+the perf trajectory regressed.
+
+Two gate families:
+
+* Deterministic, same-run gates (always armed):
+    - every case: O2 word ops <= O0 word ops (the optimizer never bloats);
+    - aggregate over the trained-like repro cases: O2 executes >= 10%
+      fewer word ops than O0 (the headline claim of the opt pipeline);
+    - per case: bitsliced O2 throughput >= 85% of bitsliced O0 measured in
+      the *same run* (optimization must not cost wall-clock at run time).
+      Quick-mode rows (NEURALUT_BENCH_QUICK, 0.15s windows on shared CI
+      runners) relax this to a catastrophic-only 50% margin so scheduler
+      noise on an unrelated PR cannot turn CI red.
+
+* Baseline gates (armed per entry once BENCH_baseline.json carries a
+  value > 0; entries at 0 are "not yet recorded" and skipped):
+    - bitsliced throughput per case must be >= (1 - tolerance) x baseline
+      (default tolerance 0.25, i.e. fail on a >25% regression);
+    - O2 word ops per case must be <= (1 + tolerance) x baseline;
+    - server closed-loop bitsliced 4-worker throughput likewise.
+
+To record/refresh the baseline, run the bench-smoke CI job (or the
+benches locally), then paste the snippet this script prints into
+BENCH_baseline.json and commit it. Throughput baselines are only
+comparable on similar hardware, so refresh them from the same CI runner
+class that enforces them.
+"""
+
+import json
+import sys
+
+ENGINE = "BENCH_engine.json"
+SERVER = "BENCH_server.json"
+BASELINE = "BENCH_baseline.json"
+MIN_TRAINED_REDUCTION = 0.10
+SAME_RUN_THROUGHPUT_MARGIN = 0.85
+# Quick-mode timing windows are too short to trust a tight margin on a
+# shared runner; still catch catastrophic (>2x) regressions.
+SAME_RUN_THROUGHPUT_MARGIN_QUICK = 0.50
+
+failures = []
+
+
+def fail(msg):
+    failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def ok(msg):
+    print(f"  ok: {msg}")
+
+
+def load(path, required=True):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        if required:
+            fail(f"{path} not found — did the bench run?")
+        return None
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+        return None
+
+
+def main():
+    engine_rows = load(ENGINE)
+    server_rows = load(SERVER)
+    baseline = load(BASELINE) or {}
+    tol = float(baseline.get("tolerance", 0.25))
+
+    if engine_rows is not None and not engine_rows:
+        fail(f"{ENGINE} is empty — bench produced no cases")
+    if server_rows is not None and not server_rows:
+        fail(f"{SERVER} is empty — bench produced no rows")
+
+    cases = {}
+    sat = []
+    if engine_rows:
+        cases = {row["name"]: row for row in engine_rows}
+
+        # --- deterministic same-run gates -------------------------------
+        tr_o0 = tr_o2 = 0
+        for name, row in sorted(cases.items()):
+            o0, o2 = row["word_ops_o0"], row["word_ops_o2"]
+            if o2 > o0:
+                fail(f"{name}: O2 executes more word ops than O0 ({o2} > {o0})")
+            else:
+                ok(f"{name}: word ops O0 {o0:.0f} -> O2 {o2:.0f}")
+            if row.get("trained_like"):
+                tr_o0 += o0
+                tr_o2 += o2
+            t0 = row.get("bitsliced_o0_samples_per_s", 0.0)
+            t2 = row.get("bitsliced_samples_per_s", 0.0)
+            margin = (
+                SAME_RUN_THROUGHPUT_MARGIN_QUICK
+                if row.get("quick")
+                else SAME_RUN_THROUGHPUT_MARGIN
+            )
+            if t0 > 0 and t2 > 0:
+                if t2 < margin * t0:
+                    fail(
+                        f"{name}: O2 throughput {t2:.0f} samples/s is below "
+                        f"{margin:.0%} of O0 ({t0:.0f})"
+                    )
+                else:
+                    ok(f"{name}: O2 throughput {t2:.0f} vs O0 {t0:.0f} samples/s")
+        if tr_o0 > 0:
+            red = 1.0 - tr_o2 / tr_o0
+            if red < MIN_TRAINED_REDUCTION:
+                fail(
+                    f"aggregate O2 op reduction on trained-like cases is "
+                    f"{red:.1%} (< {MIN_TRAINED_REDUCTION:.0%})"
+                )
+            else:
+                ok(f"aggregate trained-like O2 op reduction: {red:.1%}")
+        else:
+            fail("no trained-like cases in BENCH_engine.json")
+
+        # --- baseline gates ---------------------------------------------
+        for name, base in sorted(baseline.get("engine", {}).items()):
+            row = cases.get(name)
+            if row is None:
+                fail(f"baseline case '{name}' missing from {ENGINE} — bench shrank?")
+                continue
+            floor = float(base.get("bitsliced_samples_per_s", 0))
+            if floor > 0:
+                got = row["bitsliced_samples_per_s"]
+                if got < (1 - tol) * floor:
+                    fail(
+                        f"{name}: bitsliced throughput {got:.0f} regressed "
+                        f">{tol:.0%} vs baseline {floor:.0f}"
+                    )
+                else:
+                    ok(f"{name}: throughput {got:.0f} vs baseline {floor:.0f}")
+            ceil = float(base.get("word_ops_o2", 0))
+            if ceil > 0:
+                got = row["word_ops_o2"]
+                if got > (1 + tol) * ceil:
+                    fail(
+                        f"{name}: O2 word ops {got:.0f} grew >{tol:.0%} vs "
+                        f"baseline {ceil:.0f}"
+                    )
+                else:
+                    ok(f"{name}: O2 word ops {got:.0f} vs baseline {ceil:.0f}")
+
+    if server_rows:
+        sat = [
+            r
+            for r in server_rows
+            if r.get("section") == "saturation"
+            and r.get("backend") == "bitsliced"
+            and r.get("workers") == 4
+        ]
+        if not sat:
+            fail(f"no bitsliced 4-worker saturation row in {SERVER}")
+        else:
+            got = sat[0]["served_per_s"]
+            floor = float(baseline.get("server", {}).get(
+                "saturation_bitsliced_4w_served_per_s", 0))
+            if floor > 0 and got < (1 - tol) * floor:
+                fail(
+                    f"server: bitsliced 4-worker throughput {got:.0f} req/s "
+                    f"regressed >{tol:.0%} vs baseline {floor:.0f}"
+                )
+            else:
+                ok(f"server: bitsliced 4-worker throughput {got:.0f} req/s "
+                   f"(baseline {floor:.0f})")
+
+    # Print a paste-ready baseline snippet for arming/refreshing the gate.
+    if engine_rows and sat:
+        snippet = {
+            "tolerance": tol,
+            "engine": {
+                name: {
+                    "bitsliced_samples_per_s": round(row["bitsliced_samples_per_s"]),
+                    "word_ops_o2": round(row["word_ops_o2"]),
+                }
+                for name, row in sorted(cases.items())
+            },
+            "server": {
+                "saturation_bitsliced_4w_served_per_s": round(sat[0]["served_per_s"])
+            },
+        }
+        print("\nto arm/refresh the gate, commit this as BENCH_baseline.json:")
+        print(json.dumps(snippet, indent=2))
+
+    if failures:
+        print(f"\nbench gate: {len(failures)} failure(s)")
+        return 1
+    print("\nbench gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
