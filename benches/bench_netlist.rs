@@ -12,7 +12,10 @@
 //! aggregate executed-op reduction across the trained-like cases.
 //!
 //! Writes `BENCH_engine.json` rows the CI `bench-smoke` gate
-//! (`scripts/check_bench.py`) checks against `BENCH_baseline.json`.
+//! (`scripts/check_bench.py`) checks against `BENCH_baseline.json`, plus
+//! `BENCH_compile_report.json` — the per-case O2 `CompileReport`s
+//! (per-pass wall time and op deltas) the gate chain-checks and the CI
+//! job summary tabulates.
 //! `NEURALUT_BENCH_QUICK=1` switches to a low-iteration smoke mode for CI.
 
 use neuralut::fabric::{FabricOptions, Model, OptLevel};
@@ -48,6 +51,7 @@ fn main() {
     let min_time = if quick { 0.15 } else { 1.0 };
     let batch = 4096usize;
     let mut rows: Vec<Json> = Vec::new();
+    let mut reports: Vec<Json> = Vec::new();
     let (mut trained_ops_o0, mut trained_ops_o2) = (0usize, 0usize);
 
     for (name, trained, input, bits, widths, fan_in, beta) in cases {
@@ -86,6 +90,28 @@ fn main() {
             model.num_luts(),
             reduction * 100.0
         );
+        // Compile telemetry for this case's O2 build: chain-checked here
+        // so a broken report fails the bench, then persisted for the CI
+        // gate and the job-summary per-pass table.
+        let report = fab_o2.report();
+        if let Err(e) = report.check() {
+            eprintln!("BROKEN compile report for {name}: {e}");
+            std::process::exit(1);
+        }
+        for p in &report.passes {
+            println!(
+                "   pass {:<10} {:>8.3} ms  ops {} -> {} ({:+})",
+                p.name,
+                p.wall_s * 1e3,
+                p.ops_before,
+                p.ops_after,
+                -p.ops_removed()
+            );
+        }
+        reports.push(obj(vec![
+            ("case", Json::Str(name.to_string())),
+            ("report", report.to_json()),
+        ]));
 
         let x: Vec<f32> = (0..batch * input).map(|i| (i % 97) as f32 / 97.0).collect();
         let sess_o0 = fab_o0.session();
@@ -178,5 +204,11 @@ fn main() {
         eprintln!("could not write BENCH_engine.json: {e}");
     } else {
         println!("wrote BENCH_engine.json ({n_cases} cases)");
+    }
+    let out = Json::Arr(reports).to_string();
+    if let Err(e) = std::fs::write("BENCH_compile_report.json", &out) {
+        eprintln!("could not write BENCH_compile_report.json: {e}");
+    } else {
+        println!("wrote BENCH_compile_report.json ({n_cases} cases)");
     }
 }

@@ -10,8 +10,11 @@
 //! Backends are selected by registry name through the unified
 //! `Model::compile` path — adding a backend to the sweep is one string.
 //! Writes `BENCH_server.json` (throughput, p50/p99 latency, rejection
-//! rate per row) so the serving perf trajectory is tracked PR over PR —
-//! the CI `bench-smoke` gate reads it against `BENCH_baseline.json`.
+//! rate and queue-wait / batch-formation / execute stage percentiles per
+//! row) so the serving perf trajectory is tracked PR over PR — the CI
+//! `bench-smoke` gate reads it against `BENCH_baseline.json` — plus
+//! `BENCH_metrics.json`, the raw `neuralut_server_*` metrics snapshot of
+//! the bitsliced 4-worker drain, JSON-encoded via `obs::expo`.
 //! `NEURALUT_BENCH_QUICK=1` shrinks the request counts for CI smoke runs.
 
 use std::time::{Duration, Instant};
@@ -19,6 +22,7 @@ use std::time::{Duration, Instant};
 use neuralut::data::{Dataset, Workload};
 use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::random_network;
+use neuralut::obs::{expo, MetricsSnapshot};
 use neuralut::server::ServerStats;
 use neuralut::util::json::{obj, Json};
 use neuralut::util::stats;
@@ -27,7 +31,7 @@ use neuralut::util::stats;
 /// bounded queue accepts them (blocking on backpressure) and time until
 /// every reply lands.
 fn drain(model: &Model, opts: &FabricOptions, n_req: usize)
-         -> (f64, stats::Summary, ServerStats) {
+         -> (f64, stats::Summary, ServerStats, MetricsSnapshot) {
     let ds = Dataset::synthetic(1, 16, 256, model.input_size(), model.n_class());
     let server = model.compile(opts).expect("compile").serve();
     let client = server.client();
@@ -42,7 +46,12 @@ fn drain(model: &Model, opts: &FabricOptions, n_req: usize)
         .map(|rx| rx.recv().unwrap().latency.as_secs_f64() * 1e6)
         .collect();
     let wall = t0.elapsed().as_secs_f64();
-    (n_req as f64 / wall, stats::summarize(&lat_us), server.stats())
+    (
+        n_req as f64 / wall,
+        stats::summarize(&lat_us),
+        server.stats(),
+        server.metrics(),
+    )
 }
 
 /// Open-loop shed: paced arrivals through `try_infer`; a full queue sheds
@@ -91,6 +100,7 @@ fn main() {
     println!("\n-- worker scaling, closed-loop drain ({n_req} requests, max_batch 256) --");
     let mut bits_1w = 0.0f64;
     let mut bits_4w = 0.0f64;
+    let mut snap_4w: Option<MetricsSnapshot> = None;
     for backend in ["scalar", "bitsliced"] {
         for workers in [1usize, 2, 4] {
             let opts = FabricOptions::new()
@@ -99,17 +109,25 @@ fn main() {
                 .batch_window(Duration::from_micros(50))
                 .workers(workers)
                 .queue_depth(4096);
-            let (tput, s, st) = drain(&model, &opts, n_req);
+            let (tput, s, st, snap) = drain(&model, &opts, n_req);
             println!(
                 "{backend:<9} workers {workers} -> {tput:>8.0} req/s  p50 {:>7.0}us \
                  p99 {:>7.0}us  mean batch {:.1}",
                 s.p50, s.p99, st.mean_batch
+            );
+            println!(
+                "          stages us: queue-wait p50 {:.0} p99 {:.0} | \
+                 batch-form p50 {:.0} p99 {:.0} | execute p50 {:.0} p99 {:.0}",
+                st.queue_wait_p50_us, st.queue_wait_p99_us,
+                st.batch_form_p50_us, st.batch_form_p99_us,
+                st.execute_p50_us, st.execute_p99_us
             );
             if backend == "bitsliced" && workers == 1 {
                 bits_1w = tput;
             }
             if backend == "bitsliced" && workers == 4 {
                 bits_4w = tput;
+                snap_4w = Some(snap);
             }
             rows.push(obj(vec![
                 ("section", Json::Str("saturation".into())),
@@ -121,6 +139,12 @@ fn main() {
                 ("p99_us", Json::Num(s.p99)),
                 ("rejection_rate", Json::Num(0.0)),
                 ("mean_batch", Json::Num(st.mean_batch)),
+                ("queue_wait_p50_us", Json::Num(st.queue_wait_p50_us)),
+                ("queue_wait_p99_us", Json::Num(st.queue_wait_p99_us)),
+                ("batch_form_p50_us", Json::Num(st.batch_form_p50_us)),
+                ("batch_form_p99_us", Json::Num(st.batch_form_p99_us)),
+                ("execute_p50_us", Json::Num(st.execute_p50_us)),
+                ("execute_p99_us", Json::Num(st.execute_p99_us)),
             ]));
         }
     }
@@ -164,5 +188,15 @@ fn main() {
         eprintln!("could not write BENCH_server.json: {e}");
     } else {
         println!("\nwrote BENCH_server.json ({n_rows} rows)");
+    }
+    // Raw metrics snapshot of the headline (bitsliced, 4-worker) drain —
+    // the full neuralut_server_* registry, for the CI artifact upload.
+    if let Some(snap) = snap_4w {
+        let out = expo::to_json(&snap).to_string();
+        if let Err(e) = std::fs::write("BENCH_metrics.json", &out) {
+            eprintln!("could not write BENCH_metrics.json: {e}");
+        } else {
+            println!("wrote BENCH_metrics.json");
+        }
     }
 }

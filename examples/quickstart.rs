@@ -62,6 +62,9 @@ fn main() -> anyhow::Result<()> {
     let session = fabric.session();
     let acc = session.accuracy(&dataset.test_x, &dataset.test_y)?;
     println!("\nreloaded        : {}", model.info());
+    // Compile telemetry: per-pass wall time and op deltas (empty pass
+    // list when the .nfab cache was reloaded — nothing ran).
+    println!("{}", fabric.report());
     match fabric.num_word_ops() {
         Some(ops) => println!("session         : {} backend at {} ({ops} word ops), \
                                accuracy {:.4}",

@@ -95,6 +95,9 @@ fn main() -> anyhow::Result<()> {
               mean batch {:.1}, p99 {:.0} us (internal)",
              st.served, st.rejected, st.per_worker_served.len(),
              st.mean_batch, st.latency_p99_us);
+    println!("stages     : queue-wait p99 {:.0} us | batch-form p99 {:.0} us \
+              | execute p99 {:.0} us",
+             st.queue_wait_p99_us, st.batch_form_p99_us, st.execute_p99_us);
     println!("\nfabric latency itself is {} cycles — the serving stack \
               (batching window, queueing) dominates, as it should.",
              model.latency_cycles());

@@ -47,9 +47,11 @@ pub use lower::{BitNetlist, Level, MuxOp};
 pub use opt::{optimize, OptLevel, OptReport};
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::luts::LutNetwork;
 use crate::netlist::{ScalarPlan, SimResult, Simulator};
+use crate::obs::{trace, PassReport};
 
 /// A batch-inference execution strategy for one converted network.
 ///
@@ -94,6 +96,13 @@ pub trait FabricProgram: Send + Sync {
     /// (`None` for table-lookup backends with nothing compiled to share).
     fn bit_netlist(&self) -> Option<&Arc<BitNetlist>> {
         None
+    }
+
+    /// Timed per-pass compile telemetry (`lower`, `simplify`, `dce`),
+    /// recorded while this program was compiled. Empty for backends with
+    /// no compile step and for programs loaded from a `.nfab` artifact.
+    fn pass_reports(&self) -> &[PassReport] {
+        &[]
     }
 }
 
@@ -186,6 +195,7 @@ impl FabricProgram for ScalarProgram {
 /// levelized word-op program every executor streams.
 pub struct BitslicedProgram {
     program: Arc<BitNetlist>,
+    passes: Vec<PassReport>,
 }
 
 impl BitslicedProgram {
@@ -197,17 +207,30 @@ impl BitslicedProgram {
 
     /// Lower and then run the [`opt`] pass pipeline at `level` — the
     /// registry factory path, where the level comes from
-    /// [`FabricOptions`](crate::fabric::FabricOptions).
+    /// [`FabricOptions`](crate::fabric::FabricOptions). Each pass is
+    /// timed into [`pass_reports`](FabricProgram::pass_reports).
     pub fn compile_opt(net: &LutNetwork, level: OptLevel) -> crate::Result<Self> {
-        let mut nl = lower::lower(net)?;
-        opt::optimize(&mut nl, level);
-        Ok(BitslicedProgram { program: Arc::new(nl) })
+        let t0 = Instant::now();
+        let mut nl = {
+            let _span = trace::span("lower");
+            lower::lower(net)?
+        };
+        let mut passes = vec![PassReport {
+            name: "lower".into(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            ops_before: 0,
+            ops_after: nl.num_ops(),
+            planes_removed: 0,
+        }];
+        let (_, opt_passes) = opt::optimize_traced(&mut nl, level);
+        passes.extend(opt_passes);
+        Ok(BitslicedProgram { program: Arc::new(nl), passes })
     }
 
     /// Wrap an already-lowered (and possibly persisted-and-reloaded)
-    /// program.
+    /// program. No passes ran here, so the pass telemetry is empty.
     pub fn from_netlist(program: Arc<BitNetlist>) -> Self {
-        BitslicedProgram { program }
+        BitslicedProgram { program, passes: Vec::new() }
     }
 }
 
@@ -218,6 +241,10 @@ impl FabricProgram for BitslicedProgram {
 
     fn bit_netlist(&self) -> Option<&Arc<BitNetlist>> {
         Some(&self.program)
+    }
+
+    fn pass_reports(&self) -> &[PassReport] {
+        &self.passes
     }
 }
 
@@ -252,6 +279,30 @@ mod tests {
         assert_eq!(own.run_batch(&x).logit_codes,
                    sim.simulate_batch(&x).logit_codes);
         assert_eq!(own.latency_cycles(), sim.latency_cycles());
+    }
+
+    #[test]
+    fn compile_records_chained_pass_reports() {
+        let net = Arc::new(random_network(32, 8, 2, &[6, 3], 3, 2, 4));
+        let prog = BitslicedProgram::compile_opt(&net, OptLevel::O2).unwrap();
+        let passes = prog.pass_reports();
+        assert_eq!(
+            passes.iter().map(|p| p.name.as_str()).collect::<Vec<_>>(),
+            ["lower", "simplify", "dce"]
+        );
+        assert_eq!(passes[0].ops_before, 0);
+        for w in passes.windows(2) {
+            assert_eq!(w[1].ops_before, w[0].ops_after, "pass chain must connect");
+        }
+        assert_eq!(
+            passes.last().unwrap().ops_after,
+            prog.bit_netlist().unwrap().num_ops(),
+            "report must land on the executed op count"
+        );
+        // Loaded programs and the scalar backend carry no pass telemetry.
+        let reloaded = BitslicedProgram::from_netlist(prog.bit_netlist().unwrap().clone());
+        assert!(reloaded.pass_reports().is_empty());
+        assert!(ScalarProgram::new(net).pass_reports().is_empty());
     }
 
     #[test]

@@ -37,7 +37,11 @@
 mod dce;
 mod simplify;
 
+use std::time::Instant;
+
 use anyhow::bail;
+
+use crate::obs::{trace, PassReport};
 
 use super::lower::BitNetlist;
 
@@ -136,21 +140,58 @@ impl OptReport {
 /// recomputed afterwards and the structural invariants re-checked (debug
 /// builds), so an optimized netlist is as trustworthy as a lowered one.
 pub fn optimize(nl: &mut BitNetlist, level: OptLevel) -> OptReport {
+    optimize_traced(nl, level).0
+}
+
+/// [`optimize`], additionally returning one timed [`PassReport`] per
+/// pass run (`simplify`, then `dce` — which includes renumbering and,
+/// at `O2`, plane compaction). The reports chain: each pass's
+/// `ops_before` is the previous pass's `ops_after`, and the last
+/// `ops_after` is the netlist's final op count. `O0` returns no passes.
+pub fn optimize_traced(nl: &mut BitNetlist, level: OptLevel) -> (OptReport, Vec<PassReport>) {
     let mut report = OptReport::default();
+    let mut passes = Vec::new();
     if level == OptLevel::O0 {
-        return report;
+        return (report, passes);
     }
     let global = level == OptLevel::O2;
-    let (folded, merged) = simplify::run(nl, global);
+
+    let ops_before = nl.num_ops();
+    let t0 = Instant::now();
+    let (folded, merged) = {
+        let _span = trace::span("opt/simplify");
+        simplify::run(nl, global)
+    };
     report.folded = folded;
     report.merged = merged;
-    let (dead_ops, dead_planes) = dce::run(nl, global);
+    let after_simplify = nl.num_ops();
+    passes.push(PassReport {
+        name: "simplify".into(),
+        wall_s: t0.elapsed().as_secs_f64(),
+        ops_before,
+        ops_after: after_simplify,
+        planes_removed: 0,
+    });
+
+    let t0 = Instant::now();
+    let (dead_ops, dead_planes) = {
+        let _span = trace::span("opt/dce");
+        let r = dce::run(nl, global);
+        dce::renumber(nl);
+        nl.recompute_stats();
+        nl.debug_check();
+        r
+    };
     report.dead_ops = dead_ops;
     report.dead_planes = dead_planes;
-    dce::renumber(nl);
-    nl.recompute_stats();
-    nl.debug_check();
-    report
+    passes.push(PassReport {
+        name: "dce".into(),
+        wall_s: t0.elapsed().as_secs_f64(),
+        ops_before: after_simplify,
+        ops_after: nl.num_ops(),
+        planes_removed: dead_planes as usize,
+    });
+    (report, passes)
 }
 
 #[cfg(test)]
@@ -306,6 +347,29 @@ mod tests {
             "trained-like tables must shed >=10%: O0 {o0} -> O2 {}",
             n2.num_ops()
         );
+    }
+
+    #[test]
+    fn traced_passes_chain_and_match_the_plain_report() {
+        let net = structured_network(7, 16, 2, &[16, 8, 4], 3, 2, 4);
+        let mut nl = lowered(&net);
+        let lowered_ops = nl.num_ops();
+        let (rep, passes) = optimize_traced(&mut nl, OptLevel::O2);
+        assert_eq!(passes.len(), 2);
+        assert_eq!(passes[0].name, "simplify");
+        assert_eq!(passes[1].name, "dce");
+        assert_eq!(passes[0].ops_before, lowered_ops);
+        assert_eq!(passes[1].ops_before, passes[0].ops_after);
+        assert_eq!(passes[1].ops_after, nl.num_ops());
+        assert_eq!(passes[0].ops_removed(), (rep.folded + rep.merged) as i64);
+        assert_eq!(passes[1].ops_removed(), rep.dead_ops as i64);
+        assert_eq!(passes[1].planes_removed, rep.dead_planes as usize);
+        assert!(passes.iter().all(|p| p.wall_s >= 0.0));
+        // O0 runs no passes at all.
+        let mut nl0 = lowered(&net);
+        let (rep0, p0) = optimize_traced(&mut nl0, OptLevel::O0);
+        assert_eq!(rep0, OptReport::default());
+        assert!(p0.is_empty());
     }
 
     #[test]

@@ -42,20 +42,23 @@ pub mod registry;
 
 pub use artifact::{NfabHeader, NFAB_MAGIC, NFAB_VERSION};
 pub use crate::engine::OptLevel;
+pub use crate::obs::{CompileReport, PassReport};
 pub use options::{FabricOptions, FabricTuning, DEFAULT_BACKEND};
 pub use registry::{
     BackendEntry, BackendFactory, BackendRegistry, BatchAffinity, Capabilities, CompileCost,
     ProgramLoader,
 };
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context};
 
 use crate::engine::{BitNetlist, FabricProgram, InferenceBackend};
 use crate::luts::LutNetwork;
 use crate::netlist::SimResult;
+use crate::obs::trace;
 use crate::server::Server;
 
 /// Metadata of a loaded model — everything reports and logs need
@@ -194,8 +197,20 @@ impl Model {
         let entry = registry.resolve(opts.backend_or_default())?;
         let tuning = opts.resolve_tuning()?;
         let opt_level = opts.opt_level_or_default();
-        let program = entry.compile(self.net.clone(), opt_level)?;
-        Ok(CompiledFabric { model: self.clone(), entry, program, tuning, opt_level })
+        let t0 = Instant::now();
+        let program = {
+            let _span = trace::span(&format!("compile/{}", entry.name()));
+            entry.compile(self.net.clone(), opt_level)?
+        };
+        let report = build_report(
+            self,
+            entry.name(),
+            opt_level,
+            t0.elapsed().as_secs_f64(),
+            false,
+            program.as_ref(),
+        );
+        Ok(CompiledFabric { model: self.clone(), entry, program, tuning, opt_level, report })
     }
 
     /// Compile-once, serve-many: reuse the `.nfab` artifact at `path`
@@ -274,7 +289,11 @@ impl Model {
         opts: &FabricOptions,
         path: &Path,
     ) -> crate::Result<CompiledFabric> {
-        let (header, nl) = artifact::load(path)?;
+        let t0 = Instant::now();
+        let (header, nl) = {
+            let _span = trace::span("load/nfab");
+            artifact::load(path)?
+        };
         if let Some(requested) = opts.get_backend() {
             let canon = registry::normalize_name(requested);
             if canon != header.backend {
@@ -329,12 +348,21 @@ impl Model {
         })?;
         let tuning = opts.resolve_tuning()?;
         let program = entry.load_program(self.net.clone(), Arc::new(nl))?;
+        let report = build_report(
+            self,
+            entry.name(),
+            header.opt_level,
+            t0.elapsed().as_secs_f64(),
+            true,
+            program.as_ref(),
+        );
         Ok(CompiledFabric {
             model: self.clone(),
             entry,
             program,
             tuning,
             opt_level: header.opt_level,
+            report,
         })
     }
 
@@ -353,6 +381,35 @@ impl std::fmt::Debug for Model {
     }
 }
 
+/// Assemble the [`CompileReport`] for a freshly compiled (or just
+/// loaded) program: per-pass telemetry from the program itself, final
+/// netlist shape from its bit-netlist (zeros for table-lookup backends).
+fn build_report(
+    model: &Model,
+    backend: &str,
+    opt_level: OptLevel,
+    total_s: f64,
+    from_cache: bool,
+    program: &dyn FabricProgram,
+) -> CompileReport {
+    let (ops, levels, max_planes, max_wires) = match program.bit_netlist() {
+        Some(nl) => (nl.num_ops(), nl.levels.len(), nl.max_planes, nl.max_wires),
+        None => (0, 0, 0, 0),
+    };
+    CompileReport {
+        model: model.name().to_string(),
+        backend: backend.to_string(),
+        opt_level: opt_level.to_string(),
+        total_s,
+        from_cache,
+        passes: program.pass_reports().to_vec(),
+        ops,
+        levels,
+        max_planes,
+        max_wires,
+    }
+}
+
 /// A compiled model: one backend's shared, compile-once program plus the
 /// resolved tuning. Spawn any number of [`session`](Self::session)s and
 /// [`serve`](Self::serve) pools from it — none of them recompiles — or
@@ -363,6 +420,7 @@ pub struct CompiledFabric {
     program: Arc<dyn FabricProgram>,
     tuning: FabricTuning,
     opt_level: OptLevel,
+    report: CompileReport,
 }
 
 impl CompiledFabric {
@@ -392,6 +450,20 @@ impl CompiledFabric {
         self.program.bit_netlist().map(|nl| nl.num_ops())
     }
 
+    /// Structured compile telemetry: per-pass wall time and op deltas
+    /// plus the final netlist shape. For fabrics loaded from a `.nfab`
+    /// cache this records the load time with `from_cache = true` and no
+    /// passes (nothing was lowered or optimized in this process).
+    pub fn report(&self) -> &CompileReport {
+        &self.report
+    }
+
+    /// Where [`save`](Self::save) persists the compile report next to a
+    /// `.nfab` artifact: `net.nfab` → `net.report.json`.
+    pub fn report_path(artifact_path: &Path) -> PathBuf {
+        artifact_path.with_extension("report.json")
+    }
+
     /// Persist this fabric as a versioned `.nfab` artifact: the backend
     /// name, opt level, the source model's digest, and the compiled
     /// program. Another process with the same model loads it via
@@ -413,7 +485,18 @@ impl CompiledFabric {
                 self.entry.name()
             );
         };
-        artifact::save(path, self.entry.name(), self.opt_level, self.model.digest(), nl)
+        artifact::save(path, self.entry.name(), self.opt_level, self.model.digest(), nl)?;
+        // The report rides along as a JSON sibling. Like the artifact
+        // cache itself it is telemetry, not an availability dependency:
+        // a failed write warns and the fabric stays perfectly usable.
+        let report_path = Self::report_path(path);
+        if let Err(e) = std::fs::write(&report_path, self.report.to_json().to_string()) {
+            eprintln!(
+                "warning: could not write compile report {}: {e}",
+                report_path.display()
+            );
+        }
+        Ok(())
     }
 
     /// The serving knobs [`serve`](Self::serve) will use.
@@ -643,6 +726,48 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("persistable"), "{err}");
+    }
+
+    #[test]
+    fn compile_reports_attach_and_persist() {
+        let m = model();
+        let fabric = m
+            .compile(&FabricOptions::new().backend("bitsliced").opt_level(OptLevel::O2))
+            .unwrap();
+        let r = fabric.report();
+        r.check().unwrap();
+        assert!(!r.from_cache);
+        assert_eq!(r.ops, fabric.num_word_ops().unwrap());
+        assert_eq!(r.opt_level, "O2");
+        assert_eq!(
+            r.passes.iter().map(|p| p.name.as_str()).collect::<Vec<_>>(),
+            ["lower", "simplify", "dce"]
+        );
+        // Scalar compiles have no passes and no netlist shape.
+        let scalar = m.compile(&FabricOptions::new()).unwrap();
+        assert!(scalar.report().passes.is_empty());
+        assert_eq!(scalar.report().ops, 0);
+        scalar.report().check().unwrap();
+        // A cached compile writes the JSON sidecar; the reload flags
+        // from_cache and keeps the final shape.
+        let path = std::env::temp_dir().join("neuralut_fabric_report_cache.nfab");
+        let _ = std::fs::remove_file(&path);
+        let opts = FabricOptions::new()
+            .backend("bitsliced")
+            .opt_level(OptLevel::O2)
+            .fabric_cache(&path);
+        let first = m.compile(&opts).unwrap();
+        let sidecar = CompiledFabric::report_path(&path);
+        assert!(sidecar.exists(), "save must write the report sibling");
+        let parsed =
+            CompileReport::from_json(&crate::util::json::from_file(&sidecar).unwrap()).unwrap();
+        parsed.check().unwrap();
+        assert_eq!(parsed.ops, first.num_word_ops().unwrap());
+        assert!(!parsed.from_cache);
+        let second = m.compile(&opts).unwrap();
+        assert!(second.report().from_cache);
+        assert!(second.report().passes.is_empty());
+        assert_eq!(second.report().ops, first.report().ops);
     }
 
     #[test]

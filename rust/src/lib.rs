@@ -35,14 +35,19 @@
 //!   resolution path (builder < env < config file < defaults), and
 //!   persistent `.nfab` compiled-fabric artifacts
 //!   (`CompiledFabric::save` / `Model::compile_cached`).
+//! * [`obs`] — observability: the metrics registry (counters / gauges /
+//!   log2 histograms, lock-free hot path), compile-pass tracing
+//!   (`CompileReport`, `NEURALUT_TRACE` span log) and Prometheus-text +
+//!   JSON exposition. `std`-only by design.
 //! * [`rtl`] — Verilog + testbench generation.
 //! * [`synth`] — Vivado-substitute synthesis/P&R cost model (support
 //!   reduction, ROBDD, 6-LUT covering, timing).
 //! * [`server`] — multi-worker sharded inference serving runtime: bounded
 //!   request queue, N batcher threads over one shared compiled fabric,
 //!   explicit backpressure (`try_infer` → `Overloaded`), graceful
-//!   drain-on-shutdown, atomic serving stats. Started via
-//!   `CompiledFabric::serve`.
+//!   drain-on-shutdown, and per-request latency telemetry (queue-wait /
+//!   batch-formation / execute stages) in an `obs` metrics registry.
+//!   Started via `CompiledFabric::serve`.
 //!
 //! ## The inference API
 //!
@@ -91,6 +96,19 @@
 //! rewrites it when stale or corrupt. Workers and restarts share one
 //! precompiled, pre-optimized program; a digest mismatch is an error,
 //! never a silently wrong answer.
+//!
+//! ## Observability
+//!
+//! Every compile yields a [`obs::CompileReport`]
+//! (`CompiledFabric::report()`): per-pass wall time and op/plane deltas
+//! for `lower` → `simplify` → `dce` plus the final netlist shape,
+//! persisted as `*.report.json` beside `.nfab` artifacts. The serving
+//! runtime splits each request's latency into queue-wait /
+//! batch-formation / execute histograms in a `neuralut_server_*` metrics
+//! registry (`Server::metrics()`), and [`obs::expo`] renders any
+//! snapshot as Prometheus text or JSON — see the `report` and `stats`
+//! CLI subcommands, or set `NEURALUT_TRACE=1` for a live span log of the
+//! compile passes.
 
 pub mod config;
 pub mod coordinator;
@@ -101,6 +119,7 @@ pub mod luts;
 pub mod manifest;
 pub mod netlist;
 pub mod nn;
+pub mod obs;
 pub mod rtl;
 pub mod runtime;
 pub mod server;

@@ -12,6 +12,8 @@
 //! neuralut simulate <config> --net FILE
 //! neuralut rtl      <config> --net FILE --out DIR
 //! neuralut serve    <config> --net FILE [--rate R] [--requests N]
+//! neuralut report   --net FILE [--format table|json] [--out FILE]
+//! neuralut stats    <config> --net FILE [--requests N] [--format prom|json|both]
 //! ```
 //!
 //! (Hand-rolled argument parsing: clap is not vendored in this offline
@@ -147,6 +149,8 @@ fn run() -> Result<()> {
         "rtl" => cmd_rtl(&pos, &opts),
         "vcd" => cmd_vcd(&pos, &opts),
         "serve" => cmd_serve(&pos, &opts),
+        "report" => cmd_report(&opts),
+        "stats" => cmd_stats(&pos, &opts),
         "suite" => cmd_suite(&pos),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -174,6 +178,10 @@ fn print_usage() {
          \x20     [--workers N] [--queue-depth N] [--engine BACKEND]\n  \
          \x20     [--opt-level O0|O1|O2] [--fabric-cache FILE.nfab]\n  \
          \x20     [--server-config FILE.toml]\n  \
+         report --net F [--engine BACKEND] [--opt-level O0|O1|O2]\n  \
+         \x20     [--format table|json] [--out FILE]   compile telemetry\n  \
+         stats <config> --net F [--requests N] [--rate R]\n  \
+         \x20     [--format prom|json|both]            serve + full telemetry dump\n  \
          suite <file.toml>                      run a batch of pipelines\n\n\
          BACKEND is a registered backend name ({}); NEURALUT_ENGINE /\n\
          NEURALUT_WORKERS / NEURALUT_OPT_LEVEL / NEURALUT_FABRIC_CACHE set\n\
@@ -410,6 +418,11 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
     let st = server.stats();
     println!("server     : {} served, {} rejected, {} batches (mean {:.1})",
              st.served, st.rejected, st.batches, st.mean_batch);
+    println!("stages us  : queue-wait p50 {:.0} p99 {:.0} | batch-form p50 {:.0} \
+              p99 {:.0} | execute p50 {:.0} p99 {:.0}",
+             st.queue_wait_p50_us, st.queue_wait_p99_us,
+             st.batch_form_p50_us, st.batch_form_p99_us,
+             st.execute_p50_us, st.execute_p99_us);
     println!("per worker : served {:?}, throughput [{}] req/s",
              st.per_worker_served,
              st.per_worker_rps
@@ -417,5 +430,79 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
                  .map(|r| format!("{r:.0}"))
                  .collect::<Vec<_>>()
                  .join(", "));
+    Ok(())
+}
+
+/// `report --net F`: compile (or reload the `.nfab` cache) and print the
+/// [`CompileReport`](neuralut::obs::CompileReport) — per-pass wall time,
+/// op deltas and the final netlist shape.
+fn cmd_report(opts: &Opts) -> Result<()> {
+    let model = Model::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
+    let mut fo = opts.fabric(None)?;
+    // The scalar default has no compile pipeline to report on; default to
+    // the compiled backend unless one was picked explicitly.
+    if fo.get_backend().is_none() {
+        fo = fo.backend("bitsliced");
+    }
+    let fabric = model.compile(&fo)?;
+    let report = fabric.report();
+    match opts.get("format").unwrap_or("table") {
+        "table" => println!("{report}"),
+        "json" => println!("{}", report.to_json().to_string()),
+        other => bail!("unknown --format '{other}' (table | json)"),
+    }
+    if let Some(out) = opts.get("out") {
+        std::fs::write(out, report.to_json().to_string())
+            .with_context(|| format!("writing {out}"))?;
+        eprintln!("report written to {out}");
+    }
+    Ok(())
+}
+
+/// `stats <config> --net F`: serve a short workload, then dump the whole
+/// telemetry story — compile report exported as `neuralut_compile_*`
+/// series merged with the `neuralut_server_*` request-path registry — as
+/// Prometheus text and/or a JSON snapshot.
+fn cmd_stats(pos: &[String], opts: &Opts) -> Result<()> {
+    use neuralut::obs::{expo, MetricsRegistry};
+    let name = pos.first().context("usage: stats <config> --net F")?;
+    let (_m, ds) = load_bundle(name)?;
+    let model = Model::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
+    let n_req = opts.usize("requests")?.unwrap_or(2_000);
+    let rate = opts.f64("rate")?.unwrap_or(50_000.0);
+    let mut fo = opts.fabric(None)?;
+    if fo.get_backend().is_none() {
+        fo = fo.backend("bitsliced");
+    }
+    let fabric = model.compile(&fo)?;
+    let server = fabric.serve();
+    let client = server.client();
+    let workload = Workload::poisson(&ds, 99, n_req, rate);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_req);
+    for (t_arrival, feats) in workload.requests {
+        let now = t0.elapsed().as_secs_f64();
+        if t_arrival > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(t_arrival - now));
+        }
+        pending.push(client.infer_async(feats)?);
+    }
+    for rx in pending {
+        rx.recv()?;
+    }
+    let reg = MetricsRegistry::new();
+    fabric.report().export(&reg);
+    let mut snap = reg.snapshot();
+    snap.merge(server.metrics());
+    let format = opts.get("format").unwrap_or("both");
+    if !matches!(format, "prom" | "json" | "both") {
+        bail!("unknown --format '{format}' (prom | json | both)");
+    }
+    if matches!(format, "prom" | "both") {
+        print!("{}", expo::to_prometheus(&snap));
+    }
+    if matches!(format, "json" | "both") {
+        println!("{}", expo::to_json(&snap).to_string());
+    }
     Ok(())
 }

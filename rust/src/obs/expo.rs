@@ -1,0 +1,248 @@
+//! Exposition encoders: one [`MetricsSnapshot`] in, Prometheus-style
+//! text or a JSON document out.
+//!
+//! The text format follows the Prometheus exposition conventions —
+//! `# HELP` / `# TYPE` headers, cumulative `_bucket{le=...}` series with
+//! a closing `+Inf` bucket, `_sum` / `_count` — so the output scrapes
+//! cleanly, while the JSON form (built on [`util::json`](crate::util::json))
+//! additionally carries interpolated p50/p95/p99 per histogram so
+//! dashboards and `BENCH_*.json` consumers need no bucket math.
+
+use crate::util::json::{obj, Json};
+
+use super::metrics::{Labels, MetricsSnapshot};
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn render_labels(labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    let mut pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+fn header(out: &mut String, snap: &MetricsSnapshot, name: &str, kind: &str, seen: &mut Vec<String>) {
+    if seen.iter().any(|s| s == name) {
+        return;
+    }
+    seen.push(name.to_string());
+    if let Some(help) = snap.help.get(name) {
+        out.push_str(&format!("# HELP {name} {help}\n"));
+    }
+    out.push_str(&format!("# TYPE {name} {kind}\n"));
+}
+
+/// Encode a snapshot as Prometheus exposition text.
+pub fn to_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut seen = Vec::new();
+    for c in &snap.counters {
+        header(&mut out, snap, &c.name, "counter", &mut seen);
+        out.push_str(&format!("{}{} {}\n", c.name, render_labels(&c.labels, None), c.value));
+    }
+    for g in &snap.gauges {
+        header(&mut out, snap, &g.name, "gauge", &mut seen);
+        out.push_str(&format!(
+            "{}{} {}\n",
+            g.name,
+            render_labels(&g.labels, None),
+            fmt_f64(g.value)
+        ));
+    }
+    for h in &snap.histograms {
+        header(&mut out, snap, &h.name, "histogram", &mut seen);
+        let mut cum = 0u64;
+        for (i, &c) in h.buckets.iter().enumerate() {
+            cum += c;
+            let le = if i + 1 == h.buckets.len() {
+                "+Inf".to_string()
+            } else {
+                format!("{}", 1u64 << (i + 1).min(63))
+            };
+            out.push_str(&format!(
+                "{}_bucket{} {}\n",
+                h.name,
+                render_labels(&h.labels, Some(("le", &le))),
+                cum
+            ));
+        }
+        out.push_str(&format!("{}_sum{} {}\n", h.name, render_labels(&h.labels, None), h.sum));
+        out.push_str(&format!(
+            "{}_count{} {}\n",
+            h.name,
+            render_labels(&h.labels, None),
+            h.count
+        ));
+    }
+    out
+}
+
+fn labels_json(labels: &Labels) -> Json {
+    Json::Obj(labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect())
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Interpolated percentiles are emitted rounded to 3 decimals: they are
+/// already bucket estimates, and rounding keeps the JSON free of float
+/// noise like `14.799999999999997`.
+fn pctl_json(v: f64) -> Json {
+    num_or_null((v * 1e3).round() / 1e3)
+}
+
+/// Encode a snapshot as a JSON document. Histograms carry interpolated
+/// `p50`/`p95`/`p99` (JSON `null` while empty — NaN is not valid JSON).
+pub fn to_json(snap: &MetricsSnapshot) -> Json {
+    obj(vec![
+        (
+            "counters",
+            Json::Arr(
+                snap.counters
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("labels", labels_json(&c.labels)),
+                            ("value", Json::Num(c.value as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gauges",
+            Json::Arr(
+                snap.gauges
+                    .iter()
+                    .map(|g| {
+                        obj(vec![
+                            ("name", Json::Str(g.name.clone())),
+                            ("labels", labels_json(&g.labels)),
+                            ("value", num_or_null(g.value)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "histograms",
+            Json::Arr(
+                snap.histograms
+                    .iter()
+                    .map(|h| {
+                        obj(vec![
+                            ("name", Json::Str(h.name.clone())),
+                            ("labels", labels_json(&h.labels)),
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum", Json::Num(h.sum as f64)),
+                            ("p50", pctl_json(h.percentile(0.50))),
+                            ("p95", pctl_json(h.percentile(0.95))),
+                            ("p99", pctl_json(h.percentile(0.99))),
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    h.buckets.iter().map(|&b| Json::Num(b as f64)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::MetricsRegistry;
+
+    fn golden_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        reg.describe("requests_total", "requests accepted");
+        reg.counter("requests_total", &[("worker", "0")]).add(3);
+        reg.counter("requests_total", &[("worker", "1")]).add(4);
+        reg.gauge("queue_depth", &[]).set(2.0);
+        let h = reg.histogram("latency_us", &[], 4);
+        h.observe(1);
+        h.observe(3);
+        h.observe(100); // clamps into the last bucket
+        reg
+    }
+
+    #[test]
+    fn prometheus_text_golden() {
+        let text = to_prometheus(&golden_registry().snapshot());
+        let want = "\
+# HELP requests_total requests accepted
+# TYPE requests_total counter
+requests_total{worker=\"0\"} 3
+requests_total{worker=\"1\"} 4
+# TYPE queue_depth gauge
+queue_depth 2
+# TYPE latency_us histogram
+latency_us_bucket{le=\"2\"} 1
+latency_us_bucket{le=\"4\"} 2
+latency_us_bucket{le=\"8\"} 2
+latency_us_bucket{le=\"+Inf\"} 3
+latency_us_sum 104
+latency_us_count 3
+";
+        assert_eq!(text, want);
+    }
+
+    #[test]
+    fn json_golden() {
+        let j = to_json(&golden_registry().snapshot());
+        let text = j.to_string();
+        let want = concat!(
+            "{\"counters\":[",
+            "{\"labels\":{\"worker\":\"0\"},\"name\":\"requests_total\",\"value\":3},",
+            "{\"labels\":{\"worker\":\"1\"},\"name\":\"requests_total\",\"value\":4}],",
+            "\"gauges\":[{\"labels\":{},\"name\":\"queue_depth\",\"value\":2}],",
+            "\"histograms\":[{\"buckets\":[1,1,0,1],\"count\":3,",
+            "\"labels\":{},\"name\":\"latency_us\",",
+            "\"p50\":3,\"p95\":14.8,\"p99\":15.76,\"sum\":104}]}",
+        );
+        assert_eq!(text, want);
+        // And it parses back.
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_are_null_json() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("h", &[], 4);
+        let j = to_json(&reg.snapshot());
+        let h = &j.get("histograms").unwrap().as_arr().unwrap()[0];
+        assert_eq!(h.get("p50").unwrap(), &Json::Null);
+        // The whole document is still valid JSON.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

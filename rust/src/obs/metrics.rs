@@ -1,0 +1,489 @@
+//! Metrics registry: named counters, gauges and log2-bucket histograms
+//! with label sets, built on `std::sync::atomic` only.
+//!
+//! Registration (name + labels -> handle) takes a mutex once; the handles
+//! returned are `Arc`-backed and every hot-path operation (`inc`,
+//! `observe`, `set`) is a single atomic RMW — no locks, no allocation.
+//! [`MetricsRegistry::snapshot`] freezes everything into plain data for
+//! the exposition encoders in [`expo`](crate::obs::expo).
+//!
+//! Histograms use the same log2 bucketing as the serving runtime always
+//! has: value `v` lands in bucket `floor(log2(max(v, 1)))`, clamped to
+//! the last bucket, so bucket `i` covers `[2^i, 2^(i+1))` and 32 buckets
+//! span 1 µs .. ~71 min when observations are microseconds.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Log2 bucket index of `v` in an `n`-bucket histogram: bucket `i`
+/// covers `[2^i, 2^(i+1))`; `0` maps with `1`; overflow clamps to the
+/// last bucket (the saturated bucket keeps counting, it never drops).
+pub fn log2_bucket(v: u64, n_buckets: usize) -> usize {
+    (63 - v.max(1).leading_zeros() as usize).min(n_buckets - 1)
+}
+
+/// Linear-interpolated percentile (`q` in 0..=1) from log2 bucket counts,
+/// assuming observations are uniform inside a bucket. Returns NaN on an
+/// empty histogram. The saturated last bucket reports its lower bound's
+/// doubling (capped so the width math cannot overflow `u64`).
+pub fn hist_percentile(hist: &[u64], q: f64) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    let target = q * total as f64;
+    let mut acc = 0.0;
+    for (i, &c) in hist.iter().enumerate() {
+        let next = acc + c as f64;
+        if next >= target && c > 0 {
+            let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+            let hi = (1u64 << (i + 1).min(63)) as f64;
+            let frac = ((target - acc) / c as f64).clamp(0.0, 1.0);
+            return lo + frac * (hi - lo);
+        }
+        acc = next;
+    }
+    (1u64 << hist.len().min(63)) as f64
+}
+
+/// A monotonically increasing counter. Cheap to clone; all clones share
+/// the same cell.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    fn new() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a settable `f64` (stored as bits in an `AtomicU64`). Cheap to
+/// clone; all clones share the same cell.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Add `d` (CAS loop; gauges are low-frequency by design).
+    pub fn add(&self, d: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.0.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    /// Subtract 1.
+    pub fn dec(&self) {
+        self.add(-1.0);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistCore {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// A log2-bucket histogram of `u64` observations. Cheap to clone; all
+/// clones share the same cells. `observe` is three relaxed `fetch_add`s.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    fn new(n_buckets: usize) -> Histogram {
+        let buckets: Vec<AtomicU64> =
+            (0..n_buckets.max(1)).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistCore {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        let i = log2_bucket(v, self.0.buckets.len());
+        self.0.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Number of observations so far.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations so far.
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts, frozen.
+    pub fn buckets(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Interpolated percentile (`q` in 0..=1); NaN when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        hist_percentile(&self.buckets(), q)
+    }
+}
+
+/// Label pairs, kept sorted by key so the same set always maps to the
+/// same time series regardless of call-site order.
+pub type Labels = Vec<(String, String)>;
+
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct MetricKey {
+    name: String,
+    labels: Labels,
+}
+
+impl MetricKey {
+    fn new(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        let mut labels: Labels = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        MetricKey { name: name.to_string(), labels }
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<MetricKey, Counter>,
+    gauges: BTreeMap<MetricKey, Gauge>,
+    histograms: BTreeMap<MetricKey, Histogram>,
+    help: BTreeMap<String, String>,
+}
+
+/// One frozen counter time series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSample {
+    /// Metric name.
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Labels,
+    /// Value at snapshot time.
+    pub value: u64,
+}
+
+/// One frozen gauge time series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaugeSample {
+    /// Metric name.
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Labels,
+    /// Value at snapshot time.
+    pub value: f64,
+}
+
+/// One frozen histogram time series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSample {
+    /// Metric name.
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Labels,
+    /// Per-bucket (non-cumulative) counts; bucket `i` covers
+    /// `[2^i, 2^(i+1))` with bucket 0 also absorbing 0.
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observations.
+    pub sum: u64,
+}
+
+impl HistogramSample {
+    /// Interpolated percentile (`q` in 0..=1); NaN when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        hist_percentile(&self.buckets, q)
+    }
+}
+
+/// Plain-data view of a whole registry at one instant, sorted by metric
+/// name then labels — the input to both exposition encoders.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// All counters.
+    pub counters: Vec<CounterSample>,
+    /// All gauges.
+    pub gauges: Vec<GaugeSample>,
+    /// All histograms.
+    pub histograms: Vec<HistogramSample>,
+    /// Help text by metric name (from [`MetricsRegistry::describe`]).
+    pub help: BTreeMap<String, String>,
+}
+
+impl MetricsSnapshot {
+    /// Fold another snapshot into this one (series are appended; help
+    /// strings merge, other-snapshot entries win on name clashes).
+    pub fn merge(&mut self, other: MetricsSnapshot) {
+        self.counters.extend(other.counters);
+        self.gauges.extend(other.gauges);
+        self.histograms.extend(other.histograms);
+        self.help.extend(other.help);
+        self.counters.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        self.gauges.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        self.histograms.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+    }
+
+    /// Find a counter by name and label subset (all given pairs present).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<&CounterSample> {
+        self.counters.iter().find(|c| c.name == name && has_labels(&c.labels, labels))
+    }
+
+    /// Find a gauge by name and label subset.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<&GaugeSample> {
+        self.gauges.iter().find(|g| g.name == name && has_labels(&g.labels, labels))
+    }
+
+    /// Find a histogram by name and label subset.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<&HistogramSample> {
+        self.histograms.iter().find(|h| h.name == name && has_labels(&h.labels, labels))
+    }
+}
+
+fn has_labels(have: &Labels, want: &[(&str, &str)]) -> bool {
+    want.iter().all(|(k, v)| have.iter().any(|(hk, hv)| hk == k && hv == v))
+}
+
+/// Get-or-register store of named metrics. Registration locks a mutex;
+/// the returned handles never do.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get or register the counter `name{labels}`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = MetricKey::new(name, labels);
+        let mut inner = self.inner.lock().unwrap();
+        inner.counters.entry(key).or_insert_with(Counter::new).clone()
+    }
+
+    /// Get or register the gauge `name{labels}`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let key = MetricKey::new(name, labels);
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.entry(key).or_insert_with(Gauge::new).clone()
+    }
+
+    /// Get or register the histogram `name{labels}` with `n_buckets`
+    /// log2 buckets. A later call with a different bucket count returns
+    /// the series registered first.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)], n_buckets: usize) -> Histogram {
+        let key = MetricKey::new(name, labels);
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .histograms
+            .entry(key)
+            .or_insert_with(|| Histogram::new(n_buckets))
+            .clone()
+    }
+
+    /// Attach help text to a metric name (rendered as `# HELP` lines).
+    pub fn describe(&self, name: &str, help: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.help.insert(name.to_string(), help.to_string());
+    }
+
+    /// Freeze every registered series into plain data.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: inner
+                .counters
+                .iter()
+                .map(|(k, c)| CounterSample {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    value: c.get(),
+                })
+                .collect(),
+            gauges: inner
+                .gauges
+                .iter()
+                .map(|(k, g)| GaugeSample {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    value: g.get(),
+                })
+                .collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, h)| HistogramSample {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    buckets: h.buckets(),
+                    count: h.count(),
+                    sum: h.sum(),
+                })
+                .collect(),
+            help: inner.help.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_bucket_boundaries() {
+        assert_eq!(log2_bucket(0, 8), 0);
+        assert_eq!(log2_bucket(1, 8), 0);
+        assert_eq!(log2_bucket(2, 8), 1);
+        assert_eq!(log2_bucket(3, 8), 1);
+        assert_eq!(log2_bucket(4, 8), 2);
+        assert_eq!(log2_bucket(u64::MAX, 8), 7); // saturates, never drops
+        assert_eq!(log2_bucket(u64::MAX, 64), 63); // full-width histogram
+    }
+
+    #[test]
+    fn hist_percentile_edge_cases() {
+        // Empty histogram: NaN, no panic.
+        assert!(hist_percentile(&[0, 0, 0], 0.5).is_nan());
+        // Single sample: every percentile lands inside its bucket.
+        let mut h = vec![0u64; 8];
+        h[log2_bucket(5, 8)] += 1;
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let p = hist_percentile(&h, q);
+            assert!((4.0..=8.0).contains(&p), "q={q} p={p}");
+        }
+        // Saturated last bucket of a 64-wide histogram must not overflow.
+        let mut h = vec![0u64; 64];
+        h[63] = 10;
+        let p = hist_percentile(&h, 0.5);
+        assert!(p.is_finite() && p > 0.0, "p={p}");
+    }
+
+    #[test]
+    fn handles_share_cells_and_labels_are_order_insensitive() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("c", &[("x", "1"), ("y", "2")]);
+        let b = reg.counter("c", &[("y", "2"), ("x", "1")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.len(), 1);
+        assert_eq!(snap.counter("c", &[("x", "1")]).unwrap().value, 3);
+    }
+
+    #[test]
+    fn gauge_add_and_set() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("g", &[]);
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1.0);
+        g.set(-2.5);
+        assert_eq!(g.get(), -2.5);
+    }
+
+    #[test]
+    fn histogram_counts_and_sum() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("h", &[], 8);
+        for v in [0, 1, 2, 3, 300] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 306);
+        let b = h.buckets();
+        assert_eq!(b[0], 2); // 0 and 1
+        assert_eq!(b[1], 2); // 2 and 3
+        assert_eq!(b[7], 1); // 300 clamps into the last bucket
+        assert!(h.percentile(0.5).is_finite());
+    }
+
+    #[test]
+    fn concurrent_increments_are_exact() {
+        let reg = std::sync::Arc::new(MetricsRegistry::new());
+        let n_threads = 8;
+        let per_thread = 10_000u64;
+        let mut joins = Vec::new();
+        for t in 0..n_threads {
+            let reg = reg.clone();
+            joins.push(std::thread::spawn(move || {
+                let c = reg.counter("hits", &[]);
+                let h = reg.histogram("lat", &[], 16);
+                let g = reg.gauge("depth", &[]);
+                for i in 0..per_thread {
+                    c.inc();
+                    h.observe(i % 1024);
+                    if i % 2 == 0 {
+                        g.inc();
+                    } else {
+                        g.dec();
+                    }
+                }
+                let _ = t;
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("hits", &[]).unwrap().value, n_threads * per_thread);
+        let h = snap.histogram("lat", &[]).unwrap();
+        assert_eq!(h.count, n_threads * per_thread);
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+        assert_eq!(snap.gauge("depth", &[]).unwrap().value, 0.0);
+    }
+}

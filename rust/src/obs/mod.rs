@@ -1,0 +1,48 @@
+//! Observability: metrics registry, compile-pass tracing and exposition.
+//!
+//! The telemetry substrate for the whole stack, built on `std` only (no
+//! external crates — CI lints that this module stays dependency-free):
+//!
+//! * [`metrics`] — a [`MetricsRegistry`] of named counters, gauges and
+//!   log2-bucket histograms with labels. Registration takes a mutex
+//!   once; every hot-path update is one relaxed atomic RMW, so the
+//!   serving workers pay nanoseconds per request.
+//! * [`report`] — structured compile telemetry: a [`CompileReport`]
+//!   chains timed [`PassReport`]s (`lower` → `simplify` → `dce`) with
+//!   op/plane deltas, is attached to every
+//!   [`CompiledFabric`](crate::fabric::CompiledFabric), and is persisted
+//!   as `*.report.json` next to `.nfab` artifacts.
+//! * [`trace`] — `NEURALUT_TRACE=1` turns on a hierarchical stderr span
+//!   log around the same passes.
+//! * [`expo`] — encoders from a [`MetricsSnapshot`] to Prometheus-style
+//!   text and to JSON (via [`util::json`](crate::util::json)); the CLI
+//!   `stats` subcommand and the benches print these.
+//!
+//! Quickstart — compile a model and print where the time and ops went:
+//!
+//! ```ignore
+//! use neuralut::fabric::{FabricOptions, Model};
+//!
+//! let model = Model::load("network.nlut".as_ref())?;
+//! let fabric = model.compile(&FabricOptions::new().backend("bitsliced"))?;
+//! // Per-pass wall time, op deltas and the final netlist shape:
+//! println!("{}", fabric.report());
+//!
+//! // Serve, then read the request-path metrics the same way:
+//! let server = fabric.serve();
+//! /* ... drive requests ... */
+//! let snap = server.metrics(); // queue-wait / batch-formation / execute
+//! println!("{}", neuralut::obs::expo::to_prometheus(&snap));
+//! println!("{}", neuralut::obs::expo::to_json(&snap).to_string());
+//! ```
+
+pub mod expo;
+pub mod metrics;
+pub mod report;
+pub mod trace;
+
+pub use metrics::{
+    hist_percentile, log2_bucket, Counter, CounterSample, Gauge, GaugeSample, Histogram,
+    HistogramSample, Labels, MetricsRegistry, MetricsSnapshot,
+};
+pub use report::{CompileReport, PassReport};

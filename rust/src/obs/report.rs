@@ -1,0 +1,324 @@
+//! Structured compile telemetry: what each lowering / optimization pass
+//! cost and what it removed, attached to every
+//! [`CompiledFabric`](crate::fabric::CompiledFabric) and persisted next
+//! to `.nfab` artifacts as `*.report.json`.
+//!
+//! A [`CompileReport`] is a chain of [`PassReport`]s — `lower`, then the
+//! optimizer's `simplify` and `dce` (which also packs planes at O2) —
+//! plus the final netlist shape. The chain is checkable:
+//! `passes[i].ops_before == passes[i-1].ops_after` and the last
+//! `ops_after` equals the executed op count, which is exactly the
+//! "O2 report ops == executed ops" invariant the test suite pins.
+
+use std::fmt;
+
+use crate::util::json::{obj, Json};
+
+use super::metrics::MetricsRegistry;
+
+/// One timed compile pass and its op-count delta.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PassReport {
+    /// Pass name (`lower`, `simplify`, `dce`).
+    pub name: String,
+    /// Wall time of the pass in seconds.
+    pub wall_s: f64,
+    /// Word-op count entering the pass (0 for `lower`: nothing exists yet).
+    pub ops_before: usize,
+    /// Word-op count leaving the pass.
+    pub ops_after: usize,
+    /// Input planes removed by interface compaction (dce at O2; 0 elsewhere).
+    pub planes_removed: usize,
+}
+
+impl PassReport {
+    /// Signed op delta: positive when the pass removed ops (`lower` is
+    /// negative — it creates the netlist).
+    pub fn ops_removed(&self) -> i64 {
+        self.ops_before as i64 - self.ops_after as i64
+    }
+
+    /// JSON object for persistence / bench rows.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("ops_before", Json::Num(self.ops_before as f64)),
+            ("ops_after", Json::Num(self.ops_after as f64)),
+            ("planes_removed", Json::Num(self.planes_removed as f64)),
+        ])
+    }
+
+    /// Parse one pass object (inverse of [`to_json`](Self::to_json)).
+    pub fn from_json(j: &Json) -> crate::Result<PassReport> {
+        Ok(PassReport {
+            name: j.get("name")?.as_str()?.to_string(),
+            wall_s: j.get("wall_s")?.as_f64()?,
+            ops_before: j.get("ops_before")?.as_usize()?,
+            ops_after: j.get("ops_after")?.as_usize()?,
+            planes_removed: j.get("planes_removed")?.as_usize()?,
+        })
+    }
+}
+
+/// Everything one compile did, with per-pass attribution. Obtained from
+/// [`CompiledFabric::report`](crate::fabric::CompiledFabric::report).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CompileReport {
+    /// Model name.
+    pub model: String,
+    /// Backend compiled (registry name).
+    pub backend: String,
+    /// Optimization level as text (`O0`/`O1`/`O2`).
+    pub opt_level: String,
+    /// End-to-end compile (or artifact load) wall time in seconds.
+    pub total_s: f64,
+    /// True when the program came from a `.nfab` fabric cache (per-pass
+    /// data is absent: nothing was lowered or optimized).
+    pub from_cache: bool,
+    /// Timed passes in execution order.
+    pub passes: Vec<PassReport>,
+    /// Final executed word-op count (0 for backends without a netlist).
+    pub ops: usize,
+    /// Final pipeline depth in levels.
+    pub levels: usize,
+    /// Widest input-plane interface across levels.
+    pub max_planes: usize,
+    /// Widest wire frame across levels.
+    pub max_wires: usize,
+}
+
+impl CompileReport {
+    /// Total ops removed by optimization: ops lowered minus ops kept.
+    pub fn ops_removed(&self) -> i64 {
+        match self.passes.first() {
+            Some(lower) => lower.ops_after as i64 - self.ops as i64,
+            None => 0,
+        }
+    }
+
+    /// Check the pass chain: deltas must connect (`ops_before` of each
+    /// pass equals `ops_after` of the previous) and the last pass must
+    /// land on the final op count. Errors name the broken link.
+    pub fn check(&self) -> Result<(), String> {
+        for (i, p) in self.passes.iter().enumerate() {
+            if !p.wall_s.is_finite() || p.wall_s < 0.0 {
+                return Err(format!("pass '{}' has bad wall time {}", p.name, p.wall_s));
+            }
+            if i > 0 {
+                let prev = &self.passes[i - 1];
+                if p.ops_before != prev.ops_after {
+                    return Err(format!(
+                        "pass chain broken: '{}' enters with {} ops but '{}' left {}",
+                        p.name, p.ops_before, prev.name, prev.ops_after
+                    ));
+                }
+            }
+        }
+        if let Some(last) = self.passes.last() {
+            if last.ops_after != self.ops {
+                return Err(format!(
+                    "last pass '{}' left {} ops but the report claims {}",
+                    last.name, last.ops_after, self.ops
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON object (persisted as the `.report.json` artifact sibling).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("opt_level", Json::Str(self.opt_level.clone())),
+            ("total_s", Json::Num(self.total_s)),
+            ("from_cache", Json::Bool(self.from_cache)),
+            (
+                "passes",
+                Json::Arr(self.passes.iter().map(|p| p.to_json()).collect()),
+            ),
+            ("ops", Json::Num(self.ops as f64)),
+            ("levels", Json::Num(self.levels as f64)),
+            ("max_planes", Json::Num(self.max_planes as f64)),
+            ("max_wires", Json::Num(self.max_wires as f64)),
+        ])
+    }
+
+    /// Parse a report back (inverse of [`to_json`](Self::to_json)).
+    pub fn from_json(j: &Json) -> crate::Result<CompileReport> {
+        Ok(CompileReport {
+            model: j.get("model")?.as_str()?.to_string(),
+            backend: j.get("backend")?.as_str()?.to_string(),
+            opt_level: j.get("opt_level")?.as_str()?.to_string(),
+            total_s: j.get("total_s")?.as_f64()?,
+            from_cache: j.get("from_cache")?.as_bool()?,
+            passes: j
+                .get("passes")?
+                .as_arr()?
+                .iter()
+                .map(PassReport::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            ops: j.get("ops")?.as_usize()?,
+            levels: j.get("levels")?.as_usize()?,
+            max_planes: j.get("max_planes")?.as_usize()?,
+            max_wires: j.get("max_wires")?.as_usize()?,
+        })
+    }
+
+    /// Export the report into a [`MetricsRegistry`] so the same numbers
+    /// ride the Prometheus text / JSON snapshot expositions:
+    /// `neuralut_compile_pass_seconds{pass=...}`,
+    /// `neuralut_compile_pass_ops_removed{pass=...}`, plus final-shape
+    /// gauges and a `neuralut_compile_info` series carrying the labels.
+    pub fn export(&self, reg: &MetricsRegistry) {
+        reg.describe("neuralut_compile_info", "compile identity (model/backend/opt level)");
+        reg.gauge(
+            "neuralut_compile_info",
+            &[
+                ("model", &self.model),
+                ("backend", &self.backend),
+                ("opt_level", &self.opt_level),
+            ],
+        )
+        .set(1.0);
+        reg.describe("neuralut_compile_total_seconds", "end-to-end compile wall time");
+        reg.gauge("neuralut_compile_total_seconds", &[]).set(self.total_s);
+        reg.gauge("neuralut_compile_from_cache", &[])
+            .set(if self.from_cache { 1.0 } else { 0.0 });
+        for p in &self.passes {
+            reg.gauge("neuralut_compile_pass_seconds", &[("pass", &p.name)]).set(p.wall_s);
+            reg.gauge("neuralut_compile_pass_ops_removed", &[("pass", &p.name)])
+                .set(p.ops_removed() as f64);
+        }
+        reg.describe("neuralut_compile_ops", "executed word ops after optimization");
+        reg.gauge("neuralut_compile_ops", &[]).set(self.ops as f64);
+        reg.gauge("neuralut_compile_levels", &[]).set(self.levels as f64);
+        reg.gauge("neuralut_compile_max_planes", &[]).set(self.max_planes as f64);
+        reg.gauge("neuralut_compile_max_wires", &[]).set(self.max_wires as f64);
+    }
+}
+
+impl fmt::Display for CompileReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "compile report: {} ({} at {}{})  total {:.3} ms",
+            self.model,
+            self.backend,
+            self.opt_level,
+            if self.from_cache { ", cached" } else { "" },
+            self.total_s * 1e3
+        )?;
+        if self.passes.is_empty() {
+            writeln!(f, "  passes : none (loaded precompiled program)")?;
+        } else {
+            writeln!(
+                f,
+                "  {:<10} {:>10} {:>10} {:>10} {:>8}",
+                "pass", "wall_ms", "ops_in", "ops_out", "removed"
+            )?;
+            for p in &self.passes {
+                writeln!(
+                    f,
+                    "  {:<10} {:>10.3} {:>10} {:>10} {:>8}",
+                    p.name,
+                    p.wall_s * 1e3,
+                    p.ops_before,
+                    p.ops_after,
+                    p.ops_removed()
+                )?;
+            }
+        }
+        write!(
+            f,
+            "  final  : {} word ops over {} levels (max {} planes, {} wires)",
+            self.ops, self.levels, self.max_planes, self.max_wires
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CompileReport {
+        CompileReport {
+            model: "m".into(),
+            backend: "bitsliced".into(),
+            opt_level: "O2".into(),
+            total_s: 0.25,
+            from_cache: false,
+            passes: vec![
+                PassReport {
+                    name: "lower".into(),
+                    wall_s: 0.2,
+                    ops_before: 0,
+                    ops_after: 100,
+                    planes_removed: 0,
+                },
+                PassReport {
+                    name: "simplify".into(),
+                    wall_s: 0.03,
+                    ops_before: 100,
+                    ops_after: 60,
+                    planes_removed: 0,
+                },
+                PassReport {
+                    name: "dce".into(),
+                    wall_s: 0.02,
+                    ops_before: 60,
+                    ops_after: 55,
+                    planes_removed: 7,
+                },
+            ],
+            ops: 55,
+            levels: 3,
+            max_planes: 12,
+            max_wires: 40,
+        }
+    }
+
+    #[test]
+    fn chain_check_and_removed() {
+        let r = sample();
+        r.check().unwrap();
+        assert_eq!(r.ops_removed(), 45);
+        let mut broken = r.clone();
+        broken.passes[2].ops_before = 61;
+        assert!(broken.check().unwrap_err().contains("chain broken"));
+        let mut off = r.clone();
+        off.ops = 54;
+        assert!(off.check().unwrap_err().contains("claims"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let back = CompileReport::from_json(&j).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn export_lands_in_registry() {
+        let reg = MetricsRegistry::new();
+        sample().export(&reg);
+        let snap = reg.snapshot();
+        assert_eq!(snap.gauge("neuralut_compile_ops", &[]).unwrap().value, 55.0);
+        let pass = snap
+            .gauge("neuralut_compile_pass_ops_removed", &[("pass", "simplify")])
+            .unwrap();
+        assert_eq!(pass.value, 40.0);
+        assert!(snap.gauge("neuralut_compile_info", &[("model", "m")]).is_some());
+    }
+
+    #[test]
+    fn display_mentions_every_pass() {
+        let text = sample().to_string();
+        for name in ["lower", "simplify", "dce"] {
+            assert!(text.contains(name), "{text}");
+        }
+        assert!(text.contains("55 word ops over 3 levels"), "{text}");
+    }
+}

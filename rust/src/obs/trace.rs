@@ -1,0 +1,103 @@
+//! `NEURALUT_TRACE` stderr span log: hierarchical wall-time spans around
+//! compile passes (and anything else worth timing), gated by one
+//! environment check per process.
+//!
+//! Set `NEURALUT_TRACE=1` (any non-empty value other than `0`) and every
+//! [`span`] prints one line to stderr when it closes:
+//!
+//! ```text
+//! neuralut-trace: compile/bitsliced 812.402 ms
+//! neuralut-trace:   lower 641.513 ms
+//! neuralut-trace:   opt/simplify 84.781 ms
+//! ```
+//!
+//! Spans nest per thread (the indent is a thread-local depth counter) and
+//! cost nothing when tracing is off: the guard holds no allocation and
+//! `Drop` is a no-op.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static ENABLED: OnceLock<bool> = OnceLock::new();
+
+thread_local! {
+    static DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Whether `NEURALUT_TRACE` enables the span log (checked once per
+/// process; empty or `0` means off).
+pub fn enabled() -> bool {
+    *ENABLED.get_or_init(|| {
+        std::env::var("NEURALUT_TRACE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// An open span; prints its duration to stderr on drop when tracing is
+/// enabled. Obtain one with [`span`].
+pub struct Span {
+    inner: Option<(String, Instant)>,
+}
+
+/// Open a timed span. When tracing is disabled this is free (no clock
+/// read, no allocation).
+pub fn span(name: &str) -> Span {
+    if !enabled() {
+        return Span { inner: None };
+    }
+    DEPTH.with(|d| d.set(d.get() + 1));
+    Span { inner: Some((name.to_string(), Instant::now())) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((name, started)) = self.inner.take() {
+            let depth = DEPTH.with(|d| {
+                let v = d.get();
+                d.set(v.saturating_sub(1));
+                v
+            });
+            eprintln!(
+                "{}",
+                format_line(depth.saturating_sub(1), &name, started.elapsed().as_secs_f64())
+            );
+        }
+    }
+}
+
+/// One `neuralut-trace:` line (separate from emission so the format is
+/// testable without touching process-global env state).
+pub(crate) fn format_line(depth: usize, name: &str, secs: f64) -> String {
+    format!(
+        "neuralut-trace: {:indent$}{name} {:.3} ms",
+        "",
+        secs * 1e3,
+        indent = depth * 2
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_format_is_stable() {
+        assert_eq!(format_line(0, "lower", 0.641513), "neuralut-trace: lower 641.513 ms");
+        assert_eq!(
+            format_line(2, "opt/dce", 0.0005),
+            "neuralut-trace:     opt/dce 0.500 ms"
+        );
+    }
+
+    #[test]
+    fn spans_are_safe_regardless_of_env() {
+        // Whatever NEURALUT_TRACE is set to in the test environment, the
+        // guard must nest and drop cleanly.
+        let outer = span("outer");
+        let inner = span("inner");
+        drop(inner);
+        drop(outer);
+    }
+}

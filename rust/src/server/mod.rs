@@ -21,11 +21,17 @@
 //! [`Client::infer_async`] paths wait for queue space instead. Shutdown is
 //! graceful: dropping the [`Server`] closes the queue (new submissions
 //! fail fast with [`ServerError::Stopped`]), workers drain and answer the
-//! backlog, then join. Serving counters — requests served/rejected,
-//! batch-size histogram, per-worker throughput, latency percentiles — are
-//! kept in lock-free atomics and snapshot via [`Server::stats`].
+//! backlog, then join. Serving counters live in a per-server
+//! [`MetricsRegistry`] of lock-free atomics (one relaxed RMW per event):
+//! requests served/rejected, batch-size histogram, per-worker throughput,
+//! queue-depth / in-flight gauges — and the end-to-end latency is
+//! decomposed per request into its **queue-wait** (enqueue→dequeue),
+//! **batch-formation** (dequeue→execute start) and **execute**
+//! (`run_batch`) stages, each a log2 histogram. [`Server::stats`]
+//! snapshots the familiar [`ServerStats`] view; [`Server::metrics`]
+//! exposes the raw registry snapshot for the Prometheus / JSON encoders
+//! in [`crate::obs::expo`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -36,6 +42,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::TomlDoc;
 use crate::engine::{BitNetlist, FabricProgram, InferenceBackend, OptLevel};
 use crate::fabric::{BackendRegistry, FabricTuning, DEFAULT_BACKEND};
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry, MetricsSnapshot};
 use crate::util::pool::{BoundedQueue, Pop, PushError};
 
 /// Upper bound on `workers` — more threads than this is a config bug.
@@ -238,103 +245,129 @@ const LAT_BUCKETS: usize = 32;
 /// Log2 batch-size buckets: bucket `i` covers sizes `[2^i, 2^{i+1})`.
 const BATCH_BUCKETS: usize = 16;
 
-fn log2_bucket(v: u64, n_buckets: usize) -> usize {
-    (63 - v.max(1).leading_zeros() as usize).min(n_buckets - 1)
-}
-
-/// Approximate percentile from a log2 histogram (linear interpolation
-/// inside the crossing bucket).
-fn hist_percentile(hist: &[u64], q: f64) -> f64 {
-    let total: u64 = hist.iter().sum();
-    if total == 0 {
-        return f64::NAN;
-    }
-    let rank = q * total as f64;
-    let mut cum = 0f64;
-    for (i, &c) in hist.iter().enumerate() {
-        if c == 0 {
-            continue;
-        }
-        let next = cum + c as f64;
-        if next >= rank {
-            let lo = (1u64 << i) as f64;
-            let hi = (1u64 << (i + 1)) as f64;
-            let frac = ((rank - cum) / c as f64).clamp(0.0, 1.0);
-            return lo + frac * (hi - lo);
-        }
-        cum = next;
-    }
-    (1u64 << hist.len().min(63)) as f64
-}
-
-/// Lock-free serving counters, written by workers and clients, snapshot
-/// on demand.
+/// Serving telemetry: typed handles into a per-server [`MetricsRegistry`]
+/// (`neuralut_server_*` metric family), written by workers and clients
+/// with one relaxed atomic RMW per event, snapshot on demand.
 struct StatsInner {
     started: Instant,
-    served: AtomicU64,
-    rejected: AtomicU64,
-    batches: AtomicU64,
-    batch_hist: Vec<AtomicU64>,
-    lat_hist: Vec<AtomicU64>,
-    per_worker: Vec<AtomicU64>,
+    registry: MetricsRegistry,
+    served: Counter,
+    rejected: Counter,
+    batches: Counter,
+    batch_hist: Histogram,
+    lat_hist: Histogram,
+    queue_wait: Histogram,
+    batch_form: Histogram,
+    execute: Histogram,
+    queue_depth: Gauge,
+    in_flight: Gauge,
+    per_worker: Vec<Counter>,
 }
 
 impl StatsInner {
     fn new(workers: usize) -> Self {
+        let registry = MetricsRegistry::new();
+        for (name, help) in [
+            ("neuralut_server_requests_served_total", "requests answered across all workers"),
+            ("neuralut_server_requests_rejected_total", "requests shed by try_infer backpressure"),
+            ("neuralut_server_batches_total", "fabric batches executed"),
+            ("neuralut_server_worker_served_total", "requests served per worker thread"),
+            ("neuralut_server_batch_size", "requests folded into one fabric batch"),
+            ("neuralut_server_latency_us", "end-to-end enqueue->reply latency, microseconds"),
+            ("neuralut_server_queue_wait_us", "enqueue->dequeue stage of the latency, microseconds"),
+            ("neuralut_server_batch_formation_us", "dequeue->execute-start stage of the latency, microseconds"),
+            ("neuralut_server_execute_us", "fabric run_batch stage of the latency, microseconds"),
+            ("neuralut_server_queue_depth", "requests waiting in the bounded queue"),
+            ("neuralut_server_in_flight", "requests accepted but not yet answered"),
+        ] {
+            registry.describe(name, help);
+        }
+        let per_worker = (0..workers)
+            .map(|w| {
+                let id = w.to_string();
+                registry.counter("neuralut_server_worker_served_total", &[("worker", &id)])
+            })
+            .collect();
         StatsInner {
             started: Instant::now(),
-            served: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batch_hist: (0..BATCH_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            lat_hist: (0..LAT_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            per_worker: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            served: registry.counter("neuralut_server_requests_served_total", &[]),
+            rejected: registry.counter("neuralut_server_requests_rejected_total", &[]),
+            batches: registry.counter("neuralut_server_batches_total", &[]),
+            batch_hist: registry.histogram("neuralut_server_batch_size", &[], BATCH_BUCKETS),
+            lat_hist: registry.histogram("neuralut_server_latency_us", &[], LAT_BUCKETS),
+            queue_wait: registry.histogram("neuralut_server_queue_wait_us", &[], LAT_BUCKETS),
+            batch_form: registry
+                .histogram("neuralut_server_batch_formation_us", &[], LAT_BUCKETS),
+            execute: registry.histogram("neuralut_server_execute_us", &[], LAT_BUCKETS),
+            queue_depth: registry.gauge("neuralut_server_queue_depth", &[]),
+            in_flight: registry.gauge("neuralut_server_in_flight", &[]),
+            per_worker,
+            registry,
         }
     }
 
-    fn record_batch(&self, worker: usize, size: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.served.fetch_add(size as u64, Ordering::Relaxed);
-        self.per_worker[worker].fetch_add(size as u64, Ordering::Relaxed);
-        self.batch_hist[log2_bucket(size as u64, BATCH_BUCKETS)]
-            .fetch_add(1, Ordering::Relaxed);
+    /// A request made it past backpressure into the queue.
+    fn record_accepted(&self) {
+        self.queue_depth.inc();
+        self.in_flight.inc();
     }
 
-    fn record_latency(&self, latency: Duration) {
-        let us = latency.as_micros() as u64;
-        self.lat_hist[log2_bucket(us, LAT_BUCKETS)].fetch_add(1, Ordering::Relaxed);
+    /// A worker pulled a request out of the queue after `waited`.
+    fn record_dequeued(&self, waited: Duration) {
+        self.queue_depth.dec();
+        self.queue_wait.observe(waited.as_micros() as u64);
+    }
+
+    fn record_batch(&self, worker: usize, size: usize) {
+        self.batches.inc();
+        self.served.add(size as u64);
+        self.per_worker[worker].add(size as u64);
+        self.batch_hist.observe(size as u64);
+    }
+
+    /// One request answered: its end-to-end latency plus the
+    /// batch-formation and execute stage shares.
+    fn record_served(&self, latency: Duration, formation: Duration, execute: Duration) {
+        self.lat_hist.observe(latency.as_micros() as u64);
+        self.batch_form.observe(formation.as_micros() as u64);
+        self.execute.observe(execute.as_micros() as u64);
+        self.in_flight.dec();
     }
 
     fn record_rejected(&self) {
-        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.rejected.inc();
     }
 
     fn snapshot(&self) -> ServerStats {
-        let served = self.served.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
+        let served = self.served.get();
+        let batches = self.batches.get();
         let uptime_s = self.started.elapsed().as_secs_f64();
-        let per_worker_served: Vec<u64> =
-            self.per_worker.iter().map(|a| a.load(Ordering::Relaxed)).collect();
-        let lat: Vec<u64> =
-            self.lat_hist.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let per_worker_served: Vec<u64> = self.per_worker.iter().map(|c| c.get()).collect();
         ServerStats {
             served,
-            rejected: self.rejected.load(Ordering::Relaxed),
+            rejected: self.rejected.get(),
             batches,
             mean_batch: served as f64 / batches.max(1) as f64,
-            batch_hist: self
-                .batch_hist
-                .iter()
-                .map(|a| a.load(Ordering::Relaxed))
-                .collect(),
+            batch_hist: self.batch_hist.buckets(),
             per_worker_rps: per_worker_served
                 .iter()
                 .map(|&s| s as f64 / uptime_s.max(1e-9))
                 .collect(),
             per_worker_served,
-            latency_p50_us: hist_percentile(&lat, 0.50),
-            latency_p95_us: hist_percentile(&lat, 0.95),
-            latency_p99_us: hist_percentile(&lat, 0.99),
+            latency_p50_us: self.lat_hist.percentile(0.50),
+            latency_p95_us: self.lat_hist.percentile(0.95),
+            latency_p99_us: self.lat_hist.percentile(0.99),
+            queue_wait_p50_us: self.queue_wait.percentile(0.50),
+            queue_wait_p95_us: self.queue_wait.percentile(0.95),
+            queue_wait_p99_us: self.queue_wait.percentile(0.99),
+            batch_form_p50_us: self.batch_form.percentile(0.50),
+            batch_form_p95_us: self.batch_form.percentile(0.95),
+            batch_form_p99_us: self.batch_form.percentile(0.99),
+            execute_p50_us: self.execute.percentile(0.50),
+            execute_p95_us: self.execute.percentile(0.95),
+            execute_p99_us: self.execute.percentile(0.99),
+            queue_depth: self.queue_depth.get() as i64,
+            in_flight: self.in_flight.get() as i64,
             uptime_s,
         }
     }
@@ -361,6 +394,23 @@ pub struct ServerStats {
     pub latency_p50_us: f64,
     pub latency_p95_us: f64,
     pub latency_p99_us: f64,
+    /// Queue-wait stage (enqueue→dequeue) percentiles, us.
+    pub queue_wait_p50_us: f64,
+    pub queue_wait_p95_us: f64,
+    pub queue_wait_p99_us: f64,
+    /// Batch-formation stage (dequeue→execute start) percentiles, us.
+    pub batch_form_p50_us: f64,
+    pub batch_form_p95_us: f64,
+    pub batch_form_p99_us: f64,
+    /// Execute stage (`run_batch`, shared by the whole batch) percentiles, us.
+    pub execute_p50_us: f64,
+    pub execute_p95_us: f64,
+    pub execute_p99_us: f64,
+    /// Requests waiting in the bounded queue right now (approximate:
+    /// client increments and worker decrements race benignly).
+    pub queue_depth: i64,
+    /// Requests accepted but not yet answered right now (approximate).
+    pub in_flight: i64,
     pub uptime_s: f64,
 }
 
@@ -418,6 +468,7 @@ impl Client {
             .queue
             .push(req)
             .map_err(|_| anyhow::Error::from(ServerError::Stopped))?;
+        self.shared.stats.record_accepted();
         Ok(rx)
     }
 
@@ -429,7 +480,10 @@ impl Client {
         self.check_features(&features)?;
         let (req, rx) = self.request(features);
         match self.shared.queue.try_push(req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                self.shared.stats.record_accepted();
+                Ok(rx)
+            }
             Err(PushError::Full(_)) => {
                 self.shared.stats.record_rejected();
                 Err(ServerError::Overloaded.into())
@@ -441,6 +495,11 @@ impl Client {
     /// Serving counters (shared with [`Server::stats`]).
     pub fn stats(&self) -> ServerStats {
         self.shared.stats.snapshot()
+    }
+
+    /// Raw metrics snapshot (shared with [`Server::metrics`]).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.stats.registry.snapshot()
     }
 }
 
@@ -502,6 +561,13 @@ impl Server {
         self.shared.stats.snapshot()
     }
 
+    /// Snapshot of the full `neuralut_server_*` metrics registry —
+    /// counters, gauges and the per-stage latency histograms — for the
+    /// exposition encoders in [`crate::obs::expo`].
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.stats.registry.snapshot()
+    }
+
     /// The lowered bit-netlist every worker shares (`None` for backends
     /// with nothing compiled to share, e.g. `scalar`).
     pub fn shared_program(&self) -> Option<Arc<BitNetlist>> {
@@ -528,16 +594,25 @@ fn worker_loop(
     loop {
         // Block for the first request of a batch; `None` = closed + drained.
         let Some(first) = shared.queue.pop() else { return };
+        let popped = Instant::now();
+        shared.stats.record_dequeued(popped.duration_since(first.enqueued));
         let in_sz = first.features.len();
-        let mut batch = vec![first];
-        let deadline = Instant::now() + window;
+        // Each request carries the instant it left the queue so its
+        // batch-formation share (dequeue → execute start) can be split
+        // out of the end-to-end latency below.
+        let mut batch = vec![(first, popped)];
+        let deadline = popped + window;
         while batch.len() < max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match shared.queue.pop_timeout(deadline - now) {
-                Pop::Item(r) => batch.push(r),
+                Pop::Item(r) => {
+                    let t = Instant::now();
+                    shared.stats.record_dequeued(t.duration_since(r.enqueued));
+                    batch.push((r, t));
+                }
                 // Closed: finish this batch; the outer pop() exits once
                 // the backlog is drained.
                 Pop::TimedOut | Pop::Closed => break,
@@ -545,15 +620,21 @@ fn worker_loop(
         }
         // One fabric run for the whole batch.
         let mut x = Vec::with_capacity(batch.len() * in_sz);
-        for r in &batch {
+        for (r, _) in &batch {
             x.extend_from_slice(&r.features);
         }
+        let exec_start = Instant::now();
         let result = backend.run_batch(&x);
+        let exec_time = exec_start.elapsed();
         let bs = batch.len();
         shared.stats.record_batch(worker, bs);
-        for (req, &pred) in batch.into_iter().zip(&result.predictions) {
+        for ((req, left_queue), &pred) in batch.into_iter().zip(&result.predictions) {
             let latency = req.enqueued.elapsed();
-            shared.stats.record_latency(latency);
+            shared.stats.record_served(
+                latency,
+                exec_start.duration_since(left_queue),
+                exec_time,
+            );
             let _ = req.reply.send(Reply {
                 prediction: pred,
                 latency,
@@ -781,8 +862,38 @@ mod tests {
         assert!(s.latency_p50_us.is_finite() && s.latency_p50_us > 0.0);
         assert!(s.latency_p99_us >= s.latency_p50_us);
         assert!(s.uptime_s > 0.0);
+        // The stage decomposition covers every served request, and the
+        // gauges settle back to zero once everything is answered.
+        assert!(s.queue_wait_p50_us.is_finite());
+        assert!(s.batch_form_p50_us.is_finite());
+        assert!(s.execute_p50_us.is_finite() && s.execute_p50_us > 0.0);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.in_flight, 0);
         // Client sees the same counters.
         assert_eq!(client.stats().served, 40);
+        // The raw registry snapshot exposes the same story for the
+        // exposition encoders, one histogram sample per request.
+        let snap = server.metrics();
+        assert_eq!(
+            snap.counter("neuralut_server_requests_served_total", &[]).unwrap().value,
+            40
+        );
+        for name in [
+            "neuralut_server_latency_us",
+            "neuralut_server_queue_wait_us",
+            "neuralut_server_batch_formation_us",
+            "neuralut_server_execute_us",
+        ] {
+            let h = snap.histogram(name, &[]).unwrap();
+            assert_eq!(h.count, 40, "{name}");
+        }
+        let w0 = snap
+            .counter("neuralut_server_worker_served_total", &[("worker", "0")])
+            .unwrap();
+        let w1 = snap
+            .counter("neuralut_server_worker_served_total", &[("worker", "1")])
+            .unwrap();
+        assert_eq!(w0.value + w1.value, 40);
     }
 
     #[test]
@@ -800,6 +911,9 @@ mod tests {
 
     #[test]
     fn log2_histogram_percentiles_are_sane() {
+        // The bucketing/percentile math now lives in `obs::metrics` —
+        // same semantics the serving runtime always had.
+        use crate::obs::{hist_percentile, log2_bucket};
         // 100 samples in bucket 3 ([8, 16)): every percentile lands there.
         let mut hist = vec![0u64; 8];
         hist[3] = 100;

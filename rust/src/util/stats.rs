@@ -32,7 +32,9 @@ pub fn summarize(xs: &[f64]) -> Summary {
     let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
         / (n.max(2) - 1) as f64;
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a stray NaN sample (e.g. a poisoned latency) sorts last
+    // instead of panicking the whole report.
+    sorted.sort_by(f64::total_cmp);
     Summary {
         n,
         mean,
@@ -45,12 +47,17 @@ pub fn summarize(xs: &[f64]) -> Summary {
     }
 }
 
-/// Linear-interpolated percentile of an ascending-sorted slice.
+/// Linear-interpolated percentile of an ascending-sorted slice. `pct` is
+/// clamped to `[0, 100]` (`pct` outside that range used to index out of
+/// bounds); a NaN `pct` yields NaN.
 pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
-    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    if pct.is_nan() {
+        return f64::NAN;
+    }
+    let rank = pct.clamp(0.0, 100.0) / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
@@ -95,6 +102,43 @@ mod tests {
 
     #[test]
     fn empty_summary_is_nan() {
-        assert!(summarize(&[]).mean.is_nan());
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+        assert!(s.std.is_nan());
+        assert!(s.min.is_nan());
+        assert!(s.p50.is_nan() && s.p95.is_nan() && s.p99.is_nan());
+    }
+
+    #[test]
+    fn single_sample_is_degenerate_but_finite() {
+        let s = summarize(&[7.5]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 7.5);
+        assert_eq!(s.std, 0.0, "one sample has no spread, not NaN");
+        assert_eq!((s.min, s.max), (7.5, 7.5));
+        assert_eq!((s.p50, s.p95, s.p99), (7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn percentile_extremes_and_out_of_range_are_clamped() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 4.0);
+        // Out-of-range percentiles clamp instead of indexing out of
+        // bounds (pct > 100 used to panic).
+        assert_eq!(percentile_sorted(&v, 150.0), 4.0);
+        assert_eq!(percentile_sorted(&v, -5.0), 1.0);
+        assert!(percentile_sorted(&v, f64::NAN).is_nan());
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+        // Single element: every percentile is that element.
+        assert_eq!(percentile_sorted(&[9.0], 99.0), 9.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_sort() {
+        let s = summarize(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0, "NaN sorts last under total_cmp");
     }
 }

@@ -1,0 +1,139 @@
+//! End-to-end observability tests: one compiled-and-served run must be
+//! answerable from telemetry alone — per-opt-pass timing and op deltas
+//! via the [`CompileReport`] (and its `.report.json` artifact sibling),
+//! stage-split request latencies via the `neuralut_server_*` metrics
+//! registry, with both surfaced through the Prometheus text and JSON
+//! expositions.
+
+use std::time::Duration;
+
+use neuralut::fabric::{CompileReport, CompiledFabric, FabricOptions, Model, OptLevel};
+use neuralut::luts::structured_network;
+use neuralut::obs::{expo, MetricsRegistry};
+use neuralut::util::json::Json;
+
+#[test]
+fn compile_report_is_coherent_and_matches_the_program() {
+    let model = Model::from_network(structured_network(7, 16, 2, &[16, 8, 4], 3, 2, 4));
+    let fabric = model
+        .compile(&FabricOptions::new().backend("bitsliced").opt_level(OptLevel::O2))
+        .unwrap();
+    let report = fabric.report();
+    report.check().unwrap();
+    assert!(!report.from_cache);
+    assert_eq!(report.backend, "bitsliced");
+    assert_eq!(report.opt_level, "O2");
+    let names: Vec<&str> = report.passes.iter().map(|p| p.name.as_str()).collect();
+    assert_eq!(names, ["lower", "simplify", "dce"]);
+    // `lower` creates the netlist (enters with nothing), the chain ends
+    // on the executed op count.
+    assert_eq!(report.passes[0].ops_before, 0);
+    assert_eq!(report.ops, fabric.num_word_ops().unwrap());
+    assert!(report.total_s >= 0.0);
+    assert!(report.levels > 0 && report.max_planes > 0 && report.max_wires > 0);
+    // O0 runs no optimizer passes; its report still chains.
+    let fabric_o0 = model
+        .compile(&FabricOptions::new().backend("bitsliced").opt_level(OptLevel::O0))
+        .unwrap();
+    fabric_o0.report().check().unwrap();
+    assert_eq!(fabric_o0.report().passes.len(), 1, "only `lower` at O0");
+}
+
+#[test]
+fn report_sidecar_round_trips_and_cache_hits_mark_from_cache() {
+    let dir = std::env::temp_dir().join(format!("neuralut_obs_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.nfab");
+    let model = Model::from_network(structured_network(9, 12, 2, &[8, 6, 3], 3, 2, 4));
+    let opts = FabricOptions::new().backend("bitsliced").opt_level(OptLevel::O2);
+
+    let first = model.compile_cached(&opts, &path).unwrap();
+    assert!(!first.report().from_cache);
+    // save() left the report as a JSON sibling of the .nfab artifact.
+    let sidecar = CompiledFabric::report_path(&path);
+    let text = std::fs::read_to_string(&sidecar).unwrap();
+    let parsed = CompileReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+    parsed.check().unwrap();
+    assert_eq!(parsed.ops, first.report().ops);
+    assert_eq!(parsed.passes.len(), first.report().passes.len());
+
+    // Second compile hits the .nfab cache: nothing lowered or optimized
+    // in this process, but the final shape is still reported.
+    let second = model.compile_cached(&opts, &path).unwrap();
+    assert!(second.report().from_cache);
+    assert!(second.report().passes.is_empty());
+    assert_eq!(second.report().ops, first.report().ops);
+    second.report().check().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_served_run_is_answerable_from_telemetry_alone() {
+    let model = Model::from_network(structured_network(5, 10, 2, &[8, 4], 3, 2, 4));
+    let fabric = model
+        .compile(
+            &FabricOptions::new()
+                .backend("bitsliced")
+                .opt_level(OptLevel::O2)
+                .workers(2)
+                .max_batch(16)
+                .batch_window(Duration::from_micros(100)),
+        )
+        .unwrap();
+    let server = fabric.serve();
+    let client = server.client();
+    let n_req = 32usize;
+    let mut pending = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let feats: Vec<f32> = (0..10).map(|j| ((i * 7 + j) % 13) as f32 / 13.0).collect();
+        pending.push(client.infer_async(feats).unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+
+    // Merge compile + runtime telemetry the way `neuralut stats` does.
+    let reg = MetricsRegistry::new();
+    fabric.report().export(&reg);
+    let mut snap = reg.snapshot();
+    snap.merge(server.metrics());
+
+    // Compile side: per-pass wall time and op delta, final shape.
+    for pass in ["lower", "simplify", "dce"] {
+        assert!(
+            snap.gauge("neuralut_compile_pass_seconds", &[("pass", pass)]).is_some(),
+            "missing pass gauge for {pass}"
+        );
+    }
+    assert_eq!(
+        snap.gauge("neuralut_compile_ops", &[]).unwrap().value,
+        fabric.num_word_ops().unwrap() as f64
+    );
+
+    // Runtime side: every request accounted for, all three latency
+    // stages (plus end-to-end) populated with sane percentiles.
+    assert_eq!(
+        snap.counter("neuralut_server_requests_served_total", &[]).unwrap().value,
+        n_req as u64
+    );
+    for name in [
+        "neuralut_server_latency_us",
+        "neuralut_server_queue_wait_us",
+        "neuralut_server_batch_formation_us",
+        "neuralut_server_execute_us",
+    ] {
+        let h = snap.histogram(name, &[]).unwrap();
+        assert_eq!(h.count, n_req as u64, "{name}");
+        assert!(h.percentile(0.50).is_finite(), "{name}");
+    }
+    assert_eq!(snap.gauge("neuralut_server_in_flight", &[]).unwrap().value, 0.0);
+
+    // Both expositions carry the merged registry.
+    let text = expo::to_prometheus(&snap);
+    assert!(text.contains("neuralut_compile_pass_seconds{pass=\"simplify\"}"), "{text}");
+    assert!(text.contains("neuralut_server_latency_us_bucket"), "{text}");
+    assert!(text.contains("neuralut_server_requests_served_total 32"), "{text}");
+    let json_text = expo::to_json(&snap).to_string();
+    let parsed = Json::parse(&json_text).unwrap();
+    assert!(!parsed.get("histograms").unwrap().as_arr().unwrap().is_empty());
+}

@@ -13,14 +13,21 @@ Two gate families:
       the *same run* (optimization must not cost wall-clock at run time).
       Quick-mode rows (NEURALUT_BENCH_QUICK, 0.15s windows on shared CI
       runners) relax this to a catastrophic-only 50% margin so scheduler
-      noise on an unrelated PR cannot turn CI red.
+      noise on an unrelated PR cannot turn CI red;
+    - every BENCH_compile_report.json entry: the pass chain is coherent
+      (passes[i].ops_before == passes[i-1].ops_after, last pass's
+      ops_after == the report's final op count == the engine row's
+      word_ops_o2, wall times finite and >= 0).
 
 * Baseline gates (armed per entry once BENCH_baseline.json carries a
   value > 0; entries at 0 are "not yet recorded" and skipped):
     - bitsliced throughput per case must be >= (1 - tolerance) x baseline
       (default tolerance 0.25, i.e. fail on a >25% regression);
     - O2 word ops per case must be <= (1 + tolerance) x baseline;
-    - server closed-loop bitsliced 4-worker throughput likewise.
+    - server closed-loop bitsliced 4-worker throughput likewise;
+    - server stage latencies (end-to-end p99 and the queue-wait /
+      batch-formation / execute stage p99s of the bitsliced 4-worker
+      drain) must stay <= (1 + tolerance) x baseline.
 
 To record/refresh the baseline, run the bench-smoke CI job (or the
 benches locally), then paste the snippet this script prints into
@@ -34,7 +41,11 @@ import sys
 
 ENGINE = "BENCH_engine.json"
 SERVER = "BENCH_server.json"
+REPORTS = "BENCH_compile_report.json"
 BASELINE = "BENCH_baseline.json"
+# Stage-latency ceilings gated against the baseline (p99s of the
+# bitsliced 4-worker drain); baseline key = f"saturation_bitsliced_4w_{k}".
+STAGE_KEYS = ("p99_us", "queue_wait_p99_us", "batch_form_p99_us", "execute_p99_us")
 MIN_TRAINED_REDUCTION = 0.10
 SAME_RUN_THROUGHPUT_MARGIN = 0.85
 # Quick-mode timing windows are too short to trust a tight margin on a
@@ -66,9 +77,51 @@ def load(path, required=True):
         return None
 
 
+def check_reports(report_rows, cases):
+    """Deterministic compile-report gates: chain coherence per case, and
+    agreement with the engine rows' O2 op counts."""
+    seen = set()
+    for entry in report_rows:
+        case, rep = entry.get("case", "?"), entry.get("report", {})
+        seen.add(case)
+        passes = rep.get("passes", [])
+        if not passes:
+            fail(f"compile report for {case} has no passes")
+            continue
+        chain_ok = True
+        for i, p in enumerate(passes):
+            wall = p.get("wall_s", -1.0)
+            if not (wall >= 0.0):  # catches NaN and negatives
+                fail(f"{case}: pass '{p.get('name')}' wall_s {wall!r} invalid")
+                chain_ok = False
+            if i > 0 and p["ops_before"] != passes[i - 1]["ops_after"]:
+                fail(
+                    f"{case}: pass chain broken at '{p.get('name')}' "
+                    f"({p['ops_before']} != {passes[i - 1]['ops_after']})"
+                )
+                chain_ok = False
+        final = passes[-1]["ops_after"]
+        if final != rep.get("ops"):
+            fail(f"{case}: last pass ops_after {final} != report ops {rep.get('ops')}")
+            chain_ok = False
+        row = cases.get(case)
+        if row is not None and final != row["word_ops_o2"]:
+            fail(
+                f"{case}: report final ops {final} != engine word_ops_o2 "
+                f"{row['word_ops_o2']:.0f}"
+            )
+            chain_ok = False
+        if chain_ok:
+            names = " -> ".join(p.get("name", "?") for p in passes)
+            ok(f"{case}: compile report chain {names} coherent ({final} ops)")
+    for case in sorted(set(cases) - seen):
+        fail(f"{case}: engine row has no compile report in {REPORTS}")
+
+
 def main():
     engine_rows = load(ENGINE)
     server_rows = load(SERVER)
+    report_rows = load(REPORTS)
     baseline = load(BASELINE) or {}
     tol = float(baseline.get("tolerance", 0.25))
 
@@ -147,6 +200,12 @@ def main():
                 else:
                     ok(f"{name}: O2 word ops {got:.0f} vs baseline {ceil:.0f}")
 
+    if report_rows is not None:
+        if not report_rows:
+            fail(f"{REPORTS} is empty — bench produced no compile reports")
+        else:
+            check_reports(report_rows, cases)
+
     if server_rows:
         sat = [
             r
@@ -169,6 +228,22 @@ def main():
             else:
                 ok(f"server: bitsliced 4-worker throughput {got:.0f} req/s "
                    f"(baseline {floor:.0f})")
+            # Stage-latency ceilings: armed once recorded, regression =
+            # latency growing past (1 + tol) x baseline.
+            for key in STAGE_KEYS:
+                got = sat[0].get(key)
+                if got is None:
+                    fail(f"server: saturation row is missing '{key}'")
+                    continue
+                ceil = float(baseline.get("server", {}).get(
+                    f"saturation_bitsliced_4w_{key}", 0))
+                if ceil > 0 and got > (1 + tol) * ceil:
+                    fail(
+                        f"server: {key} {got:.0f}us regressed >{tol:.0%} "
+                        f"vs baseline {ceil:.0f}us"
+                    )
+                else:
+                    ok(f"server: {key} {got:.0f}us (baseline {ceil:.0f}us)")
 
     # Print a paste-ready baseline snippet for arming/refreshing the gate.
     if engine_rows and sat:
@@ -182,7 +257,11 @@ def main():
                 for name, row in sorted(cases.items())
             },
             "server": {
-                "saturation_bitsliced_4w_served_per_s": round(sat[0]["served_per_s"])
+                "saturation_bitsliced_4w_served_per_s": round(sat[0]["served_per_s"]),
+                **{
+                    f"saturation_bitsliced_4w_{key}": round(sat[0].get(key, 0))
+                    for key in STAGE_KEYS
+                },
             },
         }
         print("\nto arm/refresh the gate, commit this as BENCH_baseline.json:")
