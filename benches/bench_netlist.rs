@@ -1,7 +1,7 @@
 //! Fabric inference throughput and compiled-netlist cost: the scalar
 //! backend (per-sample table lookups) vs the compiled bitsliced backend
-//! (64 samples per word) at every optimization level, across the paper's
-//! circuit scales.
+//! (64 samples per plane word; 128/256/512 for the x2/x4/x8 widths) at
+//! every optimization level, across the paper's circuit scales.
 //!
 //! The repro networks use trained-like tables (`luts::structured_network`
 //! — quantized clamped threshold functions, the redundancy profile real
@@ -18,6 +18,7 @@
 //! job summary tabulates.
 //! `NEURALUT_BENCH_QUICK=1` switches to a low-iteration smoke mode for CI.
 
+use neuralut::engine::{lane_backend_name, BitslicedProgram, LANE_WIDTHS};
 use neuralut::fabric::{FabricOptions, Model, OptLevel};
 use neuralut::luts::{random_network, structured_network};
 use neuralut::util::bench::bench;
@@ -149,6 +150,53 @@ fn main() {
         let scalar_sps = m_scalar.throughput.map(|(t, _)| t).unwrap_or(0.0);
         let o0_sps = m_o0.throughput.map(|(t, _)| t).unwrap_or(0.0);
         let o2_sps = m_o2.throughput.map(|(t, _)| t).unwrap_or(0.0);
+
+        // Per-width throughput over the *same* O2 netlist: re-widen the
+        // compiled program (no re-lowering) so the widths differ only in
+        // plane word format. x1 is the m_o2 run above.
+        let nl_o2 = fab_o2.bit_netlist().expect("bitsliced program").clone();
+        let mut width_sps: Vec<(String, Json)> = vec![(
+            "bitsliced".to_string(),
+            Json::Num(o2_sps),
+        )];
+        let mut best_wide = ("bitsliced", o2_sps);
+        for lanes in LANE_WIDTHS {
+            if lanes == 1 {
+                continue;
+            }
+            let wname = lane_backend_name(lanes).expect("registered width");
+            let exec = BitslicedProgram::from_netlist_wide(nl_o2.clone(), lanes)
+                .expect("valid width")
+                .executor();
+            let m_w = bench(
+                &format!("engine/{wname}-O2/batch4096/{name}"),
+                1,
+                min_time,
+                200,
+                Some((batch as f64, "samples")),
+                || {
+                    std::hint::black_box(exec.run_batch(&x));
+                },
+            );
+            let sps = m_w.throughput.map(|(t, _)| t).unwrap_or(0.0);
+            width_sps.push((wname.to_string(), Json::Num(sps)));
+            if sps > best_wide.1 {
+                best_wide = (wname, sps);
+            }
+        }
+        println!(
+            "   widths: {}  (best {} at {:.2}x of x1)",
+            width_sps
+                .iter()
+                .map(|(n, v)| format!(
+                    "{n} {:.0}/s",
+                    if let Json::Num(t) = v { *t } else { 0.0 }
+                ))
+                .collect::<Vec<_>>()
+                .join(", "),
+            best_wide.0,
+            best_wide.1 / o2_sps.max(1e-9)
+        );
         println!(
             "   speedup {:.2}x vs scalar (O0->O2: {:.0} -> {:.0} samples/s, {:+.1}%)",
             o2_sps / scalar_sps.max(1e-9),
@@ -173,6 +221,10 @@ fn main() {
             ("bitsliced_o0_samples_per_s", Json::Num(o0_sps)),
             ("bitsliced_samples_per_s", Json::Num(o2_sps)),
             ("speedup", Json::Num(o2_sps / scalar_sps.max(1e-9))),
+            (
+                "width_samples_per_s",
+                Json::Obj(width_sps.into_iter().collect()),
+            ),
         ]));
 
         if !quick {

@@ -20,6 +20,7 @@
 use std::time::{Duration, Instant};
 
 use neuralut::data::{Dataset, Workload};
+use neuralut::engine::{detect_lane_words, lane_backend_name};
 use neuralut::fabric::{FabricOptions, Model};
 use neuralut::luts::random_network;
 use neuralut::obs::{expo, MetricsSnapshot};
@@ -101,7 +102,15 @@ fn main() {
     let mut bits_1w = 0.0f64;
     let mut bits_4w = 0.0f64;
     let mut snap_4w: Option<MetricsSnapshot> = None;
-    for backend in ["scalar", "bitsliced"] {
+    // Sweep both built-in reference backends plus the widest plane
+    // format this CPU supports (a no-op extra leg on machines where the
+    // detector lands on plain `bitsliced`).
+    let widest = lane_backend_name(detect_lane_words()).expect("detected width is registered");
+    let mut backends = vec!["scalar", "bitsliced"];
+    if widest != "bitsliced" {
+        backends.push(widest);
+    }
+    for backend in backends {
         for workers in [1usize, 2, 4] {
             let opts = FabricOptions::new()
                 .backend(backend)

@@ -1,17 +1,40 @@
-//! Bitsliced execution of a compiled [`BitNetlist`]: 64 samples per word.
+//! Bitsliced execution of a compiled [`BitNetlist`]: SIMD-wide bit-plane
+//! evaluation, 64·N samples per block.
 //!
-//! A batch is cut into 64-sample blocks. Each block's quantized input
-//! codes are transposed into bit-planes (one `u64` per wire, lane `s` =
-//! sample `s` of the block), the levelized word-op program streams the
-//! planes through every circuit layer, and the logit planes are transposed
-//! back into per-sample signed codes. Every lane is independent, so a
-//! ragged tail block simply ignores its unused lanes.
+//! The plane word is `[u64; N]` with `N` ∈ {1, 2, 4, 8}, so one block
+//! evaluates 64·N samples at once (64 for the classic `u64` engine, up
+//! to 512 for `bitsliced-x8`). A batch is cut into blocks; each block's
+//! quantized input codes are transposed into bit-planes (sample `s` of
+//! the block lands in bit `s & 63` of word `s >> 6`), the levelized
+//! word-op program streams the planes through every circuit layer, and
+//! the logit planes are transposed back into per-sample signed codes.
+//! Every lane is independent, so a ragged tail block simply ignores its
+//! unused lanes.
 //!
-//! Hot loop: one fused mux per op — `dst = lo ^ (sel & (hi ^ lo))` — over
-//! a flat `u64` scratch buffer; no dispatch, no branches, working set =
-//! the program (streamed sequentially) + one plane buffer (L1-resident
-//! for paper-scale circuits). Blocks shard across threads with
-//! [`crate::util::pool`], mirroring the scalar simulator's batching.
+//! Hot loop: one fused mux per op — `dst = lo ^ (sel & (hi ^ lo))` —
+//! applied word-wise across the `N` lanes of the plane. The inner loop
+//! indexes fixed-size arrays element-by-element with no `unsafe`, which
+//! lets the compiler autovectorize it onto whatever vector width the
+//! target has (SSE2/NEON for x2, AVX2 for x4, AVX-512 for x8).
+//!
+//! Width selection: `N = 1` is always safe; wider planes divide the
+//! per-sample interpreter overhead (op decode, wire loads) by `N` but
+//! multiply live plane bytes by `N`, so on shallow nets where the
+//! input/output transpose dominates, or on nets whose working set
+//! already presses L2, wider is not automatically faster. The registry's
+//! `bitsliced-auto` alias resolves to [`detect_lane_words`]'s pick for
+//! the host CPU before anything is compiled or persisted.
+//!
+//! Batch execution is *level-blocked*: blocks are processed in
+//! super-blocks of up to [`MAX_LEVEL_BLOCK`] blocks sized so the live
+//! planes of the group fit a [`LEVEL_BLOCK_BUDGET`] cache budget, and
+//! within a super-block the levels run on the *outside* — one level's op
+//! list streams over every block of the group before the next level
+//! starts, so on deep nets with large programs the ops (the big stream)
+//! stay hot in L1/L2 across the group instead of being re-fetched per
+//! block. Large batches additionally shard groups of blocks across
+//! threads with [`crate::util::pool`]; every shard offset is derived
+//! from the engine's `LANES` constant, never a literal word width.
 
 use std::sync::Arc;
 
@@ -19,37 +42,114 @@ use crate::luts::LutNetwork;
 use crate::netlist::{quantize_input, SimResult};
 use crate::util::pool;
 
-use super::lower::{self, BitNetlist, W_INPUTS};
+use super::lower::{self, BitNetlist, Level, W_INPUTS};
 
-/// Batch size below which blocks run inline (thread spawn ~10 us doesn't
-/// amortize over a handful of 64-sample blocks).
-const PARALLEL_THRESHOLD: usize = 512;
+/// Block-count threshold at which `run_batch` shards across the worker
+/// pool (thread spawn ~10 us doesn't amortize over a handful of
+/// blocks). 8 blocks keeps the classic N = 1 cutover at batch 512 and
+/// scales it with the lane width, so a wide engine does not pay thread
+/// fan-out for a batch that fits a couple of its (larger) blocks.
+const PARALLEL_BLOCK_THRESHOLD: usize = 8;
 
-/// The compiled-fabric inference engine: a cheap executor over a shared,
+/// Cache budget (bytes) for the live planes of one level-blocked
+/// super-block — roughly half a typical per-core L2, leaving room for
+/// the op stream itself.
+const LEVEL_BLOCK_BUDGET: usize = 256 * 1024;
+
+/// Upper bound on blocks per super-block: past this the op stream is
+/// amortized well enough that a larger group only grows latency jitter.
+const MAX_LEVEL_BLOCK: usize = 8;
+
+/// Every lane width with a registered backend, narrowest first.
+pub const LANE_WIDTHS: [usize; 4] = [1, 2, 4, 8];
+
+/// Registry name of the bitsliced backend with `lanes` `u64` words per
+/// plane, or `None` if that width is not a supported instantiation.
+pub fn lane_backend_name(lanes: usize) -> Option<&'static str> {
+    match lanes {
+        1 => Some("bitsliced"),
+        2 => Some("bitsliced-x2"),
+        4 => Some("bitsliced-x4"),
+        8 => Some("bitsliced-x8"),
+        _ => None,
+    }
+}
+
+/// Default plane width (in `u64` words) for the host CPU, used to
+/// resolve the `bitsliced-auto` registry alias.
+///
+/// Policy: on x86_64 an AVX2 machine gets 4 words (one 256-bit vector
+/// per plane op); anything older gets 2 (SSE2 is baseline). aarch64
+/// gets 2 (NEON is 128-bit). Other targets fall back to 1. The 8-word
+/// engine is never auto-picked — 512-bit planes only win when the
+/// program is op-streaming-bound and the working set stays small, which
+/// is a case to opt into explicitly (`bitsliced-x8`) — but it is always
+/// registered and bit-exact.
+pub fn detect_lane_words() -> usize {
+    detect_lane_words_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_lane_words_impl() -> usize {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        4
+    } else {
+        2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_lane_words_impl() -> usize {
+    2
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_lane_words_impl() -> usize {
+    1
+}
+
+/// The compiled-fabric inference engine with `N` `u64` words per
+/// bit-plane (64·N samples per block): a cheap executor over a shared,
 /// compile-once program. The expensive artifact is the [`BitNetlist`]
-/// behind the `Arc` — N serving workers each hold their own
-/// `BitslicedEngine` but stream the *same* compiled program, so a server
-/// start runs the lowering pass exactly once regardless of worker count.
-pub struct BitslicedEngine {
+/// behind the `Arc` — N serving workers each hold their own executor
+/// but stream the *same* compiled program, so a server start runs the
+/// lowering pass exactly once regardless of worker count. All widths
+/// are bit-exact with each other and with the scalar simulator; they
+/// differ only in throughput.
+pub struct BitslicedEngineN<const N: usize> {
     nl: Arc<BitNetlist>,
+    /// Blocks per level-blocked super-block, derived from the program's
+    /// peak plane count and the cache budget at construction time.
+    level_block: usize,
 }
 
-/// Per-worker scratch: wire buffer + inter-level plane buffer.
-struct Scratch {
-    buf: Vec<u64>,
-    planes: Vec<u64>,
+/// The classic one-word engine (64 samples per block) — the default
+/// `bitsliced` backend.
+pub type BitslicedEngine = BitslicedEngineN<1>;
+
+/// Per-worker scratch: wire buffer + inter-level plane buffers, one
+/// `stride`-plane slot per block of a super-block.
+struct Scratch<const N: usize> {
+    buf: Vec<[u64; N]>,
+    planes: Vec<[u64; N]>,
+    stride: usize,
 }
 
-impl Scratch {
-    fn new(nl: &BitNetlist) -> Self {
+impl<const N: usize> Scratch<N> {
+    fn new(nl: &BitNetlist, level_block: usize) -> Self {
+        let stride = nl.max_planes.max(1);
         Scratch {
-            buf: vec![0u64; nl.max_wires],
-            planes: vec![0u64; nl.max_planes.max(1)],
+            buf: vec![[0u64; N]; nl.max_wires],
+            planes: vec![[0u64; N]; stride * level_block],
+            stride,
         }
     }
 }
 
-impl BitslicedEngine {
+impl<const N: usize> BitslicedEngineN<N> {
+    /// Samples evaluated per block: 64 per plane word.
+    pub const LANES: usize = 64 * N;
+
     /// Compile a network — lowering pass plus the default-level
     /// [`opt`](super::opt) pipeline; see [`lower::lower`] for the
     /// conditions under which compilation fails.
@@ -65,7 +165,9 @@ impl BitslicedEngine {
     /// invariants (the evaluator indexes scratch buffers with them).
     pub fn from_program(nl: Arc<BitNetlist>) -> Self {
         nl.debug_check();
-        BitslicedEngine { nl }
+        let plane_bytes = nl.max_planes.max(1) * N * 8;
+        let level_block = (LEVEL_BLOCK_BUDGET / plane_bytes).clamp(1, MAX_LEVEL_BLOCK);
+        BitslicedEngineN { nl, level_block }
     }
 
     /// The shared compiled program this executor streams.
@@ -78,6 +180,11 @@ impl BitslicedEngine {
         &self.nl
     }
 
+    /// Plane width in `u64` words.
+    pub fn lanes(&self) -> usize {
+        N
+    }
+
     /// Pipeline latency in cycles — same fabric model as the scalar
     /// simulator: one cycle per L-LUT layer.
     pub fn latency_cycles(&self) -> usize {
@@ -86,116 +193,182 @@ impl BitslicedEngine {
 
     /// Run a batch of raw feature rows (`[batch * input_size]` floats in
     /// [0, 1]); bit-exact against `netlist::Simulator::simulate_batch`.
+    /// Shards blocks across the worker pool when the batch spans at
+    /// least [`PARALLEL_BLOCK_THRESHOLD`] blocks.
     pub fn run_batch(&self, x: &[f32]) -> SimResult {
         let in_sz = self.nl.input_size;
         assert_eq!(x.len() % in_sz, 0, "ragged batch");
         let batch = x.len() / in_sz;
+        let n_blocks = batch.div_ceil(Self::LANES);
+        if n_blocks >= PARALLEL_BLOCK_THRESHOLD {
+            return self.run_batch_sharded(x, pool::num_threads());
+        }
         let n_class = self.nl.n_class;
         let mut logit_codes = vec![0i16; batch * n_class];
-        let n_blocks = batch.div_ceil(64);
-
-        if batch < PARALLEL_THRESHOLD {
-            let mut scratch = Scratch::new(&self.nl);
-            for block in 0..n_blocks {
-                let lanes = 64.min(batch - block * 64);
-                let lo = block * 64 * n_class;
-                self.run_block(x, block, lanes, &mut scratch,
-                               &mut logit_codes[lo..lo + lanes * n_class]);
-            }
-        } else {
-            let shards = pool::parallel_ranges(
-                n_blocks,
-                pool::num_threads(),
-                |_, range| {
-                    if range.is_empty() {
-                        return (0, Vec::new());
-                    }
-                    let mut scratch = Scratch::new(&self.nl);
-                    let first = range.start * 64;
-                    let n = batch.min(range.end * 64) - first;
-                    let mut out = vec![0i16; n * n_class];
-                    for block in range {
-                        let lanes = 64.min(batch - block * 64);
-                        let lo = (block * 64 - first) * n_class;
-                        self.run_block(x, block, lanes, &mut scratch,
-                                       &mut out[lo..lo + lanes * n_class]);
-                    }
-                    (first, out)
-                },
-            );
-            for (first, shard) in shards {
-                logit_codes[first * n_class..first * n_class + shard.len()]
-                    .copy_from_slice(&shard);
-            }
-        }
-
+        let mut scratch = Scratch::new(&self.nl, self.level_block);
+        self.run_blocks(x, 0..n_blocks, batch, &mut scratch, &mut logit_codes);
         SimResult::from_logit_codes(logit_codes, n_class, self.latency_cycles())
     }
 
-    /// Evaluate one 64-sample block into `out` (`lanes * n_class` codes).
-    fn run_block(&self, x: &[f32], block: usize, lanes: usize,
-                 scratch: &mut Scratch, out: &mut [i16]) {
-        let nl = &self.nl;
-        let in_sz = nl.input_size;
-        let in_bits = nl.input_bits;
-        let planes = &mut scratch.planes;
-        let buf = &mut scratch.buf;
+    /// Run a batch through the sharded path with an explicit worker
+    /// count. Deterministic: shard boundaries depend only on the batch
+    /// size, the engine's `LANES`, and `workers`, and every shard writes
+    /// a disjoint output range — results are bit-identical to
+    /// [`Self::run_batch`] for any worker count. Public so tests can pin
+    /// shard-boundary behavior without manufacturing huge batches.
+    pub fn run_batch_sharded(&self, x: &[f32], workers: usize) -> SimResult {
+        let in_sz = self.nl.input_size;
+        assert_eq!(x.len() % in_sz, 0, "ragged batch");
+        let batch = x.len() / in_sz;
+        let n_class = self.nl.n_class;
+        let n_blocks = batch.div_ceil(Self::LANES);
+        let mut logit_codes = vec![0i16; batch * n_class];
+        let shards = pool::parallel_ranges(n_blocks, workers, |_, range| {
+            if range.is_empty() {
+                return (0, Vec::new());
+            }
+            let mut scratch = Scratch::new(&self.nl, self.level_block);
+            let first = range.start * Self::LANES;
+            let n = batch.min(range.end * Self::LANES) - first;
+            let mut out = vec![0i16; n * n_class];
+            self.run_blocks(x, range, batch, &mut scratch, &mut out);
+            (first, out)
+        });
+        for (first, shard) in shards {
+            logit_codes[first * n_class..first * n_class + shard.len()]
+                .copy_from_slice(&shard);
+        }
+        SimResult::from_logit_codes(logit_codes, n_class, self.latency_cycles())
+    }
 
-        // Transpose: quantized input codes -> bit-planes.
-        let n_in_planes = in_sz * in_bits;
-        planes[..n_in_planes].fill(0);
+    /// Evaluate a contiguous range of blocks into `out`, which covers
+    /// samples `blocks.start * LANES .. min(batch, blocks.end * LANES)`.
+    ///
+    /// Blocks are grouped into super-blocks of up to `self.level_block`
+    /// blocks; within a group, all inputs are transposed in first, then
+    /// each level's op list streams across every block of the group
+    /// (levels outer, blocks inner — the op stream stays cache-hot),
+    /// then all outputs transpose back out.
+    fn run_blocks(
+        &self,
+        x: &[f32],
+        blocks: std::ops::Range<usize>,
+        batch: usize,
+        scratch: &mut Scratch<N>,
+        out: &mut [i16],
+    ) {
+        let n_class = self.nl.n_class;
+        let base_sample = blocks.start * Self::LANES;
+        let stride = scratch.stride;
+        let planes_all = &mut scratch.planes;
+        let buf = &mut scratch.buf;
+        let mut b0 = blocks.start;
+        while b0 < blocks.end {
+            let group = self.level_block.min(blocks.end - b0);
+            for g in 0..group {
+                let block = b0 + g;
+                let lanes = Self::LANES.min(batch - block * Self::LANES);
+                self.transpose_in(x, block, lanes, &mut planes_all[g * stride..]);
+            }
+            for level in &self.nl.levels {
+                for g in 0..group {
+                    run_level::<N>(level, &mut planes_all[g * stride..], buf);
+                }
+            }
+            for g in 0..group {
+                let block = b0 + g;
+                let lanes = Self::LANES.min(batch - block * Self::LANES);
+                let lo = (block * Self::LANES - base_sample) * n_class;
+                self.transpose_out(
+                    &planes_all[g * stride..],
+                    lanes,
+                    &mut out[lo..lo + lanes * n_class],
+                );
+            }
+            b0 += group;
+        }
+    }
+
+    /// Transpose: quantized input codes of one block -> bit-planes.
+    /// Sample `s` of the block lands in bit `s & 63` of word `s >> 6`.
+    fn transpose_in(&self, x: &[f32], block: usize, lanes: usize, planes: &mut [[u64; N]]) {
+        let in_sz = self.nl.input_size;
+        let in_bits = self.nl.input_bits;
+        planes[..in_sz * in_bits].fill([0u64; N]);
         for s in 0..lanes {
-            let row = &x[(block * 64 + s) * in_sz..(block * 64 + s + 1) * in_sz];
-            let lane_bit = 1u64 << s;
+            let sample = block * Self::LANES + s;
+            let row = &x[sample * in_sz..(sample + 1) * in_sz];
+            let word = s >> 6;
+            let lane_bit = 1u64 << (s & 63);
             for (i, &v) in row.iter().enumerate() {
                 let mut code = quantize_input(v, in_bits);
                 let mut b = 0usize;
                 while code != 0 {
                     if code & 1 == 1 {
-                        planes[i * in_bits + b] |= lane_bit;
+                        planes[i * in_bits + b][word] |= lane_bit;
                     }
                     code >>= 1;
                     b += 1;
                 }
             }
         }
+    }
 
-        // Stream the levelized program.
-        buf[0] = 0;
-        buf[1] = !0u64;
-        for level in &nl.levels {
-            let base = W_INPUTS as usize;
-            buf[base..base + level.n_in_planes]
-                .copy_from_slice(&planes[..level.n_in_planes]);
-            for op in &level.ops {
-                let h = buf[op.hi as usize];
-                let l = buf[op.lo as usize];
-                buf[op.dst as usize] = l ^ (buf[op.sel as usize] & (h ^ l));
-            }
-            for (p, &w) in level.outputs.iter().enumerate() {
-                planes[p] = buf[w as usize];
-            }
-        }
-
-        // Transpose back: logit bit-planes -> per-sample signed codes.
-        let lb = nl.logit_bits;
+    /// Transpose back: logit bit-planes of one block -> per-sample
+    /// signed codes (`lanes * n_class` entries of `out`).
+    fn transpose_out(&self, planes: &[[u64; N]], lanes: usize, out: &mut [i16]) {
+        let lb = self.nl.logit_bits;
+        let n_class = self.nl.n_class;
         let shift = 16 - lb as u32;
-        for c in 0..nl.n_class {
-            let mut raw = [0u16; 64];
-            for b in 0..lb {
-                let word = planes[c * lb + b];
-                for (s, r) in raw.iter_mut().enumerate().take(lanes) {
-                    *r |= (((word >> s) & 1) as u16) << b;
+        for c in 0..n_class {
+            for w in 0..N {
+                let lo_s = w * 64;
+                if lo_s >= lanes {
+                    break;
+                }
+                let n_here = 64.min(lanes - lo_s);
+                let mut raw = [0u16; 64];
+                for b in 0..lb {
+                    let word = planes[c * lb + b][w];
+                    for (s, r) in raw.iter_mut().enumerate().take(n_here) {
+                        *r |= (((word >> s) & 1) as u16) << b;
+                    }
+                }
+                for (s, &r) in raw.iter().enumerate().take(n_here) {
+                    out[(lo_s + s) * n_class + c] = if self.nl.signed_logits {
+                        ((r << shift) as i16) >> shift
+                    } else {
+                        r as i16
+                    };
                 }
             }
-            for (s, &r) in raw.iter().enumerate().take(lanes) {
-                out[s * nl.n_class + c] = if nl.signed_logits {
-                    ((r << shift) as i16) >> shift
-                } else {
-                    r as i16
-                };
-            }
         }
+    }
+}
+
+/// Stream one level's op list over a single block's planes. `buf` is the
+/// wire file: wire 0 = all-zeros, wire 1 = all-ones, then the level's
+/// input planes, then one wire per op in order. Levelized SSA guarantees
+/// ops only read wires defined earlier in the same level, so nothing
+/// stale from a previously-streamed block or level can leak in.
+#[inline]
+fn run_level<const N: usize>(level: &Level, planes: &mut [[u64; N]], buf: &mut [[u64; N]]) {
+    buf[0] = [0u64; N];
+    buf[1] = [!0u64; N];
+    let base = W_INPUTS as usize;
+    buf[base..base + level.n_in_planes].copy_from_slice(&planes[..level.n_in_planes]);
+    for op in &level.ops {
+        let hv = buf[op.hi as usize];
+        let lv = buf[op.lo as usize];
+        let sv = buf[op.sel as usize];
+        let mut dv = [0u64; N];
+        for j in 0..N {
+            dv[j] = lv[j] ^ (sv[j] & (hv[j] ^ lv[j]));
+        }
+        buf[op.dst as usize] = dv;
+    }
+    for (p, &w) in level.outputs.iter().enumerate() {
+        planes[p] = buf[w as usize];
     }
 }
 
@@ -222,6 +395,21 @@ mod tests {
         assert_eq!(a.total_cycles, b.total_cycles);
     }
 
+    fn assert_matches_scalar_wide<const N: usize>(seed: u64, batches: &[usize]) {
+        let net = random_network(seed, 9, 2, &[10, 6, 4], 3, 2, 4);
+        let sim = Simulator::new(&net);
+        let eng = BitslicedEngineN::<N>::compile(&net).unwrap();
+        for &batch in batches {
+            let x: Vec<f32> = (0..batch * 9)
+                .map(|i| ((i * 29 + 5) % 97) as f32 / 97.0)
+                .collect();
+            let a = sim.simulate_batch(&x);
+            let b = eng.run_batch(&x);
+            assert_eq!(a.logit_codes, b.logit_codes, "N {N} seed {seed} batch {batch}");
+            assert_eq!(a.predictions, b.predictions, "N {N} seed {seed} batch {batch}");
+        }
+    }
+
     #[test]
     fn matches_scalar_on_single_sample() {
         assert_matches_scalar(3, 12, 2, &[8, 4], 3, 2, 1);
@@ -245,11 +433,65 @@ mod tests {
     }
 
     #[test]
+    fn wide_planes_match_scalar_on_boundary_batches() {
+        // Every registered width × batches straddling each width's block
+        // boundary (and the super-block grouping on the larger ones).
+        let batches = [1usize, 63, 64, 65, 127, 128, 129, 255, 257, 511, 513];
+        assert_matches_scalar_wide::<1>(10, &batches);
+        assert_matches_scalar_wide::<2>(10, &batches);
+        assert_matches_scalar_wide::<4>(10, &batches);
+        assert_matches_scalar_wide::<8>(10, &batches);
+    }
+
+    #[test]
+    fn sharded_path_is_bit_exact_at_every_shard_boundary() {
+        // Regression pin for the shard-offset arithmetic: ragged tails
+        // that straddle shard boundaries must land at the right output
+        // offsets for any worker count, on the narrow and wide engines.
+        let net = random_network(11, 7, 2, &[8, 4], 3, 2, 4);
+        let sim = Simulator::new(&net);
+        let e1 = BitslicedEngineN::<1>::compile(&net).unwrap();
+        let e4 = BitslicedEngineN::<4>::compile(&net).unwrap();
+        for batch in [63usize, 64, 65, 127, 129, 255, 257, 513, 1000] {
+            let x: Vec<f32> = (0..batch * 7)
+                .map(|i| ((i * 13 + 3) % 61) as f32 / 61.0)
+                .collect();
+            let want = sim.simulate_batch(&x);
+            for workers in [1usize, 2, 8] {
+                let got = e1.run_batch_sharded(&x, workers);
+                assert_eq!(got.logit_codes, want.logit_codes,
+                           "x1 batch {batch} workers {workers}");
+                let got = e4.run_batch_sharded(&x, workers);
+                assert_eq!(got.logit_codes, want.logit_codes,
+                           "x4 batch {batch} workers {workers}");
+            }
+        }
+    }
+
+    #[test]
     fn empty_batch_is_well_formed() {
         let net = random_network(7, 6, 2, &[4, 2], 2, 2, 4);
         let eng = BitslicedEngine::compile(&net).unwrap();
         let r = eng.run_batch(&[]);
         assert!(r.predictions.is_empty() && r.logit_codes.is_empty());
+    }
+
+    #[test]
+    fn detected_lane_width_is_a_registered_width() {
+        let lanes = detect_lane_words();
+        assert!(LANE_WIDTHS.contains(&lanes), "detected {lanes}");
+        assert!(lane_backend_name(lanes).is_some());
+    }
+
+    #[test]
+    fn lanes_constant_and_accessors_are_consistent() {
+        let net = random_network(9, 8, 2, &[6, 3], 3, 2, 4);
+        let e = BitslicedEngineN::<2>::compile(&net).unwrap();
+        assert_eq!(e.lanes(), 2);
+        assert_eq!(BitslicedEngineN::<2>::LANES, 128);
+        assert_eq!(BitslicedEngine::LANES, 64);
+        assert!(lane_backend_name(3).is_none());
+        assert_eq!(lane_backend_name(8), Some("bitsliced-x8"));
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! word ops, the [`opt`] pass pipeline then sweeps it like a synthesis
 //! flow would (constant folding, cross-level CSE, dead-wire elimination,
 //! plane compaction — [`OptLevel`] picks how hard) — and then evaluates
-//! it bitsliced: 64 independent samples packed per `u64`, batch
-//! inference as word-wide AND/OR/XOR streaming ([`BitslicedEngine`]).
+//! it bitsliced: 64·N independent samples packed per `[u64; N]` plane
+//! (N ∈ {1, 2, 4, 8}), batch inference as word-wide AND/OR/XOR streaming
+//! ([`BitslicedEngineN`], with [`BitslicedEngine`] the classic N = 1).
 //!
 //! Two traits split the execution contract along the compile/run seam:
 //!
@@ -28,26 +29,36 @@
 //!
 //! Backends are selected *by name* through the
 //! [`BackendRegistry`](crate::fabric::BackendRegistry); `scalar`
-//! ([`ScalarProgram`]) and `bitsliced` ([`BitslicedProgram`]) are the
-//! registered built-ins. Nothing in this module enumerates backends — a
-//! new execution strategy is a registry entry, not a cross-crate surgery.
+//! ([`ScalarProgram`]) and the `bitsliced` width family
+//! (`bitsliced`, `bitsliced-x2`, `bitsliced-x4`, `bitsliced-x8` — all
+//! [`BitslicedProgram`]s differing only in plane width) are the
+//! registered built-ins, plus the `bitsliced-auto` alias that resolves
+//! to [`detect_lane_words`]'s pick for the host CPU. Nothing in this
+//! module enumerates backends — a new execution strategy is a registry
+//! entry, not a cross-crate surgery.
 //!
 //! Picking a backend: `scalar` has zero compile cost and wins on tiny
-//! batches and very wide tables; `bitsliced` pays one lowering pass per
-//! network and wins on batch workloads, increasingly so the more
+//! batches and very wide tables; the `bitsliced` widths pay one lowering
+//! pass per network and win on batch workloads, increasingly so the more
 //! structure (small support, shared logic, low fan-in × bit-width) the
-//! trained tables carry.
+//! trained tables carry. Wider planes divide interpreter overhead per
+//! sample but grow the cache working set — see [`bitslice`] for the
+//! trade-off and the auto-detection policy.
 
 pub mod bitslice;
 pub mod lower;
 pub mod opt;
 
-pub use bitslice::BitslicedEngine;
+pub use bitslice::{
+    detect_lane_words, lane_backend_name, BitslicedEngine, BitslicedEngineN, LANE_WIDTHS,
+};
 pub use lower::{BitNetlist, Level, MuxOp};
 pub use opt::{optimize, OptLevel, OptReport};
 
 use std::sync::Arc;
 use std::time::Instant;
+
+use anyhow::bail;
 
 use crate::luts::LutNetwork;
 use crate::netlist::{ScalarPlan, SimResult, Simulator};
@@ -104,6 +115,14 @@ pub trait FabricProgram: Send + Sync {
     fn pass_reports(&self) -> &[PassReport] {
         &[]
     }
+
+    /// Plane width in `u64` words for word-parallel backends (64 samples
+    /// per word per block), `None` for backends without a plane word.
+    /// Persisted into `.nfab` artifacts so an artifact is never replayed
+    /// by an executor with a different word format.
+    fn plane_lanes(&self) -> Option<usize> {
+        None
+    }
 }
 
 impl<'a> InferenceBackend for Simulator<'a> {
@@ -120,17 +139,19 @@ impl<'a> InferenceBackend for Simulator<'a> {
     }
 }
 
-impl InferenceBackend for BitslicedEngine {
+impl<const N: usize> InferenceBackend for BitslicedEngineN<N> {
     fn name(&self) -> &'static str {
-        "bitsliced"
+        // Registered widths get their registry name; an ad-hoc
+        // instantiation at another width reports the generic family.
+        lane_backend_name(N).unwrap_or("bitsliced-wide")
     }
 
     fn latency_cycles(&self) -> usize {
-        BitslicedEngine::latency_cycles(self)
+        BitslicedEngineN::latency_cycles(self)
     }
 
     fn run_batch(&self, x: &[f32]) -> SimResult {
-        BitslicedEngine::run_batch(self, x)
+        BitslicedEngineN::run_batch(self, x)
     }
 }
 
@@ -191,16 +212,28 @@ impl FabricProgram for ScalarProgram {
     }
 }
 
-/// The `bitsliced` built-in's compile-once artifact: the lowered,
-/// levelized word-op program every executor streams.
+/// The `bitsliced` width family's compile-once artifact: the lowered,
+/// levelized word-op program every executor streams, plus the plane
+/// width its executors run at. The program itself is width-agnostic —
+/// only the executors are monomorphized per width — so the same
+/// `Arc<BitNetlist>` can back programs of every lane count.
 pub struct BitslicedProgram {
     program: Arc<BitNetlist>,
     passes: Vec<PassReport>,
+    lanes: usize,
+}
+
+fn check_lanes(lanes: usize) -> crate::Result<()> {
+    if lane_backend_name(lanes).is_none() {
+        bail!("unsupported plane lane width {lanes} (supported: 1, 2, 4, 8)");
+    }
+    Ok(())
 }
 
 impl BitslicedProgram {
-    /// Run the lowering pass once at the default [`OptLevel`]. Fails on
-    /// networks the pass rejects (e.g. signed codes on a non-final layer).
+    /// Run the lowering pass once at the default [`OptLevel`], one-word
+    /// planes. Fails on networks the pass rejects (e.g. signed codes on
+    /// a non-final layer).
     pub fn compile(net: &LutNetwork) -> crate::Result<Self> {
         Self::compile_opt(net, OptLevel::default())
     }
@@ -224,19 +257,51 @@ impl BitslicedProgram {
         }];
         let (_, opt_passes) = opt::optimize_traced(&mut nl, level);
         passes.extend(opt_passes);
-        Ok(BitslicedProgram { program: Arc::new(nl), passes })
+        Ok(BitslicedProgram { program: Arc::new(nl), passes, lanes: 1 })
+    }
+
+    /// [`Self::compile_opt`] with an explicit plane width in `u64` words
+    /// — the registry factory for the `bitsliced-x2/x4/x8` entries.
+    /// Rejects widths without a registered engine instantiation.
+    pub fn compile_opt_wide(net: &LutNetwork, level: OptLevel, lanes: usize)
+                            -> crate::Result<Self> {
+        check_lanes(lanes)?;
+        let mut this = Self::compile_opt(net, level)?;
+        this.lanes = lanes;
+        Ok(this)
     }
 
     /// Wrap an already-lowered (and possibly persisted-and-reloaded)
-    /// program. No passes ran here, so the pass telemetry is empty.
+    /// program, one-word planes. No passes ran here, so the pass
+    /// telemetry is empty.
     pub fn from_netlist(program: Arc<BitNetlist>) -> Self {
-        BitslicedProgram { program, passes: Vec::new() }
+        BitslicedProgram { program, passes: Vec::new(), lanes: 1 }
+    }
+
+    /// [`Self::from_netlist`] with an explicit plane width — the `.nfab`
+    /// loader path for the wide entries, and the cheap way to re-width
+    /// an already-compiled program without re-lowering it.
+    pub fn from_netlist_wide(program: Arc<BitNetlist>, lanes: usize) -> crate::Result<Self> {
+        check_lanes(lanes)?;
+        Ok(BitslicedProgram { program, passes: Vec::new(), lanes })
+    }
+
+    /// Plane width in `u64` words executors of this program run at.
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 }
 
 impl FabricProgram for BitslicedProgram {
     fn executor(&self) -> Box<dyn InferenceBackend> {
-        Box::new(BitslicedEngine::from_program(self.program.clone()))
+        match self.lanes {
+            2 => Box::new(BitslicedEngineN::<2>::from_program(self.program.clone())),
+            4 => Box::new(BitslicedEngineN::<4>::from_program(self.program.clone())),
+            8 => Box::new(BitslicedEngineN::<8>::from_program(self.program.clone())),
+            // Constructors validate the width, so 1 is the only other
+            // reachable value.
+            _ => Box::new(BitslicedEngineN::<1>::from_program(self.program.clone())),
+        }
     }
 
     fn bit_netlist(&self) -> Option<&Arc<BitNetlist>> {
@@ -245,6 +310,10 @@ impl FabricProgram for BitslicedProgram {
 
     fn pass_reports(&self) -> &[PassReport] {
         &self.passes
+    }
+
+    fn plane_lanes(&self) -> Option<usize> {
+        Some(self.lanes)
     }
 }
 
@@ -303,6 +372,32 @@ mod tests {
         let reloaded = BitslicedProgram::from_netlist(prog.bit_netlist().unwrap().clone());
         assert!(reloaded.pass_reports().is_empty());
         assert!(ScalarProgram::new(net).pass_reports().is_empty());
+    }
+
+    #[test]
+    fn wide_programs_carry_their_width_and_stay_bit_exact() {
+        let net = Arc::new(random_network(34, 8, 2, &[6, 4], 3, 2, 4));
+        let x: Vec<f32> = (0..8 * 150).map(|i| (i % 19) as f32 / 19.0).collect();
+        let narrow = BitslicedProgram::compile(&net).unwrap();
+        assert_eq!(narrow.lanes(), 1);
+        assert_eq!(narrow.plane_lanes(), Some(1));
+        let want = narrow.executor().run_batch(&x);
+        for (lanes, name) in [(2usize, "bitsliced-x2"), (4, "bitsliced-x4"), (8, "bitsliced-x8")] {
+            // Re-width the compiled program without re-lowering.
+            let wide =
+                BitslicedProgram::from_netlist_wide(narrow.bit_netlist().unwrap().clone(), lanes)
+                    .unwrap();
+            assert_eq!(wide.plane_lanes(), Some(lanes));
+            let exec = wide.executor();
+            assert_eq!(exec.name(), name);
+            assert_eq!(exec.run_batch(&x).logit_codes, want.logit_codes);
+            let compiled = BitslicedProgram::compile_opt_wide(&net, OptLevel::O2, lanes).unwrap();
+            assert_eq!(compiled.executor().name(), name);
+            assert_eq!(compiled.executor().run_batch(&x).logit_codes, want.logit_codes);
+        }
+        assert!(BitslicedProgram::compile_opt_wide(&net, OptLevel::O2, 3).is_err());
+        assert!(BitslicedProgram::from_netlist_wide(narrow.bit_netlist().unwrap().clone(), 0)
+            .is_err());
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //!
 //! ```text
 //! u32  magic     0x4E464142 ("NFAB")
-//! u32  version   1
+//! u32  version   2
 //! u32  backend name length, then that many UTF-8 bytes
 //! u64  model digest (LutNetwork::digest of the source network)
 //! u32  opt level index (0 / 1 / 2)
+//! u32  plane lane width (u64 words per bit-plane; 64·lanes samples
+//!      per block — version 2 addition, so a program compiled for one
+//!      word format is never replayed verbatim by another)
 //! u32  level count, then per level:
 //!      u32 n_in_planes, u32 num_luts, u32 out_bits,
 //!      u32 op count,     ops as 4 x u32 (sel, hi, lo, dst),
@@ -45,8 +48,10 @@ use crate::engine::{BitNetlist, Level, MuxOp, OptLevel};
 
 /// "NFAB", in the same hex-spelling convention as the NLUT magic.
 pub const NFAB_MAGIC: u32 = 0x4E464142;
-/// Current artifact format version.
-pub const NFAB_VERSION: u32 = 1;
+/// Current artifact format version. Version 2 added the plane
+/// lane-width field; version-1 files are rejected (recompiling is the
+/// upgrade path — the cache layer does it automatically).
+pub const NFAB_VERSION: u32 = 2;
 
 /// Everything the envelope records about the program it carries.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -58,6 +63,10 @@ pub struct NfabHeader {
     /// [`LutNetwork::digest`](crate::luts::LutNetwork::digest) of the
     /// source model — loading against any other model is rejected.
     pub model_digest: u64,
+    /// Plane width in `u64` words the program was compiled to run at;
+    /// replaying it through a backend with a different word format is
+    /// rejected at load time.
+    pub lanes: usize,
 }
 
 /// Serialize a compiled program into a `.nfab` file. Writes to a
@@ -68,6 +77,7 @@ pub(crate) fn save(
     backend: &str,
     opt_level: OptLevel,
     model_digest: u64,
+    lanes: usize,
     nl: &BitNetlist,
 ) -> Result<()> {
     // The loader rejects names over 256 bytes as absurd; refusing to
@@ -80,6 +90,20 @@ pub(crate) fn save(
             backend.len()
         );
     }
+    // An alias is an indirection, not a word format: persisting under
+    // "bitsliced-auto" would make the artifact mean different things on
+    // different machines. The registry resolves aliases before compile,
+    // so reaching this is a wiring bug upstream.
+    if backend.trim().eq_ignore_ascii_case("bitsliced-auto") {
+        bail!(
+            "refusing to save a .nfab artifact under the unresolved alias \
+             'bitsliced-auto'; resolve it to a concrete lane width (e.g. \
+             'bitsliced-x4') first"
+        );
+    }
+    if lanes == 0 || lanes > 64 {
+        bail!("refusing to save a .nfab artifact with absurd plane lane width {lanes}");
+    }
     let mut out: Vec<u8> = Vec::with_capacity(64 + nl.num_ops() * 16);
     let w32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
     w32(&mut out, NFAB_MAGIC);
@@ -88,6 +112,7 @@ pub(crate) fn save(
     out.extend_from_slice(backend.as_bytes());
     out.extend_from_slice(&model_digest.to_le_bytes());
     w32(&mut out, opt_level.index());
+    w32(&mut out, lanes as u32);
     w32(&mut out, nl.levels.len() as u32);
     for level in &nl.levels {
         w32(&mut out, level.n_in_planes as u32);
@@ -165,6 +190,15 @@ pub(crate) fn load(path: &Path) -> Result<(NfabHeader, BitNetlist)> {
     let model_digest = r.u64("model digest")?;
     let opt_level = OptLevel::from_index(r.u32("opt level")?)
         .with_context(|| format!("reading {}", path.display()))?;
+    let lanes = r.u32("plane lane width")? as usize;
+    if lanes == 0 || lanes > 64 {
+        bail!(
+            "{}: absurd plane lane width {lanes} in .nfab header at offset {} \
+             (expected 1..=64 u64 words per plane)",
+            path.display(),
+            r.offset - 4
+        );
+    }
     let n_levels = r.u32("level count")? as usize;
     // Every level needs at least a 20-byte header.
     if n_levels.saturating_mul(20) > r.remaining() {
@@ -244,7 +278,7 @@ pub(crate) fn load(path: &Path) -> Result<(NfabHeader, BitNetlist)> {
     nl.recompute_stats();
     nl.check()
         .with_context(|| format!("validating {}", path.display()))?;
-    Ok((NfabHeader { backend, opt_level, model_digest }, nl))
+    Ok((NfabHeader { backend, opt_level, model_digest, lanes }, nl))
 }
 
 /// Position-tracking reader: every short read names the field, the byte
@@ -302,11 +336,12 @@ mod tests {
         let mut nl = lower::lower(&net).unwrap();
         crate::engine::optimize(&mut nl, OptLevel::O2);
         let path = tmp("roundtrip");
-        save(&path, "bitsliced", OptLevel::O2, net.digest(), &nl).unwrap();
+        save(&path, "bitsliced-x2", OptLevel::O2, net.digest(), 2, &nl).unwrap();
         let (header, back) = load(&path).unwrap();
-        assert_eq!(header.backend, "bitsliced");
+        assert_eq!(header.backend, "bitsliced-x2");
         assert_eq!(header.opt_level, OptLevel::O2);
         assert_eq!(header.model_digest, net.digest());
+        assert_eq!(header.lanes, 2);
         assert_eq!(back.num_ops(), nl.num_ops());
         assert_eq!(back.max_wires, nl.max_wires);
         assert_eq!(back.max_planes, nl.max_planes);
@@ -326,7 +361,7 @@ mod tests {
         let net = random_network(52, 8, 2, &[6, 3], 3, 2, 4);
         let nl = lower::lower(&net).unwrap();
         let path = tmp("corrupt");
-        save(&path, "bitsliced", OptLevel::O0, net.digest(), &nl).unwrap();
+        save(&path, "bitsliced", OptLevel::O0, net.digest(), 1, &nl).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // Smash the final level's last output wire (it sits right before
         // the 20-byte trailer): the decoded netlist must fail validation,
@@ -336,5 +371,18 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path).unwrap_err();
         assert!(format!("{err:#}").contains("validating"), "{err:#}");
+    }
+
+    #[test]
+    fn save_refuses_the_unresolved_auto_alias_and_absurd_widths() {
+        let net = random_network(53, 8, 2, &[6, 3], 3, 2, 4);
+        let nl = lower::lower(&net).unwrap();
+        let path = tmp("auto_alias");
+        let err = save(&path, "Bitsliced-Auto", OptLevel::O0, net.digest(), 4, &nl)
+            .unwrap_err();
+        assert!(err.to_string().contains("bitsliced-auto"), "{err}");
+        let err = save(&path, "bitsliced", OptLevel::O0, net.digest(), 0, &nl).unwrap_err();
+        assert!(err.to_string().contains("lane width"), "{err}");
+        assert!(!path.exists(), "a refused save must not leave a file behind");
     }
 }

@@ -295,7 +295,12 @@ impl Model {
             artifact::load(path)?
         };
         if let Some(requested) = opts.get_backend() {
-            let canon = registry::normalize_name(requested);
+            // Resolve through the registry so an alias (bitsliced-auto)
+            // compares as its concrete target, not as the alias name.
+            let canon = match registry.resolve(requested) {
+                Ok(entry) => entry.name().to_string(),
+                Err(_) => registry::normalize_name(requested),
+            };
             if canon != header.backend {
                 bail!(
                     "{}: artifact was compiled by backend '{}' but options \
@@ -346,6 +351,18 @@ impl Model {
         let entry = registry.resolve(&header.backend).with_context(|| {
             format!("{}: resolving the artifact's backend", path.display())
         })?;
+        let caps = entry.capabilities();
+        if caps.word_lanes != 0 && header.lanes != caps.word_lanes {
+            bail!(
+                "{}: artifact records a {}-word plane format but backend '{}' \
+                 executes {}-word planes — refusing to replay it (recompile, \
+                 or pick the matching width backend)",
+                path.display(),
+                header.lanes,
+                entry.name(),
+                caps.word_lanes
+            );
+        }
         let tuning = opts.resolve_tuning()?;
         let program = entry.load_program(self.net.clone(), Arc::new(nl))?;
         let report = build_report(
@@ -407,6 +424,7 @@ fn build_report(
         levels,
         max_planes,
         max_wires,
+        lanes: program.plane_lanes().unwrap_or(0),
     }
 }
 
@@ -485,7 +503,12 @@ impl CompiledFabric {
                 self.entry.name()
             );
         };
-        artifact::save(path, self.entry.name(), self.opt_level, self.model.digest(), nl)?;
+        let lanes = self
+            .program
+            .plane_lanes()
+            .unwrap_or(self.entry.capabilities().word_lanes)
+            .max(1);
+        artifact::save(path, self.entry.name(), self.opt_level, self.model.digest(), lanes, nl)?;
         // The report rides along as a JSON sibling. Like the artifact
         // cache itself it is telemetry, not an availability dependency:
         // a failed write warns and the fabric stays perfectly usable.

@@ -18,7 +18,12 @@
 //! [`BackendRegistry`](crate::fabric::BackendRegistry) at
 //! [`Model::compile`](crate::fabric::Model::compile) time —
 //! case/whitespace-insensitive, with unknown names erroring against the
-//! list of registered names. Worker/queue ranges share the server's
+//! list of registered names and aliases. `NEURALUT_ENGINE` accepts any
+//! registry name, including the bitsliced width family
+//! (`bitsliced-x2`/`-x4`/`-x8`, e.g. `NEURALUT_ENGINE=bitsliced-x4` —
+//! the CI wide leg) and the `bitsliced-auto` alias, which resolves to
+//! the CPU-detected width before compilation so nothing ambiguous
+//! reaches a `.nfab` artifact. Worker/queue ranges share the server's
 //! [`MAX_WORKERS`]/[`MAX_QUEUE_DEPTH`] bounds, so zero or absurd values
 //! are errors on every path, never clamped surprises.
 

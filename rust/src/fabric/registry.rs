@@ -2,13 +2,22 @@
 //!
 //! Every inference backend is an entry mapping a normalized name to a
 //! factory (`Arc<LutNetwork>` → compile-once [`FabricProgram`]) plus its
-//! [`Capabilities`]. `scalar` and `bitsliced` are registered built-ins;
+//! [`Capabilities`]. `scalar` and the `bitsliced` lane-width family
+//! (`bitsliced`, `bitsliced-x2/-x4/-x8`) are registered built-ins;
 //! tests and downstream crates [`register`](BackendRegistry::register)
 //! their own (mock backends, device-specific lowerings, assembled
 //! sub-network variants) and select them through
 //! [`FabricOptions`](crate::fabric::FabricOptions) exactly like the
 //! built-ins — a new backend is a registry entry, not a cross-crate
 //! surgery.
+//!
+//! Besides concrete entries the registry holds *aliases* — indirection
+//! names that resolve (one hop) to a concrete entry. The built-in
+//! `bitsliced-auto` alias points at the lane width
+//! [`detect_lane_words`] picks for the host CPU; because [`resolve`]
+//! (BackendRegistry::resolve) returns the *target* entry, an alias name
+//! never reaches a compile report or a `.nfab` artifact — persisted
+//! state always names a concrete width.
 //!
 //! Name lookups are case- and whitespace-insensitive
 //! (`NEURALUT_ENGINE=" Bitsliced "` selects `bitsliced`), and every
@@ -19,7 +28,10 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::bail;
 
-use crate::engine::{BitNetlist, BitslicedProgram, FabricProgram, OptLevel, ScalarProgram};
+use crate::engine::{
+    detect_lane_words, lane_backend_name, BitNetlist, BitslicedProgram, FabricProgram, OptLevel,
+    ScalarProgram, LANE_WIDTHS,
+};
 use crate::luts::LutNetwork;
 
 /// Compiles one network into a shared, executor-spawning program at the
@@ -78,6 +90,12 @@ pub struct Capabilities {
     /// implementation's responsibility and is checked when a save is
     /// attempted.
     pub persistable: bool,
+    /// Plane width in `u64` words for word-parallel backends (samples
+    /// per block = 64 × `word_lanes`); 0 for backends without a plane
+    /// word (scalar lookups, mocks). Persisted into `.nfab` headers so
+    /// an artifact compiled at one width is never replayed by an
+    /// executor with a different word format.
+    pub word_lanes: usize,
 }
 
 /// A registered backend: canonical name, capabilities, factory, and (for
@@ -148,20 +166,33 @@ pub fn normalize_name(name: &str) -> String {
 /// the same entries.
 pub struct BackendRegistry {
     entries: Mutex<BTreeMap<String, BackendEntry>>,
+    /// Alias → concrete entry name. Resolution follows exactly one hop
+    /// (aliases cannot chain), so an alias can never be the name an
+    /// artifact or report ends up carrying.
+    aliases: Mutex<BTreeMap<String, String>>,
 }
 
 impl BackendRegistry {
     /// An empty registry (no built-ins) — for isolated tests.
     pub fn empty() -> BackendRegistry {
-        BackendRegistry { entries: Mutex::new(BTreeMap::new()) }
+        BackendRegistry {
+            entries: Mutex::new(BTreeMap::new()),
+            aliases: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// The process-wide registry with the built-ins pre-registered:
     ///
-    /// | name        | compile cost | batch affinity | signed hidden | persistable |
-    /// |-------------|--------------|----------------|---------------|-------------|
-    /// | `scalar`    | free         | single-sample  | yes           | no          |
-    /// | `bitsliced` | lowering     | wide (64-lane) | no            | yes (.nfab) |
+    /// | name            | compile cost | batch affinity  | signed hidden | persistable | word lanes |
+    /// |-----------------|--------------|-----------------|---------------|-------------|------------|
+    /// | `scalar`        | free         | single-sample   | yes           | no          | —          |
+    /// | `bitsliced`     | lowering     | wide (64-lane)  | no            | yes (.nfab) | 1          |
+    /// | `bitsliced-x2`  | lowering     | wide (128-lane) | no            | yes (.nfab) | 2          |
+    /// | `bitsliced-x4`  | lowering     | wide (256-lane) | no            | yes (.nfab) | 4          |
+    /// | `bitsliced-x8`  | lowering     | wide (512-lane) | no            | yes (.nfab) | 8          |
+    ///
+    /// plus the `bitsliced-auto` *alias*, which resolves to the width
+    /// [`detect_lane_words`] picks for the host CPU.
     pub fn global() -> &'static BackendRegistry {
         static GLOBAL: OnceLock<BackendRegistry> = OnceLock::new();
         GLOBAL.get_or_init(|| {
@@ -173,29 +204,39 @@ impl BackendRegistry {
                     batch_affinity: BatchAffinity::Single,
                     compile_cost: CompileCost::Free,
                     persistable: false,
+                    word_lanes: 0,
                 },
                 Arc::new(|net: Arc<LutNetwork>, _opt: OptLevel| {
                     Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
                 }),
             )
             .expect("registering built-in 'scalar'");
-            reg.register_with_loader(
-                "bitsliced",
-                Capabilities {
-                    signed_hidden: false,
-                    batch_affinity: BatchAffinity::Wide,
-                    compile_cost: CompileCost::Lowering,
-                    persistable: true,
-                },
-                Arc::new(|net: Arc<LutNetwork>, opt: OptLevel| {
-                    Ok(Arc::new(BitslicedProgram::compile_opt(&net, opt)?)
-                        as Arc<dyn FabricProgram>)
-                }),
-                Arc::new(|_net, nl: Arc<BitNetlist>| {
-                    Ok(Arc::new(BitslicedProgram::from_netlist(nl)) as Arc<dyn FabricProgram>)
-                }),
-            )
-            .expect("registering built-in 'bitsliced'");
+            for lanes in LANE_WIDTHS {
+                let name = lane_backend_name(lanes).expect("built-in lane width");
+                reg.register_with_loader(
+                    name,
+                    Capabilities {
+                        signed_hidden: false,
+                        batch_affinity: BatchAffinity::Wide,
+                        compile_cost: CompileCost::Lowering,
+                        persistable: true,
+                        word_lanes: lanes,
+                    },
+                    Arc::new(move |net: Arc<LutNetwork>, opt: OptLevel| {
+                        Ok(Arc::new(BitslicedProgram::compile_opt_wide(&net, opt, lanes)?)
+                            as Arc<dyn FabricProgram>)
+                    }),
+                    Arc::new(move |_net, nl: Arc<BitNetlist>| {
+                        Ok(Arc::new(BitslicedProgram::from_netlist_wide(nl, lanes)?)
+                            as Arc<dyn FabricProgram>)
+                    }),
+                )
+                .expect("registering built-in bitsliced width");
+            }
+            let auto = lane_backend_name(detect_lane_words())
+                .expect("detected lane width is a built-in");
+            reg.register_alias("bitsliced-auto", auto)
+                .expect("registering built-in alias 'bitsliced-auto'");
             reg
         })
     }
@@ -246,6 +287,9 @@ impl BackendRegistry {
                 loader.is_some()
             );
         }
+        if self.aliases.lock().unwrap().contains_key(&canon) {
+            bail!("backend '{canon}' collides with a registered alias");
+        }
         let mut entries = self.entries.lock().unwrap();
         if entries.contains_key(&canon) {
             bail!("backend '{canon}' is already registered");
@@ -254,21 +298,66 @@ impl BackendRegistry {
         Ok(())
     }
 
-    /// Registered names, sorted — the list every unknown-name error cites.
+    /// Register `alias` as an indirection to the concrete entry
+    /// `target`. The target must already be registered (aliases cannot
+    /// chain or dangle), and the alias name must not collide with an
+    /// entry or another alias. Resolving the alias returns the target
+    /// entry, so the alias name itself never lands in reports or
+    /// artifacts.
+    pub fn register_alias(&self, alias: &str, target: &str) -> crate::Result<()> {
+        let canon = normalize_name(alias);
+        if canon.is_empty() {
+            bail!("alias name '{alias}' is empty after normalization");
+        }
+        let target_canon = normalize_name(target);
+        if !self.entries.lock().unwrap().contains_key(&target_canon) {
+            bail!("alias '{canon}' targets unregistered backend '{target_canon}'");
+        }
+        if self.entries.lock().unwrap().contains_key(&canon) {
+            bail!("alias '{canon}' collides with a registered backend");
+        }
+        let mut aliases = self.aliases.lock().unwrap();
+        if aliases.contains_key(&canon) {
+            bail!("alias '{canon}' is already registered");
+        }
+        aliases.insert(canon, target_canon);
+        Ok(())
+    }
+
+    /// Registered concrete entry names, sorted — the list every
+    /// unknown-name error cites (aliases are listed separately there).
     pub fn names(&self) -> Vec<String> {
         self.entries.lock().unwrap().keys().cloned().collect()
     }
 
-    /// Look up a backend by (case/whitespace-insensitive) name. The
-    /// error for an unknown name lists what *is* registered — uniform
-    /// across the CLI, env vars, config files and the builder API.
+    /// Registered aliases as sorted `(alias, target)` pairs.
+    pub fn aliases(&self) -> Vec<(String, String)> {
+        self.aliases
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(a, t)| (a.clone(), t.clone()))
+            .collect()
+    }
+
+    /// Look up a backend by (case/whitespace-insensitive) name,
+    /// following one alias hop if the name is an alias. The error for
+    /// an unknown name lists what *is* registered — uniform across the
+    /// CLI, env vars, config files and the builder API.
     pub fn resolve(&self, name: &str) -> crate::Result<BackendEntry> {
         let canon = normalize_name(name);
+        let target = self.aliases.lock().unwrap().get(&canon).cloned();
+        let lookup = target.as_deref().unwrap_or(&canon);
         let entries = self.entries.lock().unwrap();
-        match entries.get(&canon) {
+        match entries.get(lookup) {
             Some(e) => Ok(e.clone()),
             None => {
-                let names: Vec<&str> = entries.keys().map(|s| s.as_str()).collect();
+                let mut names: Vec<String> = entries.keys().cloned().collect();
+                drop(entries);
+                for (a, t) in self.aliases.lock().unwrap().iter() {
+                    names.push(format!("{a} -> {t}"));
+                }
+                names.sort();
                 bail!(
                     "unknown backend '{}' (registered: {})",
                     name.trim(),
@@ -299,9 +388,70 @@ mod tests {
         assert_eq!(caps.batch_affinity, BatchAffinity::Wide);
         assert!(!caps.signed_hidden);
         assert!(caps.persistable, "bitsliced programs persist as .nfab");
+        assert_eq!(caps.word_lanes, 1);
         let scalar = reg.capabilities("scalar").unwrap();
         assert!(scalar.signed_hidden);
         assert!(!scalar.persistable);
+        assert_eq!(scalar.word_lanes, 0);
+    }
+
+    #[test]
+    fn every_lane_width_is_registered_with_honest_capabilities() {
+        let reg = BackendRegistry::global();
+        for lanes in LANE_WIDTHS {
+            let name = lane_backend_name(lanes).unwrap();
+            let entry = reg.resolve(name).unwrap();
+            assert_eq!(entry.name(), name);
+            let caps = entry.capabilities();
+            assert_eq!(caps.word_lanes, lanes, "{name}");
+            assert_eq!(caps.batch_affinity, BatchAffinity::Wide);
+            assert!(caps.persistable, "{name} must persist as .nfab");
+        }
+    }
+
+    #[test]
+    fn bitsliced_auto_alias_resolves_to_the_detected_concrete_width() {
+        let reg = BackendRegistry::global();
+        let entry = reg.resolve(" Bitsliced-AUTO ").unwrap();
+        // The alias resolves to a concrete entry — never to itself — so
+        // nothing downstream (reports, .nfab headers) can carry "auto".
+        assert_ne!(entry.name(), "bitsliced-auto");
+        assert_eq!(entry.name(), lane_backend_name(detect_lane_words()).unwrap());
+        assert_eq!(entry.capabilities().word_lanes, detect_lane_words());
+        let aliases = reg.aliases();
+        assert!(
+            aliases.iter().any(|(a, _)| a == "bitsliced-auto"),
+            "{aliases:?}"
+        );
+        // The alias name is not a concrete entry.
+        assert!(!reg.names().iter().any(|n| n == "bitsliced-auto"));
+    }
+
+    #[test]
+    fn alias_registration_rejects_dangling_chained_and_colliding_names() {
+        let reg = BackendRegistry::empty();
+        let caps = Capabilities {
+            signed_hidden: true,
+            batch_affinity: BatchAffinity::Single,
+            compile_cost: CompileCost::Free,
+            persistable: false,
+            word_lanes: 0,
+        };
+        let factory: BackendFactory = Arc::new(|net, _opt| {
+            Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
+        });
+        reg.register("real", caps, factory.clone()).unwrap();
+        // Dangling target.
+        assert!(reg.register_alias("a", "ghost").is_err());
+        // Alias to alias (chaining) — the alias is not a concrete entry.
+        reg.register_alias("a", "real").unwrap();
+        assert!(reg.register_alias("b", "a").is_err());
+        // Colliding with an entry or an existing alias.
+        assert!(reg.register_alias("real", "real").is_err());
+        assert!(reg.register_alias(" A ", "real").is_err());
+        // And an entry cannot shadow an alias.
+        assert!(reg.register("a", caps, factory).is_err());
+        assert_eq!(reg.resolve("A").unwrap().name(), "real");
     }
 
     #[test]
@@ -320,6 +470,7 @@ mod tests {
             batch_affinity: BatchAffinity::Single,
             compile_cost: CompileCost::Free,
             persistable: false,
+            word_lanes: 0,
         };
         let factory: BackendFactory = Arc::new(|net, _opt| {
             Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
@@ -340,6 +491,7 @@ mod tests {
             batch_affinity: BatchAffinity::Wide,
             compile_cost: CompileCost::Lowering,
             persistable: true,
+            word_lanes: 1,
         };
         let factory: BackendFactory = Arc::new(|net, _opt| {
             Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)

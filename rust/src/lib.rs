@@ -26,7 +26,8 @@
 //! * [`engine`] — execution backends: the bit-level lowering pass, the
 //!   `engine::opt` netlist optimization pipeline (`O0`/`O1`/`O2`:
 //!   constant folding, cross-level CSE, dead-wire elimination, plane
-//!   compaction), and the bitsliced (64-samples-per-word) evaluator,
+//!   compaction), and the bitsliced evaluator family (`[u64; N]` planes,
+//!   64/128/256/512 samples per block for `bitsliced`/`-x2`/`-x4`/`-x8`),
 //!   behind the `FabricProgram` (compile-once) / `InferenceBackend`
 //!   (per-worker) traits.
 //! * [`fabric`] — **the unified inference API**: `Model` →
@@ -68,9 +69,16 @@
 //!
 //! `Model::compile` resolves the backend name through
 //! `fabric::BackendRegistry` — `scalar` (zero compile cost, per-sample
-//! lookups) and `bitsliced` (one lowering pass, 64 samples per word) are
-//! built-ins; tests and extensions register more. The backend factory
-//! runs exactly once per compile; sessions and serving workers all share
+//! lookups) and the bitsliced width family (`bitsliced` at 64 samples
+//! per `u64` word, `bitsliced-x2`/`-x4`/`-x8` at 128/256/512 samples
+//! per `[u64; N]` plane, all over the same lowered netlist) are
+//! built-ins; tests and extensions register more. `bitsliced-auto` is a
+//! registry alias that resolves to the width runtime CPU detection
+//! picks (AVX2 x86-64 → x4, other 64-bit → x2) before anything is
+//! compiled or persisted — `NEURALUT_ENGINE=bitsliced-x4` pins a width
+//! explicitly, and wider is only faster while its planes stay cache-
+//! resident. The backend factory runs exactly once per compile;
+//! sessions and serving workers all share
 //! the one compiled program (`Arc` clones only). Configuration funnels
 //! through `FabricOptions::from_env_and_config`: defaults, then a server
 //! config file, then `NEURALUT_ENGINE`/`NEURALUT_WORKERS`/

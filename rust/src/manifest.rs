@@ -122,7 +122,7 @@ impl Manifest {
             .iter()
             .map(|t| {
                 Ok(TtSpec {
-                    layer: t.get("layer")?.as_usize()?,
+                    layer: t.get_usize("layer")?,
                     path: t.get("path")?.as_str()?.to_string(),
                     args: t
                         .get("args")?
@@ -130,11 +130,11 @@ impl Manifest {
                         .iter()
                         .map(|a| Ok(a.as_str()?.to_string()))
                         .collect::<Result<Vec<_>>>()?,
-                    num_luts: t.get("num_luts")?.as_usize()?,
-                    entries: t.get("entries")?.as_usize()?,
-                    fan_in: t.get("fan_in")?.as_usize()?,
-                    in_bits: t.get("in_bits")?.as_usize()?,
-                    out_bits: t.get("out_bits")?.as_usize()?,
+                    num_luts: t.get_usize("num_luts")?,
+                    entries: t.get_usize("entries")?,
+                    fan_in: t.get_usize("fan_in")?,
+                    in_bits: t.get_usize("in_bits")?,
+                    out_bits: t.get_usize("out_bits")?,
                     signed_out: t.get("signed_out")?.as_bool()?,
                 })
             })
@@ -157,24 +157,24 @@ impl Manifest {
             name: j.get("name")?.as_str()?.to_string(),
             mode: j.get("mode")?.as_str()?.to_string(),
             dataset: j.get("dataset")?.as_str()?.to_string(),
-            input_size: j.get("input_size")?.as_usize()?,
-            n_class: j.get("n_class")?.as_usize()?,
+            input_size: j.get_usize("input_size")?,
+            n_class: j.get_usize("n_class")?,
             layers: j.get("layers")?.usize_vec()?,
-            beta: j.get("beta")?.as_usize()?,
-            beta_in: j.get("beta_in")?.as_usize()?,
-            beta_out: j.get("beta_out")?.as_usize()?,
-            fan_in: j.get("fan_in")?.as_usize()?,
-            sub_depth: j.get("sub_depth")?.as_usize()?,
-            sub_width: j.get("sub_width")?.as_usize()?,
-            sub_skip: j.get("sub_skip")?.as_usize()?,
-            degree: j.get("degree")?.as_usize()?,
-            batch: j.get("batch")?.as_usize()?,
-            epochs: j.get("epochs")?.as_usize()?,
+            beta: j.get_usize("beta")?,
+            beta_in: j.get_usize("beta_in")?,
+            beta_out: j.get_usize("beta_out")?,
+            fan_in: j.get_usize("fan_in")?,
+            sub_depth: j.get_usize("sub_depth")?,
+            sub_width: j.get_usize("sub_width")?,
+            sub_skip: j.get_usize("sub_skip")?,
+            degree: j.get_usize("degree")?,
+            batch: j.get_usize("batch")?,
+            epochs: j.get_usize("epochs")?,
             lr_max: j.get("lr_max")?.as_f64()?,
             lr_min: j.get("lr_min")?.as_f64()?,
             weight_decay: j.get("weight_decay")?.as_f64()?,
-            sgdr_t0: j.get("sgdr_t0")?.as_usize()?,
-            sgdr_mult: j.get("sgdr_mult")?.as_usize()?,
+            sgdr_t0: j.get_usize("sgdr_t0")?,
+            sgdr_mult: j.get_usize("sgdr_mult")?,
             params,
             scale_param_idx: j.get("scale_param_idx")?.usize_vec()?,
             layer_param_slices: slices,

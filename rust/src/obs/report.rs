@@ -54,9 +54,9 @@ impl PassReport {
         Ok(PassReport {
             name: j.get("name")?.as_str()?.to_string(),
             wall_s: j.get("wall_s")?.as_f64()?,
-            ops_before: j.get("ops_before")?.as_usize()?,
-            ops_after: j.get("ops_after")?.as_usize()?,
-            planes_removed: j.get("planes_removed")?.as_usize()?,
+            ops_before: j.get_usize("ops_before")?,
+            ops_after: j.get_usize("ops_after")?,
+            planes_removed: j.get_usize("planes_removed")?,
         })
     }
 }
@@ -86,6 +86,10 @@ pub struct CompileReport {
     pub max_planes: usize,
     /// Widest wire frame across levels.
     pub max_wires: usize,
+    /// `u64` words per bit-plane of the compiled program (1 for the
+    /// classic bitsliced engine, 2/4/8 for the wide variants); 0 for
+    /// backends without a plane word (e.g. `scalar`).
+    pub lanes: usize,
 }
 
 impl CompileReport {
@@ -142,6 +146,7 @@ impl CompileReport {
             ("levels", Json::Num(self.levels as f64)),
             ("max_planes", Json::Num(self.max_planes as f64)),
             ("max_wires", Json::Num(self.max_wires as f64)),
+            ("lanes", Json::Num(self.lanes as f64)),
         ])
     }
 
@@ -159,10 +164,16 @@ impl CompileReport {
                 .iter()
                 .map(PassReport::from_json)
                 .collect::<crate::Result<Vec<_>>>()?,
-            ops: j.get("ops")?.as_usize()?,
-            levels: j.get("levels")?.as_usize()?,
-            max_planes: j.get("max_planes")?.as_usize()?,
-            max_wires: j.get("max_wires")?.as_usize()?,
+            ops: j.get_usize("ops")?,
+            levels: j.get_usize("levels")?,
+            max_planes: j.get_usize("max_planes")?,
+            max_wires: j.get_usize("max_wires")?,
+            // Reports written before the wide-plane formats carry no
+            // `lanes` key; read those as 0 ("width unknown").
+            lanes: match j.get("lanes") {
+                Ok(v) => v.as_usize()?,
+                Err(_) => 0,
+            },
         })
     }
 
@@ -196,6 +207,8 @@ impl CompileReport {
         reg.gauge("neuralut_compile_levels", &[]).set(self.levels as f64);
         reg.gauge("neuralut_compile_max_planes", &[]).set(self.max_planes as f64);
         reg.gauge("neuralut_compile_max_wires", &[]).set(self.max_wires as f64);
+        reg.describe("neuralut_compile_lanes", "u64 words per bit-plane (0 = no plane word)");
+        reg.gauge("neuralut_compile_lanes", &[]).set(self.lanes as f64);
     }
 }
 
@@ -234,7 +247,11 @@ impl fmt::Display for CompileReport {
             f,
             "  final  : {} word ops over {} levels (max {} planes, {} wires)",
             self.ops, self.levels, self.max_planes, self.max_wires
-        )
+        )?;
+        if self.lanes > 0 {
+            write!(f, " [{}-word planes, {} samples/block]", self.lanes, self.lanes * 64)?;
+        }
+        Ok(())
     }
 }
 
@@ -276,6 +293,7 @@ mod tests {
             levels: 3,
             max_planes: 12,
             max_wires: 40,
+            lanes: 1,
         }
     }
 
@@ -320,5 +338,23 @@ mod tests {
             assert!(text.contains(name), "{text}");
         }
         assert!(text.contains("55 word ops over 3 levels"), "{text}");
+        assert!(text.contains("[1-word planes, 64 samples/block]"), "{text}");
+        let mut scalar = sample();
+        scalar.lanes = 0;
+        assert!(!scalar.to_string().contains("planes,"), "{scalar}");
+    }
+
+    #[test]
+    fn lanes_default_to_zero_for_pre_width_reports() {
+        // A report serialized before the wide-plane formats has no
+        // `lanes` key; parsing must not fail and must read it as 0.
+        let mut j = sample().to_json().to_string();
+        j = j.replace(",\"lanes\":1", "").replace("\"lanes\":1,", "");
+        let back = CompileReport::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.lanes, 0);
+        let reg = MetricsRegistry::new();
+        sample().export(&reg);
+        let snap = reg.snapshot();
+        assert_eq!(snap.gauge("neuralut_compile_lanes", &[]).unwrap().value, 1.0);
     }
 }

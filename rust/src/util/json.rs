@@ -9,6 +9,10 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+/// Largest integer an `f64` represents exactly (2^53 − 1). Integer reads
+/// beyond this would be lossy, so the strict accessors reject them.
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_991.0;
+
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -40,12 +44,32 @@ impl Json {
         }
     }
 
+    /// Strict unsigned-integer read: the number must be integral (no
+    /// `3.7`, `NaN`, or infinities), non-negative, and small enough that
+    /// the `f64` carrying it is exact (≤ 2^53 − 1). A raw `as` cast here
+    /// would silently map `-1.0` to 0 and truncate fractions.
     pub fn as_usize(&self) -> Result<usize> {
-        Ok(self.as_f64()? as usize)
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 {
+            bail!("expected integer, got non-integral number {n}");
+        }
+        if !(0.0..=MAX_SAFE_INT).contains(&n) {
+            bail!("integer out of range for usize: {n}");
+        }
+        Ok(n as usize)
     }
 
+    /// Strict signed-integer read; same integrality and exact-`f64`
+    /// range rules as [`as_usize`](Self::as_usize).
     pub fn as_i64(&self) -> Result<i64> {
-        Ok(self.as_f64()? as i64)
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 {
+            bail!("expected integer, got non-integral number {n}");
+        }
+        if !(-MAX_SAFE_INT..=MAX_SAFE_INT).contains(&n) {
+            bail!("integer out of range for i64: {n}");
+        }
+        Ok(n as i64)
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -81,6 +105,14 @@ impl Json {
         self.as_obj()?
             .get(key)
             .ok_or_else(|| anyhow!("missing key '{key}'"))
+    }
+
+    /// Strict integer field access: [`get`](Self::get) followed by
+    /// [`as_usize`](Self::as_usize), with the key carried in the error.
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?
+            .as_usize()
+            .with_context(|| format!("key '{key}'"))
     }
 
     /// Optional field access.
@@ -369,5 +401,35 @@ mod tests {
     fn unicode_and_escapes() {
         let j = Json::parse(r#""café ☕""#).unwrap();
         assert_eq!(j.as_str().unwrap(), "café ☕");
+    }
+
+    #[test]
+    fn strict_integer_casts_reject_lossy_values() {
+        // The old raw-`as` casts mapped -1.0 to 0 and truncated 3.7 — the
+        // strict reads must refuse every lossy shape instead.
+        assert_eq!(Json::Num(7.0).as_usize().unwrap(), 7);
+        assert_eq!(Json::Num(0.0).as_usize().unwrap(), 0);
+        assert_eq!(Json::Num(-42.0).as_i64().unwrap(), -42);
+        assert!(Json::Num(-1.0).as_usize().is_err());
+        assert!(Json::Num(3.7).as_usize().is_err());
+        assert!(Json::Num(3.7).as_i64().is_err());
+        assert!(Json::Num(f64::NAN).as_usize().is_err());
+        assert!(Json::Num(f64::NAN).as_i64().is_err());
+        assert!(Json::Num(f64::INFINITY).as_usize().is_err());
+        assert!(Json::Num(9.1e15).as_usize().is_err());
+        assert!(Json::Num(-9.1e15).as_i64().is_err());
+        assert!(Json::Str("3".into()).as_usize().is_err());
+        // usize_vec inherits the strictness.
+        assert!(Json::parse("[1, -2, 3]").unwrap().usize_vec().is_err());
+        assert_eq!(Json::parse("[1, 2]").unwrap().usize_vec().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn get_usize_names_the_key() {
+        let j = Json::parse(r#"{"beta": -1, "ok": 4}"#).unwrap();
+        assert_eq!(j.get_usize("ok").unwrap(), 4);
+        let err = format!("{:#}", j.get_usize("beta").unwrap_err());
+        assert!(err.contains("beta"), "{err}");
+        assert!(j.get_usize("missing").is_err());
     }
 }

@@ -68,6 +68,7 @@ fn register_mock() -> (Arc<AtomicUsize>, Arc<AtomicUsize>) {
                         batch_affinity: BatchAffinity::Single,
                         compile_cost: CompileCost::Free,
                         persistable: false,
+                        word_lanes: 0,
                     },
                     Arc::new(move |net: Arc<LutNetwork>, _opt: OptLevel| {
                         c.fetch_add(1, Ordering::SeqCst);
@@ -338,7 +339,7 @@ fn nfab_load_rejects_bad_magic_version_and_truncation_with_offsets() {
     std::fs::write(&bad, &bytes).unwrap();
     let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
     assert!(err.contains("unsupported .nfab version 99"), "{err}");
-    assert!(err.contains("version 1"), "{err}");
+    assert!(err.contains("version 2"), "{err}");
 
     // Truncation mid-payload names the field, offset and file length.
     let bad = nfab("truncated");
@@ -350,12 +351,12 @@ fn nfab_load_rejects_bad_magic_version_and_truncation_with_offsets() {
 
     // An absurd claimed op count is rejected against the remaining file
     // length before any allocation. The first level's op count sits right
-    // after magic/version, name, digest, opt level, level count and the
-    // 12 bytes of level metadata.
+    // after magic/version, name, digest, opt level, lane width, level
+    // count and the 12 bytes of level metadata.
     let bad = nfab("absurd_ops");
     let mut bytes = good.clone();
     let name_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-    let ops_off = 12 + name_len + 8 + 4 + 4 + 12;
+    let ops_off = 12 + name_len + 8 + 4 + 4 + 4 + 12;
     bytes[ops_off..ops_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     std::fs::write(&bad, &bytes).unwrap();
     let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
@@ -414,4 +415,110 @@ fn save_refuses_non_persistable_backends() {
     let err = fabric.save(&nfab("scalar")).unwrap_err().to_string();
     assert!(err.contains("persistable"), "{err}");
     assert!(err.contains("scalar"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Wide-plane artifacts: the lane width is part of the format, not a
+// runtime choice — replays under a different width must be refused.
+
+#[test]
+fn nfab_round_trips_every_lane_width_and_rejects_width_patches() {
+    let net = random_network(96, 8, 2, &[6, 3], 3, 2, 4);
+    let model = Model::from_network(net.clone());
+    let x: Vec<f32> = (0..8 * 100).map(|i| (i % 19) as f32 / 19.0).collect();
+    let want = Simulator::new(&net).simulate_batch(&x);
+
+    for backend in ["bitsliced", "bitsliced-x2", "bitsliced-x4", "bitsliced-x8"] {
+        let opts = FabricOptions::new().backend(backend).opt_level(OptLevel::O2);
+        let path = nfab(&format!("width_{backend}"));
+        model.compile(&opts).unwrap().save(&path).unwrap();
+        let loaded = model.load_fabric(&opts, &path).unwrap();
+        assert_eq!(loaded.backend_name(), backend);
+        let got = loaded.session().infer_batch(&x).unwrap();
+        assert_eq!(got.logit_codes, want.logit_codes, "{backend}");
+        assert_eq!(got.predictions, want.predictions, "{backend}");
+    }
+
+    // Byte-patch an x2 artifact's lane-width field to claim 4 words: the
+    // x2 backend must refuse to replay it rather than mis-stride planes.
+    let x2 = nfab("width_bitsliced-x2");
+    let mut bytes = std::fs::read(&x2).unwrap();
+    let name_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let lanes_off = 12 + name_len + 8 + 4;
+    assert_eq!(
+        u32::from_le_bytes(bytes[lanes_off..lanes_off + 4].try_into().unwrap()),
+        2,
+        "lane-width field not where the layout says it is"
+    );
+    bytes[lanes_off..lanes_off + 4].copy_from_slice(&4u32.to_le_bytes());
+    let bad = nfab("width_patched");
+    std::fs::write(&bad, &bytes).unwrap();
+    let err = format!(
+        "{:#}",
+        model
+            .load_fabric(&FabricOptions::new().backend("bitsliced-x2"), &bad)
+            .unwrap_err()
+    );
+    assert!(err.contains("4-word plane format"), "{err}");
+    assert!(err.contains("2-word planes"), "{err}");
+
+    // Pinning a different width against an honest artifact fails the
+    // same way before any plane is touched.
+    let err = format!(
+        "{:#}",
+        model
+            .load_fabric(&FabricOptions::new().backend("bitsliced-x4"), &x2)
+            .unwrap_err()
+    );
+    assert!(err.contains("bitsliced-x2"), "{err}");
+}
+
+#[test]
+fn bitsliced_auto_resolves_before_anything_is_persisted() {
+    use neuralut::engine::{detect_lane_words, lane_backend_name};
+    let net = random_network(97, 8, 2, &[6, 3], 3, 2, 4);
+    let model = Model::from_network(net.clone());
+    let x: Vec<f32> = (0..8 * 77).map(|i| (i % 7) as f32 / 7.0).collect();
+    let want = Simulator::new(&net).simulate_batch(&x);
+
+    // Compiling under the alias lands on the detected concrete width.
+    let concrete = lane_backend_name(detect_lane_words()).unwrap();
+    let fabric = model
+        .compile(&FabricOptions::new().backend(" Bitsliced-AUTO "))
+        .unwrap();
+    assert_eq!(fabric.backend_name(), concrete);
+    let got = fabric.session().infer_batch(&x).unwrap();
+    assert_eq!(got.logit_codes, want.logit_codes);
+
+    // Saving records the concrete name — never the alias — and a load
+    // pinned to the alias accepts the artifact it produced.
+    let path = nfab("auto");
+    fabric.save(&path).unwrap();
+    let loaded = model
+        .load_fabric(&FabricOptions::new().backend("bitsliced-auto"), &path)
+        .unwrap();
+    assert_eq!(loaded.backend_name(), concrete);
+    assert_eq!(
+        loaded.session().infer_batch(&x).unwrap().logit_codes,
+        want.logit_codes
+    );
+}
+
+#[test]
+fn engine_env_override_selects_a_bit_exact_backend() {
+    // The CI matrix leg sets NEURALUT_ENGINE=bitsliced-x4; this pins the
+    // same path deterministically via the env injection hook.
+    let net = random_network(98, 7, 2, &[5, 3], 2, 2, 4);
+    let model = Model::from_network(net.clone());
+    let x: Vec<f32> = (0..7 * 130).map(|i| (i % 23) as f32 / 23.0).collect();
+    let want = Simulator::new(&net).simulate_batch(&x);
+    for name in ["bitsliced-x4", "bitsliced-auto"] {
+        let env = |key: &str| (key == "NEURALUT_ENGINE").then(|| name.to_string());
+        let opts = FabricOptions::with_env(&env, None).unwrap();
+        let fabric = model.compile(&opts).unwrap();
+        assert!(fabric.backend_name().starts_with("bitsliced"), "{name}");
+        let got = fabric.session().infer_batch(&x).unwrap();
+        assert_eq!(got.logit_codes, want.logit_codes, "{name}");
+        assert_eq!(got.predictions, want.predictions, "{name}");
+    }
 }

@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use neuralut::engine::{lane_backend_name, LANE_WIDTHS};
 use neuralut::fabric::{FabricOptions, Model, OptLevel};
 use neuralut::luts::{random_network, structured_network, LutNetwork};
 use neuralut::netlist::{quantize_input, Simulator};
@@ -193,6 +194,52 @@ fn prop_optimized_netlists_are_bit_exact_at_every_level() {
 }
 
 #[test]
+fn prop_every_lane_width_is_bit_exact_at_every_opt_level() {
+    // The whole width family (64/128/256/512 samples per block) must
+    // reproduce the scalar fabric exactly at O0, O1 and O2 on ragged
+    // batches that straddle block boundaries of every width.
+    forall_res(
+        0x62,
+        10,
+        |r| {
+            let net = arb_network_mixed(r);
+            // Straddle the widest (512-sample) block boundary too.
+            let batch = match r.below(4) {
+                0 => 1 + r.below(63),
+                1 => 128 * (1 + r.below(4)),
+                2 => 128 * (1 + r.below(4)) + 1 + r.below(63),
+                _ => 1 + r.below(600),
+            };
+            let x: Vec<f32> = (0..batch * net.input_size).map(|_| r.f32()).collect();
+            (net, x)
+        },
+        |(net, x)| {
+            let sim = Simulator::new(net);
+            let want = sim.simulate_batch(x);
+            let model = Model::from_network(net.clone());
+            for lanes in LANE_WIDTHS {
+                let backend = lane_backend_name(lanes).ok_or("unnamed width")?;
+                for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+                    let got = model
+                        .compile(&FabricOptions::new().backend(backend).opt_level(level))
+                        .map_err(|e| e.to_string())?
+                        .session()
+                        .infer_batch(x)
+                        .map_err(|e| e.to_string())?;
+                    if got.logit_codes != want.logit_codes {
+                        return Err(format!("{backend} {level}: logit codes diverge"));
+                    }
+                    if got.predictions != want.predictions {
+                        return Err(format!("{backend} {level}: predictions diverge"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_nfab_artifacts_round_trip_bit_exactly() {
     // A fabric saved by one "process" (CompiledFabric::save) and loaded
     // into a fresh Model (Model::load_fabric) serves identical outputs
@@ -209,14 +256,16 @@ fn prop_nfab_artifacts_round_trip_bit_exactly() {
                 1 => OptLevel::O1,
                 _ => OptLevel::O2,
             };
-            (net, x, level)
+            let lanes = LANE_WIDTHS[r.below(LANE_WIDTHS.len())];
+            (net, x, level, lanes)
         },
-        |(net, x, level)| {
-            let opts = FabricOptions::new().backend("bitsliced").opt_level(*level);
+        |(net, x, level, lanes)| {
+            let backend = lane_backend_name(*lanes).ok_or("unnamed width")?;
+            let opts = FabricOptions::new().backend(backend).opt_level(*level);
             let model = Model::from_network(net.clone());
             let fabric = model.compile(&opts).map_err(|e| e.to_string())?;
             let path = std::env::temp_dir().join(format!(
-                "neuralut_prop_nfab_{}_{level}.nfab",
+                "neuralut_prop_nfab_{}_{level}_x{lanes}.nfab",
                 net.name.replace('-', "_")
             ));
             fabric.save(&path).map_err(|e| e.to_string())?;

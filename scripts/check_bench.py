@@ -14,6 +14,10 @@ Two gate families:
       Quick-mode rows (NEURALUT_BENCH_QUICK, 0.15s windows on shared CI
       runners) relax this to a catastrophic-only 50% margin so scheduler
       noise on an unrelated PR cannot turn CI red;
+    - wide planes: on every large repro case (O2 word ops >= 1500), each
+      bitsliced-x2/x4/x8 throughput must stay >= 90% of the u64 run over
+      the same netlist (50% in quick mode), and the best wide width must
+      beat u64 by >= 2x (1.3x in quick mode) on at least one large case;
     - every BENCH_compile_report.json entry: the pass chain is coherent
       (passes[i].ops_before == passes[i-1].ops_after, last pass's
       ops_after == the report's final op count == the engine row's
@@ -51,6 +55,16 @@ SAME_RUN_THROUGHPUT_MARGIN = 0.85
 # Quick-mode timing windows are too short to trust a tight margin on a
 # shared runner; still catch catastrophic (>2x) regressions.
 SAME_RUN_THROUGHPUT_MARGIN_QUICK = 0.50
+# Wide-plane gates (bitsliced-x2/x4/x8 vs the u64 x1 run, same netlist,
+# same run). Only armed on the large repro cases: tiny nets fit a single
+# block and their per-width deltas are pure timing noise.
+LARGE_CASE_MIN_OPS = 1500
+WIDE_MUST_NOT_LOSE_MARGIN = 0.90
+WIDE_MUST_NOT_LOSE_MARGIN_QUICK = 0.50
+# The widest profitable width must beat plain u64 by at least this factor
+# on at least one large case — the point of carrying the width family.
+BEST_WIDTH_SPEEDUP = 2.0
+BEST_WIDTH_SPEEDUP_QUICK = 1.3
 
 failures = []
 
@@ -161,6 +175,58 @@ def main():
                     )
                 else:
                     ok(f"{name}: O2 throughput {t2:.0f} vs O0 {t0:.0f} samples/s")
+        # --- wide-plane gates (deterministic, same run) -----------------
+        rows_with_widths = [r for r in cases.values() if r.get("width_samples_per_s")]
+        if not rows_with_widths:
+            fail(f"no row in {ENGINE} carries width_samples_per_s — wide bench missing?")
+        large_rows = 0
+        best = (0.0, None, None)  # (speedup vs u64, case, width name)
+        any_quick = any(r.get("quick") for r in rows_with_widths)
+        for name, row in sorted(cases.items()):
+            widths = row.get("width_samples_per_s")
+            if not widths:
+                continue
+            base = float(widths.get("bitsliced", 0.0))
+            if base <= 0:
+                fail(f"{name}: width table lacks a positive u64 (x1) baseline")
+                continue
+            if row["word_ops_o2"] < LARGE_CASE_MIN_OPS:
+                continue
+            large_rows += 1
+            margin = (
+                WIDE_MUST_NOT_LOSE_MARGIN_QUICK
+                if row.get("quick")
+                else WIDE_MUST_NOT_LOSE_MARGIN
+            )
+            for wname, sps in sorted(widths.items()):
+                if wname == "bitsliced":
+                    continue
+                ratio = float(sps) / base
+                if ratio < margin:
+                    fail(
+                        f"{name}: {wname} throughput {float(sps):.0f} samples/s "
+                        f"loses to u64 ({base:.0f}; {ratio:.2f}x < {margin:.2f}x floor)"
+                    )
+                else:
+                    ok(f"{name}: {wname} {float(sps):.0f} samples/s ({ratio:.2f}x of u64)")
+                if ratio > best[0]:
+                    best = (ratio, name, wname)
+        if rows_with_widths:
+            if large_rows == 0:
+                fail(
+                    f"no large repro case (word_ops_o2 >= {LARGE_CASE_MIN_OPS}) "
+                    f"carries width data — the wide gate never armed"
+                )
+            else:
+                need = BEST_WIDTH_SPEEDUP_QUICK if any_quick else BEST_WIDTH_SPEEDUP
+                if best[0] < need:
+                    fail(
+                        f"best wide speedup is {best[0]:.2f}x ({best[2]} on {best[1]}) "
+                        f"— below the {need:.1f}x bar on every large case"
+                    )
+                else:
+                    ok(f"best wide speedup: {best[0]:.2f}x ({best[2]} on {best[1]})")
+
         if tr_o0 > 0:
             red = 1.0 - tr_o2 / tr_o0
             if red < MIN_TRAINED_REDUCTION:
