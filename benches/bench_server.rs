@@ -90,9 +90,15 @@ fn shed(model: &Model, opts: &FabricOptions, rate: f64, n_req: usize)
 
 fn main() {
     let quick = std::env::var_os("NEURALUT_BENCH_QUICK").is_some_and(|v| !v.is_empty());
+    // Rows produced with fault injection armed (NEURALUT_FAULTS — e.g. the
+    // CI chaos leg) measure survival, not speed: stamp them so
+    // check_bench.py never compares them against clean throughput
+    // baselines.
+    let faults_armed = neuralut::util::faults::armed();
     println!(
-        "== bench_server: multi-worker sharded serving runtime{} ==",
-        if quick { " (quick mode)" } else { "" }
+        "== bench_server: multi-worker sharded serving runtime{}{} ==",
+        if quick { " (quick mode)" } else { "" },
+        if faults_armed { " (FAULTS ARMED — rows excluded from baselines)" } else { "" }
     );
     let model = Model::from_network(random_network(11, 196, 2, &[64, 32, 10], 6, 2, 4));
     let n_req = if quick { 4_000 } else { 30_000 };
@@ -140,6 +146,7 @@ fn main() {
             }
             rows.push(obj(vec![
                 ("section", Json::Str("saturation".into())),
+                ("faults_armed", Json::Bool(faults_armed)),
                 ("backend", Json::Str(backend.into())),
                 ("workers", Json::Num(workers as f64)),
                 ("requests", Json::Num(n_req as f64)),
@@ -180,6 +187,7 @@ fn main() {
         );
         rows.push(obj(vec![
             ("section", Json::Str("backpressure".into())),
+            ("faults_armed", Json::Bool(faults_armed)),
             ("backend", Json::Str("bitsliced".into())),
             ("workers", Json::Num(2.0)),
             ("queue_depth", Json::Num(64.0)),

@@ -40,11 +40,12 @@
 //! is checked against the remaining file length *before* any allocation
 //! or shift.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::engine::{BitNetlist, Level, MuxOp, OptLevel};
+use crate::util::faults;
 
 /// "NFAB", in the same hex-spelling convention as the NLUT magic.
 pub const NFAB_MAGIC: u32 = 0x4E464142;
@@ -138,14 +139,28 @@ pub(crate) fn save(
     ] {
         w32(&mut out, v);
     }
+    atomic_write(path, &out)
+}
+
+/// Write `bytes` to `path` atomically: a temporary sibling suffixed with
+/// the process id takes the payload, then one `rename` publishes it.
+/// Concurrent readers see either the old file or the new one, never a
+/// torn half-write — the discipline both the `.nfab` artifact and its
+/// `.report.json` sibling are persisted under. The
+/// [`artifact.write`](crate::util::faults::point::ARTIFACT_WRITE) fault
+/// point sits between the payload write and the publishing rename, which
+/// is exactly where a crash leaves a stranded `.tmp` file but an intact
+/// (old or absent) destination.
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)
                 .with_context(|| format!("creating {}", parent.display()))?;
         }
     }
-    let tmp = path.with_extension(format!("nfab.tmp.{}", std::process::id()));
-    std::fs::write(&tmp, &out).with_context(|| format!("writing {}", tmp.display()))?;
+    let tmp = PathBuf::from(format!("{}.tmp.{}", path.display(), std::process::id()));
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    faults::inject(faults::point::ARTIFACT_WRITE)?;
     std::fs::rename(&tmp, path)
         .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
     Ok(())
@@ -157,6 +172,8 @@ pub(crate) fn save(
 /// [`Model::load_fabric`](crate::fabric::Model::load_fabric) does.
 pub(crate) fn load(path: &Path) -> Result<(NfabHeader, BitNetlist)> {
     let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    faults::inject(faults::point::ARTIFACT_READ)
+        .with_context(|| format!("reading {}", path.display()))?;
     let mut r = NfabReader { bytes: &bytes, path, offset: 0 };
     let magic = r.u32("magic")?;
     if magic != NFAB_MAGIC {
@@ -371,6 +388,40 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path).unwrap_err();
         assert!(format!("{err:#}").contains("validating"), "{err:#}");
+    }
+
+    #[test]
+    fn a_write_failing_before_the_rename_leaves_the_old_artifact_intact() {
+        let net = random_network(55, 8, 2, &[6, 3], 3, 2, 4);
+        let nl = lower::lower(&net).unwrap();
+        let path = tmp("torn");
+        save(&path, "bitsliced", OptLevel::O0, net.digest(), 1, &nl).unwrap();
+        let before = std::fs::read(&path).unwrap();
+        // Crash the second save between its tmp write and the rename: the
+        // destination must still hold the first, fully intact artifact.
+        let guard = crate::util::faults::arm_scoped("artifact.write:1:error", 41).unwrap();
+        let err = save(&path, "bitsliced", OptLevel::O2, net.digest(), 1, &nl).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        assert_eq!(guard.fired("artifact.write"), 1);
+        drop(guard);
+        assert_eq!(std::fs::read(&path).unwrap(), before, "torn write must not publish");
+        let (header, _) = load(&path).unwrap();
+        assert_eq!(header.opt_level, OptLevel::O0);
+    }
+
+    #[test]
+    fn injected_read_faults_surface_as_load_errors() {
+        let net = random_network(56, 8, 2, &[6, 3], 3, 2, 4);
+        let nl = lower::lower(&net).unwrap();
+        let path = tmp("read_fault");
+        save(&path, "bitsliced", OptLevel::O1, net.digest(), 1, &nl).unwrap();
+        let guard = crate::util::faults::arm_scoped("artifact.read:1:error", 43).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("injected fault"), "{err}");
+        assert!(err.contains(&path.display().to_string()), "{err}");
+        assert_eq!(guard.fired("artifact.read"), 1);
+        drop(guard);
+        load(&path).unwrap();
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //! [`ServerConfig`](crate::server::ServerConfig) file over defaults, and
 //! every unknown-backend error lists the registered names.
 //!
+//! Compilation degrades gracefully: when a requested backend fails to
+//! construct, [`Model::compile`] falls back to the reference `scalar`
+//! backend instead of aborting, records the fallback in the
+//! [`CompileReport`] (`degraded_from`) and the `neuralut_degraded`
+//! gauge, and never persists the degraded program into a fabric cache.
+//!
 //! Compilation is a ship-once step: [`CompiledFabric::save`] persists
 //! the optimized program as a versioned `.nfab` [`artifact`] (backend
 //! name + opt level + model digest + netlist), and
@@ -60,6 +66,7 @@ use crate::luts::LutNetwork;
 use crate::netlist::SimResult;
 use crate::obs::trace;
 use crate::server::Server;
+use crate::util::faults;
 
 /// Metadata of a loaded model — everything reports and logs need
 /// without touching the tables.
@@ -198,9 +205,40 @@ impl Model {
         let tuning = opts.resolve_tuning()?;
         let opt_level = opts.opt_level_or_default();
         let t0 = Instant::now();
-        let program = {
+        let compiled = {
             let _span = trace::span(&format!("compile/{}", entry.name()));
-            entry.compile(self.net.clone(), opt_level)?
+            faults::inject(faults::point::BACKEND_COMPILE)
+                .and_then(|()| entry.compile(self.net.clone(), opt_level))
+        };
+        // Graceful degradation: a backend that fails to *construct* must
+        // not take availability with it when the reference interpreter
+        // can still serve the model. Fall back to `scalar`, record the
+        // degradation in the report (and the `neuralut_degraded` gauge),
+        // and keep the original error visible on stderr. Unknown names
+        // and bad tuning still fail above — those are caller mistakes,
+        // not runtime faults.
+        let (entry, program, degraded_from) = match compiled {
+            Ok(program) => (entry, program, None),
+            Err(cause) => {
+                let fallback = match registry.resolve(DEFAULT_BACKEND) {
+                    Ok(f) if entry.name() != DEFAULT_BACKEND => f,
+                    // The default itself failed (or is not registered):
+                    // there is nothing left to degrade to.
+                    _ => return Err(cause),
+                };
+                eprintln!(
+                    "warning: backend '{}' failed to compile; degrading to '{}': {cause:#}",
+                    entry.name(),
+                    DEFAULT_BACKEND
+                );
+                let program = {
+                    let _span = trace::span(&format!("compile/{}", fallback.name()));
+                    fallback
+                        .compile(self.net.clone(), opt_level)
+                        .with_context(|| format!("degrading after: {cause:#}"))?
+                };
+                (fallback, program, Some(entry.name().to_string()))
+            }
         };
         let report = build_report(
             self,
@@ -208,6 +246,7 @@ impl Model {
             opt_level,
             t0.elapsed().as_secs_f64(),
             false,
+            degraded_from,
             program.as_ref(),
         );
         Ok(CompiledFabric { model: self.clone(), entry, program, tuning, opt_level, report })
@@ -259,6 +298,17 @@ impl Model {
             }
         }
         let fabric = self.compile_fresh(registry, opts)?;
+        // A degraded fabric is the scalar interpreter standing in for the
+        // backend the caller asked to cache — persisting it would poison
+        // the cache with the wrong program. Serve it, don't save it.
+        if let Some(from) = &fabric.report.degraded_from {
+            eprintln!(
+                "warning: not caching {}: fabric degraded from '{from}' to '{}'",
+                path.display(),
+                fabric.entry.name()
+            );
+            return Ok(fabric);
+        }
         // The cache is an optimization, not an availability dependency: a
         // failed write (read-only volume, permissions) must not take down
         // a process that just compiled a perfectly good program.
@@ -371,6 +421,7 @@ impl Model {
             header.opt_level,
             t0.elapsed().as_secs_f64(),
             true,
+            None,
             program.as_ref(),
         );
         Ok(CompiledFabric {
@@ -407,6 +458,7 @@ fn build_report(
     opt_level: OptLevel,
     total_s: f64,
     from_cache: bool,
+    degraded_from: Option<String>,
     program: &dyn FabricProgram,
 ) -> CompileReport {
     let (ops, levels, max_planes, max_wires) = match program.bit_netlist() {
@@ -425,6 +477,7 @@ fn build_report(
         max_planes,
         max_wires,
         lanes: program.plane_lanes().unwrap_or(0),
+        degraded_from,
     }
 }
 
@@ -476,6 +529,14 @@ impl CompiledFabric {
         &self.report
     }
 
+    /// True when this fabric is serving degraded: the requested backend
+    /// failed to compile and the scalar fallback took over.
+    /// [`report`](Self::report)`.degraded_from` names the backend that
+    /// was asked for.
+    pub fn degraded(&self) -> bool {
+        self.report.degraded_from.is_some()
+    }
+
     /// Where [`save`](Self::save) persists the compile report next to a
     /// `.nfab` artifact: `net.nfab` → `net.report.json`.
     pub fn report_path(artifact_path: &Path) -> PathBuf {
@@ -509,13 +570,17 @@ impl CompiledFabric {
             .unwrap_or(self.entry.capabilities().word_lanes)
             .max(1);
         artifact::save(path, self.entry.name(), self.opt_level, self.model.digest(), lanes, nl)?;
-        // The report rides along as a JSON sibling. Like the artifact
+        // The report rides along as a JSON sibling, written with the same
+        // tmp+rename discipline as the artifact so a crash mid-save never
+        // leaves a torn report next to a good .nfab. Like the artifact
         // cache itself it is telemetry, not an availability dependency:
         // a failed write warns and the fabric stays perfectly usable.
         let report_path = Self::report_path(path);
-        if let Err(e) = std::fs::write(&report_path, self.report.to_json().to_string()) {
+        if let Err(e) =
+            artifact::atomic_write(&report_path, self.report.to_json().to_string().as_bytes())
+        {
             eprintln!(
-                "warning: could not write compile report {}: {e}",
+                "warning: could not write compile report {}: {e:#}",
                 report_path.display()
             );
         }
@@ -558,7 +623,7 @@ impl CompiledFabric {
     /// executing this fabric's shared program. Infallible — compilation
     /// and validation already happened in [`Model::compile`].
     pub fn serve(&self) -> Server {
-        Server::start(self.program.clone(), self.model.input_size(), &self.tuning)
+        Server::start(self.program.clone(), self.model.input_size(), &self.tuning, self.degraded())
     }
 }
 
@@ -791,6 +856,53 @@ mod tests {
         assert!(second.report().from_cache);
         assert!(second.report().passes.is_empty());
         assert_eq!(second.report().ops, first.report().ops);
+    }
+
+    #[test]
+    fn failed_backend_compile_degrades_to_scalar_and_stays_bit_exact() {
+        let m = model();
+        let x: Vec<f32> = (0..8 * 40).map(|i| (i % 11) as f32 / 11.0).collect();
+        let guard = crate::util::faults::arm_scoped("backend.compile:1:error", 31).unwrap();
+        let fabric = m.compile(&FabricOptions::new().backend("bitsliced")).unwrap();
+        assert_eq!(guard.fired("backend.compile"), 1);
+        assert!(fabric.degraded());
+        assert_eq!(fabric.backend_name(), "scalar");
+        assert_eq!(fabric.report().degraded_from.as_deref(), Some("bitsliced"));
+        assert!(fabric.report().to_string().contains("DEGRADED"));
+        // Degraded answers are still bit-exact: scalar IS the reference.
+        let sim = Simulator::new(m.network());
+        assert_eq!(
+            fabric.session().infer_batch(&x).unwrap().logit_codes,
+            sim.simulate_batch(&x).logit_codes
+        );
+        // When the default backend itself fails there is nothing left to
+        // degrade to: the original error propagates.
+        let err = m.compile(&FabricOptions::new()).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        drop(guard);
+        // Disarmed, compiles are healthy again.
+        let healthy = m.compile(&FabricOptions::new().backend("bitsliced")).unwrap();
+        assert!(!healthy.degraded());
+        assert!(healthy.report().degraded_from.is_none());
+    }
+
+    #[test]
+    fn degraded_fabrics_are_never_written_to_the_cache() {
+        let m = model();
+        let path = std::env::temp_dir().join("neuralut_fabric_degraded_cache.nfab");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(CompiledFabric::report_path(&path));
+        let opts = FabricOptions::new().backend("bitsliced").fabric_cache(&path);
+        let guard = crate::util::faults::arm_scoped("backend.compile:1:error", 33).unwrap();
+        let fabric = m.compile(&opts).unwrap();
+        assert!(fabric.degraded());
+        assert!(!path.exists(), "a degraded (scalar) fabric must not poison the cache");
+        assert!(!CompiledFabric::report_path(&path).exists());
+        drop(guard);
+        // Healthy again: the cache fills with the real backend.
+        let healthy = m.compile(&opts).unwrap();
+        assert!(!healthy.degraded());
+        assert!(path.exists());
     }
 
     #[test]

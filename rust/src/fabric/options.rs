@@ -8,7 +8,8 @@
 //! 1. explicit builder calls ([`backend`](FabricOptions::backend),
 //!    [`workers`](FabricOptions::workers), …) — how CLI flags are applied;
 //! 2. environment (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`,
-//!    `NEURALUT_OPT_LEVEL`, `NEURALUT_FABRIC_CACHE`);
+//!    `NEURALUT_OPT_LEVEL`, `NEURALUT_FABRIC_CACHE`,
+//!    `NEURALUT_REQUEST_TIMEOUT_MS`);
 //! 3. a [`ServerConfig`] file passed to
 //!    [`from_env_and_config`](FabricOptions::from_env_and_config);
 //! 4. defaults (`scalar`, opt level `O1`, no fabric cache, 1 worker,
@@ -51,6 +52,10 @@ pub struct FabricTuning {
     pub workers: usize,
     /// Bounded request-queue depth — the backpressure limit.
     pub queue_depth: usize,
+    /// Default per-request deadline: requests older than this are shed at
+    /// dequeue with `DeadlineExceeded`. `None` (the default) = requests
+    /// never expire unless the client stamps its own deadline.
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for FabricTuning {
@@ -60,6 +65,7 @@ impl Default for FabricTuning {
             batch_window: Duration::from_micros(200),
             workers: 1,
             queue_depth: 1024,
+            request_timeout: None,
         }
     }
 }
@@ -82,6 +88,9 @@ impl FabricTuning {
         if self.max_batch == 0 {
             bail!("max_batch = 0 (need at least 1 request per batch)");
         }
+        if self.request_timeout == Some(Duration::ZERO) {
+            bail!("request_timeout_ms = 0 would shed every request; omit it for no deadline");
+        }
         Ok(())
     }
 }
@@ -98,6 +107,7 @@ pub struct FabricOptions {
     queue_depth: Option<usize>,
     max_batch: Option<usize>,
     batch_window: Option<Duration>,
+    request_timeout: Option<Duration>,
 }
 
 impl FabricOptions {
@@ -156,6 +166,15 @@ impl FabricOptions {
         self
     }
 
+    /// Default per-request deadline for
+    /// [`serve`](crate::fabric::CompiledFabric::serve): requests not yet
+    /// executing this long after submission are shed with
+    /// `DeadlineExceeded`. Must be non-zero.
+    pub fn request_timeout(mut self, timeout: Duration) -> Self {
+        self.request_timeout = Some(timeout);
+        self
+    }
+
     // ---- getters (what is *set*, before defaulting) -----------------------
 
     pub fn get_backend(&self) -> Option<&str> {
@@ -184,6 +203,10 @@ impl FabricOptions {
 
     pub fn get_batch_window(&self) -> Option<Duration> {
         self.batch_window
+    }
+
+    pub fn get_request_timeout(&self) -> Option<Duration> {
+        self.request_timeout
     }
 
     /// The backend name that will be resolved at compile time.
@@ -232,6 +255,7 @@ impl FabricOptions {
             opts.queue_depth = Some(c.queue_depth);
             opts.max_batch = Some(c.max_batch);
             opts.batch_window = Some(c.batch_window);
+            opts.request_timeout = c.request_timeout;
         }
         if let Some(v) = env("NEURALUT_ENGINE") {
             opts.backend = Some(v);
@@ -252,6 +276,13 @@ impl FabricOptions {
         if let Some(v) = env("NEURALUT_FABRIC_CACHE") {
             opts.fabric_cache = Some(PathBuf::from(v));
         }
+        if let Some(v) = env("NEURALUT_REQUEST_TIMEOUT_MS") {
+            let ms = v
+                .trim()
+                .parse::<u64>()
+                .with_context(|| format!("NEURALUT_REQUEST_TIMEOUT_MS = '{v}' is not a number"))?;
+            opts.request_timeout = Some(Duration::from_millis(ms));
+        }
         Ok(opts)
     }
 
@@ -265,6 +296,7 @@ impl FabricOptions {
             batch_window: self.batch_window.unwrap_or(d.batch_window),
             workers: self.workers.unwrap_or(d.workers),
             queue_depth: self.queue_depth.unwrap_or(d.queue_depth),
+            request_timeout: self.request_timeout.or(d.request_timeout),
         };
         tuning.validate()?;
         Ok(tuning)
@@ -287,6 +319,8 @@ mod tests {
         assert_eq!(t.batch_window, c.batch_window);
         assert_eq!(t.workers, c.workers);
         assert_eq!(t.queue_depth, c.queue_depth);
+        assert_eq!(t.request_timeout, c.request_timeout);
+        assert!(t.request_timeout.is_none(), "no deadline unless configured");
         assert_eq!(FabricOptions::new().backend_or_default(), c.backend);
         assert_eq!(FabricOptions::new().opt_level_or_default(), OptLevel::O1);
         assert!(c.opt_level.is_none(), "config default must not pin a level");
@@ -357,6 +391,38 @@ mod tests {
         };
         let err = FabricOptions::with_env(&env, None).unwrap_err().to_string();
         assert!(err.contains("NEURALUT_WORKERS"), "{err}");
+    }
+
+    #[test]
+    fn request_timeout_follows_the_precedence_chain() {
+        let cfg = ServerConfig {
+            request_timeout: Some(Duration::from_millis(200)),
+            ..Default::default()
+        };
+        // Config alone.
+        let o = FabricOptions::with_env(&no_env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_request_timeout(), Some(Duration::from_millis(200)));
+        // Env beats config.
+        let env = |key: &str| {
+            (key == "NEURALUT_REQUEST_TIMEOUT_MS").then(|| " 75 ".to_string())
+        };
+        let o = FabricOptions::with_env(&env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_request_timeout(), Some(Duration::from_millis(75)));
+        // Builder beats env, and the value lands in the resolved tuning.
+        let o = o.request_timeout(Duration::from_millis(30));
+        let t = o.resolve_tuning().unwrap();
+        assert_eq!(t.request_timeout, Some(Duration::from_millis(30)));
+        // A non-numeric env value errors naming the variable; a zero
+        // builder value fails validation.
+        let bad = |key: &str| {
+            (key == "NEURALUT_REQUEST_TIMEOUT_MS").then(|| "soon".to_string())
+        };
+        let err = FabricOptions::with_env(&bad, None).unwrap_err().to_string();
+        assert!(err.contains("NEURALUT_REQUEST_TIMEOUT_MS"), "{err}");
+        assert!(FabricOptions::new()
+            .request_timeout(Duration::ZERO)
+            .resolve_tuning()
+            .is_err());
     }
 
     #[test]

@@ -119,6 +119,13 @@ impl BackendEntry {
     }
 
     /// Run the factory: compile `net` into the shared program at `opt`.
+    ///
+    /// An `Err` from a *non-default* backend does not necessarily abort
+    /// the caller: [`Model::compile`](crate::fabric::Model::compile)
+    /// treats it as a runtime fault and degrades to the `scalar`
+    /// reference backend (recorded as `degraded_from` in the
+    /// [`CompileReport`](crate::obs::CompileReport)). Factories should
+    /// therefore fail with a descriptive error rather than panic.
     pub fn compile(
         &self,
         net: Arc<LutNetwork>,

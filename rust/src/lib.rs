@@ -44,11 +44,16 @@
 //! * [`synth`] — Vivado-substitute synthesis/P&R cost model (support
 //!   reduction, ROBDD, 6-LUT covering, timing).
 //! * [`server`] — multi-worker sharded inference serving runtime: bounded
-//!   request queue, N batcher threads over one shared compiled fabric,
-//!   explicit backpressure (`try_infer` → `Overloaded`), graceful
+//!   request queue, N *supervised* batcher threads over one shared
+//!   compiled fabric (worker panics are caught, in-flight requests
+//!   answered with a typed `WorkerCrashed`, crashed slots respawned with
+//!   capped backoff), explicit backpressure (`try_infer` → `Overloaded`,
+//!   opt-in `RetryPolicy`), per-request deadlines shed at dequeue
+//!   (`request_timeout_ms` → `DeadlineExceeded`), graceful
 //!   drain-on-shutdown, and per-request latency telemetry (queue-wait /
 //!   batch-formation / execute stages) in an `obs` metrics registry.
-//!   Started via `CompiledFabric::serve`.
+//!   Started via `CompiledFabric::serve`; chaos-tested against the named
+//!   fault points in `util::faults` (`NEURALUT_FAULTS`).
 //!
 //! ## The inference API
 //!

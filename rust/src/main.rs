@@ -120,6 +120,9 @@ impl Opts {
         if let Some(us) = self.usize("batch-window")? {
             fo = fo.batch_window(std::time::Duration::from_micros(us as u64));
         }
+        if let Some(ms) = self.usize("request-timeout")? {
+            fo = fo.request_timeout(std::time::Duration::from_millis(ms as u64));
+        }
         Ok(fo)
     }
 }
@@ -177,17 +180,19 @@ fn print_usage() {
          serve <config> --net F [--rate R] [--requests N] [--batch-window US]\n  \
          \x20     [--workers N] [--queue-depth N] [--engine BACKEND]\n  \
          \x20     [--opt-level O0|O1|O2] [--fabric-cache FILE.nfab]\n  \
-         \x20     [--server-config FILE.toml]\n  \
+         \x20     [--server-config FILE.toml] [--request-timeout MS]\n  \
          report --net F [--engine BACKEND] [--opt-level O0|O1|O2]\n  \
          \x20     [--format table|json] [--out FILE]   compile telemetry\n  \
          stats <config> --net F [--requests N] [--rate R]\n  \
          \x20     [--format prom|json|both]            serve + full telemetry dump\n  \
          suite <file.toml>                      run a batch of pipelines\n\n\
          BACKEND is a registered backend name ({}); NEURALUT_ENGINE /\n\
-         NEURALUT_WORKERS / NEURALUT_OPT_LEVEL / NEURALUT_FABRIC_CACHE set\n\
-         ambient defaults the flags override. --opt-level picks the netlist\n\
-         optimization pipeline (O1 default); --fabric-cache compiles once\n\
-         into a .nfab artifact that later runs and other processes reload.",
+         NEURALUT_WORKERS / NEURALUT_OPT_LEVEL / NEURALUT_FABRIC_CACHE /\n\
+         NEURALUT_REQUEST_TIMEOUT_MS set ambient defaults the flags override.\n\
+         --opt-level picks the netlist optimization pipeline (O1 default);\n\
+         --fabric-cache compiles once into a .nfab artifact that later runs\n\
+         and other processes reload; --request-timeout sheds requests whose\n\
+         deadline passes before a worker reaches them.",
         neuralut::fabric::BackendRegistry::global().names().join(" | ")
     );
 }
@@ -382,6 +387,9 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
         .map(|path| ServerConfig::load(&PathBuf::from(path)))
         .transpose()?;
     let fabric = model.compile(&opts.fabric(file_cfg.as_ref())?)?;
+    if let Some(from) = &fabric.report().degraded_from {
+        eprintln!("warning: serving DEGRADED — '{from}' failed to compile, using scalar");
+    }
     let tuning = fabric.tuning();
     println!("serving {} at {:.0} req/s for {} requests \
               (window {} us, {} engine at {}, {} workers, queue depth {})...",

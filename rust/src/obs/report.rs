@@ -90,6 +90,13 @@ pub struct CompileReport {
     /// classic bitsliced engine, 2/4/8 for the wide variants); 0 for
     /// backends without a plane word (e.g. `scalar`).
     pub lanes: usize,
+    /// When graceful degradation kicked in — the requested backend
+    /// failed to compile (or its artifact failed to load) and the
+    /// fabric fell back to the reference `scalar` backend — this
+    /// records the backend name that *was* requested. `None` for a
+    /// healthy compile. Mirrored into the `neuralut_degraded` gauge by
+    /// [`export`](Self::export).
+    pub degraded_from: Option<String>,
 }
 
 impl CompileReport {
@@ -131,8 +138,10 @@ impl CompileReport {
     }
 
     /// JSON object (persisted as the `.report.json` artifact sibling).
+    /// `degraded_from` is written only when set, so healthy reports stay
+    /// byte-compatible with readers that predate degradation.
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("model", Json::Str(self.model.clone())),
             ("backend", Json::Str(self.backend.clone())),
             ("opt_level", Json::Str(self.opt_level.clone())),
@@ -147,7 +156,11 @@ impl CompileReport {
             ("max_planes", Json::Num(self.max_planes as f64)),
             ("max_wires", Json::Num(self.max_wires as f64)),
             ("lanes", Json::Num(self.lanes as f64)),
-        ])
+        ];
+        if let Some(from) = &self.degraded_from {
+            fields.push(("degraded_from", Json::Str(from.clone())));
+        }
+        obj(fields)
     }
 
     /// Parse a report back (inverse of [`to_json`](Self::to_json)).
@@ -173,6 +186,12 @@ impl CompileReport {
             lanes: match j.get("lanes") {
                 Ok(v) => v.as_usize()?,
                 Err(_) => 0,
+            },
+            // Healthy reports (and reports written before degradation
+            // existed) carry no `degraded_from` key at all.
+            degraded_from: match j.get("degraded_from") {
+                Ok(v) => Some(v.as_str()?.to_string()),
+                Err(_) => None,
             },
         })
     }
@@ -209,6 +228,12 @@ impl CompileReport {
         reg.gauge("neuralut_compile_max_wires", &[]).set(self.max_wires as f64);
         reg.describe("neuralut_compile_lanes", "u64 words per bit-plane (0 = no plane word)");
         reg.gauge("neuralut_compile_lanes", &[]).set(self.lanes as f64);
+        reg.describe(
+            "neuralut_degraded",
+            "1 when the fabric fell back to the scalar backend after a compile/load failure",
+        );
+        reg.gauge("neuralut_degraded", &[])
+            .set(if self.degraded_from.is_some() { 1.0 } else { 0.0 });
     }
 }
 
@@ -223,6 +248,9 @@ impl fmt::Display for CompileReport {
             if self.from_cache { ", cached" } else { "" },
             self.total_s * 1e3
         )?;
+        if let Some(from) = &self.degraded_from {
+            writeln!(f, "  DEGRADED: '{from}' failed to compile; serving on the scalar backend")?;
+        }
         if self.passes.is_empty() {
             writeln!(f, "  passes : none (loaded precompiled program)")?;
         } else {
@@ -294,6 +322,7 @@ mod tests {
             max_planes: 12,
             max_wires: 40,
             lanes: 1,
+            degraded_from: None,
         }
     }
 
@@ -342,6 +371,33 @@ mod tests {
         let mut scalar = sample();
         scalar.lanes = 0;
         assert!(!scalar.to_string().contains("planes,"), "{scalar}");
+    }
+
+    #[test]
+    fn degraded_reports_round_trip_and_export_the_gauge() {
+        // A healthy report omits the key entirely and exports gauge 0.
+        let healthy = sample();
+        assert!(!healthy.to_json().to_string().contains("degraded_from"));
+        let reg = MetricsRegistry::new();
+        healthy.export(&reg);
+        assert_eq!(reg.snapshot().gauge("neuralut_degraded", &[]).unwrap().value, 0.0);
+        // A degraded report round-trips the origin backend and flips the
+        // gauge; Display calls the degradation out loudly.
+        let mut degraded = sample();
+        degraded.backend = "scalar".into();
+        degraded.passes.clear();
+        degraded.ops = 0;
+        degraded.degraded_from = Some("bitsliced-x4".into());
+        let j = Json::parse(&degraded.to_json().to_string()).unwrap();
+        let back = CompileReport::from_json(&j).unwrap();
+        assert_eq!(back.degraded_from.as_deref(), Some("bitsliced-x4"));
+        assert_eq!(back, degraded);
+        let reg = MetricsRegistry::new();
+        degraded.export(&reg);
+        assert_eq!(reg.snapshot().gauge("neuralut_degraded", &[]).unwrap().value, 1.0);
+        let text = degraded.to_string();
+        assert!(text.contains("DEGRADED"), "{text}");
+        assert!(text.contains("bitsliced-x4"), "{text}");
     }
 
     #[test]

@@ -15,10 +15,31 @@
 //! module an already-compiled program; `Server::start` is a thin
 //! crate-internal shim under it.
 //!
+//! The runtime is *supervised*: each worker slot runs under a supervisor
+//! thread that wraps batch execution in `catch_unwind`. A drop-guard over
+//! the in-flight batch answers every request with a typed
+//! [`ServerError::WorkerCrashed`] the moment a worker unwinds — a panic
+//! can never strand a reply channel — and the supervisor respawns the
+//! slot with bounded, shutdown-aware backoff (at most
+//! [`MAX_WORKER_RESTARTS`] times, counted in
+//! `neuralut_server_worker_panics_total` / `_respawns_total`). If every
+//! slot dies, the last supervisor out closes the queue and answers the
+//! backlog, so no accepted request can hang even in a crash storm.
+//!
+//! Requests may carry a deadline: [`Client::infer_deadline`] per call, or
+//! a server-wide default via `request_timeout_ms`
+//! ([`ServerConfig::request_timeout`], `NEURALUT_REQUEST_TIMEOUT_MS`,
+//! `--request-timeout` — the usual
+//! [`FabricOptions`](crate::fabric::FabricOptions) precedence). Expired
+//! requests are shed *at dequeue*, before any execute cost is paid, with
+//! [`ServerError::DeadlineExceeded`] (counted and overrun-histogrammed).
+//!
 //! Backpressure is explicit: [`Client::try_infer`] never blocks and
 //! returns [`ServerError::Overloaded`] when the queue is full (counted in
 //! [`ServerStats::rejected`]); the blocking [`Client::infer`] /
-//! [`Client::infer_async`] paths wait for queue space instead. Shutdown is
+//! [`Client::infer_async`] paths wait for queue space instead, and
+//! [`Client::try_infer_retry`] layers an opt-in jittered-backoff
+//! [`RetryPolicy`] over the non-blocking edge. Shutdown is
 //! graceful: dropping the [`Server`] closes the queue (new submissions
 //! fail fast with [`ServerError::Stopped`]), workers drain and answer the
 //! backlog, then join. Serving counters live in a per-server
@@ -32,6 +53,7 @@
 //! exposes the raw registry snapshot for the Prometheus / JSON encoders
 //! in [`crate::obs::expo`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -43,12 +65,23 @@ use crate::config::TomlDoc;
 use crate::engine::{BitNetlist, FabricProgram, InferenceBackend, OptLevel};
 use crate::fabric::{BackendRegistry, FabricTuning, DEFAULT_BACKEND};
 use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry, MetricsSnapshot};
+use crate::util::faults;
 use crate::util::pool::{BoundedQueue, Pop, PushError};
+use crate::util::rng::Rng;
 
 /// Upper bound on `workers` — more threads than this is a config bug.
 pub const MAX_WORKERS: usize = 512;
 /// Upper bound on `queue_depth` — a deeper queue only hides overload.
 pub const MAX_QUEUE_DEPTH: usize = 1 << 20;
+/// How many times the supervisor respawns one crashed worker slot before
+/// declaring it dead. Bounded so a deterministic crash (bad batch shape,
+/// poisoned model) degrades into typed errors instead of a respawn storm.
+pub const MAX_WORKER_RESTARTS: u32 = 16;
+/// First respawn backoff; doubles per consecutive crash of the slot.
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(1);
+/// Backoff ceiling, so a crash-looping slot still retries a few times per
+/// second rather than going dark for minutes.
+const RESTART_BACKOFF_CAP: Duration = Duration::from_millis(64);
 
 /// A parsed server-config *file*: the on-disk tuning format. Feed it to
 /// [`FabricOptions::from_env_and_config`](crate::fabric::FabricOptions::from_env_and_config)
@@ -74,6 +107,10 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Bounded request-queue depth — the backpressure limit.
     pub queue_depth: usize,
+    /// Default per-request deadline (`request_timeout_ms` in the file).
+    /// `None` = requests never expire unless a client stamps its own
+    /// deadline via [`Client::infer_deadline`].
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -88,6 +125,7 @@ impl Default for ServerConfig {
             fabric_cache: None,
             workers: t.workers,
             queue_depth: t.queue_depth,
+            request_timeout: t.request_timeout,
         }
     }
 }
@@ -103,6 +141,7 @@ impl ServerConfig {
     /// fabric_cache = "net.nfab"   # precompiled-fabric artifact path
     /// workers = 4
     /// queue_depth = 2048
+    /// request_timeout_ms = 50     # default per-request deadline (omit: none)
     /// ```
     ///
     /// All keys are optional; unknown keys are rejected so typos fail
@@ -130,6 +169,7 @@ impl ServerConfig {
                     | "fabric_cache"
                     | "workers"
                     | "queue_depth"
+                    | "request_timeout_ms"
             ) {
                 bail!("unknown server config key '{key}'");
             }
@@ -169,6 +209,9 @@ impl ServerConfig {
         if let Some(v) = doc.root.get("queue_depth") {
             cfg.queue_depth = v.as_usize()?;
         }
+        if let Some(v) = doc.root.get("request_timeout_ms") {
+            cfg.request_timeout = Some(Duration::from_millis(v.as_usize()? as u64));
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -183,6 +226,7 @@ impl ServerConfig {
             batch_window: self.batch_window,
             workers: self.workers,
             queue_depth: self.queue_depth,
+            request_timeout: self.request_timeout,
         }
         .validate()
     }
@@ -196,15 +240,24 @@ impl ServerConfig {
     }
 }
 
-/// Why the serving runtime did not accept a request. Carried inside the
-/// `anyhow` error chain so callers can downcast and react (shed vs retry).
+/// Why the serving runtime did not (or could not) answer a request with a
+/// prediction. Carried inside the `anyhow` error chain so callers can
+/// downcast and react (shed vs retry vs resubmit).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ServerError {
     /// The bounded request queue is full — explicit backpressure; shed
-    /// the request or retry later.
+    /// the request or retry later (see [`Client::try_infer_retry`]).
     Overloaded,
     /// The server has stopped (or is draining for shutdown).
     Stopped,
+    /// The worker executing this request's batch panicked. The request
+    /// was *not* served; the supervisor answers every in-flight request
+    /// of a crashed batch with this error (never a hung channel) and
+    /// respawns the worker. Safe to resubmit.
+    WorkerCrashed,
+    /// The request's deadline passed before a worker started executing
+    /// it, so it was shed at dequeue without paying any execute cost.
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for ServerError {
@@ -214,6 +267,12 @@ impl std::fmt::Display for ServerError {
                 write!(f, "server overloaded: request queue is full")
             }
             ServerError::Stopped => write!(f, "server stopped"),
+            ServerError::WorkerCrashed => {
+                write!(f, "worker crashed while serving this request")
+            }
+            ServerError::DeadlineExceeded => {
+                write!(f, "request deadline exceeded before execution")
+            }
         }
     }
 }
@@ -223,7 +282,10 @@ impl std::error::Error for ServerError {}
 struct Request {
     features: Vec<f32>,
     enqueued: Instant,
-    reply: Sender<Reply>,
+    /// Shed at dequeue once this instant passes (see
+    /// [`ServerError::DeadlineExceeded`]); `None` = never expires.
+    deadline: Option<Instant>,
+    reply: Sender<Result<Reply, ServerError>>,
 }
 
 /// One served prediction.
@@ -235,6 +297,67 @@ pub struct Reply {
     pub batch_size: usize,
     /// Which worker thread served the batch.
     pub worker: usize,
+}
+
+/// Receiver half of a submitted request: resolves to the [`Reply`] or the
+/// typed [`ServerError`] the runtime answered with. The supervised worker
+/// pool guarantees every accepted request is answered — a crash, deadline
+/// or shutdown surfaces as an error here, never as a hang.
+pub struct PendingReply {
+    rx: Receiver<Result<Reply, ServerError>>,
+}
+
+impl PendingReply {
+    /// Block until the server answers.
+    pub fn recv(&self) -> Result<Reply> {
+        match self.rx.recv() {
+            Ok(Ok(reply)) => Ok(reply),
+            Ok(Err(e)) => Err(e.into()),
+            // The sender vanishing without an answer means the server was
+            // torn down around us; report it as the crash it is.
+            Err(_) => Err(ServerError::WorkerCrashed.into()),
+        }
+    }
+
+    /// [`recv`](Self::recv) with a local wait bound. Timing out here does
+    /// not cancel the request server-side — pair it with a submission
+    /// deadline ([`Client::infer_deadline`]) to bound both ends.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Reply> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(reply)) => Ok(reply),
+            Ok(Err(e)) => Err(e.into()),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServerError::DeadlineExceeded.into()),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServerError::WorkerCrashed.into()),
+        }
+    }
+}
+
+/// Opt-in jittered exponential backoff for [`Client::try_infer_retry`]:
+/// on [`ServerError::Overloaded`] the client sleeps
+/// `min(base_backoff · 2^attempt, max_backoff)` scaled by a deterministic
+/// jitter in `[0.5, 1.0)` (seeded, so tests reproduce), then resubmits —
+/// up to `max_retries` times. Other errors are never retried.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Resubmissions after the first attempt (0 = plain `try_infer`).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub max_backoff: Duration,
+    /// Jitter seed — vary per client to decorrelate retry herds.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 6,
+            base_backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_millis(5),
+            seed: 0x7E7E_CAFE,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -262,10 +385,17 @@ struct StatsInner {
     queue_depth: Gauge,
     in_flight: Gauge,
     per_worker: Vec<Counter>,
+    failed: Counter,
+    deadline_exceeded: Counter,
+    deadline_overrun: Histogram,
+    worker_panics: Counter,
+    worker_respawns: Counter,
+    retries: Counter,
+    degraded: Gauge,
 }
 
 impl StatsInner {
-    fn new(workers: usize) -> Self {
+    fn new(workers: usize, degraded: bool) -> Self {
         let registry = MetricsRegistry::new();
         for (name, help) in [
             ("neuralut_server_requests_served_total", "requests answered across all workers"),
@@ -279,6 +409,13 @@ impl StatsInner {
             ("neuralut_server_execute_us", "fabric run_batch stage of the latency, microseconds"),
             ("neuralut_server_queue_depth", "requests waiting in the bounded queue"),
             ("neuralut_server_in_flight", "requests accepted but not yet answered"),
+            ("neuralut_server_requests_failed_total", "accepted requests answered with a typed error (crash or shutdown)"),
+            ("neuralut_server_deadline_exceeded_total", "requests shed at dequeue because their deadline had passed"),
+            ("neuralut_server_deadline_overrun_us", "how far past its deadline a shed request was, microseconds"),
+            ("neuralut_server_worker_panics_total", "worker crashes caught by the supervisor"),
+            ("neuralut_server_worker_respawns_total", "crashed worker slots respawned by the supervisor"),
+            ("neuralut_server_client_retries_total", "Overloaded submissions resubmitted by a client RetryPolicy"),
+            ("neuralut_degraded", "1 when serving on a degraded fallback backend, else 0"),
         ] {
             registry.describe(name, help);
         }
@@ -288,6 +425,8 @@ impl StatsInner {
                 registry.counter("neuralut_server_worker_served_total", &[("worker", &id)])
             })
             .collect();
+        let degraded_gauge = registry.gauge("neuralut_degraded", &[]);
+        degraded_gauge.set(if degraded { 1.0 } else { 0.0 });
         StatsInner {
             started: Instant::now(),
             served: registry.counter("neuralut_server_requests_served_total", &[]),
@@ -302,6 +441,15 @@ impl StatsInner {
             queue_depth: registry.gauge("neuralut_server_queue_depth", &[]),
             in_flight: registry.gauge("neuralut_server_in_flight", &[]),
             per_worker,
+            failed: registry.counter("neuralut_server_requests_failed_total", &[]),
+            deadline_exceeded: registry
+                .counter("neuralut_server_deadline_exceeded_total", &[]),
+            deadline_overrun: registry
+                .histogram("neuralut_server_deadline_overrun_us", &[], LAT_BUCKETS),
+            worker_panics: registry.counter("neuralut_server_worker_panics_total", &[]),
+            worker_respawns: registry.counter("neuralut_server_worker_respawns_total", &[]),
+            retries: registry.counter("neuralut_server_client_retries_total", &[]),
+            degraded: degraded_gauge,
             registry,
         }
     }
@@ -338,6 +486,39 @@ impl StatsInner {
         self.rejected.inc();
     }
 
+    /// An in-flight (already dequeued) request answered with a typed
+    /// error — worker crash or shutdown drain.
+    fn record_failed(&self) {
+        self.in_flight.dec();
+        self.failed.inc();
+    }
+
+    /// A request drained straight out of the queue (never dequeued by a
+    /// worker) and answered with a typed error.
+    fn record_drained_failed(&self) {
+        self.queue_depth.dec();
+        self.record_failed();
+    }
+
+    /// A request shed at dequeue because its deadline had passed.
+    fn record_deadline_exceeded(&self, overrun: Duration) {
+        self.in_flight.dec();
+        self.deadline_exceeded.inc();
+        self.deadline_overrun.observe(overrun.as_micros() as u64);
+    }
+
+    fn record_worker_panic(&self) {
+        self.worker_panics.inc();
+    }
+
+    fn record_worker_respawn(&self) {
+        self.worker_respawns.inc();
+    }
+
+    fn record_retry(&self) {
+        self.retries.inc();
+    }
+
     fn snapshot(&self) -> ServerStats {
         let served = self.served.get();
         let batches = self.batches.get();
@@ -368,6 +549,12 @@ impl StatsInner {
             execute_p99_us: self.execute.percentile(0.99),
             queue_depth: self.queue_depth.get() as i64,
             in_flight: self.in_flight.get() as i64,
+            failed: self.failed.get(),
+            deadline_exceeded: self.deadline_exceeded.get(),
+            worker_panics: self.worker_panics.get(),
+            worker_respawns: self.worker_respawns.get(),
+            retries: self.retries.get(),
+            degraded: self.degraded.get() != 0.0,
             uptime_s,
         }
     }
@@ -411,6 +598,19 @@ pub struct ServerStats {
     pub queue_depth: i64,
     /// Requests accepted but not yet answered right now (approximate).
     pub in_flight: i64,
+    /// Accepted requests answered with a typed error (crash/shutdown).
+    pub failed: u64,
+    /// Requests shed at dequeue because their deadline had passed.
+    pub deadline_exceeded: u64,
+    /// Worker crashes caught by the supervisor.
+    pub worker_panics: u64,
+    /// Crashed worker slots respawned by the supervisor.
+    pub worker_respawns: u64,
+    /// `Overloaded` submissions resubmitted by a client [`RetryPolicy`].
+    pub retries: u64,
+    /// True when serving on a degraded fallback backend (see
+    /// [`CompileReport::degraded_from`](crate::fabric::CompileReport)).
+    pub degraded: bool,
     pub uptime_s: f64,
 }
 
@@ -420,6 +620,13 @@ pub struct ServerStats {
 struct ServerShared {
     queue: BoundedQueue<Request>,
     stats: StatsInner,
+    /// Worker slots still running (or backing off toward a respawn). The
+    /// last one to exit closes the queue and answers the backlog, so a
+    /// crash storm that kills every slot can never strand a request.
+    live_workers: AtomicUsize,
+    /// Default deadline stamped on requests submitted without one
+    /// (`request_timeout_ms`); `None` = requests never expire.
+    default_timeout: Option<Duration>,
 }
 
 /// Handle for submitting requests; cheap to clone, usable from any thread,
@@ -443,27 +650,24 @@ impl Client {
         Ok(())
     }
 
-    fn request(&self, features: Vec<f32>) -> (Request, Receiver<Reply>) {
+    fn request(
+        &self,
+        features: Vec<f32>,
+        timeout: Option<Duration>,
+    ) -> (Request, PendingReply) {
         let (reply_tx, reply_rx) = mpsc::channel();
+        let now = Instant::now();
+        let deadline = timeout.or(self.shared.default_timeout).map(|t| now + t);
         (
-            Request { features, enqueued: Instant::now(), reply: reply_tx },
-            reply_rx,
+            Request { features, enqueued: now, deadline, reply: reply_tx },
+            PendingReply { rx: reply_rx },
         )
     }
 
-    /// Submit one request; applies backpressure (blocks while the queue is
-    /// full) and then blocks until the prediction is ready.
-    pub fn infer(&self, features: Vec<f32>) -> Result<Reply> {
-        let rx = self.infer_async(features)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))
-    }
-
-    /// Submit asynchronously; returns the reply receiver. Blocks only
-    /// while the queue is full.
-    pub fn infer_async(&self, features: Vec<f32>) -> Result<Receiver<Reply>> {
+    /// Blocking-push submit shared by every deadline-optional entry point.
+    fn submit(&self, features: Vec<f32>, timeout: Option<Duration>) -> Result<PendingReply> {
         self.check_features(&features)?;
-        let (req, rx) = self.request(features);
+        let (req, rx) = self.request(features, timeout);
         self.shared
             .queue
             .push(req)
@@ -472,13 +676,34 @@ impl Client {
         Ok(rx)
     }
 
+    /// Submit one request; applies backpressure (blocks while the queue is
+    /// full) and then blocks until the prediction is ready.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Reply> {
+        self.infer_async(features)?.recv()
+    }
+
+    /// [`infer`](Self::infer) with an explicit per-request deadline: if
+    /// no worker has started executing the request `timeout` after
+    /// submission, it is shed with [`ServerError::DeadlineExceeded`]
+    /// instead of being served late. Overrides the server-wide
+    /// `request_timeout_ms` default for this request.
+    pub fn infer_deadline(&self, features: Vec<f32>, timeout: Duration) -> Result<Reply> {
+        self.submit(features, Some(timeout))?.recv()
+    }
+
+    /// Submit asynchronously; returns the pending reply handle. Blocks
+    /// only while the queue is full.
+    pub fn infer_async(&self, features: Vec<f32>) -> Result<PendingReply> {
+        self.submit(features, None)
+    }
+
     /// Non-blocking submit — the backpressure edge. A full queue returns
     /// [`ServerError::Overloaded`] (counted in [`ServerStats::rejected`]);
     /// a stopped server returns [`ServerError::Stopped`]. Both downcast
     /// from the `anyhow` error.
-    pub fn try_infer(&self, features: Vec<f32>) -> Result<Receiver<Reply>> {
+    pub fn try_infer(&self, features: Vec<f32>) -> Result<PendingReply> {
         self.check_features(&features)?;
-        let (req, rx) = self.request(features);
+        let (req, rx) = self.request(features, None);
         match self.shared.queue.try_push(req) {
             Ok(()) => {
                 self.shared.stats.record_accepted();
@@ -489,6 +714,40 @@ impl Client {
                 Err(ServerError::Overloaded.into())
             }
             Err(PushError::Closed(_)) => Err(ServerError::Stopped.into()),
+        }
+    }
+
+    /// [`try_infer`](Self::try_infer) wrapped in the opt-in
+    /// [`RetryPolicy`]: [`ServerError::Overloaded`] triggers a jittered
+    /// exponential-backoff sleep and a resubmission (counted in
+    /// [`ServerStats::retries`]), up to `policy.max_retries` times; any
+    /// other outcome — success or error — is returned as-is.
+    pub fn try_infer_retry(
+        &self,
+        features: Vec<f32>,
+        policy: &RetryPolicy,
+    ) -> Result<PendingReply> {
+        let mut rng = Rng::new(policy.seed);
+        let mut attempt = 0u32;
+        loop {
+            match self.try_infer(features.clone()) {
+                Err(e)
+                    if attempt < policy.max_retries
+                        && e.downcast_ref::<ServerError>()
+                            == Some(&ServerError::Overloaded) =>
+                {
+                    attempt += 1;
+                    self.shared.stats.record_retry();
+                    let exp = policy
+                        .base_backoff
+                        .saturating_mul(1u32 << (attempt - 1).min(16));
+                    let capped = exp.min(policy.max_backoff);
+                    // Jitter in [0.5, 1.0)× so synchronized clients
+                    // don't re-collide on the same backoff schedule.
+                    std::thread::sleep(capped.mul_f64(0.5 + 0.5 * rng.f64()));
+                }
+                other => return other,
+            }
         }
     }
 
@@ -517,31 +776,39 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn `tuning.workers` batcher threads over an already-compiled
-    /// program. Crate-internal shim under
+    /// Spawn `tuning.workers` supervised batcher slots over an
+    /// already-compiled program. Crate-internal shim under
     /// [`CompiledFabric::serve`](crate::fabric::CompiledFabric::serve):
     /// by the time control reaches here the backend factory has run
     /// (exactly once) and the tuning has been range-checked, so starting
-    /// cannot fail. Each worker only gets a cheap executor of `program`.
+    /// cannot fail. Each worker only gets a cheap executor of `program`;
+    /// `degraded` marks a fabric that fell back to the scalar backend so
+    /// the `neuralut_degraded` gauge travels with the serving metrics.
     pub(crate) fn start(
         program: Arc<dyn FabricProgram>,
         input_size: usize,
         tuning: &FabricTuning,
+        degraded: bool,
     ) -> Server {
         let shared = Arc::new(ServerShared {
             queue: BoundedQueue::new(tuning.queue_depth),
-            stats: StatsInner::new(tuning.workers),
+            stats: StatsInner::new(tuning.workers, degraded),
+            live_workers: AtomicUsize::new(tuning.workers),
+            default_timeout: tuning.request_timeout,
         });
         let max_batch = tuning.max_batch;
         let window = tuning.batch_window;
-        // Executors are built here, synchronously, before any thread spawns
-        // — so the compile-exactly-once property is a construction-time
-        // invariant, not a runtime race.
+        // First executors are built here, synchronously, before any thread
+        // spawns — so the compile-exactly-once property is a
+        // construction-time invariant, not a runtime race. A respawn after
+        // a crash builds a replacement executor from the same shared
+        // program: a cheap handle, never a recompile.
         let handles = (0..tuning.workers)
             .map(|w| {
                 let exec = program.executor();
+                let prog = program.clone();
                 let sh = shared.clone();
-                std::thread::spawn(move || worker_loop(w, exec, sh, max_batch, window))
+                std::thread::spawn(move || supervise(w, prog, exec, sh, max_batch, window))
             })
             .collect();
         Server { shared, program, handles, input_size }
@@ -581,6 +848,113 @@ impl Drop for Server {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // Every supervisor has exited. If a crash storm had already
+        // killed all slots, requests accepted in the window before the
+        // close are still queued — answer them rather than strand them.
+        for req in self.shared.queue.close_and_drain() {
+            self.shared.stats.record_drained_failed();
+            let _ = req.reply.send(Err(ServerError::Stopped));
+        }
+    }
+}
+
+/// Supervisor for one worker slot: runs [`worker_loop`] under
+/// `catch_unwind`, and on a crash respawns it — bounded by
+/// [`MAX_WORKER_RESTARTS`], with shutdown-aware exponential backoff —
+/// with a fresh executor of the shared program. The last supervisor to
+/// exit (gracefully or not) closes the queue and answers whatever is
+/// still queued, so no accepted request can ever hang.
+fn supervise(
+    worker: usize,
+    program: Arc<dyn FabricProgram>,
+    first_exec: Box<dyn InferenceBackend>,
+    shared: Arc<ServerShared>,
+    max_batch: usize,
+    window: Duration,
+) {
+    let mut exec = Some(first_exec);
+    let mut restarts = 0u32;
+    loop {
+        let backend = exec.take().unwrap_or_else(|| program.executor());
+        let sh = shared.clone();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            worker_loop(worker, backend, sh, max_batch, window)
+        }));
+        match outcome {
+            // Graceful: queue closed and drained.
+            Ok(()) => break,
+            Err(_) => {
+                shared.stats.record_worker_panic();
+                if restarts >= MAX_WORKER_RESTARTS {
+                    eprintln!(
+                        "neuralut server: worker {worker} crashed {} times; \
+                         slot abandoned",
+                        restarts + 1
+                    );
+                    break;
+                }
+                restarts += 1;
+                crash_backoff(&shared.queue, restarts);
+                shared.stats.record_worker_respawn();
+            }
+        }
+    }
+    if shared.live_workers.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Last slot out. On graceful shutdown the queue is already
+        // closed and drained (this returns nothing); after a crash storm
+        // it answers the stranded backlog with a typed error.
+        for req in shared.queue.close_and_drain() {
+            shared.stats.record_drained_failed();
+            let _ = req.reply.send(Err(ServerError::WorkerCrashed));
+        }
+    }
+}
+
+/// Exponential backoff before a respawn, slept in 1 ms slices so
+/// `Server::drop` never waits out a backoff ladder: the moment the queue
+/// closes, the supervisor wakes and respawns immediately to drain.
+fn crash_backoff(queue: &BoundedQueue<Request>, restarts: u32) {
+    let exp = RESTART_BACKOFF_BASE.saturating_mul(1u32 << restarts.min(16));
+    let deadline = Instant::now() + exp.min(RESTART_BACKOFF_CAP);
+    while Instant::now() < deadline {
+        if queue.is_closed() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Drop-guard over a batch's reply channels: while the batch is being
+/// formed and executed it lives in here, and if the worker unwinds
+/// (backend panic, armed fault point), `Drop` answers every in-flight
+/// request with [`ServerError::WorkerCrashed`] instead of leaving hung
+/// channels behind. The happy path `mem::take`s the batch out first,
+/// making the drop a no-op.
+struct InFlight<'a> {
+    batch: Vec<(Request, Instant)>,
+    stats: &'a StatsInner,
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        for (req, _) in self.batch.drain(..) {
+            self.stats.record_failed();
+            let _ = req.reply.send(Err(ServerError::WorkerCrashed));
+        }
+    }
+}
+
+/// Shed `req` with [`ServerError::DeadlineExceeded`] if its deadline has
+/// passed at `now` (the dequeue instant — before any execute cost is
+/// paid); hands the request back otherwise.
+fn shed_if_expired(stats: &StatsInner, req: Request, now: Instant) -> Option<Request> {
+    match req.deadline {
+        Some(dl) if now >= dl => {
+            stats.record_deadline_exceeded(now.duration_since(dl));
+            let _ = req.reply.send(Err(ServerError::DeadlineExceeded));
+            None
+        }
+        _ => Some(req),
     }
 }
 
@@ -596,13 +970,16 @@ fn worker_loop(
         let Some(first) = shared.queue.pop() else { return };
         let popped = Instant::now();
         shared.stats.record_dequeued(popped.duration_since(first.enqueued));
+        let Some(first) = shed_if_expired(&shared.stats, first, popped) else { continue };
         let in_sz = first.features.len();
         // Each request carries the instant it left the queue so its
         // batch-formation share (dequeue → execute start) can be split
-        // out of the end-to-end latency below.
-        let mut batch = vec![(first, popped)];
+        // out of the end-to-end latency below. From here until the
+        // replies go out the batch lives inside the `InFlight` guard: an
+        // unwind anywhere below answers every request it holds.
+        let mut guard = InFlight { batch: vec![(first, popped)], stats: &shared.stats };
         let deadline = popped + window;
-        while batch.len() < max_batch {
+        while guard.batch.len() < max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -611,7 +988,9 @@ fn worker_loop(
                 Pop::Item(r) => {
                     let t = Instant::now();
                     shared.stats.record_dequeued(t.duration_since(r.enqueued));
-                    batch.push((r, t));
+                    if let Some(r) = shed_if_expired(&shared.stats, r, t) {
+                        guard.batch.push((r, t));
+                    }
                 }
                 // Closed: finish this batch; the outer pop() exits once
                 // the backlog is drained.
@@ -619,13 +998,17 @@ fn worker_loop(
             }
         }
         // One fabric run for the whole batch.
-        let mut x = Vec::with_capacity(batch.len() * in_sz);
-        for (r, _) in &batch {
+        let mut x = Vec::with_capacity(guard.batch.len() * in_sz);
+        for (r, _) in &guard.batch {
             x.extend_from_slice(&r.features);
         }
+        faults::panic_point(faults::point::WORKER_EXECUTE);
         let exec_start = Instant::now();
         let result = backend.run_batch(&x);
         let exec_time = exec_start.elapsed();
+        // Execution succeeded: disarm the guard and answer normally.
+        let batch = std::mem::take(&mut guard.batch);
+        drop(guard);
         let bs = batch.len();
         shared.stats.record_batch(worker, bs);
         for ((req, left_queue), &pred) in batch.into_iter().zip(&result.predictions) {
@@ -635,12 +1018,12 @@ fn worker_loop(
                 exec_start.duration_since(left_queue),
                 exec_time,
             );
-            let _ = req.reply.send(Reply {
+            let _ = req.reply.send(Ok(Reply {
                 prediction: pred,
                 latency,
                 batch_size: bs,
                 worker,
-            });
+            }));
         }
     }
 }
@@ -691,7 +1074,7 @@ mod tests {
         let cfg = ServerConfig::parse_toml(
             "max_batch = 512\nbatch_window_us = 100\nbackend = \"bitsliced\"\n\
              opt_level = \"O2\"\nfabric_cache = \"net.nfab\"\n\
-             workers = 4\nqueue_depth = 64",
+             workers = 4\nqueue_depth = 64\nrequest_timeout_ms = 50",
         )
         .unwrap();
         assert_eq!(cfg.max_batch, 512);
@@ -702,6 +1085,7 @@ mod tests {
                    Some(std::path::Path::new("net.nfab")));
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.queue_depth, 64);
+        assert_eq!(cfg.request_timeout, Some(Duration::from_millis(50)));
         // Numeric opt levels parse too; unknown ones fail loudly.
         assert_eq!(ServerConfig::parse_toml("opt_level = 0").unwrap().opt_level,
                    Some(OptLevel::O0));
@@ -729,6 +1113,10 @@ mod tests {
         assert!(ServerConfig::parse_toml("workers = 0").is_err());
         assert!(ServerConfig::parse_toml("workers = 100000").is_err());
         assert!(ServerConfig::parse_toml("queue_depth = 0").is_err());
+        // An omitted timeout stays unset (requests never expire); an
+        // explicit zero is a config error, not an everything-sheds server.
+        assert!(ServerConfig::parse_toml("").unwrap().request_timeout.is_none());
+        assert!(ServerConfig::parse_toml("request_timeout_ms = 0").is_err());
     }
 
     #[test]
@@ -907,6 +1295,113 @@ mod tests {
         assert_eq!(err.to_string(), "server stopped");
         let err = client.try_infer(vec![0.0; 6]).unwrap_err();
         assert_eq!(err.downcast_ref::<ServerError>(), Some(&ServerError::Stopped));
+    }
+
+    #[test]
+    fn crashed_worker_answers_in_flight_requests_and_respawns() {
+        let net = Arc::new(random_network(47, 6, 2, &[4, 2], 2, 2, 4));
+        let sim = Simulator::new(&net);
+        let server = serve(net, &FabricOptions::new().workers(1));
+        let client = server.client();
+        let feats = vec![0.25f32; 6];
+        // First batch crashes: the armed fault fires once at execute.
+        {
+            let guard =
+                crate::util::faults::arm_scoped("worker.execute:1:panic:0", 21).unwrap();
+            let err = client.infer(feats.clone()).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<ServerError>(),
+                Some(&ServerError::WorkerCrashed),
+                "{err}"
+            );
+            assert_eq!(guard.fired(crate::util::faults::point::WORKER_EXECUTE), 1);
+        }
+        // Disarmed: the respawned worker serves correct answers again.
+        let want = sim.simulate_batch(&feats).predictions[0];
+        assert_eq!(client.infer(feats).unwrap().prediction, want);
+        let s = server.stats();
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.worker_respawns, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.served, 1);
+        assert_eq!(s.in_flight, 0);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_deadline_exceeded() {
+        let net = Arc::new(random_network(48, 6, 2, &[4, 2], 2, 2, 4));
+        let server = serve(
+            net,
+            &FabricOptions::new().workers(1).max_batch(4).batch_window(Duration::ZERO),
+        );
+        let client = server.client();
+        let feats = vec![0.5f32; 6];
+        // Stall the single worker with a delay fault so queued requests
+        // age past an (aggressively short) deadline before dequeue.
+        let _guard = crate::util::faults::arm_scoped("worker.execute:1:delay:40", 22).unwrap();
+        let mut pending = Vec::new();
+        // The first request occupies the worker; the rest queue behind it
+        // with ~zero deadlines and must be shed at dequeue.
+        pending.push(client.infer_async(feats.clone()).unwrap());
+        for _ in 0..4 {
+            let (req, rx) = client.request(feats.clone(), Some(Duration::from_nanos(1)));
+            assert!(client.shared.queue.push(req).is_ok());
+            client.shared.stats.record_accepted();
+            pending.push(rx);
+        }
+        let mut shed = 0u64;
+        for rx in pending {
+            match rx.recv() {
+                Ok(_) => {}
+                Err(e) => {
+                    assert_eq!(
+                        e.downcast_ref::<ServerError>(),
+                        Some(&ServerError::DeadlineExceeded),
+                        "{e}"
+                    );
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed >= 1, "nanosecond deadlines behind a stalled worker must shed");
+        let s = server.stats();
+        assert_eq!(s.deadline_exceeded, shed);
+        assert_eq!(s.in_flight, 0);
+        assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn retry_policy_rides_out_overload() {
+        let net = Arc::new(random_network(49, 6, 2, &[4, 2], 2, 2, 4));
+        let server = serve(
+            net,
+            &FabricOptions::new()
+                .workers(1)
+                .queue_depth(1)
+                .max_batch(1)
+                .batch_window(Duration::ZERO),
+        );
+        let client = server.client();
+        let feats = vec![0.5f32; 6];
+        let policy = RetryPolicy {
+            max_retries: 64,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(2),
+            seed: 7,
+        };
+        // Flood a depth-1 queue through the retry path: every submission
+        // must eventually land (or prove Overloaded was never hit).
+        let mut pending = Vec::new();
+        for _ in 0..50 {
+            pending.push(client.try_infer_retry(feats.clone(), &policy).unwrap());
+        }
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+        let s = server.stats();
+        assert_eq!(s.served, 50);
+        // Whenever backpressure fired, the retry counter saw it.
+        assert_eq!(s.retries >= 1, s.rejected >= 1);
     }
 
     #[test]

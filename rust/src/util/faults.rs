@@ -1,0 +1,333 @@
+//! Named fault-injection points for chaos-testing the serving runtime.
+//!
+//! A fault point is a named hook compiled into a risky code path — worker
+//! batch execution, queue pop, artifact I/O, backend construction. Unarmed
+//! (the default), every hook is two relaxed atomic loads and returns
+//! immediately, so production binaries pay nothing. Armed, each hit rolls a
+//! deterministic PRNG against the point's probability and either panics,
+//! returns an error, or sleeps — letting tests prove that supervision,
+//! poison recovery, and graceful degradation actually hold under fire.
+//!
+//! Arming surfaces:
+//!
+//! * **Environment** — `NEURALUT_FAULTS=point:prob:mode[:arg][,…]`, parsed
+//!   once on first hit. `prob` is a probability in `[0, 1]`; `mode` is
+//!   `panic`, `error`, or `delay`; the optional `arg` is milliseconds for
+//!   `delay` and a skip count (ignore the first N would-be firings) for
+//!   `panic`/`error`. Example: `NEURALUT_FAULTS=worker.execute:0.3:panic`.
+//!   A malformed spec is ignored with a warning rather than taking the
+//!   process down — fault injection must never be the fault.
+//! * **Tests** — [`arm_scoped`] installs a plan for the lifetime of a
+//!   guard and restores the previous plan (usually: unarmed) on drop.
+//!   The guard also holds a global lock so concurrently running tests
+//!   cannot fight over the process-wide plan.
+//!
+//! The planted points are named by the `point::*` constants; call sites
+//! use [`inject`] where an `Err` can propagate and [`panic_point`] where
+//! the only legal failure is an unwind (e.g. inside a worker thread whose
+//! supervisor catches panics).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, PoisonError};
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use crate::util::rng::Rng;
+
+/// Canonical names of the fault points planted in the codebase.
+pub mod point {
+    /// Worker batch execution (`server::worker_loop`), immediately before
+    /// the backend runs a formed batch. `panic` here exercises the
+    /// in-flight drop-guard and the supervisor respawn path.
+    pub const WORKER_EXECUTE: &str = "worker.execute";
+    /// Inside [`BoundedQueue`](crate::util::pool::BoundedQueue) pop, while
+    /// the queue mutex is held — a `panic` here poisons the lock and
+    /// exercises the poison-recovering lock discipline.
+    pub const QUEUE_POP: &str = "queue.pop";
+    /// `.nfab` artifact read (`fabric::artifact::load`), after the bytes
+    /// are on hand — `error` simulates a corrupt/unreadable artifact.
+    pub const ARTIFACT_READ: &str = "artifact.read";
+    /// Atomic artifact/report write, between the tmp-file write and the
+    /// rename — `panic` simulates a crash mid-write (the torn-write test).
+    pub const ARTIFACT_WRITE: &str = "artifact.write";
+    /// Backend factory invocation (`Model::compile`) — `error` simulates a
+    /// backend that fails to construct and drives the scalar-degradation
+    /// fallback.
+    pub const BACKEND_COMPILE: &str = "backend.compile";
+}
+
+/// What an armed fault point does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Unwind the current thread (`panic!`).
+    Panic,
+    /// Return an `Err` from [`inject`].
+    Error,
+    /// Sleep for the point's `arg` milliseconds, then succeed.
+    Delay,
+}
+
+#[derive(Debug)]
+struct FaultPoint {
+    name: String,
+    prob: f64,
+    mode: FaultMode,
+    /// Milliseconds for [`FaultMode::Delay`]; for `panic`/`error`, the
+    /// number of initial would-be firings to let pass unharmed.
+    arg: u64,
+    skipped: u64,
+    fired: u64,
+}
+
+#[derive(Debug)]
+struct FaultPlan {
+    points: Vec<FaultPoint>,
+    rng: Rng,
+}
+
+impl FaultPlan {
+    fn parse(spec: &str, seed: u64) -> crate::Result<FaultPlan> {
+        let mut points = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                bail!("fault spec '{part}' is not point:prob:mode[:arg]");
+            }
+            let prob: f64 = fields[1]
+                .trim()
+                .parse()
+                .with_context(|| format!("fault probability '{}' in '{part}'", fields[1]))?;
+            if !(0.0..=1.0).contains(&prob) {
+                bail!("fault probability {prob} in '{part}' is outside [0, 1]");
+            }
+            let mode = match fields[2].trim() {
+                "panic" => FaultMode::Panic,
+                "error" => FaultMode::Error,
+                "delay" => FaultMode::Delay,
+                other => bail!("unknown fault mode '{other}' in '{part}' (panic|error|delay)"),
+            };
+            let arg = match fields.get(3) {
+                Some(v) => v
+                    .trim()
+                    .parse::<u64>()
+                    .with_context(|| format!("fault arg '{v}' in '{part}'"))?,
+                None if mode == FaultMode::Delay => 1,
+                None => 0,
+            };
+            points.push(FaultPoint {
+                name: fields[0].trim().to_string(),
+                prob,
+                mode,
+                arg,
+                skipped: 0,
+                fired: 0,
+            });
+        }
+        if points.is_empty() {
+            bail!("fault spec '{spec}' names no fault points");
+        }
+        Ok(FaultPlan { points, rng: Rng::new(seed) })
+    }
+
+    /// Roll a hit against `point`. Returns the action to take, if any.
+    fn hit(&mut self, point: &str) -> Option<(FaultMode, u64)> {
+        let FaultPlan { points, rng } = self;
+        let p = points.iter_mut().find(|p| p.name == point)?;
+        if p.prob < 1.0 && rng.f64() >= p.prob {
+            return None;
+        }
+        if p.mode != FaultMode::Delay && p.skipped < p.arg {
+            p.skipped += 1;
+            return None;
+        }
+        p.fired += 1;
+        Some((p.mode, p.arg))
+    }
+}
+
+/// Fast-path flag: true iff a plan is installed. Checked before touching
+/// the plan mutex so unarmed hooks cost two atomic loads.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+/// Serializes [`arm_scoped`] callers so parallel tests cannot fight over
+/// the process-wide plan.
+static SCOPE: Mutex<()> = Mutex::new(());
+
+fn lock_plan() -> MutexGuard<'static, Option<FaultPlan>> {
+    // Poison-recovering by design: a fault point that panicked while a
+    // test thread held this lock must not wedge the harness itself.
+    PLAN.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Install `plan` (or disarm with `None`), returning the previous plan.
+fn install(plan: Option<FaultPlan>) -> Option<FaultPlan> {
+    let mut slot = lock_plan();
+    let prev = std::mem::replace(&mut *slot, plan);
+    ARMED.store(slot.is_some(), Ordering::Release);
+    prev
+}
+
+fn ensure_env_armed() {
+    ENV_INIT.call_once(|| {
+        let Ok(spec) = std::env::var("NEURALUT_FAULTS") else { return };
+        if spec.trim().is_empty() {
+            return;
+        }
+        match FaultPlan::parse(&spec, 0x5EED_FA17) {
+            Ok(plan) => {
+                install(Some(plan));
+            }
+            Err(e) => eprintln!("warning: ignoring NEURALUT_FAULTS = '{spec}': {e:#}"),
+        }
+    });
+}
+
+/// True iff any fault plan is currently armed (environment or scoped).
+/// Benches use this to stamp rows produced under fault injection so perf
+/// gates never compare them against clean baselines.
+pub fn armed() -> bool {
+    ensure_env_armed();
+    ARMED.load(Ordering::Acquire)
+}
+
+/// Hit the named fault point. Unarmed: `Ok(())` at atomic-load cost.
+/// Armed: may panic ([`FaultMode::Panic`]), return an error naming the
+/// point ([`FaultMode::Error`]), or sleep ([`FaultMode::Delay`]).
+pub fn inject(point: &str) -> crate::Result<()> {
+    ensure_env_armed();
+    if !ARMED.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    // Decide under the lock, act after releasing it: a panic or sleep
+    // while holding the plan mutex would couple fault points together.
+    let action = {
+        let mut slot = lock_plan();
+        slot.as_mut().and_then(|plan| plan.hit(point))
+    };
+    match action {
+        None => Ok(()),
+        Some((FaultMode::Delay, ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some((FaultMode::Error, _)) => bail!("injected fault at '{point}'"),
+        Some((FaultMode::Panic, _)) => panic!("injected fault at '{point}'"),
+    }
+}
+
+/// [`inject`] for call sites with no error channel: both `panic` and
+/// `error` modes unwind (the supervisor treats them identically).
+pub fn panic_point(point: &str) {
+    if let Err(e) = inject(point) {
+        panic!("{e:#}");
+    }
+}
+
+/// How many times the named point has fired under the current plan.
+/// `0` when unarmed or the point is not in the plan.
+pub fn fired_count(point: &str) -> u64 {
+    lock_plan()
+        .as_ref()
+        .and_then(|plan| plan.points.iter().find(|p| p.name == point))
+        .map(|p| p.fired)
+        .unwrap_or(0)
+}
+
+/// Guard returned by [`arm_scoped`]: holds the plan installed (and the
+/// cross-test serialization lock) until dropped, then restores whatever
+/// was armed before — usually nothing.
+#[derive(Debug)]
+pub struct ScopedFaults {
+    _serial: MutexGuard<'static, ()>,
+    prev: Option<FaultPlan>,
+}
+
+impl ScopedFaults {
+    /// [`fired_count`] scoped to this guard's plan, for asserting a chaos
+    /// test actually exercised its fault point.
+    pub fn fired(&self, point: &str) -> u64 {
+        fired_count(point)
+    }
+}
+
+impl Drop for ScopedFaults {
+    fn drop(&mut self) {
+        install(self.prev.take());
+    }
+}
+
+/// Arm `spec` (same grammar as `NEURALUT_FAULTS`) with a deterministic
+/// `seed` for the lifetime of the returned guard. Serializes against
+/// other scoped armings, so parallel tests queue rather than interleave.
+pub fn arm_scoped(spec: &str, seed: u64) -> crate::Result<ScopedFaults> {
+    ensure_env_armed();
+    let serial = SCOPE.lock().unwrap_or_else(PoisonError::into_inner);
+    let plan = FaultPlan::parse(spec, seed)?;
+    let prev = install(Some(plan));
+    Ok(ScopedFaults { _serial: serial, prev })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_points_are_no_ops() {
+        let _guard = arm_scoped("other.point:1:error", 1).unwrap();
+        // Armed plan, but this point is not in it.
+        assert!(inject("not.planted").is_ok());
+        assert_eq!(fired_count("not.planted"), 0);
+    }
+
+    #[test]
+    fn error_mode_fires_and_counts() {
+        let guard = arm_scoped("demo.point:1:error", 42).unwrap();
+        let err = inject("demo.point").unwrap_err().to_string();
+        assert!(err.contains("demo.point"), "{err}");
+        assert_eq!(guard.fired("demo.point"), 1);
+        drop(guard);
+        assert!(inject("demo.point").is_ok(), "disarmed after guard drop");
+    }
+
+    #[test]
+    fn skip_count_delays_the_first_firings() {
+        let _guard = arm_scoped("demo.skip:1:error:2", 7).unwrap();
+        assert!(inject("demo.skip").is_ok());
+        assert!(inject("demo.skip").is_ok());
+        assert!(inject("demo.skip").is_err(), "third hit fires");
+    }
+
+    #[test]
+    fn probability_is_deterministic_per_seed() {
+        let fire = |seed: u64| {
+            let guard = arm_scoped("demo.prob:0.5:error", seed).unwrap();
+            let fired: Vec<bool> = (0..16).map(|_| inject("demo.prob").is_err()).collect();
+            drop(guard);
+            fired
+        };
+        assert_eq!(fire(3), fire(3), "same seed, same firing pattern");
+        let pattern = fire(3);
+        assert!(pattern.iter().any(|&f| f) && pattern.iter().any(|&f| !f));
+    }
+
+    #[test]
+    fn panic_mode_unwinds() {
+        let _guard = arm_scoped("demo.panic:1:panic", 9).unwrap();
+        let caught = std::panic::catch_unwind(|| panic_point("demo.panic"));
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn malformed_specs_are_errors() {
+        for bad in ["p", "p:1", "p:2.0:error", "p:x:error", "p:1:nuke", "p:1:error:x", ""] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "{bad:?} should not parse");
+        }
+        assert!(FaultPlan::parse("a:1:panic, b:0.5:delay:10", 0).is_ok());
+    }
+}

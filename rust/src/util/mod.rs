@@ -4,10 +4,12 @@
 //! everything a framework normally pulls from crates.io lives here: a JSON
 //! parser/writer ([`json`]), deterministic PRNGs ([`rng`]), descriptive
 //! statistics ([`stats`]), a scoped thread pool ([`pool`]), a miniature
-//! property-testing harness ([`check`]) and a bench harness ([`bench`]).
+//! property-testing harness ([`check`]), a bench harness ([`bench`]) and a
+//! fault-injection harness for chaos testing ([`faults`]).
 
 pub mod bench;
 pub mod check;
+pub mod faults;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -4,8 +4,19 @@
 //! plus the bounded MPMC queue the serving runtime shards work over.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+use crate::util::faults;
+
+/// Poison-recovering lock: a consumer that panicked mid-pop (e.g. a
+/// backend bug, or an armed [`faults`] point) must not cascade into every
+/// other producer/consumer seeing `PoisonError`. `QueueState` is a
+/// `VecDeque` + flag whose invariants hold between any two statements, so
+/// recovering the guard is always safe.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Number of worker threads to use (`NEURALUT_THREADS` overrides).
 pub fn num_threads() -> usize {
@@ -133,16 +144,23 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_recover(&self.state).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// True once [`close`](Self::close) has been called. Used by the
+    /// server's supervisor to abandon a respawn backoff the moment
+    /// shutdown starts.
+    pub fn is_closed(&self) -> bool {
+        lock_recover(&self.state).closed
+    }
+
     /// Non-blocking push.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.closed {
             return Err(PushError::Closed(item));
         }
@@ -157,7 +175,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking push: waits for space; `Err(item)` once closed.
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.closed {
                 return Err(item);
@@ -165,7 +183,7 @@ impl<T> BoundedQueue<T> {
             if st.items.len() < self.capacity {
                 break;
             }
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         st.items.push_back(item);
         drop(st);
@@ -175,7 +193,12 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking pop: `None` only once closed *and* fully drained.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
+        // Fault point fires *while the lock is held*, so a `panic` mode
+        // here poisons the mutex — exactly the cascade `lock_recover`
+        // exists to absorb. The item is still queued when it fires, so a
+        // respawned consumer pops it later; nothing is lost.
+        faults::panic_point(faults::point::QUEUE_POP);
         loop {
             if let Some(item) = st.items.pop_front() {
                 drop(st);
@@ -185,14 +208,15 @@ impl<T> BoundedQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Pop with a deadline; distinguishes "nothing yet" from "never again".
     pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
+        faults::panic_point(faults::point::QUEUE_POP);
         loop {
             if let Some(item) = st.items.pop_front() {
                 drop(st);
@@ -206,18 +230,35 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 return Pop::TimedOut;
             }
-            st = self.not_empty.wait_timeout(st, deadline - now).unwrap().0;
+            st = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
         }
     }
 
     /// Reject future pushes and wake every waiter. Items already queued
     /// remain poppable.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.closed = true;
         drop(st);
         self.not_empty.notify_all();
         self.not_full.notify_all();
+    }
+
+    /// Close the queue and take everything still queued in one step — no
+    /// fault points on this path, so the last supervisor out (or `Drop`)
+    /// can always answer the backlog even mid-crash-storm.
+    pub fn close_and_drain(&self) -> Vec<T> {
+        let mut st = lock_recover(&self.state);
+        st.closed = true;
+        let items: Vec<T> = st.items.drain(..).collect();
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        items
     }
 }
 
@@ -288,6 +329,44 @@ mod tests {
         assert_eq!(q.pop(), Some("a"));
         assert_eq!(q.pop(), None);
         assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
+    }
+
+    #[test]
+    fn queue_survives_a_deliberately_poisoned_lock() {
+        // Arm a certain panic inside `pop` — it fires while the state
+        // mutex is held, poisoning it the old-fashioned way.
+        let q = BoundedQueue::new(4);
+        q.try_push(1u32).unwrap();
+        {
+            let _guard = faults::arm_scoped("queue.pop:1:panic:0", 11).unwrap();
+            let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| q.pop()));
+            assert!(poisoned.is_err(), "armed pop must panic under the lock");
+        }
+        // Disarmed again: every operation must push straight through the
+        // poisoned mutex — the panicked consumer took nothing with it.
+        assert_eq!(q.len(), 1, "the item the panicked pop left behind");
+        q.try_push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.push(3).unwrap();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Pop::Item(3)));
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_and_drain_returns_the_backlog_and_closes() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        let drained = q.close_and_drain();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_closed());
+        assert!(matches!(q.try_push(9), Err(PushError::Closed(9))));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]
