@@ -1,0 +1,194 @@
+//! Network front-door bench: wire-protocol latency over loopback and
+//! the connection-level saturation envelope.
+//!
+//! Two drives against a real `NetServer` (TCP, binary wire protocol):
+//!
+//! * payload sweep — one blocking `WireClient`, batches of 1 / 8 / 64
+//!   rows per request frame, p50/p90/p99 round-trip latency per payload
+//!   size: what one well-behaved client sees, protocol overhead
+//!   included;
+//! * saturation — many client threads flooding pipelined frames through
+//!   a deliberately shallow worker queue, counting served rows vs typed
+//!   `Overloaded` refusals: the admission-control envelope (refusals
+//!   are *answers*, so served + refused must equal offered — a hang
+//!   shows up as a missing reply, failing the bench).
+//!
+//! Writes `BENCH_net.json`; `scripts/check_bench.py` gates that the
+//! percentile ordering holds (p50 ≤ p90 ≤ p99) and that saturation
+//! still serves (> 0 rows/s). `NEURALUT_BENCH_QUICK=1` shrinks request
+//! counts for CI smoke runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use neuralut::fabric::FabricOptions;
+use neuralut::luts::random_network;
+use neuralut::net::{ModelManager, NetConfig, NetServer, WireClient, WireRefusal};
+use neuralut::util::json::{obj, Json};
+use neuralut::util::rng::Rng;
+use neuralut::util::stats::percentile_sorted;
+
+/// Stage a models directory with one `bench.nlut` and start the front
+/// door on an ephemeral loopback port.
+fn start_server(opts: &FabricOptions) -> (NetServer, std::net::SocketAddr, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!("neuralut_bench_net_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir models");
+    random_network(11, 196, 2, &[64, 32, 10], 6, 2, 4)
+        .save(&dir.join("bench.nlut"))
+        .expect("save model");
+    let manager = ModelManager::open(&dir, opts).expect("open manager");
+    let server = NetServer::start(
+        manager,
+        &NetConfig { listen_addr: "127.0.0.1:0".into(), max_connections: 512 },
+    )
+    .expect("start server");
+    let addr = server.local_addr();
+    (server, addr, dir)
+}
+
+fn random_features(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.f32()).collect()
+}
+
+/// One client, `n_req` sequential request frames of `rows` rows each:
+/// round-trip microseconds, sorted.
+fn payload_sweep(addr: std::net::SocketAddr, rows: usize, cols: usize, n_req: usize) -> Vec<f64> {
+    let mut client = WireClient::connect(addr).expect("connect");
+    let mut rng = Rng::new(7 + rows as u64);
+    let mut lat_us = Vec::with_capacity(n_req);
+    for _ in 0..n_req {
+        let feats = random_features(&mut rng, rows, cols);
+        let t0 = Instant::now();
+        let preds = client.infer("bench", &feats, rows).expect("infer");
+        assert_eq!(preds.len(), rows, "every row answered");
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat_us
+}
+
+/// Flood from `threads` connections; returns (served rows/s, refusal
+/// rate, wall seconds). Every frame is answered — served or typed
+/// refusal — so the totals must add up.
+fn saturate(
+    addr: std::net::SocketAddr,
+    threads: usize,
+    per_thread: usize,
+    rows: usize,
+    cols: usize,
+) -> (f64, f64, f64) {
+    let served = Arc::new(AtomicUsize::new(0));
+    let refused = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let (served, refused) = (served.clone(), refused.clone());
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(addr).expect("connect");
+                let mut rng = Rng::new(100 + t as u64);
+                for _ in 0..per_thread {
+                    let feats = random_features(&mut rng, rows, cols);
+                    match client.infer("bench", &feats, rows) {
+                        Ok(preds) => {
+                            assert_eq!(preds.len(), rows);
+                            served.fetch_add(rows, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            let refusal = e
+                                .downcast_ref::<WireRefusal>()
+                                .unwrap_or_else(|| panic!("untyped failure: {e:#}"));
+                            assert_eq!(refusal.code, 1, "only Overloaded expected: {refusal}");
+                            refused.fetch_add(rows, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("saturation client");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let served = served.load(Ordering::Relaxed);
+    let refused = refused.load(Ordering::Relaxed);
+    let offered = threads * per_thread * rows;
+    assert_eq!(served + refused, offered, "every offered row accounted for");
+    (served as f64 / wall, refused as f64 / offered as f64, wall)
+}
+
+fn main() {
+    let quick = std::env::var_os("NEURALUT_BENCH_QUICK").is_some_and(|v| !v.is_empty());
+    let faults_armed = neuralut::util::faults::armed();
+    println!(
+        "== bench_net: wire protocol over loopback{}{} ==",
+        if quick { " (quick mode)" } else { "" },
+        if faults_armed { " (FAULTS ARMED — rows excluded from baselines)" } else { "" }
+    );
+    let cols = 196;
+    let mut rows_out: Vec<Json> = Vec::new();
+
+    println!("\n-- payload sweep: rows per request frame x round-trip percentiles --");
+    let opts = FabricOptions::new().backend("bitsliced").workers(2).queue_depth(4096);
+    let (server, addr, dir) = start_server(&opts);
+    let n_req = if quick { 300 } else { 3_000 };
+    for batch_rows in [1usize, 8, 64] {
+        let lat = payload_sweep(addr, batch_rows, cols, n_req);
+        let (p50, p90, p99) = (
+            percentile_sorted(&lat, 50.0),
+            percentile_sorted(&lat, 90.0),
+            percentile_sorted(&lat, 99.0),
+        );
+        let bytes = 15 + 4 + 8 + 4 * batch_rows * cols; // payload size on the wire
+        println!(
+            "rows {batch_rows:>3} ({bytes:>6} B/frame) -> p50 {p50:>7.0}us  p90 {p90:>7.0}us  \
+             p99 {p99:>7.0}us  ({:.0} rows/s one client)",
+            batch_rows as f64 * n_req as f64 / (lat.iter().sum::<f64>() / 1e6)
+        );
+        rows_out.push(obj(vec![
+            ("section", Json::Str("net_payload".into())),
+            ("faults_armed", Json::Bool(faults_armed)),
+            ("rows_per_frame", Json::Num(batch_rows as f64)),
+            ("frame_bytes", Json::Num(bytes as f64)),
+            ("requests", Json::Num(n_req as f64)),
+            ("p50_us", Json::Num(p50)),
+            ("p90_us", Json::Num(p90)),
+            ("p99_us", Json::Num(p99)),
+        ]));
+    }
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("\n-- saturation: flooding clients vs a shallow queue (depth 128, 2 workers) --");
+    let opts = FabricOptions::new().backend("bitsliced").workers(2).queue_depth(128);
+    let (server, addr, dir) = start_server(&opts);
+    let threads = 8;
+    let per_thread = if quick { 150 } else { 1_500 };
+    let batch_rows = 16;
+    let (served_per_s, refusal_rate, wall) = saturate(addr, threads, per_thread, batch_rows, cols);
+    println!(
+        "{threads} clients x {per_thread} frames x {batch_rows} rows -> \
+         served {served_per_s:.0} rows/s, refused {:.1}% (typed Overloaded), wall {wall:.2}s",
+        refusal_rate * 100.0
+    );
+    rows_out.push(obj(vec![
+        ("section", Json::Str("net_saturation".into())),
+        ("faults_armed", Json::Bool(faults_armed)),
+        ("clients", Json::Num(threads as f64)),
+        ("rows_per_frame", Json::Num(batch_rows as f64)),
+        ("offered_rows", Json::Num((threads * per_thread * batch_rows) as f64)),
+        ("served_per_s", Json::Num(served_per_s)),
+        ("refusal_rate", Json::Num(refusal_rate)),
+    ]));
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let n = rows_out.len();
+    let out = Json::Arr(rows_out).to_string();
+    if let Err(e) = std::fs::write("BENCH_net.json", &out) {
+        eprintln!("could not write BENCH_net.json: {e}");
+    } else {
+        println!("\nwrote BENCH_net.json ({n} rows)");
+    }
+}

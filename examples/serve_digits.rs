@@ -9,6 +9,15 @@
 //! NEURALUT_OPT_LEVEL to pick the netlist optimization level, and
 //! NEURALUT_FABRIC_CACHE=FILE.nfab to reuse a precompiled fabric across
 //! restarts)
+//!
+//! With `--listen [HOST:PORT]` the demo serves the trained fabric over
+//! TCP instead: it stages the converted model into a manifest directory,
+//! starts the network front door (binary wire protocol + HTTP on one
+//! port), then runs a tiny built-in client — a binary
+//! `WireClient` round trip and a raw HTTP `POST /v1/infer` + `GET
+//! /healthz` — against itself:
+//!
+//! `cargo run --release --example serve_digits -- --listen 127.0.0.1:0`
 
 use std::time::Duration;
 
@@ -37,7 +46,19 @@ fn main() -> anyhow::Result<()> {
     println!("float test accuracy: {:.4}", r.test_acc);
 
     println!("converting to L-LUT fabric ...");
-    let model = Model::from_network(convert::convert(&rt, &m, &r.params)?);
+    let net = convert::convert(&rt, &m, &r.params)?;
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(i) = args.iter().position(|a| a == "--listen") {
+        let addr = args
+            .get(i + 1)
+            .filter(|a| !a.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "127.0.0.1:0".into());
+        return serve_over_tcp(net, &ds, addr);
+    }
+
+    let model = Model::from_network(net);
     println!("fabric: {}", model.info());
 
     let n_req = 20_000;
@@ -101,5 +122,64 @@ fn main() -> anyhow::Result<()> {
     println!("\nfabric latency itself is {} cycles — the serving stack \
               (batching window, queueing) dominates, as it should.",
              model.latency_cycles());
+    Ok(())
+}
+
+/// `--listen` mode: put the network front door in front of the trained
+/// fabric and talk to it over loopback with both protocols.
+fn serve_over_tcp(
+    net: neuralut::luts::LutNetwork,
+    ds: &Dataset,
+    addr: String,
+) -> anyhow::Result<()> {
+    use std::io::{Read, Write};
+    use neuralut::net::{ModelManager, NetConfig, NetServer, WireClient};
+
+    // The front door serves a manifest *directory*: stage the converted
+    // model there as digits.nlut. Overwriting that file while the server
+    // runs hot-swaps it with zero downtime.
+    let dir = std::env::temp_dir().join(format!("neuralut_serve_digits_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    net.save(&dir.join("digits.nlut"))?;
+
+    let opts = FabricOptions::from_env()?;
+    let opts = if opts.get_backend().is_none() { opts.backend("bitsliced") } else { opts };
+    let manager = ModelManager::open(&dir, &opts)?;
+    manager.start_watcher(Duration::from_millis(200));
+    let server = NetServer::start(
+        manager.clone(),
+        &NetConfig { listen_addr: addr, max_connections: 64 },
+    )?;
+    let bound = server.local_addr();
+    println!("\nlistening on {bound} — binary (NLW1) and HTTP on the same port");
+    println!("models dir {} (overwrite digits.nlut to hot-swap)", dir.display());
+
+    // --- tiny binary client: one 4-row batch through the wire protocol.
+    let rows = 4;
+    let feats = &ds.test_x[..rows * ds.n_feat];
+    let mut wire = WireClient::connect(bound)?;
+    let preds = wire.infer("digits", feats, rows)?;
+    println!("binary  : predictions {preds:?} (labels {:?})", &ds.test_y[..rows]);
+
+    // --- tiny HTTP client: raw POST /v1/infer + GET /healthz.
+    let row: Vec<String> = ds.test_x[..ds.n_feat].iter().map(|v| format!("{v}")).collect();
+    let body = format!("{{\"model\": \"digits\", \"features\": [{}]}}", row.join(", "));
+    let mut http = std::net::TcpStream::connect(bound)?;
+    write!(
+        http,
+        "POST /v1/infer HTTP/1.1\r\nHost: {bound}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    write!(http, "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n")?;
+    let mut reply = String::new();
+    http.read_to_string(&mut reply)?;
+    for line in reply.lines().filter(|l| l.starts_with("HTTP/") || l.starts_with('{') || l.starts_with("ok")) {
+        println!("http    : {line}");
+    }
+
+    drop(server);
+    manager.stop_watcher();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("clean shutdown: every connection answered, nothing hung.");
     Ok(())
 }

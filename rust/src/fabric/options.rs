@@ -9,7 +9,8 @@
 //!    [`workers`](FabricOptions::workers), …) — how CLI flags are applied;
 //! 2. environment (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`,
 //!    `NEURALUT_OPT_LEVEL`, `NEURALUT_FABRIC_CACHE`,
-//!    `NEURALUT_REQUEST_TIMEOUT_MS`);
+//!    `NEURALUT_REQUEST_TIMEOUT_MS`, `NEURALUT_LISTEN_ADDR`,
+//!    `NEURALUT_MAX_CONNECTIONS`, `NEURALUT_MODELS_DIR`);
 //! 3. a [`ServerConfig`] file passed to
 //!    [`from_env_and_config`](FabricOptions::from_env_and_config);
 //! 4. defaults (`scalar`, opt level `O1`, no fabric cache, 1 worker,
@@ -108,6 +109,9 @@ pub struct FabricOptions {
     max_batch: Option<usize>,
     batch_window: Option<Duration>,
     request_timeout: Option<Duration>,
+    listen_addr: Option<String>,
+    max_connections: Option<usize>,
+    models_dir: Option<PathBuf>,
 }
 
 impl FabricOptions {
@@ -175,6 +179,27 @@ impl FabricOptions {
         self
     }
 
+    /// `host:port` the network front door (`neuralut serve --listen`)
+    /// binds; port 0 picks an ephemeral port.
+    pub fn listen_addr(mut self, addr: impl Into<String>) -> Self {
+        self.listen_addr = Some(addr.into());
+        self
+    }
+
+    /// Live-connection cap for the network front door; connections over
+    /// it are refused with a typed `Overloaded` / HTTP 429.
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = Some(n);
+        self
+    }
+
+    /// Manifest directory of `.nlut` models the network front door
+    /// serves (and hot-swaps when their files change).
+    pub fn models_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.models_dir = Some(dir.into());
+        self
+    }
+
     // ---- getters (what is *set*, before defaulting) -----------------------
 
     pub fn get_backend(&self) -> Option<&str> {
@@ -207,6 +232,18 @@ impl FabricOptions {
 
     pub fn get_request_timeout(&self) -> Option<Duration> {
         self.request_timeout
+    }
+
+    pub fn get_listen_addr(&self) -> Option<&str> {
+        self.listen_addr.as_deref()
+    }
+
+    pub fn get_max_connections(&self) -> Option<usize> {
+        self.max_connections
+    }
+
+    pub fn get_models_dir(&self) -> Option<&std::path::Path> {
+        self.models_dir.as_deref()
     }
 
     /// The backend name that will be resolved at compile time.
@@ -256,6 +293,9 @@ impl FabricOptions {
             opts.max_batch = Some(c.max_batch);
             opts.batch_window = Some(c.batch_window);
             opts.request_timeout = c.request_timeout;
+            opts.listen_addr = c.listen_addr.clone();
+            opts.max_connections = c.max_connections;
+            opts.models_dir = c.models_dir.clone();
         }
         if let Some(v) = env("NEURALUT_ENGINE") {
             opts.backend = Some(v);
@@ -283,6 +323,19 @@ impl FabricOptions {
                 .with_context(|| format!("NEURALUT_REQUEST_TIMEOUT_MS = '{v}' is not a number"))?;
             opts.request_timeout = Some(Duration::from_millis(ms));
         }
+        if let Some(v) = env("NEURALUT_LISTEN_ADDR") {
+            opts.listen_addr = Some(v.trim().to_string());
+        }
+        if let Some(v) = env("NEURALUT_MAX_CONNECTIONS") {
+            let n = v
+                .trim()
+                .parse::<usize>()
+                .with_context(|| format!("NEURALUT_MAX_CONNECTIONS = '{v}' is not a number"))?;
+            opts.max_connections = Some(n);
+        }
+        if let Some(v) = env("NEURALUT_MODELS_DIR") {
+            opts.models_dir = Some(PathBuf::from(v));
+        }
         Ok(opts)
     }
 
@@ -300,6 +353,29 @@ impl FabricOptions {
         };
         tuning.validate()?;
         Ok(tuning)
+    }
+
+    /// Validate and fill the network front-door knobs the same way
+    /// [`resolve_tuning`](Self::resolve_tuning) fills the serving knobs.
+    /// Unset fields keep [`NetConfig::default`] — a loopback ephemeral
+    /// port — so library users and tests never collide on a fixed port.
+    pub fn resolve_net(&self) -> crate::Result<crate::net::NetConfig> {
+        let d = crate::net::NetConfig::default();
+        let cfg = crate::net::NetConfig {
+            listen_addr: self.listen_addr.clone().unwrap_or(d.listen_addr),
+            max_connections: self.max_connections.unwrap_or(d.max_connections),
+        };
+        if cfg.max_connections == 0 || cfg.max_connections > crate::net::MAX_CONNECTIONS_LIMIT {
+            bail!(
+                "max_connections = {} out of range (1..={})",
+                cfg.max_connections,
+                crate::net::MAX_CONNECTIONS_LIMIT
+            );
+        }
+        if cfg.listen_addr.is_empty() {
+            bail!("listen_addr must not be empty (use host:port, port 0 for ephemeral)");
+        }
+        Ok(cfg)
     }
 }
 
@@ -423,6 +499,46 @@ mod tests {
             .request_timeout(Duration::ZERO)
             .resolve_tuning()
             .is_err());
+    }
+
+    #[test]
+    fn net_knobs_follow_the_precedence_chain() {
+        let cfg = ServerConfig {
+            listen_addr: Some("0.0.0.0:7000".into()),
+            max_connections: Some(8),
+            models_dir: Some("cfg_models".into()),
+            ..Default::default()
+        };
+        // Config alone.
+        let o = FabricOptions::with_env(&no_env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_listen_addr(), Some("0.0.0.0:7000"));
+        assert_eq!(o.resolve_net().unwrap().max_connections, 8);
+        // Env beats config.
+        let env = |key: &str| match key {
+            "NEURALUT_LISTEN_ADDR" => Some(" 127.0.0.1:7001 ".to_string()),
+            "NEURALUT_MAX_CONNECTIONS" => Some("16".to_string()),
+            "NEURALUT_MODELS_DIR" => Some("env_models".to_string()),
+            _ => None,
+        };
+        let o = FabricOptions::with_env(&env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_listen_addr(), Some("127.0.0.1:7001"));
+        assert_eq!(o.get_max_connections(), Some(16));
+        assert_eq!(o.get_models_dir(), Some(std::path::Path::new("env_models")));
+        // Builder beats env.
+        let o = o.listen_addr("127.0.0.1:0").max_connections(4).models_dir("cli");
+        let net = o.resolve_net().unwrap();
+        assert_eq!(net.listen_addr, "127.0.0.1:0");
+        assert_eq!(net.max_connections, 4);
+        assert_eq!(o.get_models_dir(), Some(std::path::Path::new("cli")));
+        // Unset: ephemeral loopback defaults.
+        let net = FabricOptions::new().resolve_net().unwrap();
+        assert_eq!(net, crate::net::NetConfig::default());
+        // Zero / non-numeric values are loud errors.
+        assert!(FabricOptions::new().max_connections(0).resolve_net().is_err());
+        assert!(FabricOptions::new().listen_addr("").resolve_net().is_err());
+        let bad = |key: &str| (key == "NEURALUT_MAX_CONNECTIONS").then(|| "lots".to_string());
+        let err = FabricOptions::with_env(&bad, None).unwrap_err().to_string();
+        assert!(err.contains("NEURALUT_MAX_CONNECTIONS"), "{err}");
     }
 
     #[test]

@@ -54,6 +54,14 @@
 //!   batch-formation / execute stages) in an `obs` metrics registry.
 //!   Started via `CompiledFabric::serve`; chaos-tested against the named
 //!   fault points in `util::faults` (`NEURALUT_FAULTS`).
+//! * [`net`] — network serving front-end over [`server`]: length-prefixed
+//!   binary wire protocol and HTTP/1.1 (`POST /v1/infer` JSON,
+//!   `GET /metrics`, `GET /healthz`) sniffed on one TCP port, a
+//!   `ModelManager` serving several named models from a manifest
+//!   directory with zero-downtime hot-swap, connection cap, and typed
+//!   overload refusals (`Overloaded` → wire code 1 / HTTP 429) — the
+//!   bounded worker queue stays the single admission point. Started via
+//!   `neuralut serve --listen`.
 //!
 //! ## The inference API
 //!
@@ -130,6 +138,7 @@ pub mod engine;
 pub mod fabric;
 pub mod luts;
 pub mod manifest;
+pub mod net;
 pub mod netlist;
 pub mod nn;
 pub mod obs;

@@ -12,6 +12,7 @@
 //! neuralut simulate <config> --net FILE
 //! neuralut rtl      <config> --net FILE --out DIR
 //! neuralut serve    <config> --net FILE [--rate R] [--requests N]
+//! neuralut serve    --listen HOST:PORT --models-dir DIR [--max-connections N]
 //! neuralut report   --net FILE [--format table|json] [--out FILE]
 //! neuralut stats    <config> --net FILE [--requests N] [--format prom|json|both]
 //! ```
@@ -181,6 +182,10 @@ fn print_usage() {
          \x20     [--workers N] [--queue-depth N] [--engine BACKEND]\n  \
          \x20     [--opt-level O0|O1|O2] [--fabric-cache FILE.nfab]\n  \
          \x20     [--server-config FILE.toml] [--request-timeout MS]\n  \
+         serve --listen HOST:PORT --models-dir DIR    network front door:\n  \
+         \x20     [--max-connections N] [--serve-for SECS]  binary wire protocol\n  \
+         \x20     [--server-config FILE.toml] [...]         + HTTP on one port,\n  \
+         \x20     hot-swaps models when .nlut files in DIR change\n  \
          report --net F [--engine BACKEND] [--opt-level O0|O1|O2]\n  \
          \x20     [--format table|json] [--out FILE]   compile telemetry\n  \
          stats <config> --net F [--requests N] [--rate R]\n  \
@@ -188,7 +193,9 @@ fn print_usage() {
          suite <file.toml>                      run a batch of pipelines\n\n\
          BACKEND is a registered backend name ({}); NEURALUT_ENGINE /\n\
          NEURALUT_WORKERS / NEURALUT_OPT_LEVEL / NEURALUT_FABRIC_CACHE /\n\
-         NEURALUT_REQUEST_TIMEOUT_MS set ambient defaults the flags override.\n\
+         NEURALUT_REQUEST_TIMEOUT_MS / NEURALUT_LISTEN_ADDR /\n\
+         NEURALUT_MAX_CONNECTIONS / NEURALUT_MODELS_DIR set ambient defaults\n\
+         the flags override.\n\
          --opt-level picks the netlist optimization pipeline (O1 default);\n\
          --fabric-cache compiles once into a .nfab artifact that later runs\n\
          and other processes reload; --request-timeout sheds requests whose\n\
@@ -376,6 +383,9 @@ fn cmd_suite(pos: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
+    if opts.get("listen").is_some() || opts.get("models-dir").is_some() {
+        return cmd_serve_net(opts);
+    }
     let name = pos.first().context("usage: serve <config> --net F")?;
     let (_m, ds) = load_bundle(name)?;
     let model = Model::load(&PathBuf::from(opts.get("net").context("--net required")?))?;
@@ -438,6 +448,74 @@ fn cmd_serve(pos: &[String], opts: &Opts) -> Result<()> {
                  .map(|r| format!("{r:.0}"))
                  .collect::<Vec<_>>()
                  .join(", "));
+    Ok(())
+}
+
+/// `serve --listen HOST:PORT --models-dir DIR`: the network front door.
+/// Serves every `.nlut` in DIR by file stem over one TCP port speaking
+/// both the binary wire protocol and HTTP/1.1 (`POST /v1/infer`,
+/// `GET /metrics`, `GET /healthz`), and hot-swaps a model when its file
+/// changes on disk — zero downtime, in-flight requests drain on the old
+/// generation. `--serve-for SECS` bounds the run (CI); otherwise it
+/// serves until killed.
+fn cmd_serve_net(opts: &Opts) -> Result<()> {
+    use neuralut::net::{ModelManager, NetServer};
+    let file_cfg = opts
+        .get("server-config")
+        .map(|path| ServerConfig::load(&PathBuf::from(path)))
+        .transpose()?;
+    let mut fo = opts.fabric(file_cfg.as_ref())?;
+    if let Some(addr) = opts.get("listen") {
+        fo = fo.listen_addr(addr);
+    }
+    if let Some(n) = opts.usize("max-connections")? {
+        fo = fo.max_connections(n);
+    }
+    if let Some(dir) = opts.get("models-dir") {
+        fo = fo.models_dir(PathBuf::from(dir));
+    }
+    // Network serving wants the compiled (and `.nfab`-persistable)
+    // backend unless one was picked explicitly.
+    if fo.get_backend().is_none() {
+        fo = fo.backend("bitsliced");
+    }
+    let dir = fo
+        .get_models_dir()
+        .context(
+            "network serving needs a models directory: --models-dir DIR, \
+             `models_dir` in --server-config, or NEURALUT_MODELS_DIR",
+        )?
+        .to_path_buf();
+    let net_cfg = fo.resolve_net()?;
+    let manager = ModelManager::open(&dir, &fo)?;
+    manager.start_watcher(std::time::Duration::from_millis(200));
+    let server = NetServer::start(manager.clone(), &net_cfg)?;
+    println!(
+        "serving {} model(s) from {} on {} (cap {} connections)",
+        manager.len(),
+        dir.display(),
+        server.local_addr(),
+        net_cfg.max_connections
+    );
+    for m in manager.snapshot() {
+        println!(
+            "  {:<20} digest {:016x}  {} feats -> {} classes",
+            m.name(),
+            m.digest(),
+            m.info().input_size,
+            m.info().n_class
+        );
+    }
+    println!("endpoints: binary (NLW1 framing) | POST /v1/infer | GET /metrics | GET /healthz");
+    match opts.f64("serve-for")? {
+        Some(secs) => std::thread::sleep(std::time::Duration::from_secs_f64(secs)),
+        None => loop {
+            // Serve until the process is killed; the watcher keeps
+            // hot-swapping in the background.
+            std::thread::park();
+        },
+    }
+    drop(server);
     Ok(())
 }
 

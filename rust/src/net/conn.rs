@@ -1,0 +1,549 @@
+//! TCP front door: accept loop, protocol sniffing, per-connection
+//! reader/writer threads, connection cap and admission control.
+//!
+//! Each accepted connection gets its own handler thread. The first four
+//! bytes pick the protocol: the [`frame::WIRE_PREAMBLE`] starts a binary
+//! framed conversation; anything else is handed to the HTTP/1.1 path
+//! ([`crate::net::http`]) with those bytes preserved.
+//!
+//! # Back-pressure contract
+//!
+//! A binary connection splits into a reader (the handler thread) and a
+//! writer thread joined by a bounded job channel. The reader decodes
+//! request frames and submits every row through the owning model's
+//! non-blocking [`Client::try_infer`](crate::server::Client::try_infer)
+//! — so the bounded worker queue, not the socket, is the admission
+//! point: a full queue answers with a typed `Overloaded` error frame
+//! (HTTP 429 on the JSON path) immediately, never a hang. Rows of one
+//! frame land in the worker pool individually and ride whatever fabric
+//! batches form — per-connection streaming micro-batching. The writer
+//! awaits replies in submission order and streams reply frames back;
+//! when it falls behind (slow consumer), the bounded job channel fills
+//! and the reader stops reading, pushing back through TCP. Over the
+//! connection cap, new connections are refused with the same typed
+//! refusal (`Overloaded` frame / HTTP 429) and closed.
+//!
+//! Shutdown ([`NetServer::shutdown`], also run on drop) closes every
+//! live socket, so reader threads unblock, writers drain, and the
+//! no-request-left-behind invariant of the worker pool carries through
+//! the network layer: every accepted frame is answered or the connection
+//! is visibly closed — nothing hangs.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::frame::{self, Frame, WireCode};
+use crate::net::http;
+use crate::net::manager::ModelManager;
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry, MetricsSnapshot};
+use crate::server::PendingReply;
+
+/// Upper bound on `max_connections` — more sockets than this is a
+/// config bug, not a capacity plan.
+pub const MAX_CONNECTIONS_LIMIT: usize = 1 << 16;
+/// Request frames in flight per binary connection before the reader
+/// stops reading (TCP back-pressure toward the client).
+const MAX_PIPELINE: usize = 1024;
+/// Log2 buckets for the rows-per-frame histogram.
+const ROWS_BUCKETS: usize = 16;
+/// How long a refusal handler waits for the preamble of an over-cap
+/// connection before giving up on a typed goodbye.
+const REFUSAL_READ_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Network front-door knobs, resolved through
+/// [`FabricOptions::resolve_net`](crate::fabric::FabricOptions::resolve_net)
+/// (defaults < config file < env < builder/CLI — the one precedence
+/// chain).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetConfig {
+    /// `host:port` to bind; port 0 picks an ephemeral port (see
+    /// [`NetServer::local_addr`]).
+    pub listen_addr: String,
+    /// Live-connection cap; connections over it are refused with a typed
+    /// `Overloaded` / HTTP 429, never left hanging.
+    pub max_connections: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { listen_addr: "127.0.0.1:0".into(), max_connections: 256 }
+    }
+}
+
+/// `neuralut_net_*` counters shared by every connection of one listener.
+pub(crate) struct NetStats {
+    pub(crate) registry: MetricsRegistry,
+    pub(crate) active: Gauge,
+    refused: Counter,
+    binary_conns: Counter,
+    http_conns: Counter,
+    binary_requests: Counter,
+    pub(crate) http_requests: Counter,
+    rows_hist: Histogram,
+}
+
+impl NetStats {
+    fn new() -> NetStats {
+        let registry = MetricsRegistry::new();
+        for (name, help) in [
+            ("neuralut_net_connections_total", "connections accepted, by protocol"),
+            ("neuralut_net_active_connections", "connections currently open"),
+            ("neuralut_net_connections_refused_total", "connections refused at the cap"),
+            ("neuralut_net_requests_total", "request frames / HTTP requests handled, by protocol"),
+            ("neuralut_net_request_rows", "feature rows per binary request frame"),
+            ("neuralut_net_refusals_total", "typed request refusals, by wire-code tag"),
+        ] {
+            registry.describe(name, help);
+        }
+        NetStats {
+            active: registry.gauge("neuralut_net_active_connections", &[]),
+            refused: registry.counter("neuralut_net_connections_refused_total", &[]),
+            binary_conns: registry.counter("neuralut_net_connections_total", &[("proto", "binary")]),
+            http_conns: registry.counter("neuralut_net_connections_total", &[("proto", "http")]),
+            binary_requests: registry.counter("neuralut_net_requests_total", &[("proto", "binary")]),
+            http_requests: registry.counter("neuralut_net_requests_total", &[("proto", "http")]),
+            rows_hist: registry.histogram("neuralut_net_request_rows", &[], ROWS_BUCKETS),
+            registry,
+        }
+    }
+
+    /// Count one typed refusal under its wire-code tag.
+    pub(crate) fn count_refusal(&self, code: WireCode) {
+        self.registry
+            .counter("neuralut_net_refusals_total", &[("code", code.tag())])
+            .inc();
+    }
+}
+
+pub(crate) struct NetShared {
+    pub(crate) manager: Arc<ModelManager>,
+    pub(crate) stats: NetStats,
+    max_connections: usize,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    next_conn_id: AtomicU64,
+    /// Socket clones of live connections, so shutdown can unblock every
+    /// reader (keyed by connection id; the handler deregisters on exit).
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Handler threads to join on shutdown (reaped as they finish).
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl NetShared {
+    /// The `/metrics` payload: listener counters + manager counters +
+    /// every model's server registry relabeled per model.
+    pub(crate) fn full_metrics(&self) -> MetricsSnapshot {
+        let mut snap = self.stats.registry.snapshot();
+        snap.merge(self.manager.metrics());
+        snap
+    }
+}
+
+/// What submitting one request batch at the front door produced.
+pub(crate) enum Submitted {
+    /// Every row admitted; one pending reply per row, in row order.
+    Pending(Vec<PendingReply>),
+    /// Refused before (or while) submitting — typed, never silent.
+    Refused { code: WireCode, message: String },
+}
+
+/// Admission control shared by the binary and HTTP paths: resolve the
+/// model, then push every row through the non-blocking `try_infer`. The
+/// first failure (queue full, stopped, bad feature count) refuses the
+/// whole request with its typed code; already-admitted rows still get
+/// served by the workers, their replies simply go unread.
+pub(crate) fn submit(shared: &NetShared, model: &str, rows: usize, features: Vec<f32>) -> Submitted {
+    let refuse = |code: WireCode, message: String| {
+        shared.stats.count_refusal(code);
+        Submitted::Refused { code, message }
+    };
+    let Some(m) = shared.manager.get(model) else {
+        return refuse(
+            WireCode::UnknownModel,
+            format!("unknown model '{model}' (serving: {})", shared.manager.names().join(", ")),
+        );
+    };
+    if rows == 0 || features.len() % rows != 0 {
+        return refuse(
+            WireCode::BadRequest,
+            format!("{} features do not split into {rows} equal rows", features.len()),
+        );
+    }
+    let cols = features.len() / rows;
+    let mut pending = Vec::with_capacity(rows);
+    for row in features.chunks(cols) {
+        match m.client().try_infer(row.to_vec()) {
+            Ok(p) => pending.push(p),
+            Err(e) => return refuse(WireCode::classify(&e), format!("{e:#}")),
+        }
+    }
+    m.count_rows(rows);
+    Submitted::Pending(pending)
+}
+
+/// A running network front door over one [`ModelManager`]. Dropping it
+/// stops accepting, closes every live connection, and joins all threads.
+pub struct NetServer {
+    shared: Arc<NetShared>,
+    local: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen_addr` and start accepting.
+    pub fn start(manager: Arc<ModelManager>, cfg: &NetConfig) -> Result<NetServer> {
+        if cfg.max_connections == 0 || cfg.max_connections > MAX_CONNECTIONS_LIMIT {
+            bail!(
+                "max_connections = {} out of range (1..={MAX_CONNECTIONS_LIMIT})",
+                cfg.max_connections
+            );
+        }
+        let listener = TcpListener::bind(&cfg.listen_addr)
+            .with_context(|| format!("binding {}", cfg.listen_addr))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        let shared = Arc::new(NetShared {
+            manager,
+            stats: NetStats::new(),
+            max_connections: cfg.max_connections,
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_conn_id: AtomicU64::new(1),
+            conns: Mutex::new(HashMap::new()),
+            handles: Mutex::new(Vec::new()),
+        });
+        let sh = shared.clone();
+        let accept = std::thread::spawn(move || accept_loop(listener, sh));
+        Ok(NetServer { shared, local, accept: Some(accept) })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// The model manager this front door serves from.
+    pub fn manager(&self) -> &Arc<ModelManager> {
+        &self.shared.manager
+    }
+
+    /// Connections currently open.
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::Acquire)
+    }
+
+    /// Exactly what `GET /metrics` serves: listener + per-model counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.full_metrics()
+    }
+
+    /// Stop accepting and close every live connection (idempotent; the
+    /// threads are joined by `Drop`).
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Wake the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.local);
+        let conns = self.shared.conns.lock().unwrap_or_else(|e| e.into_inner());
+        for stream in conns.values() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut guard = self.shared.handles.lock().unwrap_or_else(|e| e.into_inner());
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Deregisters a connection and releases its cap slot even if the
+/// handler unwinds.
+struct ConnGuard {
+    id: u64,
+    shared: Arc<NetShared>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.shared.conns.lock().unwrap_or_else(|e| e.into_inner()).remove(&self.id);
+        self.shared.active.fetch_sub(1, Ordering::AcqRel);
+        self.shared.stats.active.dec();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<NetShared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Reap finished handler threads so long-lived listeners don't
+        // accumulate handles.
+        {
+            let mut handles = shared.handles.lock().unwrap_or_else(|e| e.into_inner());
+            handles.retain(|h| !h.is_finished());
+        }
+        if shared.active.load(Ordering::Acquire) >= shared.max_connections {
+            let sh = shared.clone();
+            let h = std::thread::spawn(move || refuse_conn(stream, &sh));
+            shared.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+            continue;
+        }
+        let id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().unwrap_or_else(|e| e.into_inner()).insert(id, clone);
+        }
+        shared.active.fetch_add(1, Ordering::AcqRel);
+        shared.stats.active.inc();
+        let sh = shared.clone();
+        let h = std::thread::spawn(move || {
+            let guard = ConnGuard { id, shared: sh };
+            handle_conn(stream, &guard.shared);
+        });
+        shared.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+    }
+}
+
+/// Over the cap: say a typed goodbye in whichever protocol the client
+/// speaks, then close. Bounded by a read timeout so a silent client
+/// cannot pin this thread.
+fn refuse_conn(mut stream: TcpStream, shared: &NetShared) {
+    shared.stats.refused.inc();
+    shared.stats.count_refusal(WireCode::Overloaded);
+    let _ = stream.set_read_timeout(Some(REFUSAL_READ_TIMEOUT));
+    let mut first = [0u8; 4];
+    let is_binary = read_prefix(&mut stream, &mut first) && first == frame::WIRE_PREAMBLE;
+    if is_binary {
+        let _ = frame::write_frame(
+            &mut stream,
+            &Frame::Error {
+                id: 0,
+                code: WireCode::Overloaded.code(),
+                message: "connection limit reached".into(),
+            },
+        );
+    } else {
+        let _ = http::write_refusal(&mut stream, WireCode::Overloaded, "connection limit reached");
+    }
+    // Drain whatever the client already pipelined before closing: a close
+    // with unread bytes in the receive buffer turns into an RST, which
+    // can destroy the refusal we just wrote before the client reads it.
+    // Bounded by the armed read timeout and a fixed byte budget.
+    let mut sink = [0u8; 4096];
+    for _ in 0..16 {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Best-effort exact read of the 4-byte protocol sniff.
+fn read_prefix(stream: &mut TcpStream, buf: &mut [u8; 4]) -> bool {
+    let mut got = 0;
+    while got < 4 {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return false,
+            Ok(n) => got += n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Arc<NetShared>) {
+    let _ = stream.set_nodelay(true);
+    let mut first = [0u8; 4];
+    if !read_prefix(&mut stream, &mut first) {
+        return;
+    }
+    if first == frame::WIRE_PREAMBLE {
+        shared.stats.binary_conns.inc();
+        binary_conn(stream, shared);
+    } else {
+        shared.stats.http_conns.inc();
+        http::serve_http(stream, first, shared);
+    }
+}
+
+/// One writer job: a request's ordered pending replies, or an immediate
+/// typed refusal.
+enum Job {
+    Replies { id: u32, pending: Vec<PendingReply> },
+    Refuse { id: u32, code: WireCode, message: String },
+}
+
+/// Binary conversation: this thread reads and submits; a writer thread
+/// streams replies back in submission order.
+fn binary_conn(mut reader: TcpStream, shared: &Arc<NetShared>) {
+    let Ok(writer_stream) = reader.try_clone() else { return };
+    let (tx, rx) = mpsc::sync_channel::<Job>(MAX_PIPELINE);
+    let writer = std::thread::spawn(move || writer_loop(writer_stream, rx));
+    loop {
+        match frame::read_frame(&mut reader) {
+            // Clean EOF between frames: the client is done.
+            Ok(None) => break,
+            Ok(Some(Frame::Request { id, model, rows, features })) => {
+                shared.stats.binary_requests.inc();
+                shared.stats.rows_hist.observe(rows as u64);
+                let job = match submit(shared, &model, rows, features) {
+                    Submitted::Pending(pending) => Job::Replies { id, pending },
+                    Submitted::Refused { code, message } => Job::Refuse { id, code, message },
+                };
+                if tx.send(job).is_err() {
+                    break;
+                }
+            }
+            Ok(Some(_)) => {
+                let _ = tx.send(Job::Refuse {
+                    id: 0,
+                    code: WireCode::BadRequest,
+                    message: "only request frames flow client->server".into(),
+                });
+                break;
+            }
+            // Malformed/oversized/torn frame: framing is lost, so answer
+            // id 0 and close rather than guess at resynchronization.
+            Err(e) => {
+                shared.stats.count_refusal(WireCode::BadRequest);
+                let _ = tx.send(Job::Refuse {
+                    id: 0,
+                    code: WireCode::BadRequest,
+                    message: format!("{e:#}"),
+                });
+                break;
+            }
+        }
+    }
+    // Channel closes; the writer drains queued jobs, then exits.
+    drop(tx);
+    let _ = writer.join();
+    let _ = reader.shutdown(Shutdown::Both);
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Job>) {
+    // After a write failure the socket is dead; keep draining jobs (so
+    // the reader never blocks on a full channel) without writing.
+    let mut dead = false;
+    while let Ok(job) = rx.recv() {
+        let frame = match job {
+            Job::Refuse { id, code, message } => {
+                Frame::Error { id, code: code.code(), message }
+            }
+            Job::Replies { id, pending } => {
+                let mut predictions = Vec::with_capacity(pending.len());
+                let mut failed: Option<(WireCode, String)> = None;
+                for p in &pending {
+                    match p.recv() {
+                        Ok(reply) => predictions.push(reply.prediction),
+                        Err(e) => {
+                            failed = Some((WireCode::classify(&e), format!("{e:#}")));
+                            break;
+                        }
+                    }
+                }
+                match failed {
+                    None => Frame::Reply { id, predictions },
+                    Some((code, message)) => {
+                        Frame::Error { id, code: code.code(), message }
+                    }
+                }
+            }
+        };
+        if !dead && frame::write_frame(&mut stream, &frame).is_err() {
+            dead = true;
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricOptions;
+    use crate::luts::random_network;
+    use std::path::PathBuf;
+
+    fn models_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("neuralut_conn_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        random_network(11, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("m.nlut")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn config_bounds_are_enforced() {
+        let dir = models_dir("cfg");
+        let mgr = ModelManager::open(&dir, &FabricOptions::new()).unwrap();
+        let bad = NetConfig { listen_addr: "127.0.0.1:0".into(), max_connections: 0 };
+        assert!(NetServer::start(mgr.clone(), &bad).is_err());
+        let bad = NetConfig {
+            listen_addr: "127.0.0.1:0".into(),
+            max_connections: MAX_CONNECTIONS_LIMIT + 1,
+        };
+        assert!(NetServer::start(mgr, &bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn submit_refuses_unknown_models_and_ragged_batches() {
+        let dir = models_dir("submit");
+        let mgr = ModelManager::open(&dir, &FabricOptions::new()).unwrap();
+        let srv = NetServer::start(mgr, &NetConfig::default()).unwrap();
+        match submit(&srv.shared, "nope", 1, vec![0.0; 8]) {
+            Submitted::Refused { code, message } => {
+                assert_eq!(code, WireCode::UnknownModel);
+                assert!(message.contains("serving: m"), "{message}");
+            }
+            Submitted::Pending(_) => panic!("unknown model must refuse"),
+        }
+        match submit(&srv.shared, "m", 3, vec![0.0; 8]) {
+            Submitted::Refused { code, .. } => assert_eq!(code, WireCode::BadRequest),
+            Submitted::Pending(_) => panic!("ragged batch must refuse"),
+        }
+        // Wrong per-row feature count refuses through try_infer's check.
+        match submit(&srv.shared, "m", 1, vec![0.0; 5]) {
+            Submitted::Refused { code, .. } => assert_eq!(code, WireCode::BadRequest),
+            Submitted::Pending(_) => panic!("wrong feature count must refuse"),
+        }
+        // A well-formed batch is admitted row by row.
+        match submit(&srv.shared, "m", 2, vec![0.25; 16]) {
+            Submitted::Pending(pending) => {
+                assert_eq!(pending.len(), 2);
+                for p in pending {
+                    p.recv().unwrap();
+                }
+            }
+            Submitted::Refused { message, .. } => panic!("{message}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

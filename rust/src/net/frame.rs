@@ -1,0 +1,703 @@
+//! Length-prefixed binary wire codec: the framing grammar of the TCP
+//! front door, plus the typed error-code mapping shared with the HTTP
+//! path.
+//!
+//! # Framing grammar
+//!
+//! A binary connection opens with the 4-byte preamble [`WIRE_PREAMBLE`]
+//! (`"NLW1"`), which is also how the listener distinguishes binary
+//! clients from HTTP ones. After the preamble, both directions carry a
+//! stream of frames:
+//!
+//! ```text
+//! frame    := len:u32le payload            ; len = payload byte count,
+//!                                          ;   1 ..= MAX_FRAME_LEN
+//! payload  := request | reply | error      ; first byte discriminates
+//! request  := 0x01 id:u32le name_len:u16le name:bytes
+//!             rows:u32le cols:u32le feats:(rows*cols)*f32le
+//! reply    := 0x02 id:u32le rows:u32le preds:rows*u32le
+//! error    := 0x03 id:u32le code:u16le msg_len:u16le msg:bytes
+//! ```
+//!
+//! `id` is a client-chosen correlation id echoed verbatim in the reply,
+//! so a pipelining client can keep many requests in flight on one
+//! connection. All integers are little-endian; features are IEEE-754
+//! `f32`. The declared `len` is validated against [`MAX_FRAME_LEN`]
+//! *before* any payload allocation, and every count inside the payload
+//! (`name_len`, `rows`, `cols`) is checked against both its own cap and
+//! the bytes actually present before the corresponding buffer is built —
+//! the same reject-before-allocate discipline as the `.nfab`/`.nlut`
+//! artifact readers. Decode errors carry the payload offset of the field
+//! that failed.
+//!
+//! # Error codes
+//!
+//! [`WireCode`] assigns every [`ServerError`] variant a stable numeric
+//! code and an HTTP status, plus front-door-only codes for requests that
+//! never reach a server (unknown model, malformed request). The codes
+//! are part of the wire contract: they never change meaning across
+//! releases (new ones may be appended).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::server::ServerError;
+use crate::util::faults;
+
+/// First four bytes a binary client sends after connecting. Anything
+/// else makes the listener treat the connection as HTTP.
+pub const WIRE_PREAMBLE: [u8; 4] = *b"NLW1";
+/// Hard cap on one frame's payload (16 MiB) — a declared length above
+/// this is rejected before any allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+/// Hard cap on a request's model-name length.
+pub const MAX_MODEL_NAME: usize = 256;
+/// Hard cap on feature rows in one request frame.
+pub const MAX_ROWS_PER_FRAME: usize = 1 << 16;
+/// Hard cap on features per row in one request frame.
+pub const MAX_COLS_PER_ROW: usize = 1 << 20;
+
+const KIND_REQUEST: u8 = 0x01;
+const KIND_REPLY: u8 = 0x02;
+const KIND_ERROR: u8 = 0x03;
+
+// ---------------------------------------------------------------------------
+// Error codes
+
+/// Stable numeric refusal codes carried in `error` frames and mirrored
+/// as HTTP statuses. Codes 1–4 are the [`ServerError`] variants
+/// one-to-one; 5–7 are front-door conditions a request can hit before it
+/// ever reaches a worker queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCode {
+    /// [`ServerError::Overloaded`] — also the connection-cap refusal.
+    Overloaded,
+    /// [`ServerError::Stopped`].
+    Stopped,
+    /// [`ServerError::WorkerCrashed`].
+    WorkerCrashed,
+    /// [`ServerError::DeadlineExceeded`].
+    DeadlineExceeded,
+    /// The request named a model this server is not serving.
+    UnknownModel,
+    /// The request was malformed (bad frame, wrong feature count,
+    /// unparsable JSON body).
+    BadRequest,
+    /// Anything else — an untyped internal failure.
+    Internal,
+}
+
+impl WireCode {
+    /// The stable numeric code carried on the wire.
+    pub fn code(self) -> u16 {
+        match self {
+            WireCode::Overloaded => 1,
+            WireCode::Stopped => 2,
+            WireCode::WorkerCrashed => 3,
+            WireCode::DeadlineExceeded => 4,
+            WireCode::UnknownModel => 5,
+            WireCode::BadRequest => 6,
+            WireCode::Internal => 7,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code); `None` for unassigned numbers.
+    pub fn from_code(code: u16) -> Option<WireCode> {
+        Some(match code {
+            1 => WireCode::Overloaded,
+            2 => WireCode::Stopped,
+            3 => WireCode::WorkerCrashed,
+            4 => WireCode::DeadlineExceeded,
+            5 => WireCode::UnknownModel,
+            6 => WireCode::BadRequest,
+            7 => WireCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// The HTTP status the JSON path answers with for this refusal.
+    pub fn http_status(self) -> u16 {
+        match self {
+            WireCode::Overloaded => 429,
+            WireCode::Stopped => 503,
+            WireCode::WorkerCrashed => 500,
+            WireCode::DeadlineExceeded => 504,
+            WireCode::UnknownModel => 404,
+            WireCode::BadRequest => 400,
+            WireCode::Internal => 500,
+        }
+    }
+
+    /// Short machine-readable tag for JSON error bodies and metric labels.
+    pub fn tag(self) -> &'static str {
+        match self {
+            WireCode::Overloaded => "overloaded",
+            WireCode::Stopped => "stopped",
+            WireCode::WorkerCrashed => "worker_crashed",
+            WireCode::DeadlineExceeded => "deadline_exceeded",
+            WireCode::UnknownModel => "unknown_model",
+            WireCode::BadRequest => "bad_request",
+            WireCode::Internal => "internal",
+        }
+    }
+
+    /// The wire code for a typed [`ServerError`] — every variant maps.
+    pub fn from_server_error(e: ServerError) -> WireCode {
+        match e {
+            ServerError::Overloaded => WireCode::Overloaded,
+            ServerError::Stopped => WireCode::Stopped,
+            ServerError::WorkerCrashed => WireCode::WorkerCrashed,
+            ServerError::DeadlineExceeded => WireCode::DeadlineExceeded,
+        }
+    }
+
+    /// Classify an `anyhow` error from the serving runtime: a
+    /// downcastable [`ServerError`] keeps its typed code; anything else
+    /// from the submission path is a malformed request (the only other
+    /// thing `try_infer` rejects is a wrong feature count).
+    pub fn classify(e: &anyhow::Error) -> WireCode {
+        match e.downcast_ref::<ServerError>() {
+            Some(&se) => WireCode::from_server_error(se),
+            None => WireCode::BadRequest,
+        }
+    }
+}
+
+/// A typed refusal received over the wire — what [`WireClient::infer`]
+/// returns inside the `anyhow` chain so callers can downcast and react,
+/// mirroring how [`ServerError`] travels in-process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireRefusal {
+    /// Numeric code; [`WireCode::from_code`] recovers the typed variant.
+    pub code: u16,
+    /// Server-provided human-readable detail.
+    pub message: String,
+}
+
+impl std::fmt::Display for WireRefusal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match WireCode::from_code(self.code) {
+            Some(c) => write!(f, "wire refusal {} ({}): {}", self.code, c.tag(), self.message),
+            None => write!(f, "wire refusal {} (unknown code): {}", self.code, self.message),
+        }
+    }
+}
+
+impl std::error::Error for WireRefusal {}
+
+// ---------------------------------------------------------------------------
+// Frames
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: run `rows` feature rows (`features.len() ==
+    /// rows * cols`) through the named model.
+    Request { id: u32, model: String, rows: usize, features: Vec<f32> },
+    /// Server → client: one prediction per request row.
+    Reply { id: u32, predictions: Vec<u32> },
+    /// Server → client: typed refusal; `id` echoes the request (0 when
+    /// the failure predates a parsable id, e.g. a malformed frame).
+    Error { id: u32, code: u16, message: String },
+}
+
+/// Byte cursor over one frame payload; every read carries the payload
+/// offset into its error so truncation points are named exactly.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let remain = self.buf.len() - self.off;
+        if remain < n {
+            bail!(
+                "truncated frame: '{what}' at payload offset {} needs {n} bytes, \
+                 {remain} remain",
+                self.off
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+impl Frame {
+    /// Encode as a complete frame: length prefix + payload. Fails (rather
+    /// than emitting an undecodable frame) when a field exceeds its wire
+    /// cap.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let payload = match self {
+            Frame::Request { id, model, rows, features } => {
+                let name = model.as_bytes();
+                if name.len() > MAX_MODEL_NAME {
+                    bail!("model name is {} bytes (cap {MAX_MODEL_NAME})", name.len());
+                }
+                if *rows == 0 {
+                    bail!("request frame needs at least one feature row");
+                }
+                if *rows > MAX_ROWS_PER_FRAME {
+                    bail!("request has {rows} rows (cap {MAX_ROWS_PER_FRAME})");
+                }
+                if features.len() % rows != 0 {
+                    bail!(
+                        "feature count {} is not a multiple of rows {rows}",
+                        features.len()
+                    );
+                }
+                let cols = features.len() / rows;
+                if cols == 0 || cols > MAX_COLS_PER_ROW {
+                    bail!("request has {cols} features per row (1..={MAX_COLS_PER_ROW})");
+                }
+                let mut p = Vec::with_capacity(15 + name.len() + features.len() * 4);
+                p.push(KIND_REQUEST);
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&(name.len() as u16).to_le_bytes());
+                p.extend_from_slice(name);
+                p.extend_from_slice(&(*rows as u32).to_le_bytes());
+                p.extend_from_slice(&(cols as u32).to_le_bytes());
+                for f in features {
+                    p.extend_from_slice(&f.to_le_bytes());
+                }
+                p
+            }
+            Frame::Reply { id, predictions } => {
+                if predictions.len() > MAX_ROWS_PER_FRAME {
+                    bail!(
+                        "reply has {} predictions (cap {MAX_ROWS_PER_FRAME})",
+                        predictions.len()
+                    );
+                }
+                let mut p = Vec::with_capacity(9 + predictions.len() * 4);
+                p.push(KIND_REPLY);
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&(predictions.len() as u32).to_le_bytes());
+                for pred in predictions {
+                    p.extend_from_slice(&pred.to_le_bytes());
+                }
+                p
+            }
+            Frame::Error { id, code, message } => {
+                let msg = message.as_bytes();
+                // Truncate rather than fail: refusal detail is advisory.
+                let msg = &msg[..msg.len().min(u16::MAX as usize)];
+                let mut p = Vec::with_capacity(9 + msg.len());
+                p.push(KIND_ERROR);
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&code.to_le_bytes());
+                p.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+                p.extend_from_slice(msg);
+                p
+            }
+        };
+        debug_assert!(payload.len() <= MAX_FRAME_LEN);
+        let mut out = Vec::with_capacity(4 + payload.len());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    /// Decode one frame payload (the bytes after the length prefix).
+    /// Every count is validated against its cap and the bytes actually
+    /// present *before* the corresponding buffer is allocated; errors
+    /// carry the payload offset of the offending field.
+    pub fn decode(payload: &[u8]) -> Result<Frame> {
+        let mut c = Cur { buf: payload, off: 0 };
+        let kind = c.u8("frame kind")?;
+        match kind {
+            KIND_REQUEST => {
+                let id = c.u32("request id")?;
+                let name_len = c.u16("name length")? as usize;
+                if name_len > MAX_MODEL_NAME {
+                    bail!(
+                        "model name length {name_len} at payload offset 5 exceeds \
+                         cap {MAX_MODEL_NAME}"
+                    );
+                }
+                let name = c.take(name_len, "model name")?;
+                let model = std::str::from_utf8(name)
+                    .context("model name is not UTF-8")?
+                    .to_string();
+                let rows_off = c.off;
+                let rows = c.u32("row count")? as usize;
+                let cols = c.u32("column count")? as usize;
+                if rows == 0 || rows > MAX_ROWS_PER_FRAME {
+                    bail!(
+                        "row count {rows} at payload offset {rows_off} out of range \
+                         (1..={MAX_ROWS_PER_FRAME})"
+                    );
+                }
+                if cols == 0 || cols > MAX_COLS_PER_ROW {
+                    bail!(
+                        "column count {cols} at payload offset {} out of range \
+                         (1..={MAX_COLS_PER_ROW})",
+                        rows_off + 4
+                    );
+                }
+                // Reject-before-allocate: the feature buffer is sized from
+                // rows*cols only after proving exactly that many bytes are
+                // actually present (checked_mul so absurd counts cannot
+                // wrap into a small allocation).
+                let n_feats = rows
+                    .checked_mul(cols)
+                    .and_then(|n| n.checked_mul(4))
+                    .with_context(|| format!("feature count {rows}x{cols} overflows"))?
+                    / 4;
+                let remain = payload.len() - c.off;
+                if remain != n_feats * 4 {
+                    bail!(
+                        "request declares {rows}x{cols} features ({} bytes) at payload \
+                         offset {}, but {remain} bytes remain",
+                        n_feats * 4,
+                        c.off
+                    );
+                }
+                let bytes = c.take(n_feats * 4, "feature data")?;
+                let features = bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Ok(Frame::Request { id, model, rows, features })
+            }
+            KIND_REPLY => {
+                let id = c.u32("reply id")?;
+                let rows_off = c.off;
+                let rows = c.u32("prediction count")? as usize;
+                if rows > MAX_ROWS_PER_FRAME {
+                    bail!(
+                        "prediction count {rows} at payload offset {rows_off} exceeds \
+                         cap {MAX_ROWS_PER_FRAME}"
+                    );
+                }
+                let remain = payload.len() - c.off;
+                if remain != rows * 4 {
+                    bail!(
+                        "reply declares {rows} predictions ({} bytes) at payload \
+                         offset {}, but {remain} bytes remain",
+                        rows * 4,
+                        c.off
+                    );
+                }
+                let bytes = c.take(rows * 4, "prediction data")?;
+                let predictions = bytes
+                    .chunks_exact(4)
+                    .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Ok(Frame::Reply { id, predictions })
+            }
+            KIND_ERROR => {
+                let id = c.u32("error id")?;
+                let code = c.u16("error code")?;
+                let msg_len = c.u16("message length")? as usize;
+                let msg = c.take(msg_len, "error message")?;
+                if c.off != payload.len() {
+                    bail!(
+                        "error frame has {} trailing bytes at payload offset {}",
+                        payload.len() - c.off,
+                        c.off
+                    );
+                }
+                let message = String::from_utf8_lossy(msg).into_owned();
+                Ok(Frame::Error { id, code, message })
+            }
+            other => bail!("unknown frame kind 0x{other:02x} at payload offset 0"),
+        }
+    }
+}
+
+/// Fill `buf` from `r`, riding out partial reads. `Ok(false)` = clean
+/// EOF before the first byte; an EOF mid-buffer is an error.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => bail!(
+                "connection closed mid-frame: got {got} of {} bytes",
+                buf.len()
+            ),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading from connection"),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame off `r`. `Ok(None)` = the peer closed cleanly between
+/// frames. The declared payload length is bounds-checked against
+/// [`MAX_FRAME_LEN`] *before* the payload buffer is allocated, so an
+/// absurd prefix cannot trigger a giant allocation. The
+/// [`faults::point::NET_READ`] fault point fires after the prefix is on
+/// hand — an armed `error` here simulates a torn read.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    if !read_full(r, &mut len_buf)? {
+        return Ok(None);
+    }
+    faults::inject(faults::point::NET_READ)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 {
+        bail!("frame declares an empty payload");
+    }
+    if len > MAX_FRAME_LEN {
+        bail!("frame declares a {len}-byte payload (cap {MAX_FRAME_LEN}); rejected before allocation");
+    }
+    let mut payload = vec![0u8; len];
+    if !read_full(r, &mut payload)? {
+        bail!("connection closed before the {len}-byte frame payload");
+    }
+    Frame::decode(&payload).map(Some)
+}
+
+/// Encode and write one frame.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    w.write_all(&frame.encode()?).context("writing frame")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client
+
+/// Minimal blocking binary-protocol client: sends the preamble on
+/// connect, then frames. Used by the example, the loopback tests and
+/// `bench_net`; real clients in other languages only need the grammar in
+/// the module docs.
+pub struct WireClient {
+    stream: TcpStream,
+    next_id: u32,
+}
+
+impl WireClient {
+    /// Connect and send the [`WIRE_PREAMBLE`].
+    pub fn connect(addr: std::net::SocketAddr) -> Result<WireClient> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.write_all(&WIRE_PREAMBLE).context("sending preamble")?;
+        Ok(WireClient { stream, next_id: 1 })
+    }
+
+    /// Bound every receive so a dead server surfaces as an error, not a
+    /// hung client.
+    pub fn set_read_timeout(&self, timeout: Duration) -> Result<()> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        Ok(())
+    }
+
+    /// Send one request frame without waiting for the reply (pipelining);
+    /// returns the correlation id to match against.
+    pub fn send(&mut self, model: &str, features: &[f32], rows: usize) -> Result<u32> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        let frame = Frame::Request {
+            id,
+            model: model.to_string(),
+            rows,
+            features: features.to_vec(),
+        };
+        write_frame(&mut self.stream, &frame)
+            .with_context(|| format!("sending request {id}"))?;
+        Ok(id)
+    }
+
+    /// Read the next frame; an EOF here means the server hung up.
+    pub fn recv(&mut self) -> Result<Frame> {
+        read_frame(&mut self.stream)?
+            .context("server closed the connection mid-conversation")
+    }
+
+    /// One full round trip: send a request, wait for its reply, return
+    /// one prediction per row. A typed server refusal surfaces as a
+    /// downcastable [`WireRefusal`].
+    pub fn infer(&mut self, model: &str, features: &[f32], rows: usize) -> Result<Vec<u32>> {
+        let want = self.send(model, features, rows)?;
+        loop {
+            match self.recv()? {
+                Frame::Reply { id, predictions } if id == want => return Ok(predictions),
+                Frame::Error { id, code, message } if id == want || id == 0 => {
+                    return Err(WireRefusal { code, message }.into());
+                }
+                // A reply to an earlier pipelined request someone else
+                // abandoned; skip it.
+                Frame::Reply { .. } | Frame::Error { .. } => continue,
+                Frame::Request { .. } => bail!("server sent a request frame"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(rows: usize, cols: usize) -> Frame {
+        Frame::Request {
+            id: 7,
+            model: "digits".into(),
+            rows,
+            features: (0..rows * cols).map(|i| i as f32 / 10.0).collect(),
+        }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        for frame in [
+            req(1, 8),
+            req(3, 4),
+            Frame::Reply { id: 42, predictions: vec![0, 3, 1] },
+            Frame::Reply { id: 1, predictions: vec![] },
+            Frame::Error { id: 9, code: 1, message: "queue full".into() },
+        ] {
+            let bytes = frame.encode().unwrap();
+            let mut r = &bytes[..];
+            let back = read_frame(&mut r).unwrap().unwrap();
+            assert_eq!(back, frame);
+            assert!(r.is_empty(), "decoder must consume the whole frame");
+        }
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_rejected_before_allocation() {
+        // 4 GiB-ish declared payload; if the reader allocated first this
+        // would OOM rather than error.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut &bytes[..]).unwrap_err().to_string();
+        assert!(err.contains("rejected before allocation"), "{err}");
+        // Zero-length payloads are equally malformed.
+        let err = read_frame(&mut &0u32.to_le_bytes()[..]).unwrap_err().to_string();
+        assert!(err.contains("empty payload"), "{err}");
+    }
+
+    #[test]
+    fn truncations_carry_offsets() {
+        let full = req(2, 3).encode().unwrap();
+        // Cut the stream mid-payload: read_frame reports how far it got.
+        let err = read_frame(&mut &full[..10]).unwrap_err().to_string();
+        assert!(err.contains("closed mid-frame"), "{err}");
+        // Cut a *field* short inside an intact-length frame: decode names
+        // the field and payload offset.
+        let payload = &full[4..];
+        let err = Frame::decode(&payload[..5]).unwrap_err().to_string();
+        assert!(err.contains("name length") && err.contains("offset 5"), "{err}");
+        // Declared feature block vs bytes present mismatch.
+        let err = Frame::decode(&payload[..payload.len() - 4]).unwrap_err().to_string();
+        assert!(err.contains("bytes remain"), "{err}");
+    }
+
+    #[test]
+    fn absurd_counts_inside_the_payload_are_rejected() {
+        // rows = u32::MAX with a tiny payload: checked_mul + presence
+        // check must fire before the feature Vec is sized.
+        let mut p = vec![KIND_REQUEST];
+        p.extend_from_slice(&1u32.to_le_bytes()); // id
+        p.extend_from_slice(&1u16.to_le_bytes()); // name_len
+        p.push(b'm');
+        p.extend_from_slice(&u32::MAX.to_le_bytes()); // rows
+        p.extend_from_slice(&u32::MAX.to_le_bytes()); // cols
+        let err = Frame::decode(&p).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // Oversized name length.
+        let mut p = vec![KIND_REQUEST];
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&u16::MAX.to_le_bytes());
+        let err = Frame::decode(&p).unwrap_err().to_string();
+        assert!(err.contains("name length 65535"), "{err}");
+        // Unknown kind.
+        let err = Frame::decode(&[0x7f]).unwrap_err().to_string();
+        assert!(err.contains("unknown frame kind 0x7f"), "{err}");
+        // Zero rows is not a request.
+        let mut p = vec![KIND_REQUEST];
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&1u16.to_le_bytes());
+        p.push(b'm');
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes());
+        let err = Frame::decode(&p).unwrap_err().to_string();
+        assert!(err.contains("row count 0"), "{err}");
+    }
+
+    /// Reader that returns at most `chunk` bytes per syscall, exercising
+    /// the partial-read loop.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.chunk.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn partial_reads_across_syscall_boundaries_reassemble() {
+        let frame = req(4, 5);
+        let bytes = frame.encode().unwrap();
+        for chunk in [1, 2, 3, 7] {
+            let mut r = Trickle { data: &bytes, pos: 0, chunk };
+            assert_eq!(read_frame(&mut r).unwrap().unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn net_read_fault_point_poisons_the_read() {
+        let guard = faults::arm_scoped("net.read:1:error", 3).unwrap();
+        let bytes = req(1, 2).encode().unwrap();
+        let err = read_frame(&mut &bytes[..]).unwrap_err().to_string();
+        assert!(err.contains("net.read"), "{err}");
+        assert_eq!(guard.fired(faults::point::NET_READ), 1);
+        drop(guard);
+        assert!(read_frame(&mut &bytes[..]).unwrap().is_some());
+    }
+
+    #[test]
+    fn every_server_error_has_a_stable_wire_code_and_http_status() {
+        for se in ServerError::ALL {
+            let wc = WireCode::from_server_error(se);
+            assert_eq!(WireCode::from_code(wc.code()), Some(wc), "{se}");
+            let anyhow_err = anyhow::Error::from(se);
+            assert_eq!(WireCode::classify(&anyhow_err), wc);
+        }
+        // The contract pins: codes and statuses are wire-stable.
+        assert_eq!(WireCode::from_server_error(ServerError::Overloaded).code(), 1);
+        assert_eq!(WireCode::from_server_error(ServerError::Stopped).code(), 2);
+        assert_eq!(WireCode::from_server_error(ServerError::WorkerCrashed).code(), 3);
+        assert_eq!(WireCode::from_server_error(ServerError::DeadlineExceeded).code(), 4);
+        assert_eq!(WireCode::Overloaded.http_status(), 429);
+        assert_eq!(WireCode::Stopped.http_status(), 503);
+        assert_eq!(WireCode::WorkerCrashed.http_status(), 500);
+        assert_eq!(WireCode::DeadlineExceeded.http_status(), 504);
+        assert_eq!(WireCode::UnknownModel.http_status(), 404);
+        assert_eq!(WireCode::BadRequest.http_status(), 400);
+        // Non-ServerError submission failures classify as bad requests.
+        assert_eq!(WireCode::classify(&anyhow::anyhow!("wrong length")), WireCode::BadRequest);
+        assert_eq!(WireCode::from_code(0), None);
+        assert_eq!(WireCode::from_code(99), None);
+    }
+}

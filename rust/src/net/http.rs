@@ -1,0 +1,373 @@
+//! Minimal HTTP/1.1 path of the network front door.
+//!
+//! Just enough of the protocol to be curl-able — no chunked encoding,
+//! no TLS, no pipelining beyond keep-alive:
+//!
+//! - `POST /v1/infer` — JSON body `{"model": "name", "features": [...]}`
+//!   where `features` is one flat row or an array of equal-length rows;
+//!   replies `{"model", "rows", "predictions"}`. Errors carry the same
+//!   stable numeric codes as the binary protocol
+//!   ([`WireCode`](crate::net::frame::WireCode)) plus the matching HTTP
+//!   status: queue-full maps to 429, unknown model to 404, a missed
+//!   deadline to 504 — never a hang.
+//! - `GET /metrics` — Prometheus exposition of the listener, manager,
+//!   and per-model server registries (via [`crate::obs::expo`]).
+//! - `GET /healthz` — liveness plus the served-model count.
+//! - `GET /v1/models` — the manifest as JSON: name, digest, generation.
+//!
+//! Request heads are capped at [`MAX_HEAD`] bytes and bodies at
+//! [`MAX_BODY`] bytes, both rejected before buffering the excess.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::conn::{submit, NetShared, Submitted};
+use crate::net::frame::WireCode;
+use crate::obs::expo;
+use crate::util::json::{obj, Json};
+
+/// Request-head cap (request line + headers).
+pub const MAX_HEAD: usize = 16 * 1024;
+/// Request-body cap; `Content-Length` above this is refused unread.
+pub const MAX_BODY: usize = 8 * 1024 * 1024;
+
+const CONTENT_JSON: &str = "application/json";
+const CONTENT_TEXT: &str = "text/plain; charset=utf-8";
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Serve HTTP on a sniffed connection. `prefix` is the four bytes the
+/// protocol sniff consumed; they are the start of the first request.
+pub(crate) fn serve_http(mut stream: TcpStream, prefix: [u8; 4], shared: &Arc<NetShared>) {
+    let mut buf: Vec<u8> = prefix.to_vec();
+    loop {
+        let req = match read_request(&mut stream, &mut buf) {
+            Ok(Some(req)) => req,
+            Ok(None) => break,
+            Err(e) => {
+                shared.stats.count_refusal(WireCode::BadRequest);
+                let body = error_body(WireCode::BadRequest, &format!("{e:#}"));
+                let _ = write_response(&mut stream, 400, CONTENT_JSON, &body, false);
+                break;
+            }
+        };
+        shared.stats.http_requests.inc();
+        let keep = req.keep_alive;
+        let (status, ctype, body) = route(&req, shared);
+        if write_response(&mut stream, status, ctype, &body, keep).is_err() || !keep {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// One-shot refusal used by the connection-cap path before any routing.
+pub(crate) fn write_refusal(w: &mut dyn Write, code: WireCode, message: &str) -> std::io::Result<()> {
+    write_response(w, code.http_status(), CONTENT_JSON, &error_body(code, message), false)
+}
+
+fn route(req: &HttpRequest, shared: &Arc<NetShared>) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            (200, CONTENT_TEXT, format!("ok: serving {} models\n", shared.manager.len()))
+        }
+        ("GET", "/metrics") => (200, CONTENT_TEXT, expo::to_prometheus(&shared.full_metrics())),
+        ("GET", "/v1/models") => (200, CONTENT_JSON, models_body(shared)),
+        ("POST", "/v1/infer") => match infer_body(&req.body, shared) {
+            Ok(body) => (200, CONTENT_JSON, body),
+            Err((code, message)) => (code.http_status(), CONTENT_JSON, error_body(code, &message)),
+        },
+        ("GET" | "POST" | "HEAD" | "PUT" | "DELETE", _) => {
+            let code = WireCode::BadRequest;
+            (404, CONTENT_JSON, error_body(code, &format!("no route for {} {}", req.method, req.path)))
+        }
+        _ => (405, CONTENT_JSON, error_body(WireCode::BadRequest, "method not supported")),
+    }
+}
+
+fn models_body(shared: &Arc<NetShared>) -> String {
+    let models: Vec<Json> = shared
+        .manager
+        .snapshot()
+        .iter()
+        .map(|m| {
+            obj(vec![
+                ("name", Json::Str(m.name().to_string())),
+                ("digest", Json::Str(format!("{:016x}", m.digest()))),
+                ("generation", Json::Num(m.generation() as f64)),
+                ("input_size", Json::Num(m.info().input_size as f64)),
+                ("n_class", Json::Num(m.info().n_class as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![("models", Json::Arr(models))]).to_string()
+}
+
+/// Parse the infer body, submit through the shared admission path, and
+/// await the replies. Errors come back typed so the route can pick the
+/// HTTP status off the wire code.
+fn infer_body(body: &[u8], shared: &Arc<NetShared>) -> std::result::Result<String, (WireCode, String)> {
+    let bad = |msg: String| (WireCode::BadRequest, msg);
+    let text = std::str::from_utf8(body).map_err(|_| bad("body is not UTF-8".into()))?;
+    let json = Json::parse(text).map_err(|e| bad(format!("{e:#}")))?;
+    let model = json
+        .get("model")
+        .and_then(Json::as_str)
+        .map_err(|e| bad(format!("{e:#}")))?
+        .to_string();
+    let (rows, features) = parse_features(&json).map_err(|e| bad(format!("{e:#}")))?;
+    match submit(shared, &model, rows, features) {
+        Submitted::Refused { code, message } => Err((code, message)),
+        Submitted::Pending(pending) => {
+            let mut predictions = Vec::with_capacity(pending.len());
+            for p in &pending {
+                let reply = p.recv().map_err(|e| (WireCode::classify(&e), format!("{e:#}")))?;
+                predictions.push(Json::Num(reply.prediction as f64));
+            }
+            Ok(obj(vec![
+                ("model", Json::Str(model)),
+                ("rows", Json::Num(rows as f64)),
+                ("predictions", Json::Arr(predictions)),
+            ])
+            .to_string())
+        }
+    }
+}
+
+/// `features` is either one flat row (`[0.1, 0.2, ...]`) or a batch of
+/// equal-length rows (`[[...], [...]]`). Returns (rows, flat features).
+fn parse_features(json: &Json) -> Result<(usize, Vec<f32>)> {
+    let arr = json.get("features").and_then(Json::as_arr).context("request field 'features'")?;
+    if arr.is_empty() {
+        bail!("'features' must not be empty");
+    }
+    let mut features = Vec::new();
+    if matches!(arr[0], Json::Arr(_)) {
+        let mut cols = None;
+        for (i, row) in arr.iter().enumerate() {
+            let row = row.as_arr().with_context(|| format!("'features' row {i}"))?;
+            match cols {
+                None => cols = Some(row.len()),
+                Some(c) if c != row.len() => bail!(
+                    "'features' row {i} has {} values, row 0 has {c}",
+                    row.len()
+                ),
+                Some(_) => {}
+            }
+            for v in row {
+                features.push(v.as_f64().with_context(|| format!("'features' row {i}"))? as f32);
+            }
+        }
+        Ok((arr.len(), features))
+    } else {
+        for v in arr {
+            features.push(v.as_f64().context("'features' value")? as f32);
+        }
+        Ok((1, features))
+    }
+}
+
+fn error_body(code: WireCode, message: &str) -> String {
+    obj(vec![
+        ("error", Json::Str(message.to_string())),
+        ("code", Json::Num(code.code() as f64)),
+        ("kind", Json::Str(code.tag().to_string())),
+    ])
+    .to_string()
+}
+
+/// Read one request from the stream; `buf` carries bytes left over from
+/// the previous keep-alive request. `Ok(None)` is a clean close between
+/// requests.
+fn read_request<R: Read>(stream: &mut R, buf: &mut Vec<u8>) -> Result<Option<HttpRequest>> {
+    let head_end = loop {
+        if let Some(pos) = find_subslice(buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            bail!("request head exceeds {MAX_HEAD} bytes");
+        }
+        let mut chunk = [0u8; 1024];
+        let n = match stream.read(&mut chunk) {
+            Ok(n) => n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading request head"),
+        };
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            bail!("connection closed mid-request-head");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head =
+        std::str::from_utf8(&buf[..head_end]).context("request head is not UTF-8")?.to_string();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    let version = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/") {
+        bail!("malformed request line {request_line:?}");
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = version == "HTTP/1.1";
+    for line in lines {
+        let Some((key, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if key.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .parse()
+                .with_context(|| format!("content-length {value:?}"))?;
+        } else if key.eq_ignore_ascii_case("connection") {
+            keep_alive = if version == "HTTP/1.1" {
+                !value.eq_ignore_ascii_case("close")
+            } else {
+                value.eq_ignore_ascii_case("keep-alive")
+            };
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("request body of {content_length} bytes exceeds cap {MAX_BODY}");
+    }
+    let body_start = head_end + 4;
+    while buf.len() < body_start + content_length {
+        let mut chunk = [0u8; 4096];
+        let n = match stream.read(&mut chunk) {
+            Ok(n) => n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading request body"),
+        };
+        if n == 0 {
+            bail!("connection closed mid-request-body");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    buf.drain(..body_start + content_length);
+    Ok(Some(HttpRequest { method, path, body, keep_alive }))
+}
+
+fn write_response(
+    w: &mut dyn Write,
+    status: u16,
+    ctype: &str,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(text: &str) -> Result<Option<HttpRequest>> {
+        let mut cursor = Cursor::new(text.as_bytes().to_vec());
+        let mut buf = Vec::new();
+        read_request(&mut cursor, &mut buf)
+    }
+
+    #[test]
+    fn requests_parse_with_bodies_and_keep_alive() {
+        let r = req("POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/infer");
+        assert_eq!(r.body, b"abcd");
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+
+        let r = req("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(r.body.is_empty());
+        assert!(!r.keep_alive);
+
+        let r = req("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive, "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn two_pipelined_requests_come_out_of_one_buffer() {
+        let text = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut cursor = Cursor::new(text.as_bytes().to_vec());
+        let mut buf = Vec::new();
+        let a = read_request(&mut cursor, &mut buf).unwrap().unwrap();
+        let b = read_request(&mut cursor, &mut buf).unwrap().unwrap();
+        assert_eq!((a.path.as_str(), b.path.as_str()), ("/a", "/b"));
+        assert!(read_request(&mut cursor, &mut buf).unwrap().is_none(), "clean EOF after");
+    }
+
+    #[test]
+    fn malformed_and_oversized_requests_are_rejected() {
+        assert!(req("nonsense\r\n\r\n").is_err(), "bad request line");
+        assert!(req("GET / HTTP/1.1\r\nContent-Length: pony\r\n\r\n").is_err());
+        let err = req(&format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err:#}");
+        // Truncated mid-head errors rather than returning a phantom request.
+        assert!(req("GET / HTTP/1.1\r\nHost:").is_err());
+    }
+
+    #[test]
+    fn feature_batches_parse_flat_and_nested() {
+        let j = Json::parse(r#"{"features": [1, 2, 3]}"#).unwrap();
+        assert_eq!(parse_features(&j).unwrap(), (1, vec![1.0, 2.0, 3.0]));
+        let j = Json::parse(r#"{"features": [[1, 2], [3, 4]]}"#).unwrap();
+        assert_eq!(parse_features(&j).unwrap(), (2, vec![1.0, 2.0, 3.0, 4.0]));
+        let j = Json::parse(r#"{"features": [[1, 2], [3]]}"#).unwrap();
+        assert!(parse_features(&j).is_err(), "ragged rows must fail");
+        let j = Json::parse(r#"{"features": []}"#).unwrap();
+        assert!(parse_features(&j).is_err(), "empty batch must fail");
+    }
+
+    #[test]
+    fn responses_carry_status_line_and_content_length() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, CONTENT_JSON, "{}", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+    }
+}

@@ -1,0 +1,515 @@
+//! [`ModelManager`]: several named models served side by side from one
+//! manifest directory, with zero-downtime hot-swap.
+//!
+//! The manager scans a directory for `*.nlut` networks; each one becomes
+//! a named model (the file stem) backed by its own supervised
+//! [`Server`] worker pool over a fabric compiled through
+//! [`Model::compile_cached`] into a sibling `.nfab` artifact (plain
+//! `compile` for non-persistable backends such as `scalar`). Lookups go
+//! through an `RwLock<BTreeMap<..>>` of `Arc` entries, so the serving
+//! hot path takes one read lock per request frame.
+//!
+//! # Hot-swap semantics
+//!
+//! [`rescan`](ModelManager::rescan) — called periodically by the
+//! background digest watcher, or directly by tests/operators — fingerprints
+//! every model's `.nlut` and sibling `.nfab` bytes (FNV-1a). A changed
+//! fingerprint rebuilds the entry *outside* the map lock (traffic keeps
+//! being served by the old fabric during the compile), then atomically
+//! swaps the `Arc` in. In-flight requests hold the old entry's `Arc` and
+//! drain on the old server; when the last reference drops, the old
+//! worker pool shuts down gracefully (its queue drains — accepted
+//! requests are answered, never dropped). A build failure (e.g. a
+//! half-written file caught mid-copy) keeps the old entry serving and is
+//! reported in the [`Rescan`] summary instead of taking the model down.
+//!
+//! Per-model counters (`neuralut_net_model_requests_total`,
+//! `neuralut_net_hot_swaps_total`, `neuralut_net_model_generation`) live
+//! in the manager's registry; [`metrics`](ModelManager::metrics) merges
+//! them with every model's `neuralut_server_*` registry, each series
+//! relabeled with `model="<name>"` so `/metrics` tells the per-model
+//! story without collisions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::fabric::{BackendRegistry, FabricOptions, Model, ModelInfo};
+use crate::obs::{Counter, Gauge, MetricsRegistry, MetricsSnapshot};
+use crate::server::{Client, Server};
+
+/// One model being served: the compiled fabric's worker pool plus the
+/// fingerprints the digest watcher compares against. Handed out as an
+/// `Arc` so hot-swap is an atomic pointer swap and in-flight requests
+/// drain on the generation they started on.
+pub struct ServedModel {
+    name: String,
+    info: ModelInfo,
+    /// Structural digest of the loaded network ([`crate::luts::LutNetwork::digest`]).
+    digest: u64,
+    /// FNV-1a of the `.nlut` file bytes at load time.
+    nlut_sig: u64,
+    /// FNV-1a of the sibling `.nfab` bytes (0 = absent).
+    nfab_sig: u64,
+    /// 1 for the first load, +1 per hot-swap.
+    generation: u64,
+    /// Keeps the worker pool alive; dropped last, which drains the queue.
+    _server: Server,
+    client: Client,
+    /// Front-door accepted-rows counter (`model` label).
+    requests: Counter,
+}
+
+impl ServedModel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    /// Structural digest of the network this generation serves.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Load generation: 1 initially, bumped by every hot-swap.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Submission handle into this model's worker pool.
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Count `rows` front-door-accepted feature rows for this model.
+    pub fn count_rows(&self, rows: usize) {
+        self.requests.add(rows as u64);
+    }
+}
+
+/// Outcome of one [`ModelManager::rescan`] pass.
+#[derive(Debug, Default, Clone)]
+pub struct Rescan {
+    /// Models loaded for the first time.
+    pub added: Vec<String>,
+    /// Models whose files changed and were atomically swapped.
+    pub swapped: Vec<String>,
+    /// Models whose files disappeared and were retired.
+    pub removed: Vec<String>,
+    /// `(name, error)` for files that failed to load/compile; the prior
+    /// generation (if any) keeps serving.
+    pub failed: Vec<(String, String)>,
+}
+
+/// Serves every `*.nlut` under a directory as a named model; see the
+/// module docs for the hot-swap contract.
+pub struct ModelManager {
+    dir: PathBuf,
+    opts: FabricOptions,
+    /// Whether `opts`' backend can persist `.nfab` artifacts — decided
+    /// once at open so rescan never re-resolves.
+    persistable: bool,
+    models: RwLock<BTreeMap<String, Arc<ServedModel>>>,
+    /// Serializes rescans (watcher vs. explicit calls) without blocking
+    /// the read-path map lock during compiles.
+    scan_lock: Mutex<()>,
+    registry: MetricsRegistry,
+    models_gauge: Gauge,
+    shutdown: Arc<AtomicBool>,
+    watcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ModelManager {
+    /// Scan `dir` and serve every `*.nlut` in it. Fails if the directory
+    /// is unreadable or any initial model fails to load/compile — a bad
+    /// manifest should fail at startup, loudly (later, while *serving*,
+    /// the same failure merely keeps the old generation).
+    pub fn open(dir: &Path, opts: &FabricOptions) -> Result<Arc<ModelManager>> {
+        let persistable = BackendRegistry::global()
+            .resolve(opts.backend_or_default())?
+            .capabilities()
+            .persistable;
+        let registry = MetricsRegistry::new();
+        for (name, help) in [
+            ("neuralut_net_models", "models currently being served"),
+            ("neuralut_net_model_requests_total", "feature rows accepted per model"),
+            ("neuralut_net_hot_swaps_total", "zero-downtime model reloads per model"),
+            ("neuralut_net_model_generation", "load generation per model (1 = first load)"),
+        ] {
+            registry.describe(name, help);
+        }
+        let models_gauge = registry.gauge("neuralut_net_models", &[]);
+        let mgr = Arc::new(ModelManager {
+            dir: dir.to_path_buf(),
+            opts: opts.clone(),
+            persistable,
+            models: RwLock::new(BTreeMap::new()),
+            scan_lock: Mutex::new(()),
+            registry,
+            models_gauge,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            watcher: Mutex::new(None),
+        });
+        let first = mgr.rescan()?;
+        if let Some((name, err)) = first.failed.first() {
+            anyhow::bail!("model '{name}' failed to load: {err}");
+        }
+        Ok(mgr)
+    }
+
+    /// The manifest directory being watched.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look up a model by name; the returned `Arc` pins its generation
+    /// for the caller's lifetime (hot-swaps never yank it mid-request).
+    pub fn get(&self, name: &str) -> Option<Arc<ServedModel>> {
+        self.models.read().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
+    }
+
+    /// Currently served model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    /// Every currently served model, sorted by name — a point-in-time
+    /// snapshot; later hot-swaps do not disturb the returned `Arc`s.
+    pub fn snapshot(&self) -> Vec<Arc<ServedModel>> {
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .cloned()
+            .collect()
+    }
+
+    /// Number of models currently served.
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One watcher pass: fingerprint every `*.nlut` (+ sibling `.nfab`)
+    /// under the directory, build changed/new entries outside the map
+    /// lock, swap them in atomically, retire entries whose files are
+    /// gone. Never takes a healthy model down: per-file failures land in
+    /// [`Rescan::failed`] while the old generation keeps serving.
+    pub fn rescan(&self) -> Result<Rescan> {
+        let _scan = self.scan_lock.lock().unwrap_or_else(|e| e.into_inner());
+        let mut report = Rescan::default();
+        let mut on_disk: Vec<(String, PathBuf)> = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("reading models dir {}", self.dir.display()))?;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("nlut") {
+                continue;
+            }
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+            on_disk.push((stem.to_string(), path.clone()));
+        }
+        on_disk.sort();
+        for (name, path) in &on_disk {
+            let nlut_sig = file_sig(path);
+            let nfab_sig = file_sig(&path.with_extension("nfab"));
+            let current = self.get(name);
+            let changed = match &current {
+                None => true,
+                Some(cur) => cur.nlut_sig != nlut_sig || cur.nfab_sig != nfab_sig,
+            };
+            if !changed {
+                continue;
+            }
+            let generation = current.as_ref().map_or(1, |c| c.generation + 1);
+            match self.build(name, path, generation) {
+                Ok(entry) => {
+                    self.models
+                        .write()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .insert(name.clone(), Arc::new(entry));
+                    if current.is_some() {
+                        self.registry
+                            .counter("neuralut_net_hot_swaps_total", &[("model", name)])
+                            .inc();
+                        report.swapped.push(name.clone());
+                    } else {
+                        report.added.push(name.clone());
+                    }
+                    // `current` (the displaced generation, if any) drops
+                    // here — or later, when its last in-flight request
+                    // finishes — draining the old worker pool gracefully.
+                }
+                Err(e) => report.failed.push((name.clone(), format!("{e:#}"))),
+            }
+        }
+        let present: std::collections::BTreeSet<&str> =
+            on_disk.iter().map(|(n, _)| n.as_str()).collect();
+        let retired: Vec<String> = {
+            let mut map = self.models.write().unwrap_or_else(|e| e.into_inner());
+            let gone: Vec<String> = map
+                .keys()
+                .filter(|k| !present.contains(k.as_str()))
+                .cloned()
+                .collect();
+            for name in &gone {
+                map.remove(name);
+            }
+            gone
+        };
+        report.removed = retired;
+        self.models_gauge.set(self.len() as f64);
+        Ok(report)
+    }
+
+    /// Load + compile one model file into a fresh serving entry.
+    fn build(&self, name: &str, path: &Path, generation: u64) -> Result<ServedModel> {
+        let nlut_sig = file_sig(path);
+        let model = Model::load(path)?;
+        let nfab_path = path.with_extension("nfab");
+        let fabric = if self.persistable {
+            model.compile_cached(&self.opts, &nfab_path)?
+        } else {
+            model.compile(&self.opts)?
+        };
+        // Fingerprint the artifact *after* compile_cached may have
+        // (re)written it, so an unchanged artifact doesn't re-trigger the
+        // watcher on the next pass.
+        let nfab_sig = file_sig(&nfab_path);
+        let server = fabric.serve();
+        let client = server.client();
+        let requests =
+            self.registry.counter("neuralut_net_model_requests_total", &[("model", name)]);
+        self.registry
+            .gauge("neuralut_net_model_generation", &[("model", name)])
+            .set(generation as f64);
+        Ok(ServedModel {
+            name: name.to_string(),
+            info: model.info(),
+            digest: model.digest(),
+            nlut_sig,
+            nfab_sig,
+            generation,
+            _server: server,
+            client,
+            requests,
+        })
+    }
+
+    /// Start the background digest watcher: every `interval` it rescans
+    /// the directory and hot-swaps what changed. The thread holds only a
+    /// `Weak` reference, so dropping the last manager `Arc` (or
+    /// [`stop_watcher`](Self::stop_watcher)) winds it down.
+    pub fn start_watcher(self: &Arc<Self>, interval: Duration) {
+        let weak: Weak<ModelManager> = Arc::downgrade(self);
+        let shutdown = self.shutdown.clone();
+        let handle = std::thread::spawn(move || loop {
+            // Sleep in slices so shutdown is prompt even for long intervals.
+            let mut slept = Duration::ZERO;
+            while slept < interval {
+                if shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let slice = Duration::from_millis(50).min(interval - slept);
+                std::thread::sleep(slice);
+                slept += slice;
+            }
+            let Some(mgr) = weak.upgrade() else { return };
+            if shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if let Err(e) = mgr.rescan() {
+                eprintln!("neuralut net: model rescan failed: {e:#}");
+            }
+        });
+        *self.watcher.lock().unwrap_or_else(|e| e.into_inner()) = Some(handle);
+    }
+
+    /// Stop the digest watcher (idempotent; also runs on drop).
+    pub fn stop_watcher(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.watcher.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            let _ = h.join();
+        }
+    }
+
+    /// The manager's own registry snapshot (per-model request counters,
+    /// hot-swap counters, generation gauges, model-count gauge) merged
+    /// with every served model's `neuralut_server_*` registry, each
+    /// server series relabeled with `model="<name>"` — the `/metrics`
+    /// payload.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut snap = self.registry.snapshot();
+        let models: Vec<Arc<ServedModel>> = {
+            let map = self.models.read().unwrap_or_else(|e| e.into_inner());
+            map.values().cloned().collect()
+        };
+        for m in models {
+            snap.merge(relabel(m.client.metrics(), "model", &m.name));
+        }
+        snap
+    }
+}
+
+impl Drop for ModelManager {
+    fn drop(&mut self) {
+        self.stop_watcher();
+    }
+}
+
+/// Add one label pair to every series in a snapshot (keeping label lists
+/// sorted, as the registry does), so per-model server registries merge
+/// without colliding.
+fn relabel(mut snap: MetricsSnapshot, key: &str, value: &str) -> MetricsSnapshot {
+    let pair = (key.to_string(), value.to_string());
+    for c in &mut snap.counters {
+        c.labels.push(pair.clone());
+        c.labels.sort();
+    }
+    for g in &mut snap.gauges {
+        g.labels.push(pair.clone());
+        g.labels.sort();
+    }
+    for h in &mut snap.histograms {
+        h.labels.push(pair.clone());
+        h.labels.sort();
+    }
+    snap
+}
+
+/// FNV-1a fingerprint of a file's bytes; 0 when the file is missing or
+/// unreadable (so "absent" and "appeared" always compare as a change).
+fn file_sig(path: &Path) -> u64 {
+    match std::fs::read(path) {
+        Ok(bytes) => {
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            for &b in &bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            // Reserve 0 for "missing".
+            if h == 0 { 1 } else { h }
+        }
+        Err(_) => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::random_network;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("neuralut_mgr_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn serves_every_nlut_in_the_directory_by_stem() {
+        let dir = tmp_dir("scan");
+        random_network(1, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("alpha.nlut")).unwrap();
+        random_network(2, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("beta.nlut")).unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let mgr = ModelManager::open(&dir, &FabricOptions::new()).unwrap();
+        assert_eq!(mgr.names(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(mgr.len(), 2);
+        let alpha = mgr.get("alpha").unwrap();
+        assert_eq!(alpha.generation(), 1);
+        assert!(mgr.get("gamma").is_none());
+        let snap = mgr.metrics();
+        assert_eq!(snap.gauge("neuralut_net_models", &[]).unwrap().value, 2.0);
+        // Per-model server registries arrive relabeled, not colliding.
+        assert!(snap
+            .counter("neuralut_server_requests_served_total", &[("model", "alpha")])
+            .is_some());
+        assert!(snap
+            .counter("neuralut_server_requests_served_total", &[("model", "beta")])
+            .is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rescan_adds_swaps_and_removes() {
+        let dir = tmp_dir("swap");
+        random_network(3, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("m.nlut")).unwrap();
+        let mgr = ModelManager::open(&dir, &FabricOptions::new()).unwrap();
+        let before = mgr.get("m").unwrap();
+        // No change -> no churn.
+        let r = mgr.rescan().unwrap();
+        assert!(r.added.is_empty() && r.swapped.is_empty() && r.removed.is_empty());
+        assert!(Arc::ptr_eq(&before, &mgr.get("m").unwrap()));
+        // Overwrite with a different network -> swapped, generation bumps.
+        random_network(4, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("m.nlut")).unwrap();
+        let r = mgr.rescan().unwrap();
+        assert_eq!(r.swapped, vec!["m".to_string()]);
+        let after = mgr.get("m").unwrap();
+        assert_eq!(after.generation(), 2);
+        assert_ne!(after.digest(), before.digest());
+        // The displaced generation still answers its own client.
+        assert!(before.client().infer(vec![0.5; 8]).is_ok());
+        // New file -> added; deleted file -> removed.
+        random_network(5, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("n.nlut")).unwrap();
+        std::fs::remove_file(dir.join("m.nlut")).unwrap();
+        let r = mgr.rescan().unwrap();
+        assert_eq!(r.added, vec!["n".to_string()]);
+        assert_eq!(r.removed, vec!["m".to_string()]);
+        assert!(mgr.get("m").is_none());
+        let snap = mgr.metrics();
+        assert_eq!(
+            snap.counter("neuralut_net_hot_swaps_total", &[("model", "m")]).unwrap().value,
+            1
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn a_corrupt_file_fails_open_but_not_a_running_manager() {
+        let dir = tmp_dir("corrupt");
+        random_network(6, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("ok.nlut")).unwrap();
+        std::fs::write(dir.join("bad.nlut"), b"not a network").unwrap();
+        // Startup: loud failure naming the model.
+        let err = ModelManager::open(&dir, &FabricOptions::new()).unwrap_err().to_string();
+        assert!(err.contains("bad"), "{err}");
+        // Running: the corrupt file is reported, healthy models serve on.
+        std::fs::remove_file(dir.join("bad.nlut")).unwrap();
+        let mgr = ModelManager::open(&dir, &FabricOptions::new()).unwrap();
+        std::fs::write(dir.join("bad.nlut"), b"still not a network").unwrap();
+        let r = mgr.rescan().unwrap();
+        assert_eq!(r.failed.len(), 1);
+        assert_eq!(r.failed[0].0, "bad");
+        assert!(mgr.get("ok").is_some());
+        assert!(mgr.get("bad").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistable_backends_compile_through_the_nfab_cache() {
+        let dir = tmp_dir("cache");
+        random_network(7, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("c.nlut")).unwrap();
+        let opts = FabricOptions::new().backend("bitsliced");
+        let mgr = ModelManager::open(&dir, &opts).unwrap();
+        assert!(dir.join("c.nfab").exists(), "compile_cached writes the sibling artifact");
+        // The artifact write itself must not read back as a change.
+        let r = mgr.rescan().unwrap();
+        assert!(r.swapped.is_empty(), "{r:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

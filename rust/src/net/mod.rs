@@ -1,0 +1,71 @@
+//! Network serving front-end: binary wire protocol, HTTP/JSON, and
+//! multi-model hot-swap.
+//!
+//! The crate's serving stack ends at [`crate::server`] — an in-process
+//! bounded worker pool behind a [`Client`](crate::server::Client). This
+//! module puts a socket in front of it:
+//!
+//! - [`frame`] — the length-prefixed binary wire protocol + a tiny
+//!   blocking [`WireClient`](frame::WireClient);
+//! - [`http`] — a curl-able HTTP/1.1 path (`POST /v1/infer` JSON,
+//!   `GET /metrics` Prometheus, `GET /healthz`, `GET /v1/models`);
+//! - [`manager`] — a [`ModelManager`](manager::ModelManager) serving
+//!   several named models from a manifest directory, with zero-downtime
+//!   hot-swap when a `.nlut`/`.nfab` changes on disk;
+//! - [`conn`] — the accept loop tying it together: one listener, both
+//!   protocols sniffed on the same port, a connection cap, and typed
+//!   admission control.
+//!
+//! # Framing grammar
+//!
+//! All integers little-endian. A binary connection opens with the 4-byte
+//! preamble `"NLW1"` ([`frame::WIRE_PREAMBLE`]) — this is what lets one
+//! port speak both protocols, since no HTTP method starts with it. After
+//! the preamble, the stream is a sequence of frames:
+//!
+//! ```text
+//! frame   := len:u32 payload          ; len = payload byte count,
+//!                                     ; 1 ..= MAX_FRAME_LEN
+//! payload := request | reply | error
+//! request := 0x01 id:u32 name_len:u16 name:bytes rows:u32 cols:u32
+//!            features:f32[rows*cols]  ; client -> server
+//! reply   := 0x02 id:u32 rows:u32 predictions:u32[rows]
+//! error   := 0x03 id:u32 code:u16 msg_len:u16 msg:bytes
+//! ```
+//!
+//! Requests may be pipelined; replies come back in submission order
+//! carrying the request's `id`. An `error` frame with `id = 0` is a
+//! connection-level fault (malformed frame, over-cap refusal) and the
+//! server closes the connection after sending it. `code` values are
+//! stable ([`frame::WireCode`]) and shared with the HTTP status mapping:
+//! overload is `1`/429, a missed deadline `4`/504, an unknown model
+//! `5`/404.
+//!
+//! # Back-pressure contract
+//!
+//! The worker pool's bounded queue is the single admission point. Every
+//! row of every request goes through the non-blocking
+//! [`Client::try_infer`](crate::server::Client::try_infer): when the
+//! queue is full the request is *refused* with a typed `Overloaded`
+//! error (HTTP 429) immediately — the front door never blocks a
+//! connection on queue space, and an accepted request is always
+//! answered. Slow readers fill the per-connection reply pipeline and
+//! then stop being read from (TCP back-pressure); connections over
+//! [`NetConfig::max_connections`](conn::NetConfig) are refused with the
+//! same typed overload before any work is admitted.
+//!
+//! Hot-swap rides the same guarantees: [`manager::ModelManager`]
+//! re-loads a changed model file, atomically swaps the serving fabric
+//! behind the name, and drops its handle on the old generation — whose
+//! worker pool drains (answering everything already admitted) before
+//! shutting down. In-flight requests finish on the generation that
+//! admitted them; new requests land on the new one.
+
+pub mod conn;
+pub mod frame;
+pub mod http;
+pub mod manager;
+
+pub use conn::{NetConfig, NetServer, MAX_CONNECTIONS_LIMIT};
+pub use frame::{Frame, WireClient, WireCode, WireRefusal, MAX_FRAME_LEN, WIRE_PREAMBLE};
+pub use manager::{ModelManager, Rescan, ServedModel};

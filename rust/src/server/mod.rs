@@ -111,6 +111,14 @@ pub struct ServerConfig {
     /// `None` = requests never expire unless a client stamps its own
     /// deadline via [`Client::infer_deadline`].
     pub request_timeout: Option<Duration>,
+    /// `host:port` the network front door (`neuralut serve --listen`)
+    /// binds. `None` when the file omits the key.
+    pub listen_addr: Option<String>,
+    /// Live-connection cap for the network front door.
+    pub max_connections: Option<usize>,
+    /// Manifest directory of `.nlut` models the front door serves and
+    /// hot-swaps.
+    pub models_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -126,6 +134,9 @@ impl Default for ServerConfig {
             workers: t.workers,
             queue_depth: t.queue_depth,
             request_timeout: t.request_timeout,
+            listen_addr: None,
+            max_connections: None,
+            models_dir: None,
         }
     }
 }
@@ -142,6 +153,9 @@ impl ServerConfig {
     /// workers = 4
     /// queue_depth = 2048
     /// request_timeout_ms = 50     # default per-request deadline (omit: none)
+    /// listen_addr = "0.0.0.0:7878"  # network front door bind address
+    /// max_connections = 256       # live-connection cap at that address
+    /// models_dir = "models"       # .nlut manifest directory to serve
     /// ```
     ///
     /// All keys are optional; unknown keys are rejected so typos fail
@@ -170,6 +184,9 @@ impl ServerConfig {
                     | "workers"
                     | "queue_depth"
                     | "request_timeout_ms"
+                    | "listen_addr"
+                    | "max_connections"
+                    | "models_dir"
             ) {
                 bail!("unknown server config key '{key}'");
             }
@@ -211,6 +228,19 @@ impl ServerConfig {
         }
         if let Some(v) = doc.root.get("request_timeout_ms") {
             cfg.request_timeout = Some(Duration::from_millis(v.as_usize()? as u64));
+        }
+        if let Some(v) = doc.root.get("listen_addr") {
+            cfg.listen_addr = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.root.get("max_connections") {
+            let n = v.as_usize()?;
+            if n == 0 {
+                bail!("max_connections = 0 would refuse every connection");
+            }
+            cfg.max_connections = Some(n);
+        }
+        if let Some(v) = doc.root.get("models_dir") {
+            cfg.models_dir = Some(std::path::PathBuf::from(v.as_str()?));
         }
         cfg.validate()?;
         Ok(cfg)
@@ -258,6 +288,19 @@ pub enum ServerError {
     /// The request's deadline passed before a worker started executing
     /// it, so it was shed at dequeue without paying any execute cost.
     DeadlineExceeded,
+}
+
+impl ServerError {
+    /// Every variant, for exhaustiveness-style tests: the wire-protocol
+    /// layer ([`crate::net::frame::WireCode`]) maps each one to a stable
+    /// numeric code + HTTP status, and its round-trip test iterates this
+    /// list so adding a variant without a wire mapping fails loudly.
+    pub const ALL: [ServerError; 4] = [
+        ServerError::Overloaded,
+        ServerError::Stopped,
+        ServerError::WorkerCrashed,
+        ServerError::DeadlineExceeded,
+    ];
 }
 
 impl std::fmt::Display for ServerError {

@@ -55,6 +55,12 @@ pub mod point {
     /// backend that fails to construct and drives the scalar-degradation
     /// fallback.
     pub const BACKEND_COMPILE: &str = "backend.compile";
+    /// Network frame read (`net::frame::read_frame`), after the length
+    /// prefix is on hand but before the payload is parsed — `error`
+    /// simulates a torn/poisoned connection read and exercises the
+    /// per-connection teardown path (the connection must close, never
+    /// hang).
+    pub const NET_READ: &str = "net.read";
 }
 
 /// What an armed fault point does when it fires.

@@ -1,0 +1,511 @@
+//! Loopback integration tests for the network front door: concurrent
+//! binary + HTTP clients against a multi-model server, bit-exactness vs
+//! the scalar simulator, a mid-traffic hot-swap with zero dropped or
+//! hung requests, typed `Overloaded` refusals (wire code 1 / HTTP 429)
+//! under a full queue, the connection cap, and `/metrics` reporting
+//! per-model served counts plus the swap event.
+//!
+//! Every test is watchdog-guarded so a hung connection fails fast, and
+//! the tests serialize on one mutex: the overload test arms a
+//! process-global fault plan (`worker.execute` delay) that must never
+//! leak into a concurrently running test's worker pool.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use neuralut::fabric::FabricOptions;
+use neuralut::luts::random_network;
+use neuralut::net::{Frame, ModelManager, NetConfig, NetServer, WireClient, WireRefusal};
+use neuralut::netlist::Simulator;
+use neuralut::server::ServerError;
+use neuralut::util::faults;
+use neuralut::util::json::Json;
+
+/// Serializes the suite: the fault plan armed by the overload test is
+/// process-global and must not delay another test's workers.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Run `f` on a helper thread and panic if it does not finish in time —
+/// turns a deadlock into a test failure instead of a hung `cargo test`.
+/// A panic inside `f` is re-raised as itself, not mislabeled as a deadlock.
+fn with_watchdog<F: FnOnce() + Send + 'static>(label: &str, timeout: Duration, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(timeout) {
+        Ok(()) => {
+            handle.join().unwrap();
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = handle.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{label}: deadlocked (watchdog fired after {timeout:?})");
+        }
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("neuralut_net_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Deterministic feature vector `seed` of length `n`.
+fn feats(seed: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|j| ((seed * 31 + j * 7) % 17) as f32 / 17.0).collect()
+}
+
+fn start(dir: &Path, opts: &FabricOptions, cap: usize) -> (Arc<ModelManager>, NetServer) {
+    let mgr = ModelManager::open(dir, opts).unwrap();
+    let srv = NetServer::start(
+        mgr.clone(),
+        &NetConfig { listen_addr: "127.0.0.1:0".into(), max_connections: cap },
+    )
+    .unwrap();
+    (mgr, srv)
+}
+
+/// One raw HTTP exchange: write the request, read to EOF (requests all
+/// carry `Connection: close`), return the full response text.
+fn http(addr: SocketAddr, request: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nConnection: close\r\n\r\n"))
+}
+
+/// `POST /v1/infer` with a flat row or nested batch; returns the HTTP
+/// status and the parsed JSON body.
+fn http_infer(addr: SocketAddr, model: &str, rows: &[Vec<f32>]) -> (u16, Json) {
+    let render = |row: &Vec<f32>| {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        format!("[{}]", cells.join(", "))
+    };
+    let features = if rows.len() == 1 {
+        render(&rows[0])
+    } else {
+        let nested: Vec<String> = rows.iter().map(render).collect();
+        format!("[{}]", nested.join(", "))
+    };
+    let body = format!("{{\"model\": \"{model}\", \"features\": {features}}}");
+    let resp = http(
+        addr,
+        &format!(
+            "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    (status_of(&resp), Json::parse(body_of(&resp)).unwrap())
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split_whitespace().nth(1).unwrap().parse().unwrap()
+}
+
+fn body_of(resp: &str) -> &str {
+    let i = resp.find("\r\n\r\n").expect("response has a header/body split");
+    &resp[i + 4..]
+}
+
+fn json_preds(body: &Json) -> Vec<u32> {
+    body.get("predictions")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.as_f64().unwrap() as u32)
+        .collect()
+}
+
+/// Poll until every connection is deregistered — dropped client sockets
+/// surface as reader EOFs, so this converges fast unless something hung.
+fn wait_drained(srv: &NetServer) {
+    let t0 = Instant::now();
+    while srv.active_connections() != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "connections never drained");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn binary_and_http_clients_serve_two_models_bit_exact() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    with_watchdog("two models", Duration::from_secs(120), || {
+        let dir = tmp_dir("two");
+        let net_a = random_network(71, 8, 2, &[6, 3], 3, 2, 4);
+        let net_b = random_network(72, 12, 2, &[8, 4], 3, 2, 4);
+        net_a.save(&dir.join("a.nlut")).unwrap();
+        net_b.save(&dir.join("b.nlut")).unwrap();
+        let opts = FabricOptions::new().backend("bitsliced").workers(2);
+        let (_mgr, srv) = start(&dir, &opts, 32);
+        let addr = srv.local_addr();
+
+        let mut served_rows = [0usize; 2]; // binary rows per model
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = [(&net_a, "a", 8usize), (&net_b, "b", 12usize)]
+                .into_iter()
+                .enumerate()
+                .map(|(which, (net, name, n_feat))| {
+                    scope.spawn(move || {
+                        // Binary client: mixed batch sizes, every reply
+                        // bit-exact vs the scalar simulator.
+                        let sim = Simulator::new(net);
+                        let mut wc = WireClient::connect(addr).unwrap();
+                        wc.set_read_timeout(Duration::from_secs(30)).unwrap();
+                        let mut rows_sent = 0usize;
+                        for i in 0..20 {
+                            let rows = [1usize, 3, 5][i % 3];
+                            let flat: Vec<f32> = (0..rows)
+                                .flat_map(|r| feats(which * 100 + i * 10 + r, n_feat))
+                                .collect();
+                            let got = wc.infer(name, &flat, rows).unwrap();
+                            let want = sim.simulate_batch(&flat).predictions;
+                            assert_eq!(got, want, "model {name}, request {i}");
+                            rows_sent += rows;
+                        }
+                        rows_sent
+                    })
+                })
+                .collect();
+
+            // Concurrent HTTP client against the same port.
+            let h = scope.spawn(|| {
+                let sim = Simulator::new(&net_a);
+                for i in 0..6 {
+                    let row = feats(1000 + i, 8);
+                    let (status, body) = http_infer(addr, "a", &[row.clone()]);
+                    assert_eq!(status, 200, "{body:?}");
+                    assert_eq!(json_preds(&body), sim.simulate_batch(&row).predictions);
+                    assert_eq!(body.get("rows").unwrap().as_usize().unwrap(), 1);
+                }
+                // Nested batch against the second model.
+                let sim_b = Simulator::new(&net_b);
+                let rows = vec![feats(2000, 12), feats(2001, 12)];
+                let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+                let (status, body) = http_infer(addr, "b", &rows);
+                assert_eq!(status, 200, "{body:?}");
+                assert_eq!(json_preds(&body), sim_b.simulate_batch(&flat).predictions);
+
+                let health = http_get(addr, "/healthz");
+                assert_eq!(status_of(&health), 200);
+                assert!(health.contains("ok: serving 2 models"), "{health}");
+
+                let models = http_get(addr, "/v1/models");
+                assert_eq!(status_of(&models), 200);
+                let listing = Json::parse(body_of(&models)).unwrap();
+                let names: Vec<String> = listing
+                    .get("models")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|m| m.get("name").unwrap().as_str().unwrap().to_string())
+                    .collect();
+                assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+            });
+            for (which, handle) in handles.into_iter().enumerate() {
+                served_rows[which] = handle.join().unwrap();
+            }
+            h.join().unwrap();
+        });
+
+        // Every client closed; nothing may linger.
+        wait_drained(&srv);
+
+        // The scrape tells the per-model story: row counters under the
+        // model label, protocol counters for both front-door paths.
+        let scrape = http_get(addr, "/metrics");
+        assert!(scrape.contains("neuralut_net_model_requests_total{model=\"a\"}"), "{scrape}");
+        assert!(scrape.contains("neuralut_net_model_requests_total{model=\"b\"}"), "{scrape}");
+        assert!(scrape.contains("neuralut_net_requests_total{proto=\"binary\"}"), "{scrape}");
+        assert!(scrape.contains("neuralut_net_requests_total{proto=\"http\"}"), "{scrape}");
+
+        let snap = srv.metrics();
+        let model_rows = |name: &str| {
+            snap.counter("neuralut_net_model_requests_total", &[("model", name)]).unwrap().value
+        };
+        // a also served 6 single HTTP rows, b a 2-row HTTP batch.
+        assert_eq!(model_rows("a"), (served_rows[0] + 6) as u64);
+        assert_eq!(model_rows("b"), (served_rows[1] + 2) as u64);
+        assert_eq!(
+            snap.counter("neuralut_net_requests_total", &[("proto", "binary")]).unwrap().value,
+            40
+        );
+
+        drop(srv);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn hot_swap_mid_traffic_drops_nothing_and_is_observable() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    with_watchdog("hot swap", Duration::from_secs(120), || {
+        let dir = tmp_dir("swap");
+        let net_a = random_network(81, 8, 2, &[6, 3], 3, 2, 4);
+        let net_b = random_network(181, 8, 2, &[6, 3], 3, 2, 4);
+        net_a.save(&dir.join("m.nlut")).unwrap();
+        let opts = FabricOptions::new().backend("bitsliced").workers(2);
+        let (mgr, srv) = start(&dir, &opts, 32);
+        let addr = srv.local_addr();
+        mgr.start_watcher(Duration::from_millis(25));
+        let digest_before = mgr.get("m").unwrap().digest();
+
+        // Expected predictions for a fixed vector pool under both
+        // generations — every mid-swap reply must match one of them.
+        let vecs: Vec<Vec<f32>> = (0..16).map(|k| feats(k, 8)).collect();
+        let flat: Vec<f32> = vecs.iter().flatten().copied().collect();
+        let a_pred = Simulator::new(&net_a).simulate_batch(&flat).predictions;
+        let b_pred = Simulator::new(&net_b).simulate_batch(&flat).predictions;
+
+        let swapped = AtomicBool::new(false);
+        let sent = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let traffic = scope.spawn(|| {
+                let mut wc = WireClient::connect(addr).unwrap();
+                wc.set_read_timeout(Duration::from_secs(30)).unwrap();
+                let mut i = 0usize;
+                loop {
+                    let k = i % vecs.len();
+                    // Zero dropped/hung: every request during the swap
+                    // must come back served (a refusal fails the test).
+                    let got = wc.infer("m", &vecs[k], 1).expect("request dropped during hot-swap");
+                    assert!(
+                        got[0] == a_pred[k] || got[0] == b_pred[k],
+                        "reply {} matches neither generation for vector {k}",
+                        got[0]
+                    );
+                    i += 1;
+                    if swapped.load(Ordering::Acquire) && i >= 200 {
+                        break;
+                    }
+                    assert!(i < 500_000, "swap never became visible to the traffic loop");
+                }
+                sent.store(i, Ordering::Release);
+            });
+
+            // Mid-traffic: overwrite the .nlut and let the digest watcher
+            // pick it up; the old generation keeps serving until then.
+            std::thread::sleep(Duration::from_millis(30));
+            net_b.save(&dir.join("m.nlut")).unwrap();
+            let t0 = Instant::now();
+            while mgr.get("m").unwrap().generation() != 2 {
+                assert!(t0.elapsed() < Duration::from_secs(30), "watcher never swapped");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            swapped.store(true, Ordering::Release);
+            traffic.join().unwrap();
+        });
+        assert!(sent.load(Ordering::Acquire) >= 200);
+
+        // The new generation serves the new network's exact predictions.
+        let after = mgr.get("m").unwrap();
+        assert_eq!(after.generation(), 2);
+        assert_ne!(after.digest(), digest_before);
+        let mut wc = WireClient::connect(addr).unwrap();
+        wc.set_read_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(wc.infer("m", &flat, vecs.len()).unwrap(), b_pred);
+        drop(wc);
+
+        // The swap event and per-model counts are on the scrape.
+        let scrape = http_get(addr, "/metrics");
+        assert!(scrape.contains("neuralut_net_hot_swaps_total{model=\"m\"}"), "{scrape}");
+        assert!(scrape.contains("neuralut_net_model_requests_total{model=\"m\"}"), "{scrape}");
+        let snap = srv.metrics();
+        assert_eq!(
+            snap.counter("neuralut_net_hot_swaps_total", &[("model", "m")]).unwrap().value,
+            1
+        );
+        assert_eq!(
+            snap.gauge("neuralut_net_model_generation", &[("model", "m")]).unwrap().value,
+            2.0
+        );
+
+        mgr.stop_watcher();
+        drop(srv);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn overload_unknown_model_and_malformed_frames_refuse_typed() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    with_watchdog("typed refusals", Duration::from_secs(120), || {
+        let dir = tmp_dir("refuse");
+        random_network(91, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("m.nlut")).unwrap();
+        let opts = FabricOptions::new().backend("bitsliced").workers(1).queue_depth(1);
+        let (mgr, srv) = start(&dir, &opts, 32);
+        let addr = srv.local_addr();
+
+        // Unknown model: wire code 5 on the binary path, 404 on HTTP.
+        let mut wc = WireClient::connect(addr).unwrap();
+        wc.set_read_timeout(Duration::from_secs(30)).unwrap();
+        let err = wc.infer("ghost", &feats(0, 8), 1).unwrap_err();
+        let refusal = err.downcast_ref::<WireRefusal>().expect("typed refusal");
+        assert_eq!(refusal.code, 5, "{refusal}");
+        assert!(refusal.message.contains("serving: m"), "{refusal}");
+        let (status, body) = http_infer(addr, "ghost", &[feats(0, 8)]);
+        assert_eq!(status, 404);
+        assert_eq!(body.get("code").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(body.get("kind").unwrap().as_str().unwrap(), "unknown_model");
+
+        // Overload: stall the single worker (every execute +400 ms) and
+        // fill the depth-1 queue in-process, so admission control is
+        // deterministically saturated when the network clients arrive.
+        let m = mgr.get("m").unwrap();
+        let guard = faults::arm_scoped("worker.execute:1:delay:400", 920).unwrap();
+        let mut parked = Vec::new();
+        let t_fill = Instant::now();
+        loop {
+            match m.client().try_infer(feats(1, 8)) {
+                Ok(p) => parked.push(p),
+                Err(e) => {
+                    assert_eq!(
+                        e.downcast_ref::<ServerError>(),
+                        Some(&ServerError::Overloaded),
+                        "{e:#}"
+                    );
+                    // Durably full means one row executing under the
+                    // delay *and* one parked in the depth-1 queue; a
+                    // refusal before that can be the transient instant
+                    // where the queue is full but the worker is idle and
+                    // about to pop. Let the worker pop and keep filling.
+                    if parked.len() >= 2 {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+            assert!(t_fill.elapsed() < Duration::from_secs(10), "queue never filled durably");
+        }
+        // Binary client: typed Overloaded error frame, wire code 1.
+        let err = wc.infer("m", &feats(2, 8), 1).unwrap_err();
+        let refusal = err.downcast_ref::<WireRefusal>().expect("typed refusal");
+        assert_eq!(refusal.code, 1, "{refusal}");
+        // HTTP client: 429 with the same stable code in the body.
+        let (status, body) = http_infer(addr, "m", &[feats(3, 8)]);
+        assert_eq!(status, 429, "{body:?}");
+        assert_eq!(body.get("code").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(body.get("kind").unwrap().as_str().unwrap(), "overloaded");
+        drop(guard);
+        // The parked rows were admitted, so they must still be answered.
+        for p in &parked {
+            p.recv().unwrap();
+        }
+
+        // After the stall clears, the same connection serves again.
+        assert_eq!(wc.infer("m", &feats(4, 8), 1).unwrap().len(), 1);
+        drop(wc);
+
+        // Malformed frame: error frame with id 0, code 6, then close —
+        // never a hang, never silent.
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        raw.write_all(b"NLW1").unwrap();
+        raw.write_all(&1u32.to_le_bytes()).unwrap(); // len = 1
+        raw.write_all(&[0x7f]).unwrap(); // unknown frame kind
+        let mut len_buf = [0u8; 4];
+        raw.read_exact(&mut len_buf).unwrap();
+        let mut payload = vec![0u8; u32::from_le_bytes(len_buf) as usize];
+        raw.read_exact(&mut payload).unwrap();
+        match Frame::decode(&payload).unwrap() {
+            Frame::Error { id, code, message } => {
+                assert_eq!(id, 0);
+                assert_eq!(code, 6);
+                assert!(message.contains("unknown frame kind"), "{message}");
+            }
+            other => panic!("expected an error frame, got {other:?}"),
+        }
+        assert!(
+            matches!(raw.read(&mut len_buf), Ok(0) | Err(_)),
+            "connection must close after a framing error"
+        );
+
+        // Refusals are visible per wire-code tag.
+        let snap = srv.metrics();
+        let refusals = |tag: &str| {
+            snap.counter("neuralut_net_refusals_total", &[("code", tag)]).unwrap().value
+        };
+        assert_eq!(refusals("unknown_model"), 2);
+        assert!(refusals("overloaded") >= 2, "wire + http refusals counted");
+        assert!(refusals("bad_request") >= 1, "framing error counted");
+
+        drop(srv);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn connection_cap_refuses_typed_and_recovers() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    with_watchdog("connection cap", Duration::from_secs(120), || {
+        let dir = tmp_dir("cap");
+        random_network(61, 8, 2, &[6, 3], 3, 2, 4).save(&dir.join("m.nlut")).unwrap();
+        let opts = FabricOptions::new().backend("bitsliced").workers(1);
+        let (_mgr, srv) = start(&dir, &opts, 2);
+        let addr = srv.local_addr();
+
+        // Two round trips pin two live connections at the cap.
+        let mut c1 = WireClient::connect(addr).unwrap();
+        c1.set_read_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(c1.infer("m", &feats(0, 8), 1).unwrap().len(), 1);
+        let mut c2 = WireClient::connect(addr).unwrap();
+        c2.set_read_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(c2.infer("m", &feats(1, 8), 1).unwrap().len(), 1);
+        assert_eq!(srv.active_connections(), 2);
+
+        // A third binary connection gets an unsolicited typed goodbye
+        // (Overloaded, id 0), not a hang and not a silent close.
+        let mut c3 = WireClient::connect(addr).unwrap();
+        c3.set_read_timeout(Duration::from_secs(10)).unwrap();
+        match c3.recv().unwrap() {
+            Frame::Error { id, code, message } => {
+                assert_eq!(id, 0);
+                assert_eq!(code, 1, "connection-cap refusal is Overloaded");
+                assert!(message.contains("connection limit"), "{message}");
+            }
+            other => panic!("expected a refusal frame, got {other:?}"),
+        }
+        drop(c3);
+
+        // An HTTP probe over the cap gets a 429 with the JSON error body.
+        let resp = http_get(addr, "/healthz");
+        assert_eq!(status_of(&resp), 429, "{resp}");
+        let body = Json::parse(body_of(&resp)).unwrap();
+        assert_eq!(body.get("code").unwrap().as_usize().unwrap(), 1);
+
+        // Freed slots admit new clients — the cap is a gate, not a latch.
+        drop(c1);
+        drop(c2);
+        wait_drained(&srv);
+        let mut c4 = WireClient::connect(addr).unwrap();
+        c4.set_read_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(c4.infer("m", &feats(2, 8), 1).unwrap().len(), 1);
+        drop(c4);
+
+        let snap = srv.metrics();
+        assert_eq!(
+            snap.counter("neuralut_net_connections_refused_total", &[]).unwrap().value,
+            2
+        );
+
+        drop(srv);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}

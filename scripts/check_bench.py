@@ -1,7 +1,9 @@
 #!/usr/bin/env python3
-"""CI bench gate: read BENCH_engine.json / BENCH_server.json (written by
-`cargo bench --bench bench_netlist` / `--bench bench_server`) and fail if
-the perf trajectory regressed.
+"""CI bench gate: read BENCH_engine.json / BENCH_server.json /
+BENCH_net.json (written by `cargo bench --bench bench_netlist` /
+`--bench bench_server` / `--bench bench_net`) and fail if the perf
+trajectory regressed. `--net-only` gates just BENCH_net.json (the CI
+net-loopback job runs bench_net without the other benches).
 
 Two gate families:
 
@@ -53,6 +55,7 @@ ENGINE = "BENCH_engine.json"
 SERVER = "BENCH_server.json"
 REPORTS = "BENCH_compile_report.json"
 BASELINE = "BENCH_baseline.json"
+NET = "BENCH_net.json"
 # Stage-latency ceilings gated against the baseline (p99s of the
 # bitsliced 4-worker drain); baseline key = f"saturation_bitsliced_4w_{k}".
 STAGE_KEYS = ("p99_us", "queue_wait_p99_us", "batch_form_p99_us", "execute_p99_us")
@@ -138,12 +141,74 @@ def check_reports(report_rows, cases):
         fail(f"{case}: engine row has no compile report in {REPORTS}")
 
 
+def check_net(net_rows):
+    """Deterministic gates over the wire-protocol bench (BENCH_net.json):
+    percentile ordering must hold per payload size (p50 <= p90 <= p99,
+    all positive), and the saturation leg must still *serve* under
+    flooding — admission control that refuses everything would pass a
+    refusals-are-typed test while being useless."""
+    if not net_rows:
+        fail(f"{NET} is empty — bench produced no rows")
+        return
+    clean = [r for r in net_rows if not r.get("faults_armed")]
+    armed = len(net_rows) - len(clean)
+    if armed:
+        ok(f"net: ignoring {armed} faults-armed row(s)")
+    if not clean:
+        ok("net: every row is faults-armed; gates skipped")
+        return
+    payload = [r for r in clean if r.get("section") == "net_payload"]
+    if not payload:
+        fail(f"no net_payload row in {NET} — payload sweep missing?")
+    for r in payload:
+        rows_per_frame = r.get("rows_per_frame", "?")
+        p50, p90, p99 = (float(r.get(k, -1)) for k in ("p50_us", "p90_us", "p99_us"))
+        if not (0 < p50 <= p90 <= p99):
+            fail(
+                f"net: payload rows={rows_per_frame} percentiles out of order "
+                f"(p50 {p50:.0f} / p90 {p90:.0f} / p99 {p99:.0f} us)"
+            )
+        else:
+            ok(
+                f"net: payload rows={rows_per_frame} p50 {p50:.0f} <= "
+                f"p90 {p90:.0f} <= p99 {p99:.0f} us"
+            )
+    sat_rows = [r for r in clean if r.get("section") == "net_saturation"]
+    if not sat_rows:
+        fail(f"no net_saturation row in {NET} — saturation leg missing?")
+    for r in sat_rows:
+        served = float(r.get("served_per_s", 0))
+        refusal = float(r.get("refusal_rate", -1))
+        if served <= 0:
+            fail(f"net: saturation served {served:.0f} rows/s — nothing got through")
+        else:
+            ok(f"net: saturation served {served:.0f} rows/s under flooding")
+        if not (0.0 <= refusal <= 1.0):
+            fail(f"net: saturation refusal_rate {refusal} outside [0, 1]")
+        else:
+            ok(f"net: saturation refusal rate {refusal:.1%} (typed Overloaded)")
+
+
 def main():
+    # `--net-only`: gate just BENCH_net.json — the CI net-loopback job
+    # runs bench_net without the engine/server benches.
+    if "--net-only" in sys.argv[1:]:
+        check_net(load(NET))
+        if failures:
+            print(f"\nbench gate: {len(failures)} failure(s)")
+            return 1
+        print("\nbench gate: all net checks passed")
+        return 0
+
     engine_rows = load(ENGINE)
     server_rows = load(SERVER)
     report_rows = load(REPORTS)
+    net_rows = load(NET)
     baseline = load(BASELINE) or {}
     tol = float(baseline.get("tolerance", 0.25))
+
+    if net_rows is not None:
+        check_net(net_rows)
 
     if engine_rows is not None and not engine_rows:
         fail(f"{ENGINE} is empty — bench produced no cases")
