@@ -1,0 +1,188 @@
+//! AOT native-code backend vs the interpreted engine: cold-start cost
+//! (codegen + system compiler + dlopen) against the interpreter's
+//! compile, warm-reload cost (dlopen of a cached object), steady-state
+//! samples/s, and — the hard release gate — bit-exact parity rows
+//! against the reference `Simulator` on every measured case.
+//!
+//! Writes `BENCH_aot.json` rows the CI gate (`scripts/check_bench.py`)
+//! checks: `parity_mismatches` must be 0 everywhere, and AOT
+//! steady-state throughput must not lose to the interpreted
+//! `bitsliced-auto` run by more than the configured margin. Without a
+//! native toolchain on PATH the bench writes a single marker row
+//! (`"toolchain_available": false`) and exits cleanly — the gate skips,
+//! mirroring how the backend itself degrades instead of failing.
+//! `NEURALUT_BENCH_QUICK=1` trims to the small cases for CI.
+
+use neuralut::engine::aot::toolchain_available;
+use neuralut::fabric::{FabricOptions, Model, OptLevel};
+use neuralut::luts::{random_network, structured_network};
+use neuralut::netlist::Simulator;
+use neuralut::util::bench::bench;
+use neuralut::util::json::{obj, Json};
+
+fn quick() -> bool {
+    std::env::var_os("NEURALUT_BENCH_QUICK").is_some_and(|v| !v.is_empty())
+}
+
+fn write_rows(rows: Vec<Json>) {
+    let out = Json::Arr(rows).to_string();
+    if let Err(e) = std::fs::write("BENCH_aot.json", &out) {
+        eprintln!("could not write BENCH_aot.json: {e}");
+    } else {
+        println!("wrote BENCH_aot.json");
+    }
+}
+
+fn main() {
+    let quick = quick();
+    println!(
+        "== bench_aot: native codegen vs the interpreted engine{} ==",
+        if quick { " (quick mode)" } else { "" }
+    );
+    if !toolchain_available() {
+        println!("no native toolchain (rustc/cc) on PATH; writing a marker row");
+        write_rows(vec![obj(vec![("toolchain_available", Json::Bool(false))])]);
+        return;
+    }
+    // (name, trained-like?, input, input_bits, widths, fan_in, beta) —
+    // the same repro cases as bench_netlist. Quick mode keeps the small
+    // ones: the big cases push multi-megabyte C files through `cc -O2`,
+    // which is exactly the cold-start cost this bench measures, but not
+    // something a CI smoke leg should pay four times over.
+    let all_cases = [
+        ("jsc-2l-trained", true, 16usize, 4usize, vec![32usize, 5], 3usize, 4usize),
+        ("logicnets-trained", true, 32, 1, vec![64, 32, 8], 4, 1),
+        ("jsc-2l-random", false, 16, 4, vec![32, 5], 3, 4),
+        ("hdr-mini-trained", true, 196, 2, vec![64, 32, 10], 6, 2),
+        ("jsc-5l-trained", true, 16, 4, vec![128, 128, 128, 64, 5], 3, 4),
+        ("hdr-5l-paper-trained", true, 784, 2, vec![256, 100, 100, 100, 10], 6, 2),
+    ];
+    let n_cases = if quick { 3 } else { all_cases.len() };
+    let min_time = if quick { 0.15 } else { 1.0 };
+    let batch = 4096usize;
+    let cache = std::env::temp_dir().join(format!("neuralut-bench-aot-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache);
+    let mut rows: Vec<Json> = Vec::new();
+
+    for (name, trained, input, bits, widths, fan_in, beta) in all_cases.into_iter().take(n_cases) {
+        let net = if trained {
+            structured_network(1, input, bits, &widths, fan_in, beta, 4)
+        } else {
+            random_network(1, input, bits, &widths, fan_in, beta, 4)
+        };
+        let model = Model::from_network(net);
+        let sim = Simulator::new(model.network());
+
+        // The interpreter's compile (lower + opt, no native build) is
+        // the cold-start baseline AOT is paying extra over.
+        let t0 = std::time::Instant::now();
+        let interp = model
+            .compile(&FabricOptions::new().backend("bitsliced-auto").opt_level(OptLevel::O2))
+            .expect("bitsliced-auto compile");
+        let interp_compile_s = t0.elapsed().as_secs_f64();
+
+        // Cold start: emit + system compiler + dlopen, nothing cached.
+        let aot_opts = FabricOptions::new()
+            .backend("aot-c")
+            .opt_level(OptLevel::O2)
+            .aot_cache_dir(&cache);
+        let t0 = std::time::Instant::now();
+        let aot = model.compile(&aot_opts).expect("aot compile");
+        let cold_start_s = t0.elapsed().as_secs_f64();
+        if aot.degraded() {
+            eprintln!(
+                "{name}: aot degraded to '{}' with a toolchain present — cold-start \
+                 numbers would be fiction",
+                aot.backend_name()
+            );
+            std::process::exit(1);
+        }
+        let report = aot.report();
+        if let Err(e) = report.check() {
+            eprintln!("BROKEN compile report for {name}: {e}");
+            std::process::exit(1);
+        }
+        let pass_s = |n: &str| {
+            report.passes.iter().find(|p| p.name == n).map(|p| p.wall_s).unwrap_or(0.0)
+        };
+        let (codegen_s, cc_s, dlopen_s) = (pass_s("codegen"), pass_s("cc"), pass_s("dlopen"));
+
+        // Warm reload: the object is cached, so a second process pays
+        // only lower + opt + dlopen.
+        let t0 = std::time::Instant::now();
+        let warm = model.compile(&aot_opts).expect("aot warm reload");
+        let warm_reload_s = t0.elapsed().as_secs_f64();
+        drop(warm);
+
+        // Parity: the hard release gate. Same batch the throughput
+        // loops run, checked code-for-code against the reference
+        // simulator before any number is reported.
+        let x: Vec<f32> = (0..batch * input).map(|i| (i % 97) as f32 / 97.0).collect();
+        let aot_sess = aot.session();
+        let interp_sess = interp.session();
+        let want = sim.simulate_batch(&x);
+        let got = aot_sess.infer_batch(&x).expect("aot inference");
+        let parity_mismatches = got
+            .logit_codes
+            .iter()
+            .zip(want.logit_codes.iter())
+            .filter(|(a, b)| a != b)
+            .count()
+            + got.logit_codes.len().abs_diff(want.logit_codes.len());
+
+        let m_aot = bench(
+            &format!("engine/aot-c-O2/batch4096/{name}"),
+            1,
+            min_time,
+            200,
+            Some((batch as f64, "samples")),
+            || {
+                std::hint::black_box(aot_sess.infer_batch(&x).unwrap());
+            },
+        );
+        let m_interp = bench(
+            &format!("engine/bitsliced-auto-O2/batch4096/{name}"),
+            1,
+            min_time,
+            200,
+            Some((batch as f64, "samples")),
+            || {
+                std::hint::black_box(interp_sess.infer_batch(&x).unwrap());
+            },
+        );
+        let aot_sps = m_aot.throughput.map(|(t, _)| t).unwrap_or(0.0);
+        let interp_sps = m_interp.throughput.map(|(t, _)| t).unwrap_or(0.0);
+        println!(
+            "-- {name}: parity {parity_mismatches} mismatches; cold start {cold_start_s:.3}s \
+             (codegen {codegen_s:.3}s, cc {cc_s:.3}s, dlopen {dlopen_s:.4}s) vs \
+             interpreted compile {interp_compile_s:.3}s; warm reload {warm_reload_s:.3}s"
+        );
+        println!(
+            "   steady state: aot {aot_sps:.0} vs bitsliced-auto {interp_sps:.0} samples/s \
+             ({:.2}x)",
+            aot_sps / interp_sps.max(1e-9)
+        );
+        rows.push(obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("toolchain_available", Json::Bool(true)),
+            ("quick", Json::Bool(quick)),
+            ("batch", Json::Num(batch as f64)),
+            ("backend", Json::Str("aot-c".to_string())),
+            ("word_ops_o2", Json::Num(aot.num_word_ops().unwrap_or(0) as f64)),
+            ("parity_mismatches", Json::Num(parity_mismatches as f64)),
+            ("interp_compile_s", Json::Num(interp_compile_s)),
+            ("aot_cold_start_s", Json::Num(cold_start_s)),
+            ("codegen_s", Json::Num(codegen_s)),
+            ("cc_s", Json::Num(cc_s)),
+            ("dlopen_s", Json::Num(dlopen_s)),
+            ("warm_reload_s", Json::Num(warm_reload_s)),
+            ("aot_samples_per_s", Json::Num(aot_sps)),
+            ("bitsliced_auto_samples_per_s", Json::Num(interp_sps)),
+            ("speedup_vs_interpreter", Json::Num(aot_sps / interp_sps.max(1e-9))),
+        ]));
+    }
+
+    let _ = std::fs::remove_dir_all(&cache);
+    write_rows(rows);
+    println!("measured {n_cases} case(s)");
+}

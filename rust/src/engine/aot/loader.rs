@@ -1,0 +1,141 @@
+//! Minimal `dlopen`/`dlsym` FFI shim — no `libloading`, just the four
+//! libdl entry points the AOT backend needs, wrapped in a RAII handle.
+//!
+//! Everything here is deliberately small: [`Library`] opens a shared
+//! object with `RTLD_NOW` (so a truncated or mis-linked `.so` fails at
+//! open time, not mid-inference), resolves symbols with the
+//! `dlerror`-clearing dance the manpage prescribes, and `dlclose`s on
+//! drop. The handle is `Send + Sync` — the loaded code segment is
+//! immutable and the exported data (`neuralut_meta`) is read-only — so
+//! one [`Library`] can back every worker's executor behind an `Arc`.
+//!
+//! Faults: [`Library::open`] routes through the
+//! [`aot.dlopen`](crate::util::faults::point::AOT_DLOPEN) injection
+//! point, which is how chaos tests simulate a corrupt artifact without
+//! manufacturing one.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::faults;
+
+#[cfg(unix)]
+mod ffi {
+    use std::ffi::{c_char, c_int, c_void};
+
+    #[link(name = "dl")]
+    extern "C" {
+        pub fn dlopen(filename: *const c_char, flags: c_int) -> *mut c_void;
+        pub fn dlsym(handle: *mut c_void, symbol: *const c_char) -> *mut c_void;
+        pub fn dlclose(handle: *mut c_void) -> c_int;
+        pub fn dlerror() -> *mut c_char;
+    }
+
+    /// Resolve all symbols at open time — corruption fails fast.
+    pub const RTLD_NOW: c_int = 2;
+}
+
+#[cfg(unix)]
+fn last_dl_error() -> String {
+    // Safety: dlerror returns a thread-local, NUL-terminated C string
+    // (or null when no error is pending); we copy it out immediately.
+    unsafe {
+        let p = ffi::dlerror();
+        if p.is_null() {
+            "unknown dlerror".to_string()
+        } else {
+            std::ffi::CStr::from_ptr(p).to_string_lossy().into_owned()
+        }
+    }
+}
+
+/// An open shared object. Closed (`dlclose`) when dropped; symbols
+/// resolved from it must not outlive it, which the AOT backend
+/// guarantees by keeping the `Library` inside the same struct as every
+/// function pointer taken from it.
+pub(crate) struct Library {
+    #[cfg(unix)]
+    handle: *mut std::ffi::c_void,
+    path: PathBuf,
+}
+
+// Safety: the mapped segments are immutable after RTLD_NOW resolution
+// and libdl handles are usable from any thread; dlclose in Drop runs
+// exactly once because Library is not Clone.
+unsafe impl Send for Library {}
+unsafe impl Sync for Library {}
+
+impl Library {
+    /// `dlopen` a shared object with `RTLD_NOW`.
+    pub(crate) fn open(path: &Path) -> crate::Result<Library> {
+        faults::inject(faults::point::AOT_DLOPEN)
+            .with_context(|| format!("loading {}", path.display()))?;
+        #[cfg(unix)]
+        {
+            use std::os::unix::ffi::OsStrExt;
+            let cpath = std::ffi::CString::new(path.as_os_str().as_bytes())
+                .with_context(|| format!("NUL byte in path {}", path.display()))?;
+            // Safety: cpath is a valid NUL-terminated string for the call.
+            let handle = unsafe { ffi::dlopen(cpath.as_ptr(), ffi::RTLD_NOW) };
+            if handle.is_null() {
+                anyhow::bail!("dlopen {}: {}", path.display(), last_dl_error());
+            }
+            Ok(Library { handle, path: path.to_path_buf() })
+        }
+        #[cfg(not(unix))]
+        {
+            anyhow::bail!(
+                "the aot backend needs dlopen; {} cannot be loaded on this platform",
+                path.display()
+            )
+        }
+    }
+
+    /// Resolve an exported symbol, distinguishing "symbol missing" from
+    /// "symbol legitimately at address zero" via the pending `dlerror`.
+    pub(crate) fn sym(&self, name: &str) -> crate::Result<*mut std::ffi::c_void> {
+        #[cfg(unix)]
+        {
+            let cname = std::ffi::CString::new(name)
+                .with_context(|| format!("NUL byte in symbol name '{name}'"))?;
+            // Safety: handle is live (we own it), cname is NUL-terminated.
+            // dlerror() first to clear any stale error, then check after.
+            unsafe {
+                ffi::dlerror();
+                let p = ffi::dlsym(self.handle, cname.as_ptr());
+                let err = ffi::dlerror();
+                if !err.is_null() {
+                    anyhow::bail!(
+                        "dlsym '{name}' in {}: {}",
+                        self.path.display(),
+                        std::ffi::CStr::from_ptr(err).to_string_lossy()
+                    );
+                }
+                Ok(p)
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = name;
+            unreachable!("Library cannot be constructed on non-Unix hosts")
+        }
+    }
+}
+
+impl Drop for Library {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // Safety: handle came from a successful dlopen and is dropped
+        // exactly once.
+        unsafe {
+            ffi::dlclose(self.handle);
+        }
+    }
+}
+
+impl std::fmt::Debug for Library {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Library").field("path", &self.path).finish()
+    }
+}

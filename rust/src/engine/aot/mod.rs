@@ -1,0 +1,755 @@
+//! AOT native-code backend: the compiled [`BitNetlist`] emitted as
+//! straight-line source, built with the system compiler at
+//! [`Model::compile`](crate::fabric::Model::compile) time, and executed
+//! through a `dlopen`ed shared object.
+//!
+//! The bitsliced interpreter ([`super::bitslice`]) already removed the
+//! per-sample lookup cost; what it still pays is the per-op decode — a
+//! load of the `MuxOp`, four indexed accesses, a bounds check — for
+//! every op of every block. This backend removes that too: the netlist
+//! *is* the program. [`codegen`] prints one function per level with
+//! every wire index a literal and the fused mux
+//! (`dst = lo ^ (sel & (hi ^ lo))`) written out per op, [`toolchain`]
+//! hands the source to `rustc --crate-type=cdylib` (the `aot` backend)
+//! or `cc -shared` (the `aot-c` backend, also `aot`'s silent fallback
+//! when `rustc` is missing), and [`loader`] maps the resulting `.so`
+//! and resolves `neuralut_eval`. Executors keep the interpreter's exact
+//! transpose/plane layout, so the native code is bit-exact against
+//! `bitsliced` — and therefore against the scalar simulator — by
+//! construction.
+//!
+//! **Caching.** A compiled `.so` is a *companion artifact*: when a
+//! fabric cache drives the compile it lives beside the `.nfab` (named
+//! by [`companion_path`], digest embedded), otherwise under
+//! `--aot-cache-dir` / `NEURALUT_AOT` or a per-user temp directory. The
+//! object embeds a [`SoMeta`] fingerprint (ABI version, model digest, a
+//! content hash of the exact op stream, lane width, shape counts) that
+//! is validated after every `dlopen`: stale, truncated, or foreign
+//! objects are silently recompiled, never executed. Publication is
+//! atomic (tmp + rename), same as `.nfab` writes.
+//!
+//! **Failure policy.** Native codegen must never cost availability: a
+//! missing toolchain, a failed compile, or an unloadable object makes
+//! [`BackendProvider::compile`] return an error, and the fabric layer
+//! degrades the model to this backend's declared fallback (`bitsliced`)
+//! with [`degraded_from`](crate::obs::CompileReport) recorded — serving
+//! continues on the interpreter. `NEURALUT_AOT=off` forces that path
+//! without touching the toolchain. Chaos coverage drives the same
+//! paths through the [`aot.codegen`](crate::util::faults::point::AOT_CODEGEN),
+//! [`aot.cc`](crate::util::faults::point::AOT_CC) and
+//! [`aot.dlopen`](crate::util::faults::point::AOT_DLOPEN) fault points.
+
+mod codegen;
+mod loader;
+mod toolchain;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::fabric::{
+    companion_path, BackendProvider, BatchAffinity, Capabilities, CompileCost, ProviderCtx,
+};
+use crate::luts::LutNetwork;
+use crate::netlist::{quantize_input, SimResult};
+use crate::obs::{trace, PassReport};
+use crate::util::{faults, pool};
+
+use super::{
+    detect_lane_words, BitNetlist, BitslicedProgram, FabricProgram, InferenceBackend, OptLevel,
+};
+use loader::Library;
+
+/// Words in the `neuralut_meta` export of a generated object.
+pub(crate) const META_WORDS: usize = 8;
+
+/// Generated-object ABI version — word 0 of `neuralut_meta`. Bumped
+/// whenever the export set, the meta layout, or the eval contract
+/// changes; a mismatch just means "recompile".
+const ABI_VERSION: u64 = 1;
+
+/// Blocks at which a batch shards across the worker pool — same
+/// threshold as the bitsliced interpreter, so backend choice never
+/// changes sharding behavior.
+const PARALLEL_BLOCK_THRESHOLD: usize = 8;
+
+/// Which source language the backend emits — `aot` (Rust) and `aot-c`
+/// (C) are the same backend modulo this choice. `Rust` silently falls
+/// back to the C emitter when `rustc` is absent but `cc` is present.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Emitter {
+    Rust,
+    C,
+}
+
+impl Emitter {
+    fn backend_name(self) -> &'static str {
+        match self {
+            Emitter::Rust => "aot",
+            Emitter::C => "aot-c",
+        }
+    }
+
+    fn src_ext(self) -> &'static str {
+        match self {
+            Emitter::Rust => "rs",
+            Emitter::C => "c",
+        }
+    }
+}
+
+/// The staleness fingerprint embedded in (and validated against) every
+/// generated object's `neuralut_meta` export. All [`META_WORDS`] words
+/// must match for a cached `.so` to be reused; the content hash covers
+/// the exact op stream, so two opt levels of the same model — or the
+/// same model lowered at different lane widths — never alias.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SoMeta {
+    abi: u64,
+    model_digest: u64,
+    program_fnv: u64,
+    lanes: u64,
+    levels: u64,
+    ops: u64,
+    max_wires: u64,
+    max_planes: u64,
+}
+
+impl SoMeta {
+    fn for_netlist(nl: &BitNetlist, model_digest: u64, lanes: usize) -> SoMeta {
+        SoMeta {
+            abi: ABI_VERSION,
+            model_digest,
+            program_fnv: fingerprint(nl),
+            lanes: lanes as u64,
+            levels: nl.levels.len() as u64,
+            ops: nl.num_ops() as u64,
+            max_wires: nl.max_wires as u64,
+            max_planes: nl.max_planes as u64,
+        }
+    }
+
+    fn to_words(self) -> [u64; META_WORDS] {
+        [
+            self.abi,
+            self.model_digest,
+            self.program_fnv,
+            self.lanes,
+            self.levels,
+            self.ops,
+            self.max_wires,
+            self.max_planes,
+        ]
+    }
+
+    fn check_loaded(self, got: &[u64; META_WORDS], path: &Path) -> crate::Result<()> {
+        const NAMES: [&str; META_WORDS] = [
+            "ABI version",
+            "model digest",
+            "program fingerprint",
+            "lane width",
+            "level count",
+            "op count",
+            "max wires",
+            "max planes",
+        ];
+        let want = self.to_words();
+        for (i, name) in NAMES.iter().enumerate() {
+            if got[i] != want[i] {
+                bail!(
+                    "{}: stale or foreign AOT object: {name} is {:#x}, this program needs {:#x}",
+                    path.display(),
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn mix(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+}
+
+/// FNV-1a over every field the generated code depends on — the exact op
+/// stream, output wiring, and interface shape. This is what makes `.so`
+/// reuse safe across opt levels: identical fingerprints mean identical
+/// generated source.
+fn fingerprint(nl: &BitNetlist) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    mix(&mut h, nl.input_size as u64);
+    mix(&mut h, nl.input_bits as u64);
+    mix(&mut h, nl.n_class as u64);
+    mix(&mut h, nl.logit_bits as u64);
+    mix(&mut h, nl.signed_logits as u64);
+    mix(&mut h, nl.levels.len() as u64);
+    for level in &nl.levels {
+        mix(&mut h, level.n_in_planes as u64);
+        mix(&mut h, level.ops.len() as u64);
+        mix(&mut h, level.outputs.len() as u64);
+        for op in &level.ops {
+            mix(&mut h, op.sel as u64);
+            mix(&mut h, op.hi as u64);
+            mix(&mut h, op.lo as u64);
+            mix(&mut h, op.dst as u64);
+        }
+        for &w in &level.outputs {
+            mix(&mut h, w as u64);
+        }
+    }
+    h
+}
+
+/// An open, meta-validated generated object: the library handle plus
+/// the resolved `neuralut_eval` entry point. Shared by every executor
+/// of one [`AotProgram`] behind an `Arc`; the function pointer stays
+/// valid exactly as long as the `Library` lives, which the struct
+/// enforces by owning both.
+struct NativeFabric {
+    _lib: Library,
+    eval: unsafe extern "C" fn(*mut u64, *mut u64),
+}
+
+impl NativeFabric {
+    fn load(path: &Path, want: SoMeta) -> crate::Result<NativeFabric> {
+        let lib = Library::open(path)?;
+        let meta = lib.sym("neuralut_meta")? as *const u64;
+        if meta.is_null() {
+            bail!("{}: neuralut_meta resolved to null", path.display());
+        }
+        // Safety: word 0 (the ABI version) is readable in every ABI this
+        // loader has ever emitted; the remaining words are only read
+        // once the ABI matches this build's layout.
+        let abi = unsafe { meta.read_unaligned() };
+        if abi != ABI_VERSION {
+            bail!(
+                "{}: AOT object ABI version {abi}, this build needs {ABI_VERSION}",
+                path.display()
+            );
+        }
+        let mut got = [0u64; META_WORDS];
+        for (i, g) in got.iter_mut().enumerate() {
+            // Safety: ABI matched, so the export is [u64; META_WORDS].
+            *g = unsafe { meta.add(i).read_unaligned() };
+        }
+        want.check_loaded(&got, path)?;
+        let eval = lib.sym("neuralut_eval")?;
+        if eval.is_null() {
+            bail!("{}: neuralut_eval resolved to null", path.display());
+        }
+        // Safety: the symbol was emitted by our codegen as
+        // `extern "C" fn(*mut u64, *mut u64)` (meta validation above
+        // ties the object to this exact program and ABI).
+        let eval = unsafe {
+            std::mem::transmute::<*mut std::ffi::c_void, unsafe extern "C" fn(*mut u64, *mut u64)>(
+                eval,
+            )
+        };
+        Ok(NativeFabric { _lib: lib, eval })
+    }
+}
+
+/// The `aot` / `aot-c` registry provider. Lowers through the same
+/// [`BitslicedProgram`] pipeline as the interpreter (so opt levels and
+/// pass telemetry behave identically), then builds-or-reuses the native
+/// object for the resulting netlist.
+pub struct AotProvider {
+    emitter: Emitter,
+    lanes: usize,
+}
+
+impl AotProvider {
+    /// Provider at the host-detected lane width — what the built-in
+    /// `aot` / `aot-c` registrations use.
+    pub fn new(emitter: Emitter) -> Self {
+        AotProvider { emitter, lanes: detect_lane_words() }
+    }
+
+    /// Provider at an explicit lane width (tests crossing the width
+    /// matrix; the width is validated when the lowering pipeline runs).
+    pub fn with_lanes(emitter: Emitter, lanes: usize) -> Self {
+        AotProvider { emitter, lanes }
+    }
+
+    /// Where this provider's `.so` for the given context lives: the
+    /// explicit cache dir wins, else beside the `.nfab` as a companion
+    /// file, else a per-user temp cache.
+    fn so_path(&self, ctx: &ProviderCtx) -> PathBuf {
+        let tag = format!("{}.so", self.emitter.backend_name());
+        if let Some(dir) = &ctx.aot_cache_dir {
+            dir.join(format!("{:016x}.x{}.{tag}", ctx.model_digest, self.lanes))
+        } else if let Some(art) = &ctx.artifact_path {
+            companion_path(art, ctx.model_digest, &tag)
+        } else {
+            std::env::temp_dir()
+                .join("neuralut-aot")
+                .join(format!("{:016x}.x{}.{tag}", ctx.model_digest, self.lanes))
+        }
+    }
+
+    /// Reuse a cached object if its fingerprint matches, else emit
+    /// source, run the system compiler, publish atomically, and load.
+    /// Appends the `codegen`/`cc`/`dlopen` timing passes it ran.
+    fn build_or_load(
+        &self,
+        nl: &Arc<BitNetlist>,
+        ctx: &ProviderCtx,
+        passes: &mut Vec<PassReport>,
+    ) -> crate::Result<Arc<NativeFabric>> {
+        let meta = SoMeta::for_netlist(nl, ctx.model_digest, self.lanes);
+        let so_path = self.so_path(ctx);
+        let ops = nl.num_ops();
+        let synth = |name: &str, t0: Instant| PassReport {
+            name: name.into(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            ops_before: ops,
+            ops_after: ops,
+            planes_removed: 0,
+        };
+        if so_path.exists() {
+            let t0 = Instant::now();
+            let reuse = {
+                let _span = trace::span("aot/dlopen");
+                NativeFabric::load(&so_path, meta)
+            };
+            match reuse {
+                Ok(native) => {
+                    passes.push(synth("dlopen", t0));
+                    return Ok(Arc::new(native));
+                }
+                Err(e) => eprintln!(
+                    "warning: cached AOT object {} not reusable; recompiling: {e:#}",
+                    so_path.display()
+                ),
+            }
+        }
+        let mut emitter = self.emitter;
+        if emitter == Emitter::Rust && !toolchain::have_rustc() {
+            if toolchain::have_cc() {
+                eprintln!("warning: rustc not found; 'aot' emitting C and compiling with cc");
+                emitter = Emitter::C;
+            } else {
+                bail!("no native toolchain: neither `rustc` nor `cc` is on PATH");
+            }
+        }
+        if emitter == Emitter::C && !toolchain::have_cc() {
+            bail!("no native toolchain: `cc` is not on PATH");
+        }
+
+        let t0 = Instant::now();
+        faults::inject(faults::point::AOT_CODEGEN).context("aot source emission")?;
+        let source = {
+            let _span = trace::span("aot/codegen");
+            match emitter {
+                Emitter::Rust => codegen::emit_rust(nl, self.lanes, &meta.to_words()),
+                Emitter::C => codegen::emit_c(nl, self.lanes, &meta.to_words()),
+            }
+        };
+        passes.push(synth("codegen", t0));
+
+        let t0 = Instant::now();
+        {
+            let _span = trace::span("aot/cc");
+            if let Some(dir) = so_path.parent() {
+                fs::create_dir_all(dir)
+                    .with_context(|| format!("creating AOT cache dir {}", dir.display()))?;
+            }
+            let pid = std::process::id();
+            let src_tmp = sibling(&so_path, &format!("tmp.{pid}.{}", emitter.src_ext()));
+            let so_tmp = sibling(&so_path, &format!("tmp.{pid}"));
+            let built = (|| -> crate::Result<()> {
+                fs::write(&src_tmp, &source)
+                    .with_context(|| format!("writing {}", src_tmp.display()))?;
+                toolchain::compile(emitter, &src_tmp, &so_tmp)?;
+                fs::rename(&so_tmp, &so_path)
+                    .with_context(|| format!("publishing {}", so_path.display()))?;
+                Ok(())
+            })();
+            let _ = fs::remove_file(&src_tmp);
+            if built.is_err() {
+                let _ = fs::remove_file(&so_tmp);
+            }
+            built?;
+        }
+        passes.push(synth("cc", t0));
+
+        let t0 = Instant::now();
+        let native = {
+            let _span = trace::span("aot/dlopen");
+            NativeFabric::load(&so_path, meta)
+                .with_context(|| format!("loading just-compiled {}", so_path.display()))?
+        };
+        passes.push(synth("dlopen", t0));
+        Ok(Arc::new(native))
+    }
+
+    fn program(
+        &self,
+        nl: Arc<BitNetlist>,
+        native: Arc<NativeFabric>,
+        passes: Vec<PassReport>,
+    ) -> Arc<dyn FabricProgram> {
+        Arc::new(AotProgram {
+            nl,
+            native,
+            lanes: self.lanes,
+            passes,
+            backend: self.emitter.backend_name(),
+        })
+    }
+}
+
+/// `path` with `.suffix` appended (keeping the full original name, so
+/// tmp files sort beside their target and never collide with it).
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".");
+    s.push(suffix);
+    PathBuf::from(s)
+}
+
+impl BackendProvider for AotProvider {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            signed_hidden: false,
+            batch_affinity: BatchAffinity::Wide,
+            compile_cost: CompileCost::NativeCodegen,
+            persistable: true,
+            word_lanes: self.lanes,
+            fallback: Some("bitsliced"),
+        }
+    }
+
+    fn compile(
+        &self,
+        net: Arc<LutNetwork>,
+        opt: OptLevel,
+        ctx: &ProviderCtx,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        if ctx.aot_disabled {
+            bail!("aot compilation disabled (NEURALUT_AOT=off)");
+        }
+        let base = BitslicedProgram::compile_opt_wide(&net, opt, self.lanes)?;
+        let nl = base
+            .bit_netlist()
+            .expect("bitsliced programs always carry a netlist")
+            .clone();
+        let mut passes = base.pass_reports().to_vec();
+        let native = self.build_or_load(&nl, ctx, &mut passes)?;
+        Ok(self.program(nl, native, passes))
+    }
+
+    fn load_persisted(
+        &self,
+        _net: Arc<LutNetwork>,
+        nl: Arc<BitNetlist>,
+        ctx: &ProviderCtx,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        if ctx.aot_disabled {
+            bail!("aot compilation disabled (NEURALUT_AOT=off)");
+        }
+        // The netlist came out of a validated `.nfab`; the `.so` beside
+        // it is reused when fresh and silently rebuilt when stale,
+        // truncated, or missing.
+        let mut passes = Vec::new();
+        let native = self.build_or_load(&nl, ctx, &mut passes)?;
+        Ok(self.program(nl, native, passes))
+    }
+}
+
+/// Compile-once artifact of the AOT backends: the lowered netlist (for
+/// persistence and inspection) plus the loaded native object every
+/// executor calls into.
+pub struct AotProgram {
+    nl: Arc<BitNetlist>,
+    native: Arc<NativeFabric>,
+    lanes: usize,
+    passes: Vec<PassReport>,
+    backend: &'static str,
+}
+
+impl FabricProgram for AotProgram {
+    fn executor(&self) -> Box<dyn InferenceBackend> {
+        Box::new(AotEngine {
+            nl: self.nl.clone(),
+            native: self.native.clone(),
+            lanes: self.lanes,
+            backend: self.backend,
+        })
+    }
+
+    fn bit_netlist(&self) -> Option<&Arc<BitNetlist>> {
+        Some(&self.nl)
+    }
+
+    fn pass_reports(&self) -> &[PassReport] {
+        &self.passes
+    }
+
+    fn plane_lanes(&self) -> Option<usize> {
+        Some(self.lanes)
+    }
+}
+
+/// Per-worker executor over a loaded native object. Mirrors the
+/// bitsliced interpreter's batch protocol exactly — same quantization,
+/// same plane layout, same shard boundaries — with the level loop
+/// replaced by one call into generated code per block.
+pub struct AotEngine {
+    nl: Arc<BitNetlist>,
+    native: Arc<NativeFabric>,
+    lanes: usize,
+    backend: &'static str,
+}
+
+impl AotEngine {
+    /// Samples evaluated per native call: 64 per plane word.
+    fn block_lanes(&self) -> usize {
+        64 * self.lanes
+    }
+
+    fn scratch(&self) -> (Vec<u64>, Vec<u64>) {
+        (
+            vec![0u64; self.nl.max_planes.max(1) * self.lanes],
+            vec![0u64; self.nl.max_wires * self.lanes],
+        )
+    }
+
+    /// Evaluate a contiguous range of blocks into `out`, which covers
+    /// samples `blocks.start * block_lanes .. min(batch, blocks.end * block_lanes)`.
+    fn run_blocks(
+        &self,
+        x: &[f32],
+        blocks: std::ops::Range<usize>,
+        batch: usize,
+        planes: &mut [u64],
+        buf: &mut [u64],
+        out: &mut [i16],
+    ) {
+        let n_class = self.nl.n_class;
+        let per_block = self.block_lanes();
+        let base_sample = blocks.start * per_block;
+        for block in blocks {
+            let lanes_here = per_block.min(batch - block * per_block);
+            self.transpose_in(x, block, lanes_here, planes);
+            // Safety: `planes` holds max_planes and `buf` max_wires
+            // N-word slots (see `scratch`), which is the generated
+            // code's documented requirement; meta validation pinned the
+            // object to exactly this netlist and lane width.
+            unsafe { (self.native.eval)(planes.as_mut_ptr(), buf.as_mut_ptr()) };
+            let lo = (block * per_block - base_sample) * n_class;
+            self.transpose_out(planes, lanes_here, &mut out[lo..lo + lanes_here * n_class]);
+        }
+    }
+
+    /// Transpose quantized input codes of one block into flat
+    /// bit-planes — sample `s` lands in bit `s & 63` of word `s >> 6`
+    /// of each plane, plane `i` at `planes[i * N..]`.
+    fn transpose_in(&self, x: &[f32], block: usize, lanes: usize, planes: &mut [u64]) {
+        let n = self.lanes;
+        let in_sz = self.nl.input_size;
+        let in_bits = self.nl.input_bits;
+        planes[..in_sz * in_bits * n].fill(0);
+        for s in 0..lanes {
+            let sample = block * self.block_lanes() + s;
+            let row = &x[sample * in_sz..(sample + 1) * in_sz];
+            let word = s >> 6;
+            let lane_bit = 1u64 << (s & 63);
+            for (i, &v) in row.iter().enumerate() {
+                let mut code = quantize_input(v, in_bits);
+                let mut b = 0usize;
+                while code != 0 {
+                    if code & 1 == 1 {
+                        planes[(i * in_bits + b) * n + word] |= lane_bit;
+                    }
+                    code >>= 1;
+                    b += 1;
+                }
+            }
+        }
+    }
+
+    /// Transpose logit bit-planes back into per-sample signed codes.
+    fn transpose_out(&self, planes: &[u64], lanes: usize, out: &mut [i16]) {
+        let n = self.lanes;
+        let lb = self.nl.logit_bits;
+        let n_class = self.nl.n_class;
+        let shift = 16 - lb as u32;
+        for c in 0..n_class {
+            for w in 0..n {
+                let lo_s = w * 64;
+                if lo_s >= lanes {
+                    break;
+                }
+                let n_here = 64.min(lanes - lo_s);
+                let mut raw = [0u16; 64];
+                for b in 0..lb {
+                    let word = planes[(c * lb + b) * n + w];
+                    for (s, r) in raw.iter_mut().enumerate().take(n_here) {
+                        *r |= (((word >> s) & 1) as u16) << b;
+                    }
+                }
+                for (s, &r) in raw.iter().enumerate().take(n_here) {
+                    out[(lo_s + s) * n_class + c] = if self.nl.signed_logits {
+                        ((r << shift) as i16) >> shift
+                    } else {
+                        r as i16
+                    };
+                }
+            }
+        }
+    }
+}
+
+impl InferenceBackend for AotEngine {
+    fn name(&self) -> &'static str {
+        self.backend
+    }
+
+    fn latency_cycles(&self) -> usize {
+        self.nl.levels.len()
+    }
+
+    fn run_batch(&self, x: &[f32]) -> SimResult {
+        let in_sz = self.nl.input_size;
+        assert_eq!(x.len() % in_sz, 0, "ragged batch");
+        let batch = x.len() / in_sz;
+        let n_class = self.nl.n_class;
+        let per_block = self.block_lanes();
+        let n_blocks = batch.div_ceil(per_block);
+        let mut logit_codes = vec![0i16; batch * n_class];
+        if n_blocks >= PARALLEL_BLOCK_THRESHOLD {
+            let shards = pool::parallel_ranges(n_blocks, pool::num_threads(), |_, range| {
+                if range.is_empty() {
+                    return (0, Vec::new());
+                }
+                let (mut planes, mut buf) = self.scratch();
+                let first = range.start * per_block;
+                let count = batch.min(range.end * per_block) - first;
+                let mut out = vec![0i16; count * n_class];
+                self.run_blocks(x, range, batch, &mut planes, &mut buf, &mut out);
+                (first, out)
+            });
+            for (first, shard) in shards {
+                logit_codes[first * n_class..first * n_class + shard.len()]
+                    .copy_from_slice(&shard);
+            }
+        } else {
+            let (mut planes, mut buf) = self.scratch();
+            self.run_blocks(x, 0..n_blocks, batch, &mut planes, &mut buf, &mut logit_codes);
+        }
+        SimResult::from_logit_codes(logit_codes, n_class, self.latency_cycles())
+    }
+}
+
+/// Is any system compiler available for AOT builds? (CI and benches key
+/// their clean-skip on this.)
+pub fn toolchain_available() -> bool {
+    toolchain::available()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::luts::random_network;
+    use crate::netlist::Simulator;
+
+    fn small_net() -> LutNetwork {
+        random_network(71, 8, 2, &[6, 3], 3, 2, 4)
+    }
+
+    fn tmp_cache(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("neuralut_aot_unit_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_op_stream() {
+        let net = small_net();
+        let mut nl = super::super::lower::lower(&net).unwrap();
+        let a = fingerprint(&nl);
+        nl.levels[0].ops[0].sel ^= 1;
+        let b = fingerprint(&nl);
+        assert_ne!(a, b, "a changed op must change the fingerprint");
+    }
+
+    #[test]
+    fn so_paths_prefer_cache_dir_then_companion_then_temp() {
+        let p = AotProvider::with_lanes(Emitter::Rust, 2);
+        let mut ctx = ProviderCtx { model_digest: 0xD, ..Default::default() };
+        ctx.aot_cache_dir = Some(PathBuf::from("/cache"));
+        ctx.artifact_path = Some(PathBuf::from("/models/net.nfab"));
+        assert_eq!(p.so_path(&ctx), PathBuf::from("/cache/000000000000000d.x2.aot.so"));
+        ctx.aot_cache_dir = None;
+        assert_eq!(
+            p.so_path(&ctx),
+            PathBuf::from("/models/net.000000000000000d.aot.so")
+        );
+        ctx.artifact_path = None;
+        assert!(p.so_path(&ctx).ends_with("neuralut-aot/000000000000000d.x2.aot.so"));
+    }
+
+    #[test]
+    fn emitters_declare_the_abi_surface() {
+        let net = small_net();
+        let nl = super::super::lower::lower(&net).unwrap();
+        let meta = SoMeta::for_netlist(&nl, 7, 2).to_words();
+        for src in [codegen::emit_c(&nl, 2, &meta), codegen::emit_rust(&nl, 2, &meta)] {
+            assert!(src.contains("neuralut_meta"), "meta export missing");
+            assert!(src.contains("neuralut_eval"), "eval export missing");
+            assert!(src.contains(&format!("{}", meta[2])), "fingerprint not embedded");
+        }
+    }
+
+    #[test]
+    fn c_emitter_compiles_runs_and_caches_bit_exactly() {
+        if !toolchain::have_cc() {
+            eprintln!("skipping: no `cc` on this host");
+            return;
+        }
+        let net = Arc::new(small_net());
+        let dir = tmp_cache("roundtrip");
+        let ctx = ProviderCtx {
+            model_digest: net.digest(),
+            aot_cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let provider = AotProvider::with_lanes(Emitter::C, 1);
+        let program = provider.compile(net.clone(), OptLevel::O2, &ctx).unwrap();
+        let engine = program.executor();
+        let x: Vec<f32> = (0..70 * net.input_size)
+            .map(|i| (i % 97) as f32 / 96.0)
+            .collect();
+        let want = Simulator::new(&net).simulate_batch(&x);
+        let got = engine.run_batch(&x);
+        assert_eq!(got.logit_codes, want.logit_codes, "aot-c vs scalar logits");
+        assert_eq!(got.predictions, want.predictions);
+        // Second compile must reuse the published object: its pass list
+        // is dlopen-only.
+        let again = provider.compile(net, OptLevel::O2, &ctx).unwrap();
+        let aot_passes: Vec<&str> = again
+            .pass_reports()
+            .iter()
+            .map(|p| p.name.as_str())
+            .filter(|n| matches!(*n, "codegen" | "cc" | "dlopen"))
+            .collect();
+        assert_eq!(aot_passes, ["dlopen"], "cache hit must skip codegen and cc");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_ctx_refuses_before_touching_the_toolchain() {
+        let net = Arc::new(small_net());
+        let ctx = ProviderCtx { aot_disabled: true, ..Default::default() };
+        let err = AotProvider::new(Emitter::Rust)
+            .compile(net, OptLevel::O1, &ctx)
+            .unwrap_err();
+        assert!(err.to_string().contains("NEURALUT_AOT=off"), "got: {err:#}");
+    }
+}

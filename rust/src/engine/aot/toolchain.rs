@@ -1,0 +1,105 @@
+//! System-compiler invocation for the AOT backend.
+//!
+//! Two toolchains are probed, once per process, by running
+//! `<tool> --version`: `rustc` (the `aot` backend's first choice) and
+//! the platform C compiler `cc` (the `aot-c` backend, and the silent
+//! fallback `aot` takes when `rustc` is absent — common in deployment
+//! containers that ship only a libc toolchain). Probe results are
+//! cached in `OnceLock`s so a missing tool costs one failed spawn per
+//! process, not one per compile.
+//!
+//! Invocations write to a caller-chosen temp path; the caller renames
+//! into place on success (same atomic-publish discipline as
+//! [`crate::fabric::artifact`]'s writer), so a crashed or failed
+//! compile can never leave a half-written `.so` where a later process
+//! would `dlopen` it.
+//!
+//! Faults: [`compile`] routes through the
+//! [`aot.cc`](crate::util::faults::point::AOT_CC) injection point
+//! before spawning anything, which is how chaos tests simulate a broken
+//! toolchain and exercise the degrade-to-`bitsliced` path.
+
+use std::path::Path;
+use std::process::Command;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Context};
+
+use crate::util::faults;
+
+use super::Emitter;
+
+static HAVE_RUSTC: OnceLock<bool> = OnceLock::new();
+static HAVE_CC: OnceLock<bool> = OnceLock::new();
+
+fn probe(tool: &str) -> bool {
+    Command::new(tool)
+        .arg("--version")
+        .output()
+        .map(|o| o.status.success())
+        .unwrap_or(false)
+}
+
+/// Is `rustc` on `PATH`? Probed once per process.
+pub(crate) fn have_rustc() -> bool {
+    *HAVE_RUSTC.get_or_init(|| probe("rustc"))
+}
+
+/// Is the system C compiler (`cc`) on `PATH`? Probed once per process.
+pub(crate) fn have_cc() -> bool {
+    *HAVE_CC.get_or_init(|| probe("cc"))
+}
+
+/// Is *any* usable toolchain present? (What CI's `aot` job keys its
+/// clean-skip on.)
+pub(crate) fn available() -> bool {
+    have_rustc() || have_cc()
+}
+
+/// Compile `src` into the shared object `out` with the emitter's
+/// toolchain. `out` should be a temp path the caller renames into place
+/// afterwards. On failure the tail of the compiler's stderr is folded
+/// into the error so a codegen bug surfaces as more than "exit 1".
+pub(crate) fn compile(emitter: Emitter, src: &Path, out: &Path) -> crate::Result<()> {
+    faults::inject(faults::point::AOT_CC)
+        .with_context(|| format!("compiling {}", src.display()))?;
+    let (tool, output) = match emitter {
+        Emitter::Rust => (
+            "rustc",
+            Command::new("rustc")
+                .args(["--edition", "2021", "--crate-type", "cdylib"])
+                .args(["-C", "opt-level=3", "-C", "debuginfo=0"])
+                .arg("-o")
+                .arg(out)
+                .arg(src)
+                .output(),
+        ),
+        Emitter::C => (
+            "cc",
+            Command::new("cc")
+                .args(["-O2", "-shared", "-fPIC", "-o"])
+                .arg(out)
+                .arg(src)
+                .output(),
+        ),
+    };
+    let output = output.with_context(|| format!("spawning {tool} for {}", src.display()))?;
+    if !output.status.success() {
+        let stderr = String::from_utf8_lossy(&output.stderr);
+        let tail: String = stderr
+            .lines()
+            .rev()
+            .take(12)
+            .collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+            .collect::<Vec<_>>()
+            .join("\n");
+        bail!(
+            "{tool} failed ({}) compiling {}:\n{tail}",
+            output.status,
+            src.display()
+        );
+    }
+    Ok(())
+}

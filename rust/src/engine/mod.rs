@@ -33,9 +33,12 @@
 //! (`bitsliced`, `bitsliced-x2`, `bitsliced-x4`, `bitsliced-x8` — all
 //! [`BitslicedProgram`]s differing only in plane width) are the
 //! registered built-ins, plus the `bitsliced-auto` alias that resolves
-//! to [`detect_lane_words`]'s pick for the host CPU. Nothing in this
-//! module enumerates backends — a new execution strategy is a registry
-//! entry, not a cross-crate surgery.
+//! to [`detect_lane_words`]'s pick for the host CPU, plus the [`aot`]
+//! native-code pair (`aot`, `aot-c`) that compiles the same lowered
+//! netlist through the system compiler and degrades to `bitsliced`
+//! when no toolchain is present. Nothing in this module enumerates
+//! backends — a new execution strategy is a registry entry, not a
+//! cross-crate surgery.
 //!
 //! Picking a backend: `scalar` has zero compile cost and wins on tiny
 //! batches and very wide tables; the `bitsliced` widths pay one lowering
@@ -45,9 +48,12 @@
 //! sample but grow the cache working set — see [`bitslice`] for the
 //! trade-off and the auto-detection policy.
 
+pub mod aot;
 pub mod bitslice;
 pub mod lower;
 pub mod opt;
+
+pub use aot::{AotProgram, AotProvider, Emitter};
 
 pub use bitslice::{
     detect_lane_words, lane_backend_name, BitslicedEngine, BitslicedEngineN, LANE_WIDTHS,

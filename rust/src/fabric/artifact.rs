@@ -13,7 +13,10 @@
 //!
 //! ```text
 //! u32  magic     0x4E464142 ("NFAB")
-//! u32  version   2
+//! u32  version   3
+//! u8   artifact kind (0 = self-contained netlist; 1 = netlist plus a
+//!      backend-owned companion file — version 3 addition, so loaders
+//!      know a sibling artifact participates in staleness checks)
 //! u32  backend name length, then that many UTF-8 bytes
 //! u64  model digest (LutNetwork::digest of the source network)
 //! u32  opt level index (0 / 1 / 2)
@@ -39,6 +42,16 @@
 //! byte offset, and expected-vs-actual values, and every untrusted count
 //! is checked against the remaining file length *before* any allocation
 //! or shift.
+//!
+//! Backends whose compiled form is more than a netlist (the AOT backends
+//! compile a native `.so`) persist the extra piece as a *companion* file
+//! beside the `.nfab`, named by [`companion_path`] with the model digest
+//! embedded — so the digest/opt-level/lane-width staleness discipline,
+//! the tmp+rename atomic write ([`atomic_write`]) and the
+//! offset-carrying corruption errors apply uniformly to every backend
+//! artifact. A header [`ArtifactKind`] byte records whether a companion
+//! participates, and a stale or missing companion is a *recompile*, not
+//! a load failure.
 
 use std::path::{Path, PathBuf};
 
@@ -50,13 +63,44 @@ use crate::util::faults;
 /// "NFAB", in the same hex-spelling convention as the NLUT magic.
 pub const NFAB_MAGIC: u32 = 0x4E464142;
 /// Current artifact format version. Version 2 added the plane
-/// lane-width field; version-1 files are rejected (recompiling is the
-/// upgrade path — the cache layer does it automatically).
-pub const NFAB_VERSION: u32 = 2;
+/// lane-width field; version 3 added the artifact-kind byte. Older
+/// versions are rejected (recompiling is the upgrade path — the cache
+/// layer does it automatically).
+pub const NFAB_VERSION: u32 = 3;
+
+/// What a `.nfab` artifact consists of, recorded as one header byte so
+/// loaders know whether a companion file participates in the staleness
+/// contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ArtifactKind {
+    /// A self-contained levelized bit-netlist: the `.nfab` payload is
+    /// everything the backend needs to reconstruct its program.
+    Netlist = 0,
+    /// A bit-netlist plus a backend-owned companion file beside the
+    /// `.nfab` (the AOT `.so`, named by [`companion_path`]). The
+    /// companion is an *optimization*, not a dependency: when it is
+    /// stale, truncated or missing, the owning backend silently rebuilds
+    /// it from the netlist payload.
+    NetlistWithCompanion = 1,
+}
+
+impl ArtifactKind {
+    fn from_u8(v: u8) -> Option<ArtifactKind> {
+        match v {
+            0 => Some(ArtifactKind::Netlist),
+            1 => Some(ArtifactKind::NetlistWithCompanion),
+            _ => None,
+        }
+    }
+}
 
 /// Everything the envelope records about the program it carries.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NfabHeader {
+    /// Whether this artifact is a self-contained netlist or carries a
+    /// backend-owned companion file beside it.
+    pub kind: ArtifactKind,
     /// Canonical registry name of the backend that compiled the program.
     pub backend: String,
     /// Optimization level the program was compiled at.
@@ -70,11 +114,25 @@ pub struct NfabHeader {
     pub lanes: usize,
 }
 
+/// Where a backend-owned companion artifact lives relative to its
+/// `.nfab`: `net.nfab` + digest `0xD` + tag `aot.so` →
+/// `net.000000000000000d.aot.so`, as a sibling of `path`. The digest in
+/// the file name makes staleness visible in a directory listing and
+/// guarantees a model change can never alias an old companion.
+pub fn companion_path(path: &Path, model_digest: u64, tag: &str) -> PathBuf {
+    let stem = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "fabric".to_string());
+    path.with_file_name(format!("{stem}.{model_digest:016x}.{tag}"))
+}
+
 /// Serialize a compiled program into a `.nfab` file. Writes to a
 /// temporary sibling and renames, so concurrent readers never observe a
 /// half-written artifact.
 pub(crate) fn save(
     path: &Path,
+    kind: ArtifactKind,
     backend: &str,
     opt_level: OptLevel,
     model_digest: u64,
@@ -109,6 +167,7 @@ pub(crate) fn save(
     let w32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
     w32(&mut out, NFAB_MAGIC);
     w32(&mut out, NFAB_VERSION);
+    out.push(kind as u8);
     w32(&mut out, backend.len() as u32);
     out.extend_from_slice(backend.as_bytes());
     out.extend_from_slice(&model_digest.to_le_bytes());
@@ -193,6 +252,15 @@ pub(crate) fn load(path: &Path) -> Result<(NfabHeader, BitNetlist)> {
             bytes.len()
         );
     }
+    let kind_byte = r.u8("artifact kind")?;
+    let Some(kind) = ArtifactKind::from_u8(kind_byte) else {
+        bail!(
+            "{}: unknown .nfab artifact kind {kind_byte} at offset {} \
+             (this build reads kinds 0..=1)",
+            path.display(),
+            r.offset - 1
+        );
+    };
     let name_len = r.u32("backend name length")? as usize;
     if name_len > r.remaining() || name_len > 256 {
         bail!(
@@ -295,7 +363,7 @@ pub(crate) fn load(path: &Path) -> Result<(NfabHeader, BitNetlist)> {
     nl.recompute_stats();
     nl.check()
         .with_context(|| format!("validating {}", path.display()))?;
-    Ok((NfabHeader { backend, opt_level, model_digest, lanes }, nl))
+    Ok((NfabHeader { kind, backend, opt_level, model_digest, lanes }, nl))
 }
 
 /// Position-tracking reader: every short read names the field, the byte
@@ -326,6 +394,10 @@ impl<'a> NfabReader<'a> {
         Ok(s)
     }
 
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
     fn u32(&mut self, what: &str) -> Result<u32> {
         let b = self.take(4, what)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -353,8 +425,10 @@ mod tests {
         let mut nl = lower::lower(&net).unwrap();
         crate::engine::optimize(&mut nl, OptLevel::O2);
         let path = tmp("roundtrip");
-        save(&path, "bitsliced-x2", OptLevel::O2, net.digest(), 2, &nl).unwrap();
+        save(&path, ArtifactKind::Netlist, "bitsliced-x2", OptLevel::O2, net.digest(), 2, &nl)
+            .unwrap();
         let (header, back) = load(&path).unwrap();
+        assert_eq!(header.kind, ArtifactKind::Netlist);
         assert_eq!(header.backend, "bitsliced-x2");
         assert_eq!(header.opt_level, OptLevel::O2);
         assert_eq!(header.model_digest, net.digest());
@@ -378,7 +452,8 @@ mod tests {
         let net = random_network(52, 8, 2, &[6, 3], 3, 2, 4);
         let nl = lower::lower(&net).unwrap();
         let path = tmp("corrupt");
-        save(&path, "bitsliced", OptLevel::O0, net.digest(), 1, &nl).unwrap();
+        save(&path, ArtifactKind::Netlist, "bitsliced", OptLevel::O0, net.digest(), 1, &nl)
+            .unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // Smash the final level's last output wire (it sits right before
         // the 20-byte trailer): the decoded netlist must fail validation,
@@ -395,12 +470,15 @@ mod tests {
         let net = random_network(55, 8, 2, &[6, 3], 3, 2, 4);
         let nl = lower::lower(&net).unwrap();
         let path = tmp("torn");
-        save(&path, "bitsliced", OptLevel::O0, net.digest(), 1, &nl).unwrap();
+        save(&path, ArtifactKind::Netlist, "bitsliced", OptLevel::O0, net.digest(), 1, &nl)
+            .unwrap();
         let before = std::fs::read(&path).unwrap();
         // Crash the second save between its tmp write and the rename: the
         // destination must still hold the first, fully intact artifact.
         let guard = crate::util::faults::arm_scoped("artifact.write:1:error", 41).unwrap();
-        let err = save(&path, "bitsliced", OptLevel::O2, net.digest(), 1, &nl).unwrap_err();
+        let err =
+            save(&path, ArtifactKind::Netlist, "bitsliced", OptLevel::O2, net.digest(), 1, &nl)
+                .unwrap_err();
         assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
         assert_eq!(guard.fired("artifact.write"), 1);
         drop(guard);
@@ -414,7 +492,8 @@ mod tests {
         let net = random_network(56, 8, 2, &[6, 3], 3, 2, 4);
         let nl = lower::lower(&net).unwrap();
         let path = tmp("read_fault");
-        save(&path, "bitsliced", OptLevel::O1, net.digest(), 1, &nl).unwrap();
+        save(&path, ArtifactKind::Netlist, "bitsliced", OptLevel::O1, net.digest(), 1, &nl)
+            .unwrap();
         let guard = crate::util::faults::arm_scoped("artifact.read:1:error", 43).unwrap();
         let err = format!("{:#}", load(&path).unwrap_err());
         assert!(err.contains("injected fault"), "{err}");
@@ -429,11 +508,57 @@ mod tests {
         let net = random_network(53, 8, 2, &[6, 3], 3, 2, 4);
         let nl = lower::lower(&net).unwrap();
         let path = tmp("auto_alias");
-        let err = save(&path, "Bitsliced-Auto", OptLevel::O0, net.digest(), 4, &nl)
-            .unwrap_err();
+        let err = save(
+            &path,
+            ArtifactKind::Netlist,
+            "Bitsliced-Auto",
+            OptLevel::O0,
+            net.digest(),
+            4,
+            &nl,
+        )
+        .unwrap_err();
         assert!(err.to_string().contains("bitsliced-auto"), "{err}");
-        let err = save(&path, "bitsliced", OptLevel::O0, net.digest(), 0, &nl).unwrap_err();
+        let err = save(&path, ArtifactKind::Netlist, "bitsliced", OptLevel::O0, net.digest(), 0, &nl)
+            .unwrap_err();
         assert!(err.to_string().contains("lane width"), "{err}");
         assert!(!path.exists(), "a refused save must not leave a file behind");
+    }
+
+    #[test]
+    fn companion_kind_round_trips_and_unknown_kinds_are_rejected_with_offset() {
+        let net = random_network(57, 8, 2, &[6, 3], 3, 2, 4);
+        let nl = lower::lower(&net).unwrap();
+        let path = tmp("kind");
+        save(
+            &path,
+            ArtifactKind::NetlistWithCompanion,
+            "aot",
+            OptLevel::O2,
+            net.digest(),
+            2,
+            &nl,
+        )
+        .unwrap();
+        let (header, _) = load(&path).unwrap();
+        assert_eq!(header.kind, ArtifactKind::NetlistWithCompanion);
+        assert_eq!(header.backend, "aot");
+        // The kind byte sits at offset 8, right after magic + version.
+        let mut bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes[8], ArtifactKind::NetlistWithCompanion as u8);
+        bytes[8] = 7;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("artifact kind 7"), "{err}");
+        assert!(err.contains("offset 8"), "{err}");
+    }
+
+    #[test]
+    fn companion_paths_embed_the_digest_beside_the_artifact() {
+        let p = companion_path(Path::new("/cache/net.nfab"), 0xD, "aot.so");
+        assert_eq!(p, Path::new("/cache/net.000000000000000d.aot.so"));
+        // Different digests can never alias each other's companions.
+        let q = companion_path(Path::new("/cache/net.nfab"), 0xE, "aot.so");
+        assert_ne!(p, q);
     }
 }

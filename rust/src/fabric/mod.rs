@@ -30,10 +30,12 @@
 //! every unknown-backend error lists the registered names.
 //!
 //! Compilation degrades gracefully: when a requested backend fails to
-//! construct, [`Model::compile`] falls back to the reference `scalar`
-//! backend instead of aborting, records the fallback in the
-//! [`CompileReport`] (`degraded_from`) and the `neuralut_degraded`
-//! gauge, and never persists the degraded program into a fabric cache.
+//! construct, [`Model::compile`] falls back to the backend named by its
+//! [`Capabilities::fallback`] (the reference `scalar` backend when
+//! unset; the `aot` backends degrade to `bitsliced`) instead of
+//! aborting, records the fallback in the [`CompileReport`]
+//! (`degraded_from`) and the `neuralut_degraded` gauge, and never
+//! persists the degraded program into a fabric cache.
 //!
 //! Compilation is a ship-once step: [`CompiledFabric::save`] persists
 //! the optimized program as a versioned `.nfab` [`artifact`] (backend
@@ -46,13 +48,13 @@ pub mod artifact;
 pub mod options;
 pub mod registry;
 
-pub use artifact::{NfabHeader, NFAB_MAGIC, NFAB_VERSION};
+pub use artifact::{companion_path, ArtifactKind, NfabHeader, NFAB_MAGIC, NFAB_VERSION};
 pub use crate::engine::OptLevel;
 pub use crate::obs::{CompileReport, PassReport};
 pub use options::{FabricOptions, FabricTuning, DEFAULT_BACKEND};
 pub use registry::{
-    BackendEntry, BackendFactory, BackendRegistry, BatchAffinity, Capabilities, CompileCost,
-    ProgramLoader,
+    BackendEntry, BackendProvider, BackendRegistry, BatchAffinity, Capabilities, CompileCost,
+    ProviderCtx,
 };
 
 use std::path::{Path, PathBuf};
@@ -204,37 +206,41 @@ impl Model {
         let entry = registry.resolve(opts.backend_or_default())?;
         let tuning = opts.resolve_tuning()?;
         let opt_level = opts.opt_level_or_default();
+        let ctx = self.provider_ctx(opts);
         let t0 = Instant::now();
         let compiled = {
             let _span = trace::span(&format!("compile/{}", entry.name()));
             faults::inject(faults::point::BACKEND_COMPILE)
-                .and_then(|()| entry.compile(self.net.clone(), opt_level))
+                .and_then(|()| entry.compile(self.net.clone(), opt_level, &ctx))
         };
         // Graceful degradation: a backend that fails to *construct* must
-        // not take availability with it when the reference interpreter
-        // can still serve the model. Fall back to `scalar`, record the
-        // degradation in the report (and the `neuralut_degraded` gauge),
-        // and keep the original error visible on stderr. Unknown names
-        // and bad tuning still fail above — those are caller mistakes,
-        // not runtime faults.
+        // not take availability with it when a slower strategy can still
+        // serve the model. Fall back to the backend the capability sheet
+        // names (`scalar` when unset; `aot` names `bitsliced`), record
+        // the degradation in the report (and the `neuralut_degraded`
+        // gauge), and keep the original error visible on stderr. Unknown
+        // names and bad tuning still fail above — those are caller
+        // mistakes, not runtime faults.
         let (entry, program, degraded_from) = match compiled {
             Ok(program) => (entry, program, None),
             Err(cause) => {
-                let fallback = match registry.resolve(DEFAULT_BACKEND) {
-                    Ok(f) if entry.name() != DEFAULT_BACKEND => f,
-                    // The default itself failed (or is not registered):
-                    // there is nothing left to degrade to.
+                let fallback_name = entry.capabilities().fallback.unwrap_or(DEFAULT_BACKEND);
+                let fallback = match registry.resolve(fallback_name) {
+                    Ok(f) if entry.name() != f.name() => f,
+                    // The backend *is* its own fallback (or the fallback
+                    // is not registered): there is nothing left to
+                    // degrade to.
                     _ => return Err(cause),
                 };
                 eprintln!(
                     "warning: backend '{}' failed to compile; degrading to '{}': {cause:#}",
                     entry.name(),
-                    DEFAULT_BACKEND
+                    fallback.name()
                 );
                 let program = {
                     let _span = trace::span(&format!("compile/{}", fallback.name()));
                     fallback
-                        .compile(self.net.clone(), opt_level)
+                        .compile(self.net.clone(), opt_level, &ctx)
                         .with_context(|| format!("degrading after: {cause:#}"))?
                 };
                 (fallback, program, Some(entry.name().to_string()))
@@ -297,8 +303,11 @@ impl Model {
                 ),
             }
         }
-        let fabric = self.compile_fresh(registry, opts)?;
-        // A degraded fabric is the scalar interpreter standing in for the
+        // Pin the artifact path into the compile context even when the
+        // caller passed `path` explicitly (compile_cached) rather than
+        // through the options — providers place companions beside it.
+        let fabric = self.compile_fresh(registry, &opts.clone().fabric_cache(path))?;
+        // A degraded fabric is a fallback interpreter standing in for the
         // backend the caller asked to cache — persisting it would poison
         // the cache with the wrong program. Serve it, don't save it.
         if let Some(from) = &fabric.report.degraded_from {
@@ -414,7 +423,9 @@ impl Model {
             );
         }
         let tuning = opts.resolve_tuning()?;
-        let program = entry.load_program(self.net.clone(), Arc::new(nl))?;
+        let mut ctx = self.provider_ctx(opts);
+        ctx.artifact_path = Some(path.to_path_buf());
+        let program = entry.load_program(self.net.clone(), Arc::new(nl), &ctx)?;
         let report = build_report(
             self,
             entry.name(),
@@ -438,6 +449,18 @@ impl Model {
     /// record).
     pub fn digest(&self) -> u64 {
         self.net.digest()
+    }
+
+    /// The compile-time context handed to every [`BackendProvider`]
+    /// hook: this model's digest plus the side-artifact knobs from
+    /// `opts` (currently the AOT `.so` cache directory).
+    fn provider_ctx(&self, opts: &FabricOptions) -> ProviderCtx {
+        ProviderCtx {
+            model_digest: self.net.digest(),
+            aot_cache_dir: opts.get_aot_cache_dir().map(PathBuf::from),
+            artifact_path: opts.get_fabric_cache().map(PathBuf::from),
+            aot_disabled: opts.aot_disabled_or_default(),
+        }
     }
 }
 
@@ -569,7 +592,15 @@ impl CompiledFabric {
             .plane_lanes()
             .unwrap_or(self.entry.capabilities().word_lanes)
             .max(1);
-        artifact::save(path, self.entry.name(), self.opt_level, self.model.digest(), lanes, nl)?;
+        // Native-codegen backends own a companion `.so` beside the
+        // `.nfab`; the kind byte tells loaders it participates in the
+        // staleness contract (a missing companion is rebuilt, not fatal).
+        let kind = if self.entry.capabilities().compile_cost == CompileCost::NativeCodegen {
+            ArtifactKind::NetlistWithCompanion
+        } else {
+            ArtifactKind::Netlist
+        };
+        artifact::save(path, kind, self.entry.name(), self.opt_level, self.model.digest(), lanes, nl)?;
         // The report rides along as a JSON sibling, written with the same
         // tmp+rename discipline as the artifact so a crash mid-save never
         // leaves a torn report next to a good .nfab. Like the artifact

@@ -10,7 +10,9 @@
 //! 2. environment (`NEURALUT_ENGINE`, `NEURALUT_WORKERS`,
 //!    `NEURALUT_OPT_LEVEL`, `NEURALUT_FABRIC_CACHE`,
 //!    `NEURALUT_REQUEST_TIMEOUT_MS`, `NEURALUT_LISTEN_ADDR`,
-//!    `NEURALUT_MAX_CONNECTIONS`, `NEURALUT_MODELS_DIR`);
+//!    `NEURALUT_MAX_CONNECTIONS`, `NEURALUT_MODELS_DIR`,
+//!    `NEURALUT_AOT` — `off`/`on`, or a cache-directory path for the
+//!    AOT backends' compiled objects);
 //! 3. a [`ServerConfig`] file passed to
 //!    [`from_env_and_config`](FabricOptions::from_env_and_config);
 //! 4. defaults (`scalar`, opt level `O1`, no fabric cache, 1 worker,
@@ -112,6 +114,8 @@ pub struct FabricOptions {
     listen_addr: Option<String>,
     max_connections: Option<usize>,
     models_dir: Option<PathBuf>,
+    aot_cache_dir: Option<PathBuf>,
+    aot_disabled: Option<bool>,
 }
 
 impl FabricOptions {
@@ -200,6 +204,22 @@ impl FabricOptions {
         self
     }
 
+    /// Directory where the AOT backends cache their compiled `.so`
+    /// objects (`--aot-cache-dir`). Unset = beside the `.nfab` artifact
+    /// when a fabric cache is in use, else a per-user temp directory.
+    pub fn aot_cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.aot_cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Force native codegen off (`NEURALUT_AOT=off`): the `aot` backends
+    /// refuse to compile and the model degrades to their declared
+    /// `bitsliced` fallback without touching the toolchain or cache.
+    pub fn aot_disabled(mut self, disabled: bool) -> Self {
+        self.aot_disabled = Some(disabled);
+        self
+    }
+
     // ---- getters (what is *set*, before defaulting) -----------------------
 
     pub fn get_backend(&self) -> Option<&str> {
@@ -244,6 +264,15 @@ impl FabricOptions {
 
     pub fn get_models_dir(&self) -> Option<&std::path::Path> {
         self.models_dir.as_deref()
+    }
+
+    pub fn get_aot_cache_dir(&self) -> Option<&std::path::Path> {
+        self.aot_cache_dir.as_deref()
+    }
+
+    /// Whether native codegen is forced off (defaults to enabled).
+    pub fn aot_disabled_or_default(&self) -> bool {
+        self.aot_disabled.unwrap_or(false)
     }
 
     /// The backend name that will be resolved at compile time.
@@ -296,6 +325,7 @@ impl FabricOptions {
             opts.listen_addr = c.listen_addr.clone();
             opts.max_connections = c.max_connections;
             opts.models_dir = c.models_dir.clone();
+            opts.aot_cache_dir = c.aot_cache_dir.clone();
         }
         if let Some(v) = env("NEURALUT_ENGINE") {
             opts.backend = Some(v);
@@ -335,6 +365,19 @@ impl FabricOptions {
         }
         if let Some(v) = env("NEURALUT_MODELS_DIR") {
             opts.models_dir = Some(PathBuf::from(v));
+        }
+        if let Some(v) = env("NEURALUT_AOT") {
+            match v.trim().to_ascii_lowercase().as_str() {
+                "off" | "0" | "false" => opts.aot_disabled = Some(true),
+                "on" | "1" | "true" => opts.aot_disabled = Some(false),
+                "" => {}
+                _ => {
+                    // Any other value is a cache directory (and implies
+                    // AOT stays enabled).
+                    opts.aot_disabled = Some(false);
+                    opts.aot_cache_dir = Some(PathBuf::from(v.trim()));
+                }
+            }
         }
         Ok(opts)
     }
@@ -539,6 +582,36 @@ mod tests {
         let bad = |key: &str| (key == "NEURALUT_MAX_CONNECTIONS").then(|| "lots".to_string());
         let err = FabricOptions::with_env(&bad, None).unwrap_err().to_string();
         assert!(err.contains("NEURALUT_MAX_CONNECTIONS"), "{err}");
+    }
+
+    #[test]
+    fn neuralut_aot_toggles_or_points_at_a_cache_dir() {
+        // Unset: enabled, no cache dir.
+        let o = FabricOptions::with_env(&no_env, None).unwrap();
+        assert!(!o.aot_disabled_or_default());
+        assert_eq!(o.get_aot_cache_dir(), None);
+        // off/0/false disable; on/1/true enable explicitly.
+        for (val, disabled) in
+            [("off", true), (" 0 ", true), ("FALSE", true), ("on", false), ("1", false)]
+        {
+            let env = |key: &str| (key == "NEURALUT_AOT").then(|| val.to_string());
+            let o = FabricOptions::with_env(&env, None).unwrap();
+            assert_eq!(o.aot_disabled_or_default(), disabled, "NEURALUT_AOT={val}");
+        }
+        // Any other value is a cache directory.
+        let env = |key: &str| (key == "NEURALUT_AOT").then(|| "/var/aot".to_string());
+        let o = FabricOptions::with_env(&env, None).unwrap();
+        assert!(!o.aot_disabled_or_default());
+        assert_eq!(o.get_aot_cache_dir(), Some(std::path::Path::new("/var/aot")));
+        // Env beats config; builder beats env.
+        let cfg = ServerConfig { aot_cache_dir: Some("cfg_aot".into()), ..Default::default() };
+        let o = FabricOptions::with_env(&no_env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_aot_cache_dir(), Some(std::path::Path::new("cfg_aot")));
+        let o = FabricOptions::with_env(&env, Some(&cfg)).unwrap();
+        assert_eq!(o.get_aot_cache_dir(), Some(std::path::Path::new("/var/aot")));
+        let o = o.aot_cache_dir("cli_aot").aot_disabled(true);
+        assert_eq!(o.get_aot_cache_dir(), Some(std::path::Path::new("cli_aot")));
+        assert!(o.aot_disabled_or_default());
     }
 
     #[test]

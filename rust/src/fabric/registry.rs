@@ -1,12 +1,14 @@
 //! The pluggable backend registry: execution strategies by *name*.
 //!
 //! Every inference backend is an entry mapping a normalized name to a
-//! factory (`Arc<LutNetwork>` → compile-once [`FabricProgram`]) plus its
-//! [`Capabilities`]. `scalar` and the `bitsliced` lane-width family
-//! (`bitsliced`, `bitsliced-x2/-x4/-x8`) are registered built-ins;
-//! tests and downstream crates [`register`](BackendRegistry::register)
-//! their own (mock backends, device-specific lowerings, assembled
-//! sub-network variants) and select them through
+//! [`BackendProvider`] — one object-safe trait carrying the compile
+//! step, the (optional) artifact-reload step and the backend's
+//! [`Capabilities`]. `scalar`, the `bitsliced` lane-width family
+//! (`bitsliced`, `bitsliced-x2/-x4/-x8`) and the native-code `aot` /
+//! `aot-c` backends are registered built-ins; tests and downstream
+//! crates [`register`](BackendRegistry::register) their own (mock
+//! backends, device-specific lowerings, assembled sub-network variants)
+//! and select them through
 //! [`FabricOptions`](crate::fabric::FabricOptions) exactly like the
 //! built-ins — a new backend is a registry entry, not a cross-crate
 //! surgery.
@@ -22,34 +24,42 @@
 //! Name lookups are case- and whitespace-insensitive
 //! (`NEURALUT_ENGINE=" Bitsliced "` selects `bitsliced`), and every
 //! unknown-name error lists the currently registered names.
+//!
+//! # Migrating from the closure API
+//!
+//! Until the AOT backend landed, registration took a pair of `Arc`
+//! closures (`BackendFactory` / `ProgramLoader`) through three entry
+//! points. Backends that own side artifacts (the AOT `.so` beside the
+//! `.nfab`) need compile, persist *and* artifact-path hooks that share
+//! state — a trait object, not two unrelated closures. External
+//! registrants migrate mechanically:
+//!
+//! | closure-era API                                       | trait-era replacement                                                  |
+//! |-------------------------------------------------------|------------------------------------------------------------------------|
+//! | `type BackendFactory = Arc<dyn Fn(net, opt) -> ..>`   | `impl BackendProvider { fn compile(&self, net, opt, ctx) -> .. }`      |
+//! | `type ProgramLoader = Arc<dyn Fn(net, nl) -> ..>`     | `impl BackendProvider { fn load_persisted(&self, net, nl, ctx) -> .. }`|
+//! | `register(name, caps, factory)`                       | `register(name, Arc::new(Provider))` with `capabilities()` → caps      |
+//! | `register_with_loader(name, caps, factory, loader)`   | same `register`; set `Capabilities::persistable` and override `load_persisted` |
+//! | captured state in the closure environment             | fields on the provider struct                                           |
+//! | (inexpressible) side artifacts, cache dirs, digests   | [`ProviderCtx`] passed to both hooks                                    |
+//!
+//! `register_alias` is unchanged. The `persistable` capability is no
+//! longer cross-checked against a loader argument at registration time
+//! (there is no separate loader argument); a non-persistable entry
+//! still refuses [`BackendEntry::load_program`] with the same error.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::bail;
 
+use crate::engine::aot::{AotProvider, Emitter};
 use crate::engine::{
     detect_lane_words, lane_backend_name, BitNetlist, BitslicedProgram, FabricProgram, OptLevel,
     ScalarProgram, LANE_WIDTHS,
 };
 use crate::luts::LutNetwork;
-
-/// Compiles one network into a shared, executor-spawning program at the
-/// requested optimization level (backends without a compile step ignore
-/// the level).
-pub type BackendFactory = Arc<
-    dyn Fn(Arc<LutNetwork>, OptLevel) -> crate::Result<Arc<dyn FabricProgram>> + Send + Sync,
->;
-
-/// Reconstructs a program from a persisted `.nfab` payload (a decoded,
-/// validated [`BitNetlist`]) instead of recompiling. Only backends whose
-/// compiled artifact *is* a lowered bit-netlist can register one — see
-/// [`Capabilities::persistable`].
-pub type ProgramLoader = Arc<
-    dyn Fn(Arc<LutNetwork>, Arc<BitNetlist>) -> crate::Result<Arc<dyn FabricProgram>>
-        + Send
-        + Sync,
->;
 
 /// One-time cost class of a backend's compile step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,6 +69,10 @@ pub enum CompileCost {
     /// A full lowering pass per network (support reduction, ROBDD,
     /// netlist emission) — amortized over batch/serving workloads.
     Lowering,
+    /// Lowering *plus* native code generation and a system-compiler
+    /// invocation — the heaviest cold start, amortized by the `.so`
+    /// cache.
+    NativeCodegen,
 }
 
 /// The batch shape a backend is built for.
@@ -83,11 +97,10 @@ pub struct Capabilities {
     /// One-time compile cost paid per [`Model::compile`](crate::fabric::Model::compile).
     pub compile_cost: CompileCost,
     /// Whether the compiled program can be persisted to (and reloaded
-    /// from) a `.nfab` artifact. Must agree with [`ProgramLoader`]
-    /// presence (enforced at registration time); the backend's programs
-    /// must then also expose a lowered bit-netlist
-    /// ([`FabricProgram::bit_netlist`]) — that part is the
-    /// implementation's responsibility and is checked when a save is
+    /// from) a `.nfab` artifact. A `true` here promises
+    /// [`BackendProvider::load_persisted`] is implemented and the
+    /// backend's programs expose a lowered bit-netlist
+    /// ([`FabricProgram::bit_netlist`]) — checked when a save or load is
     /// attempted.
     pub persistable: bool,
     /// Plane width in `u64` words for word-parallel backends (samples
@@ -96,16 +109,150 @@ pub struct Capabilities {
     /// an artifact compiled at one width is never replayed by an
     /// executor with a different word format.
     pub word_lanes: usize,
+    /// Backend this one degrades to when its compile step fails at
+    /// runtime (missing toolchain, injected fault). `None` means the
+    /// process-wide default (`scalar`). The AOT backends name
+    /// `bitsliced` here so a broken compiler costs throughput, never
+    /// availability.
+    pub fallback: Option<&'static str>,
 }
 
-/// A registered backend: canonical name, capabilities, factory, and (for
-/// persistable backends) the artifact loader.
+/// Compile-time context handed to every [`BackendProvider`] hook: the
+/// facts a backend needs to manage *side artifacts* (the AOT `.so`
+/// beside the `.nfab`) that the old closure API could not express.
+#[derive(Debug, Clone, Default)]
+pub struct ProviderCtx {
+    /// Content digest of the source model — side artifacts embed it so
+    /// staleness is detected the same way `.nfab` headers detect it.
+    pub model_digest: u64,
+    /// Directory for backend-owned companion artifacts (`--aot-cache-dir`
+    /// / `NEURALUT_AOT`). `None` = the backend's own default location.
+    pub aot_cache_dir: Option<PathBuf>,
+    /// The `.nfab` path when a fabric cache is driving this compile or
+    /// load — providers place companion files beside it (via
+    /// [`companion_path`](crate::fabric::artifact::companion_path))
+    /// unless `aot_cache_dir` overrides the location.
+    pub artifact_path: Option<PathBuf>,
+    /// `NEURALUT_AOT=off`: native-codegen backends must refuse to
+    /// compile (and therefore degrade to their declared fallback)
+    /// without touching the toolchain or the cache.
+    pub aot_disabled: bool,
+}
+
+/// One inference backend behind the registry: the compile hook, the
+/// artifact-reload hook and the capability sheet, as a single
+/// object-safe trait (replacing the closure-pair `BackendFactory` /
+/// `ProgramLoader` API — see the module docs for the migration table).
+pub trait BackendProvider: Send + Sync {
+    /// Static facts about this backend. Called once at registration (the
+    /// registry caches the copy), so it must be cheap and deterministic.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Compile `net` into a shared, executor-spawning program at `opt`
+    /// (backends without a compile step ignore the level).
+    ///
+    /// An `Err` from a *non-default* backend does not necessarily abort
+    /// the caller: [`Model::compile`](crate::fabric::Model::compile)
+    /// treats it as a runtime fault and degrades to the backend named by
+    /// [`Capabilities::fallback`] (the `scalar` reference backend when
+    /// `None`), recorded as `degraded_from` in the
+    /// [`CompileReport`](crate::obs::CompileReport). Providers should
+    /// therefore fail with a descriptive error rather than panic.
+    fn compile(
+        &self,
+        net: Arc<LutNetwork>,
+        opt: OptLevel,
+        ctx: &ProviderCtx,
+    ) -> crate::Result<Arc<dyn FabricProgram>>;
+
+    /// Rebuild the shared program from a persisted, already-validated
+    /// netlist (the `.nfab` payload) — no lowering pass, no opt
+    /// pipeline. Only meaningful when [`Capabilities::persistable`] is
+    /// `true`; the default implementation rejects the call, and the
+    /// registry never routes here for non-persistable entries.
+    fn load_persisted(
+        &self,
+        net: Arc<LutNetwork>,
+        nl: Arc<BitNetlist>,
+        ctx: &ProviderCtx,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        let _ = (net, nl, ctx);
+        bail!("backend provider does not implement load_persisted")
+    }
+}
+
+/// The built-in `scalar` reference backend: direct table lookups over
+/// the `LutNetwork`, no lowering, no persistence.
+struct ScalarProvider;
+
+impl BackendProvider for ScalarProvider {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            signed_hidden: true,
+            batch_affinity: BatchAffinity::Single,
+            compile_cost: CompileCost::Free,
+            persistable: false,
+            word_lanes: 0,
+            fallback: None,
+        }
+    }
+
+    fn compile(
+        &self,
+        net: Arc<LutNetwork>,
+        _opt: OptLevel,
+        _ctx: &ProviderCtx,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
+    }
+}
+
+/// The built-in bitsliced interpreter family, one provider per plane
+/// width (`[u64; N]`, N ∈ {1, 2, 4, 8}).
+struct BitslicedProvider {
+    lanes: usize,
+}
+
+impl BackendProvider for BitslicedProvider {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            signed_hidden: false,
+            batch_affinity: BatchAffinity::Wide,
+            compile_cost: CompileCost::Lowering,
+            persistable: true,
+            word_lanes: self.lanes,
+            fallback: None,
+        }
+    }
+
+    fn compile(
+        &self,
+        net: Arc<LutNetwork>,
+        opt: OptLevel,
+        _ctx: &ProviderCtx,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        Ok(Arc::new(BitslicedProgram::compile_opt_wide(&net, opt, self.lanes)?)
+            as Arc<dyn FabricProgram>)
+    }
+
+    fn load_persisted(
+        &self,
+        _net: Arc<LutNetwork>,
+        nl: Arc<BitNetlist>,
+        _ctx: &ProviderCtx,
+    ) -> crate::Result<Arc<dyn FabricProgram>> {
+        Ok(Arc::new(BitslicedProgram::from_netlist_wide(nl, self.lanes)?)
+            as Arc<dyn FabricProgram>)
+    }
+}
+
+/// A registered backend: canonical name, cached capability sheet, and
+/// the provider behind both hooks.
 #[derive(Clone)]
 pub struct BackendEntry {
     name: String,
     caps: Capabilities,
-    factory: BackendFactory,
-    loader: Option<ProgramLoader>,
+    provider: Arc<dyn BackendProvider>,
 }
 
 impl BackendEntry {
@@ -118,20 +265,16 @@ impl BackendEntry {
         self.caps
     }
 
-    /// Run the factory: compile `net` into the shared program at `opt`.
-    ///
-    /// An `Err` from a *non-default* backend does not necessarily abort
-    /// the caller: [`Model::compile`](crate::fabric::Model::compile)
-    /// treats it as a runtime fault and degrades to the `scalar`
-    /// reference backend (recorded as `degraded_from` in the
-    /// [`CompileReport`](crate::obs::CompileReport)). Factories should
-    /// therefore fail with a descriptive error rather than panic.
+    /// Run the provider's compile hook: compile `net` into the shared
+    /// program at `opt`. See [`BackendProvider::compile`] for the
+    /// degradation contract on `Err`.
     pub fn compile(
         &self,
         net: Arc<LutNetwork>,
         opt: OptLevel,
+        ctx: &ProviderCtx,
     ) -> crate::Result<Arc<dyn FabricProgram>> {
-        (self.factory)(net, opt)
+        self.provider.compile(net, opt, ctx)
     }
 
     /// Rebuild the shared program from a persisted, already-validated
@@ -140,15 +283,16 @@ impl BackendEntry {
         &self,
         net: Arc<LutNetwork>,
         nl: Arc<BitNetlist>,
+        ctx: &ProviderCtx,
     ) -> crate::Result<Arc<dyn FabricProgram>> {
-        match &self.loader {
-            Some(loader) => loader(net, nl),
-            None => bail!(
+        if !self.caps.persistable {
+            bail!(
                 "backend '{}' is not persistable: it cannot load a compiled \
                  fabric artifact",
                 self.name
-            ),
+            );
         }
+        self.provider.load_persisted(net, nl, ctx)
     }
 }
 
@@ -167,7 +311,7 @@ pub fn normalize_name(name: &str) -> String {
     name.trim().to_ascii_lowercase()
 }
 
-/// The name → factory table. One process-wide instance
+/// The name → provider table. One process-wide instance
 /// ([`BackendRegistry::global`]) serves every resolution path — CLI
 /// flags, `NEURALUT_ENGINE`, server config files and tests all look up
 /// the same entries.
@@ -190,13 +334,15 @@ impl BackendRegistry {
 
     /// The process-wide registry with the built-ins pre-registered:
     ///
-    /// | name            | compile cost | batch affinity  | signed hidden | persistable | word lanes |
-    /// |-----------------|--------------|-----------------|---------------|-------------|------------|
-    /// | `scalar`        | free         | single-sample   | yes           | no          | —          |
-    /// | `bitsliced`     | lowering     | wide (64-lane)  | no            | yes (.nfab) | 1          |
-    /// | `bitsliced-x2`  | lowering     | wide (128-lane) | no            | yes (.nfab) | 2          |
-    /// | `bitsliced-x4`  | lowering     | wide (256-lane) | no            | yes (.nfab) | 4          |
-    /// | `bitsliced-x8`  | lowering     | wide (512-lane) | no            | yes (.nfab) | 8          |
+    /// | name            | compile cost   | batch affinity  | signed hidden | persistable | word lanes | fallback    |
+    /// |-----------------|----------------|-----------------|---------------|-------------|------------|-------------|
+    /// | `scalar`        | free           | single-sample   | yes           | no          | —          | —           |
+    /// | `bitsliced`     | lowering       | wide (64-lane)  | no            | yes (.nfab) | 1          | —           |
+    /// | `bitsliced-x2`  | lowering       | wide (128-lane) | no            | yes (.nfab) | 2          | —           |
+    /// | `bitsliced-x4`  | lowering       | wide (256-lane) | no            | yes (.nfab) | 4          | —           |
+    /// | `bitsliced-x8`  | lowering       | wide (512-lane) | no            | yes (.nfab) | 8          | —           |
+    /// | `aot`           | native codegen | wide            | no            | yes (.nfab + .so) | auto | `bitsliced` |
+    /// | `aot-c`         | native codegen | wide            | no            | yes (.nfab + .so) | auto | `bitsliced` |
     ///
     /// plus the `bitsliced-auto` *alias*, which resolves to the width
     /// [`detect_lane_words`] picks for the host CPU.
@@ -204,104 +350,43 @@ impl BackendRegistry {
         static GLOBAL: OnceLock<BackendRegistry> = OnceLock::new();
         GLOBAL.get_or_init(|| {
             let reg = BackendRegistry::empty();
-            reg.register(
-                "scalar",
-                Capabilities {
-                    signed_hidden: true,
-                    batch_affinity: BatchAffinity::Single,
-                    compile_cost: CompileCost::Free,
-                    persistable: false,
-                    word_lanes: 0,
-                },
-                Arc::new(|net: Arc<LutNetwork>, _opt: OptLevel| {
-                    Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
-                }),
-            )
-            .expect("registering built-in 'scalar'");
+            reg.register("scalar", Arc::new(ScalarProvider))
+                .expect("registering built-in 'scalar'");
             for lanes in LANE_WIDTHS {
                 let name = lane_backend_name(lanes).expect("built-in lane width");
-                reg.register_with_loader(
-                    name,
-                    Capabilities {
-                        signed_hidden: false,
-                        batch_affinity: BatchAffinity::Wide,
-                        compile_cost: CompileCost::Lowering,
-                        persistable: true,
-                        word_lanes: lanes,
-                    },
-                    Arc::new(move |net: Arc<LutNetwork>, opt: OptLevel| {
-                        Ok(Arc::new(BitslicedProgram::compile_opt_wide(&net, opt, lanes)?)
-                            as Arc<dyn FabricProgram>)
-                    }),
-                    Arc::new(move |_net, nl: Arc<BitNetlist>| {
-                        Ok(Arc::new(BitslicedProgram::from_netlist_wide(nl, lanes)?)
-                            as Arc<dyn FabricProgram>)
-                    }),
-                )
-                .expect("registering built-in bitsliced width");
+                reg.register(name, Arc::new(BitslicedProvider { lanes }))
+                    .expect("registering built-in bitsliced width");
             }
             let auto = lane_backend_name(detect_lane_words())
                 .expect("detected lane width is a built-in");
             reg.register_alias("bitsliced-auto", auto)
                 .expect("registering built-in alias 'bitsliced-auto'");
+            reg.register("aot", Arc::new(AotProvider::new(Emitter::Rust)))
+                .expect("registering built-in 'aot'");
+            reg.register("aot-c", Arc::new(AotProvider::new(Emitter::C)))
+                .expect("registering built-in 'aot-c'");
             reg
         })
     }
 
-    /// Register a non-persistable backend under `name` (normalized).
-    /// Duplicate names are an error — a backend is registered exactly
-    /// once per process. Backends that can persist their compiled
-    /// program use [`register_with_loader`](Self::register_with_loader).
-    pub fn register(
-        &self,
-        name: &str,
-        caps: Capabilities,
-        factory: BackendFactory,
-    ) -> crate::Result<()> {
-        self.register_inner(name, caps, factory, None)
-    }
-
-    /// Register a persistable backend: `loader` rebuilds the shared
-    /// program from a `.nfab` payload without recompiling. The
-    /// `persistable` capability must agree with the loader's presence on
-    /// both registration paths, so capability reports never lie.
-    pub fn register_with_loader(
-        &self,
-        name: &str,
-        caps: Capabilities,
-        factory: BackendFactory,
-        loader: ProgramLoader,
-    ) -> crate::Result<()> {
-        self.register_inner(name, caps, factory, Some(loader))
-    }
-
-    fn register_inner(
-        &self,
-        name: &str,
-        caps: Capabilities,
-        factory: BackendFactory,
-        loader: Option<ProgramLoader>,
-    ) -> crate::Result<()> {
+    /// Register a backend provider under `name` (normalized). Duplicate
+    /// names are an error — a backend is registered exactly once per
+    /// process. The provider's [`Capabilities`] are read once here and
+    /// cached on the entry.
+    pub fn register(&self, name: &str, provider: Arc<dyn BackendProvider>) -> crate::Result<()> {
         let canon = normalize_name(name);
         if canon.is_empty() {
             bail!("backend name '{name}' is empty after normalization");
         }
-        if caps.persistable != loader.is_some() {
-            bail!(
-                "backend '{canon}': persistable capability ({}) does not match \
-                 loader presence ({})",
-                caps.persistable,
-                loader.is_some()
-            );
-        }
         if self.aliases.lock().unwrap().contains_key(&canon) {
             bail!("backend '{canon}' collides with a registered alias");
         }
+        let caps = provider.capabilities();
         let mut entries = self.entries.lock().unwrap();
         if entries.contains_key(&canon) {
             bail!("backend '{canon}' is already registered");
         }
-        entries.insert(canon.clone(), BackendEntry { name: canon, caps, factory, loader });
+        entries.insert(canon.clone(), BackendEntry { name: canon, caps, provider });
         Ok(())
     }
 
@@ -384,6 +469,35 @@ impl BackendRegistry {
 mod tests {
     use super::*;
 
+    /// Minimal test provider: scalar programs under any capability sheet.
+    struct TestProvider(Capabilities);
+
+    impl BackendProvider for TestProvider {
+        fn capabilities(&self) -> Capabilities {
+            self.0
+        }
+
+        fn compile(
+            &self,
+            net: Arc<LutNetwork>,
+            _opt: OptLevel,
+            _ctx: &ProviderCtx,
+        ) -> crate::Result<Arc<dyn FabricProgram>> {
+            Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
+        }
+    }
+
+    fn free_caps() -> Capabilities {
+        Capabilities {
+            signed_hidden: true,
+            batch_affinity: BatchAffinity::Single,
+            compile_cost: CompileCost::Free,
+            persistable: false,
+            word_lanes: 0,
+            fallback: None,
+        }
+    }
+
     #[test]
     fn builtins_resolve_case_and_whitespace_insensitively() {
         let reg = BackendRegistry::global();
@@ -396,6 +510,7 @@ mod tests {
         assert!(!caps.signed_hidden);
         assert!(caps.persistable, "bitsliced programs persist as .nfab");
         assert_eq!(caps.word_lanes, 1);
+        assert_eq!(caps.fallback, None);
         let scalar = reg.capabilities("scalar").unwrap();
         assert!(scalar.signed_hidden);
         assert!(!scalar.persistable);
@@ -413,6 +528,21 @@ mod tests {
             assert_eq!(caps.word_lanes, lanes, "{name}");
             assert_eq!(caps.batch_affinity, BatchAffinity::Wide);
             assert!(caps.persistable, "{name} must persist as .nfab");
+        }
+    }
+
+    #[test]
+    fn aot_backends_register_with_bitsliced_fallback() {
+        let reg = BackendRegistry::global();
+        for name in ["aot", "aot-c"] {
+            let entry = reg.resolve(name).unwrap();
+            assert_eq!(entry.name(), name);
+            let caps = entry.capabilities();
+            assert_eq!(caps.compile_cost, CompileCost::NativeCodegen, "{name}");
+            assert_eq!(caps.batch_affinity, BatchAffinity::Wide, "{name}");
+            assert!(caps.persistable, "{name} persists .nfab + .so");
+            assert_eq!(caps.fallback, Some("bitsliced"), "{name}");
+            assert!(caps.word_lanes > 0, "{name} executes a plane word");
         }
     }
 
@@ -437,17 +567,7 @@ mod tests {
     #[test]
     fn alias_registration_rejects_dangling_chained_and_colliding_names() {
         let reg = BackendRegistry::empty();
-        let caps = Capabilities {
-            signed_hidden: true,
-            batch_affinity: BatchAffinity::Single,
-            compile_cost: CompileCost::Free,
-            persistable: false,
-            word_lanes: 0,
-        };
-        let factory: BackendFactory = Arc::new(|net, _opt| {
-            Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
-        });
-        reg.register("real", caps, factory.clone()).unwrap();
+        reg.register("real", Arc::new(TestProvider(free_caps()))).unwrap();
         // Dangling target.
         assert!(reg.register_alias("a", "ghost").is_err());
         // Alias to alias (chaining) — the alias is not a concrete entry.
@@ -457,7 +577,7 @@ mod tests {
         assert!(reg.register_alias("real", "real").is_err());
         assert!(reg.register_alias(" A ", "real").is_err());
         // And an entry cannot shadow an alias.
-        assert!(reg.register("a", caps, factory).is_err());
+        assert!(reg.register("a", Arc::new(TestProvider(free_caps()))).is_err());
         assert_eq!(reg.resolve("A").unwrap().name(), "real");
     }
 
@@ -467,58 +587,24 @@ mod tests {
         assert!(err.contains("unknown backend 'fpga'"), "{err}");
         assert!(err.contains("bitsliced"), "{err}");
         assert!(err.contains("scalar"), "{err}");
+        assert!(err.contains("aot"), "{err}");
     }
 
     #[test]
     fn duplicate_and_empty_registrations_are_rejected() {
         let reg = BackendRegistry::empty();
-        let caps = Capabilities {
-            signed_hidden: true,
-            batch_affinity: BatchAffinity::Single,
-            compile_cost: CompileCost::Free,
-            persistable: false,
-            word_lanes: 0,
-        };
-        let factory: BackendFactory = Arc::new(|net, _opt| {
-            Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
-        });
-        reg.register("Mock", caps, factory.clone()).unwrap();
+        reg.register("Mock", Arc::new(TestProvider(free_caps()))).unwrap();
         // Same name modulo case/whitespace → duplicate.
-        assert!(reg.register(" mock ", caps, factory.clone()).is_err());
-        assert!(reg.register("   ", caps, factory).is_err());
+        assert!(reg.register(" mock ", Arc::new(TestProvider(free_caps()))).is_err());
+        assert!(reg.register("   ", Arc::new(TestProvider(free_caps()))).is_err());
         assert_eq!(reg.names(), vec!["mock".to_string()]);
         assert_eq!(reg.resolve("MOCK ").unwrap().name(), "mock");
     }
 
     #[test]
-    fn persistable_capability_must_match_loader_presence() {
+    fn non_persistable_entry_refuses_to_load_programs() {
         let reg = BackendRegistry::empty();
-        let caps_persist = Capabilities {
-            signed_hidden: false,
-            batch_affinity: BatchAffinity::Wide,
-            compile_cost: CompileCost::Lowering,
-            persistable: true,
-            word_lanes: 1,
-        };
-        let factory: BackendFactory = Arc::new(|net, _opt| {
-            Ok(Arc::new(ScalarProgram::new(net)) as Arc<dyn FabricProgram>)
-        });
-        // persistable=true without a loader: rejected.
-        let err = reg.register("a", caps_persist, factory.clone()).unwrap_err();
-        assert!(err.to_string().contains("persistable"), "{err}");
-        // persistable=false with a loader: also rejected.
-        let loader: ProgramLoader = Arc::new(|_net, nl| {
-            Ok(Arc::new(BitslicedProgram::from_netlist(nl)) as Arc<dyn FabricProgram>)
-        });
-        let caps_not = Capabilities { persistable: false, ..caps_persist };
-        let err = reg
-            .register_with_loader("b", caps_not, factory.clone(), loader.clone())
-            .unwrap_err();
-        assert!(err.to_string().contains("persistable"), "{err}");
-        // Matching combinations register fine.
-        reg.register_with_loader("c", caps_persist, factory.clone(), loader).unwrap();
-        reg.register("d", caps_not, factory).unwrap();
-        // And a non-persistable entry refuses to load programs.
+        reg.register("d", Arc::new(TestProvider(free_caps()))).unwrap();
         let nl = crate::engine::lower::lower(&crate::luts::random_network(
             1, 4, 1, &[2, 2], 2, 1, 4,
         ))
@@ -527,8 +613,29 @@ mod tests {
         let err = reg
             .resolve("d")
             .unwrap()
-            .load_program(net, Arc::new(nl))
+            .load_program(net, Arc::new(nl), &ProviderCtx::default())
             .unwrap_err();
         assert!(err.to_string().contains("not persistable"), "{err}");
+    }
+
+    #[test]
+    fn persistable_provider_without_load_persisted_fails_descriptively() {
+        // A provider that *claims* persistability but keeps the default
+        // load_persisted: the capability sheet routes the call through,
+        // and the default implementation rejects it with a clear error.
+        let reg = BackendRegistry::empty();
+        let caps = Capabilities { persistable: true, ..free_caps() };
+        reg.register("liar", Arc::new(TestProvider(caps))).unwrap();
+        let nl = crate::engine::lower::lower(&crate::luts::random_network(
+            1, 4, 1, &[2, 2], 2, 1, 4,
+        ))
+        .unwrap();
+        let net = Arc::new(crate::luts::random_network(1, 4, 1, &[2, 2], 2, 1, 4));
+        let err = reg
+            .resolve("liar")
+            .unwrap()
+            .load_program(net, Arc::new(nl), &ProviderCtx::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("load_persisted"), "{err}");
     }
 }

@@ -29,7 +29,10 @@
 //!   compaction), and the bitsliced evaluator family (`[u64; N]` planes,
 //!   64/128/256/512 samples per block for `bitsliced`/`-x2`/`-x4`/`-x8`),
 //!   behind the `FabricProgram` (compile-once) / `InferenceBackend`
-//!   (per-worker) traits.
+//!   (per-worker) traits, plus `engine::aot` — the `aot`/`aot-c`
+//!   native-code backends that emit the optimized netlist as
+//!   straight-line source, run the system compiler at `Model::compile`
+//!   time, and `dlopen` the cached shared object.
 //! * [`fabric`] — **the unified inference API**: `Model` →
 //!   `CompiledFabric` → `Session`/serving, with the pluggable
 //!   `BackendRegistry` (backends by name), the `FabricOptions`

@@ -109,6 +109,9 @@ impl Opts {
         if let Some(path) = self.get("fabric-cache") {
             fo = fo.fabric_cache(PathBuf::from(path));
         }
+        if let Some(dir) = self.get("aot-cache-dir") {
+            fo = fo.aot_cache_dir(PathBuf::from(dir));
+        }
         if let Some(w) = self.usize("workers")? {
             fo = fo.workers(w);
         }
@@ -175,13 +178,14 @@ fn print_usage() {
          convert <config> --params F --out F    trained params -> L-LUTs\n  \
          synth <config> --net F                 synthesis cost report\n  \
          simulate <config> --net F [--engine BACKEND] [--opt-level O0|O1|O2]\n  \
-         \x20     [--fabric-cache FILE.nfab]\n  \
+         \x20     [--fabric-cache FILE.nfab] [--aot-cache-dir DIR]\n  \
          rtl <config> --net F --out DIR         emit Verilog bundle\n  \
          vcd <config> --net F --out FILE        dump pipeline waveform (GTKWave)\n  \
          serve <config> --net F [--rate R] [--requests N] [--batch-window US]\n  \
          \x20     [--workers N] [--queue-depth N] [--engine BACKEND]\n  \
          \x20     [--opt-level O0|O1|O2] [--fabric-cache FILE.nfab]\n  \
          \x20     [--server-config FILE.toml] [--request-timeout MS]\n  \
+         \x20     [--aot-cache-dir DIR]\n  \
          serve --listen HOST:PORT --models-dir DIR    network front door:\n  \
          \x20     [--max-connections N] [--serve-for SECS]  binary wire protocol\n  \
          \x20     [--server-config FILE.toml] [...]         + HTTP on one port,\n  \
@@ -194,11 +198,13 @@ fn print_usage() {
          BACKEND is a registered backend name ({}); NEURALUT_ENGINE /\n\
          NEURALUT_WORKERS / NEURALUT_OPT_LEVEL / NEURALUT_FABRIC_CACHE /\n\
          NEURALUT_REQUEST_TIMEOUT_MS / NEURALUT_LISTEN_ADDR /\n\
-         NEURALUT_MAX_CONNECTIONS / NEURALUT_MODELS_DIR set ambient defaults\n\
-         the flags override.\n\
+         NEURALUT_MAX_CONNECTIONS / NEURALUT_MODELS_DIR / NEURALUT_AOT set\n\
+         ambient defaults the flags override.\n\
          --opt-level picks the netlist optimization pipeline (O1 default);\n\
          --fabric-cache compiles once into a .nfab artifact that later runs\n\
-         and other processes reload; --request-timeout sheds requests whose\n\
+         and other processes reload; --aot-cache-dir holds the aot backends'\n\
+         compiled .so objects (NEURALUT_AOT=off disables native codegen);\n\
+         --request-timeout sheds requests whose\n\
          deadline passes before a worker reaches them.",
         neuralut::fabric::BackendRegistry::global().names().join(" | ")
     );

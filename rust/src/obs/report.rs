@@ -19,7 +19,8 @@ use super::metrics::MetricsRegistry;
 /// One timed compile pass and its op-count delta.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PassReport {
-    /// Pass name (`lower`, `simplify`, `dce`).
+    /// Pass name (`lower`, `simplify`, `dce`; the AOT backends append
+    /// `codegen`, `cc`, `dlopen`).
     pub name: String,
     /// Wall time of the pass in seconds.
     pub wall_s: f64,
@@ -92,7 +93,8 @@ pub struct CompileReport {
     pub lanes: usize,
     /// When graceful degradation kicked in — the requested backend
     /// failed to compile (or its artifact failed to load) and the
-    /// fabric fell back to the reference `scalar` backend — this
+    /// fabric fell back to the backend's declared fallback (`bitsliced`
+    /// for the AOT backends, the reference `scalar` otherwise) — this
     /// records the backend name that *was* requested. `None` for a
     /// healthy compile. Mirrored into the `neuralut_degraded` gauge by
     /// [`export`](Self::export).
@@ -230,10 +232,23 @@ impl CompileReport {
         reg.gauge("neuralut_compile_lanes", &[]).set(self.lanes as f64);
         reg.describe(
             "neuralut_degraded",
-            "1 when the fabric fell back to the scalar backend after a compile/load failure",
+            "1 when the fabric fell back to another backend after a compile/load failure",
         );
         reg.gauge("neuralut_degraded", &[])
             .set(if self.degraded_from.is_some() { 1.0 } else { 0.0 });
+        let cold: f64 = self
+            .passes
+            .iter()
+            .filter(|p| matches!(p.name.as_str(), "codegen" | "cc" | "dlopen"))
+            .map(|p| p.wall_s)
+            .sum();
+        if self.passes.iter().any(|p| matches!(p.name.as_str(), "codegen" | "cc" | "dlopen")) {
+            reg.describe(
+                "neuralut_aot_cold_start_seconds",
+                "native codegen + system compiler + dlopen wall time of the AOT backend",
+            );
+            reg.gauge("neuralut_aot_cold_start_seconds", &[]).set(cold);
+        }
     }
 }
 
@@ -249,7 +264,11 @@ impl fmt::Display for CompileReport {
             self.total_s * 1e3
         )?;
         if let Some(from) = &self.degraded_from {
-            writeln!(f, "  DEGRADED: '{from}' failed to compile; serving on the scalar backend")?;
+            writeln!(
+                f,
+                "  DEGRADED: '{from}' failed to compile; serving on the '{}' backend",
+                self.backend
+            )?;
         }
         if self.passes.is_empty() {
             writeln!(f, "  passes : none (loaded precompiled program)")?;

@@ -119,6 +119,10 @@ pub struct ServerConfig {
     /// Manifest directory of `.nlut` models the front door serves and
     /// hot-swaps.
     pub models_dir: Option<std::path::PathBuf>,
+    /// Directory where the AOT backends cache compiled `.so` objects
+    /// (`aot_cache_dir` in the file). `None` = beside the `.nfab`
+    /// artifact, else a per-user temp directory.
+    pub aot_cache_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -137,6 +141,7 @@ impl Default for ServerConfig {
             listen_addr: None,
             max_connections: None,
             models_dir: None,
+            aot_cache_dir: None,
         }
     }
 }
@@ -156,6 +161,7 @@ impl ServerConfig {
     /// listen_addr = "0.0.0.0:7878"  # network front door bind address
     /// max_connections = 256       # live-connection cap at that address
     /// models_dir = "models"       # .nlut manifest directory to serve
+    /// aot_cache_dir = "aot"       # compiled-.so cache for the aot backends
     /// ```
     ///
     /// All keys are optional; unknown keys are rejected so typos fail
@@ -187,6 +193,7 @@ impl ServerConfig {
                     | "listen_addr"
                     | "max_connections"
                     | "models_dir"
+                    | "aot_cache_dir"
             ) {
                 bail!("unknown server config key '{key}'");
             }
@@ -241,6 +248,9 @@ impl ServerConfig {
         }
         if let Some(v) = doc.root.get("models_dir") {
             cfg.models_dir = Some(std::path::PathBuf::from(v.as_str()?));
+        }
+        if let Some(v) = doc.root.get("aot_cache_dir") {
+            cfg.aot_cache_dir = Some(std::path::PathBuf::from(v.as_str()?));
         }
         cfg.validate()?;
         Ok(cfg)
@@ -1117,7 +1127,8 @@ mod tests {
         let cfg = ServerConfig::parse_toml(
             "max_batch = 512\nbatch_window_us = 100\nbackend = \"bitsliced\"\n\
              opt_level = \"O2\"\nfabric_cache = \"net.nfab\"\n\
-             workers = 4\nqueue_depth = 64\nrequest_timeout_ms = 50",
+             workers = 4\nqueue_depth = 64\nrequest_timeout_ms = 50\n\
+             aot_cache_dir = \"aot\"",
         )
         .unwrap();
         assert_eq!(cfg.max_batch, 512);
@@ -1129,6 +1140,7 @@ mod tests {
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.queue_depth, 64);
         assert_eq!(cfg.request_timeout, Some(Duration::from_millis(50)));
+        assert_eq!(cfg.aot_cache_dir.as_deref(), Some(std::path::Path::new("aot")));
         // Numeric opt levels parse too; unknown ones fail loudly.
         assert_eq!(ServerConfig::parse_toml("opt_level = 0").unwrap().opt_level,
                    Some(OptLevel::O0));

@@ -61,6 +61,16 @@ pub mod point {
     /// per-connection teardown path (the connection must close, never
     /// hang).
     pub const NET_READ: &str = "net.read";
+    /// AOT source emission (`engine::aot`), before any file is written —
+    /// `error` simulates a codegen bug and drives the bitsliced-degradation
+    /// fallback.
+    pub const AOT_CODEGEN: &str = "aot.codegen";
+    /// System-compiler invocation (`rustc` / `cc`) on the emitted AOT
+    /// source — `error` simulates a missing or broken toolchain.
+    pub const AOT_CC: &str = "aot.cc";
+    /// `dlopen`/`dlsym` of the compiled AOT shared object — `error`
+    /// simulates a corrupt or unloadable `.so`.
+    pub const AOT_DLOPEN: &str = "aot.dlopen";
 }
 
 /// What an armed fault point does when it fires.

@@ -370,3 +370,132 @@ fn torn_report_sidecar_write_leaves_a_good_nfab_and_no_partial_report() {
     let _ = std::fs::remove_file(&path);
     let _ = std::fs::remove_file(&report_path);
 }
+
+/// Entries left in an AOT cache dir (empty when the dir was never even
+/// created — a failure before any write is the cleanest "nothing
+/// cached" of all).
+fn cache_entries(dir: &std::path::Path) -> Vec<std::path::PathBuf> {
+    match std::fs::read_dir(dir) {
+        Ok(rd) => rd.map(|e| e.unwrap().path()).collect(),
+        Err(_) => Vec::new(),
+    }
+}
+
+#[test]
+fn injected_aot_build_failures_degrade_to_the_interpreter_and_cache_nothing() {
+    if !neuralut::engine::aot::toolchain_available() {
+        eprintln!("skipping: no native toolchain (rustc/cc) on PATH");
+        return;
+    }
+    let net = Arc::new(random_network(86, 8, 2, &[6, 3], 3, 2, 4));
+    let m = Model::from_arc(net.clone());
+    let sim = Simulator::new(&net);
+    let x = feats_for(9, 0, 8);
+    let want = sim.simulate_batch(&x);
+    for (i, (spec, pt)) in [
+        ("aot.codegen:1:error", point::AOT_CODEGEN),
+        ("aot.cc:1:error", point::AOT_CC),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let dir = std::env::temp_dir().join(format!(
+            "neuralut_chaos_aot_{i}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let nfab = dir.join("net.nfab");
+        let opts = FabricOptions::new().backend("aot-c").aot_cache_dir(&dir);
+        let guard = faults::arm_scoped(spec, 950 + i as u64).unwrap();
+
+        // The native build dies mid-pipeline: serving survives on the
+        // word-parallel interpreter, the report names the backend that
+        // was asked for, and the degraded fabric stays bit-exact.
+        let fabric = m.compile(&opts).unwrap();
+        assert!(guard.fired(pt) >= 1, "{spec}: fault never fired");
+        assert!(fabric.degraded(), "{spec}");
+        assert_eq!(fabric.report().degraded_from.as_deref(), Some("aot-c"), "{spec}");
+        assert_eq!(fabric.backend_name(), "bitsliced", "{spec}");
+        let got = fabric.session().infer_batch(&x).unwrap();
+        assert_eq!(got.logit_codes, want.logit_codes, "{spec}: degraded parity");
+
+        // Nothing was cached: no `.so`, no orphaned tmp files a crashed
+        // compiler left behind to be mistaken for a good object later.
+        let leftovers = cache_entries(&dir);
+        assert!(
+            leftovers.is_empty(),
+            "{spec}: a failed build must cache nothing, found {leftovers:?}"
+        );
+
+        // A degraded fabric must not poison the `.nfab` cache either:
+        // compile_cached serves it but refuses to persist it.
+        let cached = m.compile_cached(&opts.clone().fabric_cache(&nfab), &nfab).unwrap();
+        assert!(cached.degraded(), "{spec}");
+        assert!(
+            !nfab.exists(),
+            "{spec}: a degraded fabric must never be written to the artifact cache"
+        );
+        drop(guard);
+
+        // Healthy again (re-arm a plan that can never fire so a
+        // NEURALUT_FAULTS spec from the CI chaos matrix cannot
+        // interfere): the same options now build native code.
+        let _quiet = faults::arm_scoped("chaos.noop:0:error", 960 + i as u64).unwrap();
+        let healthy = m.compile(&opts).unwrap();
+        assert!(!healthy.degraded(), "{spec}: recovery");
+        assert_eq!(healthy.backend_name(), "aot-c", "{spec}: recovery");
+        let got = healthy.session().infer_batch(&x).unwrap();
+        assert_eq!(got.logit_codes, want.logit_codes, "{spec}: native parity");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn injected_dlopen_failure_degrades_but_the_published_object_stays_reusable() {
+    if !neuralut::engine::aot::toolchain_available() {
+        eprintln!("skipping: no native toolchain (rustc/cc) on PATH");
+        return;
+    }
+    let net = Arc::new(random_network(87, 8, 2, &[6, 3], 3, 2, 4));
+    let m = Model::from_arc(net.clone());
+    let sim = Simulator::new(&net);
+    let x = feats_for(10, 0, 8);
+    let want = sim.simulate_batch(&x);
+    let dir = std::env::temp_dir().join(format!("neuralut_chaos_aot_dl_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = FabricOptions::new().backend("aot-c").aot_cache_dir(&dir);
+
+    // dlopen dies *after* the object was compiled and atomically
+    // published. Serving degrades (the load contract failed) but the
+    // object on disk is real and fingerprint-checked, so it is not junk.
+    let guard = faults::arm_scoped("aot.dlopen:1:error", 970).unwrap();
+    let fabric = m.compile(&opts).unwrap();
+    assert!(guard.fired(point::AOT_DLOPEN) >= 1);
+    assert!(fabric.degraded());
+    assert_eq!(fabric.report().degraded_from.as_deref(), Some("aot-c"));
+    assert_eq!(
+        fabric.session().infer_batch(&x).unwrap().logit_codes,
+        want.logit_codes
+    );
+    drop(guard);
+
+    // Healthy retry: the published object is reused as-is — the AOT
+    // pass tail is a lone `dlopen`, nothing recompiled.
+    let _quiet = faults::arm_scoped("chaos.noop:0:error", 971).unwrap();
+    let healthy = m.compile(&opts).unwrap();
+    assert!(!healthy.degraded());
+    assert_eq!(healthy.backend_name(), "aot-c");
+    let tail: Vec<&str> = healthy
+        .report()
+        .passes
+        .iter()
+        .map(|p| p.name.as_str())
+        .filter(|n| matches!(*n, "codegen" | "cc" | "dlopen"))
+        .collect();
+    assert_eq!(tail, ["dlopen"], "expected the cached object to be reused");
+    assert_eq!(
+        healthy.session().infer_batch(&x).unwrap().logit_codes,
+        want.logit_codes
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

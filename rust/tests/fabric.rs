@@ -11,7 +11,8 @@ use std::sync::Arc;
 
 use neuralut::engine::{FabricProgram, InferenceBackend, OptLevel, ScalarProgram};
 use neuralut::fabric::{
-    BackendRegistry, BatchAffinity, Capabilities, CompileCost, FabricOptions, Model,
+    BackendProvider, BackendRegistry, BatchAffinity, Capabilities, CompileCost, FabricOptions,
+    Model, ProviderCtx,
 };
 use neuralut::luts::{random_network, structured_network, LutNetwork};
 use neuralut::netlist::{SimResult, Simulator};
@@ -50,8 +51,41 @@ impl FabricProgram for MockProgram {
     }
 }
 
+/// Mock provider: compile and executor-spawn counters shared with every
+/// program it builds.
+struct MockProvider {
+    compiled: Arc<AtomicUsize>,
+    spawned: Arc<AtomicUsize>,
+}
+
+impl BackendProvider for MockProvider {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            signed_hidden: true,
+            batch_affinity: BatchAffinity::Single,
+            compile_cost: CompileCost::Free,
+            persistable: false,
+            word_lanes: 0,
+            fallback: None,
+        }
+    }
+
+    fn compile(
+        &self,
+        net: Arc<LutNetwork>,
+        _opt: OptLevel,
+        _ctx: &ProviderCtx,
+    ) -> neuralut::Result<Arc<dyn FabricProgram>> {
+        self.compiled.fetch_add(1, Ordering::SeqCst);
+        Ok(Arc::new(MockProgram {
+            inner: ScalarProgram::new(net),
+            spawned: self.spawned.clone(),
+        }))
+    }
+}
+
 /// Register the mock once per process; returns (compile count, spawn
-/// count) shared with every program the factory builds.
+/// count) shared with every program the provider builds.
 fn register_mock() -> (Arc<AtomicUsize>, Arc<AtomicUsize>) {
     use std::sync::OnceLock;
     static COUNTERS: OnceLock<(Arc<AtomicUsize>, Arc<AtomicUsize>)> = OnceLock::new();
@@ -59,23 +93,12 @@ fn register_mock() -> (Arc<AtomicUsize>, Arc<AtomicUsize>) {
         .get_or_init(|| {
             let compiled = Arc::new(AtomicUsize::new(0));
             let spawned = Arc::new(AtomicUsize::new(0));
-            let (c, s) = (compiled.clone(), spawned.clone());
             BackendRegistry::global()
                 .register(
                     "mock",
-                    Capabilities {
-                        signed_hidden: true,
-                        batch_affinity: BatchAffinity::Single,
-                        compile_cost: CompileCost::Free,
-                        persistable: false,
-                        word_lanes: 0,
-                    },
-                    Arc::new(move |net: Arc<LutNetwork>, _opt: OptLevel| {
-                        c.fetch_add(1, Ordering::SeqCst);
-                        Ok(Arc::new(MockProgram {
-                            inner: ScalarProgram::new(net),
-                            spawned: s.clone(),
-                        }) as Arc<dyn FabricProgram>)
+                    Arc::new(MockProvider {
+                        compiled: compiled.clone(),
+                        spawned: spawned.clone(),
                     }),
                 )
                 .expect("mock registers once");
@@ -339,7 +362,7 @@ fn nfab_load_rejects_bad_magic_version_and_truncation_with_offsets() {
     std::fs::write(&bad, &bytes).unwrap();
     let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
     assert!(err.contains("unsupported .nfab version 99"), "{err}");
-    assert!(err.contains("version 2"), "{err}");
+    assert!(err.contains("version 3"), "{err}");
 
     // Truncation mid-payload names the field, offset and file length.
     let bad = nfab("truncated");
@@ -351,12 +374,12 @@ fn nfab_load_rejects_bad_magic_version_and_truncation_with_offsets() {
 
     // An absurd claimed op count is rejected against the remaining file
     // length before any allocation. The first level's op count sits right
-    // after magic/version, name, digest, opt level, lane width, level
-    // count and the 12 bytes of level metadata.
+    // after magic/version, the artifact-kind byte, name, digest, opt
+    // level, lane width, level count and the 12 bytes of level metadata.
     let bad = nfab("absurd_ops");
     let mut bytes = good.clone();
-    let name_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-    let ops_off = 12 + name_len + 8 + 4 + 4 + 4 + 12;
+    let name_len = u32::from_le_bytes(bytes[9..13].try_into().unwrap()) as usize;
+    let ops_off = 13 + name_len + 8 + 4 + 4 + 4 + 12;
     bytes[ops_off..ops_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     std::fs::write(&bad, &bytes).unwrap();
     let err = format!("{:#}", model.load_fabric(&opts, &bad).unwrap_err());
@@ -443,8 +466,8 @@ fn nfab_round_trips_every_lane_width_and_rejects_width_patches() {
     // x2 backend must refuse to replay it rather than mis-stride planes.
     let x2 = nfab("width_bitsliced-x2");
     let mut bytes = std::fs::read(&x2).unwrap();
-    let name_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-    let lanes_off = 12 + name_len + 8 + 4;
+    let name_len = u32::from_le_bytes(bytes[9..13].try_into().unwrap()) as usize;
+    let lanes_off = 13 + name_len + 8 + 4;
     assert_eq!(
         u32::from_le_bytes(bytes[lanes_off..lanes_off + 4].try_into().unwrap()),
         2,

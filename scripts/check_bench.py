@@ -23,7 +23,12 @@ Two gate families:
     - every BENCH_compile_report.json entry: the pass chain is coherent
       (passes[i].ops_before == passes[i-1].ops_after, last pass's
       ops_after == the report's final op count == the engine row's
-      word_ops_o2, wall times finite and >= 0).
+      word_ops_o2, wall times finite and >= 0);
+    - every BENCH_aot.json row (when the aot bench ran): 0 logit-code
+      mismatches vs the simulator, and AOT steady-state throughput >= 90%
+      of the same run's interpreted bitsliced-auto (50% in quick mode).
+      `--aot-only` gates just this file for the CI aot job; a runner
+      without a native toolchain writes a marker row and the gates skip.
 
 * Baseline gates (armed per entry once BENCH_baseline.json carries a
   value > 0; entries at 0 are "not yet recorded" and skipped):
@@ -56,6 +61,7 @@ SERVER = "BENCH_server.json"
 REPORTS = "BENCH_compile_report.json"
 BASELINE = "BENCH_baseline.json"
 NET = "BENCH_net.json"
+AOT = "BENCH_aot.json"
 # Stage-latency ceilings gated against the baseline (p99s of the
 # bitsliced 4-worker drain); baseline key = f"saturation_bitsliced_4w_{k}".
 STAGE_KEYS = ("p99_us", "queue_wait_p99_us", "batch_form_p99_us", "execute_p99_us")
@@ -74,6 +80,12 @@ WIDE_MUST_NOT_LOSE_MARGIN_QUICK = 0.50
 # on at least one large case — the point of carrying the width family.
 BEST_WIDTH_SPEEDUP = 2.0
 BEST_WIDTH_SPEEDUP_QUICK = 1.3
+# AOT gates: straight-line native code must not lose to the interpreted
+# bitsliced-auto run it replaces by more than this, same run. Parity is
+# never relaxed — mismatches vs the simulator are a hard red at any
+# margin, quick or not.
+AOT_MUST_NOT_LOSE_MARGIN = 0.90
+AOT_MUST_NOT_LOSE_MARGIN_QUICK = 0.50
 
 failures = []
 
@@ -189,6 +201,56 @@ def check_net(net_rows):
             ok(f"net: saturation refusal rate {refusal:.1%} (typed Overloaded)")
 
 
+def check_aot(aot_rows):
+    """AOT backend gates (BENCH_aot.json, written by `cargo bench --bench
+    bench_aot`): parity vs the reference simulator must be exact on every
+    row, and steady-state AOT throughput must not lose to the interpreted
+    bitsliced-auto run from the same bench by more than the margin. A
+    runner without a native toolchain writes a single marker row and the
+    gates skip — the backend degrades there, it does not fail."""
+    if not aot_rows:
+        fail(f"{AOT} is empty — bench produced no rows")
+        return
+    if any(r.get("toolchain_available") is False for r in aot_rows):
+        ok("aot: no native toolchain on the bench runner; gates skipped")
+        return
+    for r in aot_rows:
+        name = r.get("name", "?")
+        mismatches = r.get("parity_mismatches")
+        if mismatches != 0:
+            fail(
+                f"aot: {name} has {mismatches!r} logit-code mismatches vs the "
+                f"simulator — native codegen parity is a hard release gate"
+            )
+        else:
+            ok(f"aot: {name} parity exact (0 mismatches)")
+        aot_sps = float(r.get("aot_samples_per_s", 0))
+        interp_sps = float(r.get("bitsliced_auto_samples_per_s", 0))
+        margin = (
+            AOT_MUST_NOT_LOSE_MARGIN_QUICK
+            if r.get("quick")
+            else AOT_MUST_NOT_LOSE_MARGIN
+        )
+        if aot_sps <= 0 or interp_sps <= 0:
+            fail(f"aot: {name} throughput missing (aot {aot_sps}, interp {interp_sps})")
+        elif aot_sps < margin * interp_sps:
+            fail(
+                f"aot: {name} {aot_sps:.0f} samples/s loses to bitsliced-auto "
+                f"({interp_sps:.0f}; {aot_sps / interp_sps:.2f}x < {margin:.2f}x floor)"
+            )
+        else:
+            ok(
+                f"aot: {name} {aot_sps:.0f} samples/s "
+                f"({aot_sps / interp_sps:.2f}x of bitsliced-auto)"
+            )
+        cold = float(r.get("aot_cold_start_s", -1))
+        warm = float(r.get("warm_reload_s", -1))
+        if cold < 0 or warm < 0:
+            fail(f"aot: {name} is missing cold-start/warm-reload timings")
+        else:
+            ok(f"aot: {name} cold start {cold:.3f}s, warm reload {warm:.3f}s")
+
+
 def main():
     # `--net-only`: gate just BENCH_net.json — the CI net-loopback job
     # runs bench_net without the engine/server benches.
@@ -200,15 +262,30 @@ def main():
         print("\nbench gate: all net checks passed")
         return 0
 
+    # `--aot-only`: gate just BENCH_aot.json — the CI aot job runs
+    # bench_aot without the engine/server benches.
+    if "--aot-only" in sys.argv[1:]:
+        check_aot(load(AOT))
+        if failures:
+            print(f"\nbench gate: {len(failures)} failure(s)")
+            return 1
+        print("\nbench gate: all aot checks passed")
+        return 0
+
     engine_rows = load(ENGINE)
     server_rows = load(SERVER)
     report_rows = load(REPORTS)
     net_rows = load(NET)
+    # bench_aot runs in its own CI job; in the combined path its rows are
+    # gated when present and silently skipped when the bench didn't run.
+    aot_rows = load(AOT, required=False)
     baseline = load(BASELINE) or {}
     tol = float(baseline.get("tolerance", 0.25))
 
     if net_rows is not None:
         check_net(net_rows)
+    if aot_rows is not None:
+        check_aot(aot_rows)
 
     if engine_rows is not None and not engine_rows:
         fail(f"{ENGINE} is empty — bench produced no cases")
